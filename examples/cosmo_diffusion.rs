@@ -1,0 +1,49 @@
+//! COSMO diffusion (paper §5.3): compare autovec / STELLA-style / HFAV on
+//! one diffusion application and show the contraction decisions.
+//!
+//! ```sh
+//! cargo run --release --example cosmo_diffusion
+//! ```
+
+use hfav::apps::{compile_variant, cosmo, max_err, seeded, Variant};
+use std::collections::BTreeMap;
+
+fn main() -> Result<(), String> {
+    let (nk, nj, ni) = (4usize, 66usize, 66usize);
+    let u = seeded(nk * nj * ni, 11);
+    let out_len = nk * (nj - 4) * (ni - 4);
+
+    let mut out_ref = vec![0.0; out_len];
+    cosmo::reference(&u, nk, nj, ni, &mut out_ref);
+    let mut out_st = vec![0.0; out_len];
+    cosmo::stella(&u, nk, nj, ni, &mut out_st);
+    println!("STELLA vs autovec: max err {:.2e}", max_err(&out_ref, &out_st));
+
+    let prog = compile_variant(cosmo::DECK, Variant::Hfav)?;
+    println!("\nHFAV contraction notes:");
+    for n in &prog.sp.notes {
+        println!("  {n}");
+    }
+    let module = hfav::codegen::native::build(&prog, &Default::default())?;
+    let mut ext = BTreeMap::new();
+    ext.insert("Nk".to_string(), nk as i64);
+    ext.insert("Nj".to_string(), nj as i64);
+    ext.insert("Ni".to_string(), ni as i64);
+    let mut arrays = BTreeMap::new();
+    arrays.insert("g_u".to_string(), u);
+    arrays.insert("g_out".to_string(), vec![0.0; out_len]);
+    module.run(&ext, &mut arrays)?;
+    println!("HFAV (native) vs autovec: max err {:.2e}", max_err(&out_ref, &arrays["g_out"]));
+    assert!(max_err(&out_ref, &arrays["g_out"]) < 1e-12);
+
+    // Footprint at the paper's flavour of sizes.
+    let mut big = BTreeMap::new();
+    big.insert("Nk".to_string(), 8i64);
+    big.insert("Nj".to_string(), 512i64);
+    big.insert("Ni".to_string(), 512i64);
+    let fused = prog.footprint_words(&big)?;
+    let naive = compile_variant(cosmo::DECK, Variant::Autovec)?.footprint_words(&big)?;
+    println!("\nintermediate footprint @ 8x512x512: autovec={naive} words, hfav={fused} words");
+    println!("cosmo_diffusion OK");
+    Ok(())
+}

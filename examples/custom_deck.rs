@@ -1,0 +1,85 @@
+//! Authoring a new deck from scratch: a 1D heat-equation step chain
+//! (double-application of a 3-point smoother) written as two rules, fused
+//! by the engine into a single pipelined loop with rolling buffers —
+//! the "bring your own kernels" workflow for downstream users.
+//!
+//! ```sh
+//! cargo run --release --example custom_deck
+//! ```
+
+use hfav::exec::{self, registry::Registry, ExecOptions};
+use hfav::plan::{compile_src, CompileOptions};
+use std::collections::BTreeMap;
+
+const DECK: &str = r#"
+name: heat2x
+iteration:
+  order: [i]
+  domains:
+    i: [2, N-2]
+kernels:
+  smooth1:
+    declaration: smooth1(double l, double c, double r, double &o);
+    inputs: |
+      l : u?[i?-1]
+      c : u?[i?]
+      r : u?[i?+1]
+    outputs: |
+      o : s1(u?[i?])
+    body: "o = 0.25*l + 0.5*c + 0.25*r;"
+  smooth2:
+    declaration: smooth2(double l, double c, double r, double &o);
+    inputs: |
+      l : s1(u[i?-1])
+      c : s1(u[i?])
+      r : s1(u[i?+1])
+    outputs: |
+      o : s2(u[i?])
+    body: "o = 0.25*l + 0.5*c + 0.25*r;"
+globals:
+  inputs: |
+    double g_u[i?] => u[i?]
+  outputs: |
+    s2(u[i]) => double g_o[i]
+"#;
+
+fn main() -> Result<(), String> {
+    let prog = compile_src(DECK, CompileOptions::default())?;
+    println!("schedule:\n{}", prog.schedule_text());
+    println!("notes:");
+    for n in &prog.sp.notes {
+        println!("  {n}");
+    }
+    // s1 contracts to a 3-slot rolling window; the two smoothers fuse into
+    // one pipelined i-loop (smooth1 runs one iteration ahead).
+    let s1 = prog.df.var("s1(u)").unwrap().id;
+    println!("s1 storage: {:?}", prog.sp.storage_of(s1).sizes);
+
+    let mut reg = Registry::new();
+    let smooth = |i: &[f64], o: &mut [f64]| o[0] = 0.25 * i[0] + 0.5 * i[1] + 0.25 * i[2];
+    reg.register("smooth1", smooth);
+    reg.register("smooth2", smooth);
+
+    let n = 32usize;
+    let mut ext = BTreeMap::new();
+    ext.insert("N".to_string(), n as i64);
+    let u: Vec<f64> = (0..n).map(|i| if i == n / 2 { 1.0 } else { 0.0 }).collect();
+    let mut inputs = BTreeMap::new();
+    inputs.insert("g_u".to_string(), u.clone());
+    let out = exec::run(&prog, &reg, &ext, &inputs, ExecOptions::default())?;
+
+    // reference: two explicit passes
+    let mut s1v = vec![0.0; n];
+    for i in 1..n - 1 {
+        s1v[i] = 0.25 * u[i - 1] + 0.5 * u[i] + 0.25 * u[i + 1];
+    }
+    let mut want = vec![0.0; n - 4];
+    for i in 2..n - 2 {
+        want[i - 2] = 0.25 * s1v[i - 1] + 0.5 * s1v[i] + 0.25 * s1v[i + 1];
+    }
+    let err = hfav::apps::max_err(&out["g_o"], &want);
+    println!("fused vs two-pass reference: max err {err:.3e}");
+    assert!(err < 1e-14);
+    println!("custom_deck OK");
+    Ok(())
+}

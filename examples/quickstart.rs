@@ -1,0 +1,60 @@
+//! Quickstart: drive the whole HFAV pipeline on the paper's running
+//! example (the 5-point Laplace stencil, Listing 1 / Fig. 10).
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use hfav::apps::{laplace, seeded};
+use hfav::exec::{self, ExecOptions};
+use hfav::plan::{compile_src, CompileOptions};
+use std::collections::BTreeMap;
+
+fn main() -> Result<(), String> {
+    // 1. Compile the declarative deck: inference → fusion → contraction.
+    let prog = compile_src(laplace::DECK, CompileOptions::default())?;
+    println!("=== schedule (paper Fig. 6 analogue) ===");
+    println!("{}", prog.schedule_text());
+
+    println!("=== storage analysis ===");
+    for note in &prog.sp.notes {
+        println!("  {note}");
+    }
+    for s in &prog.sp.storages {
+        println!("  {:<16} {:?}", s.name, s.sizes);
+    }
+
+    // 2. Emit C99 (what the paper's tool ships to icc).
+    let c = hfav::codegen::c99::emit(&prog)?;
+    println!("\n=== generated C99 (first 30 lines) ===");
+    for line in c.lines().take(30) {
+        println!("{line}");
+    }
+
+    // 3. Execute the schedule in-process and validate against a plain
+    //    hand-written reference.
+    let (nj, ni) = (64usize, 64usize);
+    let mut extents = BTreeMap::new();
+    extents.insert("Nj".to_string(), nj as i64);
+    extents.insert("Ni".to_string(), ni as i64);
+    let u = seeded(nj * ni, 1);
+    let mut inputs = BTreeMap::new();
+    inputs.insert("g_cell".to_string(), u.clone());
+    let out = exec::run(&prog, &laplace::registry(), &extents, &inputs, ExecOptions::default())?;
+    let want = laplace::reference(&u, nj, ni);
+    let err = hfav::apps::max_err(&out["g_out"], &want);
+    println!("\nexecutor vs reference: max err {err:.3e}");
+    assert!(err < 1e-12);
+
+    // 4. Compile the generated C with the system compiler and run it.
+    let module = hfav::codegen::native::build(&prog, &Default::default())?;
+    let mut arrays = BTreeMap::new();
+    arrays.insert("g_cell".to_string(), u);
+    arrays.insert("g_out".to_string(), vec![0.0; (nj - 2) * (ni - 2)]);
+    module.run(&extents, &mut arrays)?;
+    let err = hfav::apps::max_err(&arrays["g_out"], &want);
+    println!("native (cc -O3) vs reference: max err {err:.3e}");
+    assert!(err < 1e-12);
+    println!("\nquickstart OK");
+    Ok(())
+}

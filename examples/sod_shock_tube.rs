@@ -1,0 +1,15 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): Hydro2D Sod shock tube through
+//! the full stack — deck → fused schedule → generated C → `cc -O3` →
+//! dlopen → dimensionally-split time loop — against the autovec baseline,
+//! with conservation checks and the final density profile.
+//!
+//! ```sh
+//! cargo run --release --example sod_shock_tube -- [size] [steps]
+//! ```
+
+fn main() -> Result<(), String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let size: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(128);
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    hfav::e2e::sod_demo(size, steps)
+}

@@ -1,0 +1,75 @@
+"""AOT lowering: every app × variant → HLO *text* artifacts + manifest.
+
+HLO text (not `.serialize()`): jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids that the xla crate's xla_extension 0.5.1 rejects; the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out-dir ../artifacts [--sizes nj=512,...]
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str, sizes: dict) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for name, (fn, arg_builder) in model.VARIANTS.items():
+        args = arg_builder(sizes)
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        in_sig = ",".join(
+            "x".join(str(d) for d in a.shape) if a.shape else "scalar" for a in args
+        )
+        outs = jax.eval_shape(fn, *args)
+        out_list = jax.tree_util.tree_leaves(outs)
+        out_sig = ",".join("x".join(str(d) for d in o.shape) for o in out_list)
+        manifest.append(f"{name}|{fname}|{in_sig}|{out_sig}")
+        print(f"lowered {name}: in [{in_sig}] out [{out_sig}] -> {fname}")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+
+
+def parse_sizes(spec: str) -> dict:
+    sizes = dict(model.DEFAULT_SIZES)
+    if spec:
+        for kv in spec.split(","):
+            k, v = kv.split("=")
+            sizes[k.strip()] = int(v)
+    return sizes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(compat) ignored if --out-dir given")
+    ap.add_argument("--sizes", default="")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out and out_dir == "../artifacts":
+        out_dir = os.path.dirname(args.out) or "."
+    lower_all(out_dir, parse_sizes(args.sizes))
+
+
+if __name__ == "__main__":
+    main()

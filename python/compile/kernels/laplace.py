@@ -1,0 +1,38 @@
+"""Fused 5-point Laplace as a Pallas kernel (Layer 1).
+
+The HFAV schedule — one sweep over `j` with a 3-row working set — maps to
+a Pallas grid over output rows: each grid step holds the three contributing
+input rows in VMEM and emits one output row. On a real TPU the pipelined
+grid gives exactly the paper's rolling 3-row buffer (adjacent steps re-use
+two of the three rows from VMEM); `interpret=True` is required for CPU
+execution (see DESIGN.md §Hardware-Adaptation).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(n_ref, c_ref, s_ref, o_ref):
+    n = n_ref[0, :]
+    c = c_ref[0, :]
+    s = s_ref[0, :]
+    # east/west are shifts within the row held in VMEM.
+    o_ref[0, :] = 0.25 * (n[1:-1] + c[2:] + s[1:-1] + c[:-2]) - c[1:-1]
+
+
+def laplace_fused(u):
+    """u: (nj, ni) -> (nj-2, ni-2), fused single sweep."""
+    nj, ni = u.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(nj - 2,),
+        in_specs=[
+            pl.BlockSpec((1, ni), lambda j: (j, 0)),      # north row (j)
+            pl.BlockSpec((1, ni), lambda j: (j + 1, 0)),  # center row (j+1)
+            pl.BlockSpec((1, ni), lambda j: (j + 2, 0)),  # south row (j+2)
+        ],
+        out_specs=pl.BlockSpec((1, ni - 2), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((nj - 2, ni - 2), u.dtype),
+        interpret=True,
+    )(u, u, u)

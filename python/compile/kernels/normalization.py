@@ -1,0 +1,35 @@
+"""Fused normalization example as a Pallas kernel (Layer 1).
+
+The paper's five sweeps (flux, init, accumulate, root, normalize) fuse into
+a single per-row pipeline: the flux row, the accumulator and the
+reciprocal norm all live in VMEM and HBM is touched once for the input row
+and once for the output row. The reduction→broadcast split (§5.2) is
+internal to the row here: the row *is* the reduction scope, so the two
+fused nests become two VMEM-resident stages of one kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, o_ref):
+    q = q_ref[0, :]
+    f = q[1:] - q[:-1]          # nest 1: flux + accumulate (+ root)
+    acc = jnp.sum(f * f)
+    r = 1.0 / jnp.sqrt(acc + 1e-30)
+    o_ref[0, :] = f * r          # nest 2: normalize broadcast
+
+
+def normalize_fused(q):
+    """q: (nj, ni+1) -> (nj, ni), one fused pass."""
+    nj, w = q.shape
+    ni = w - 1
+    return pl.pallas_call(
+        _kernel,
+        grid=(nj,),
+        in_specs=[pl.BlockSpec((1, w), lambda j: (j, 0))],
+        out_specs=pl.BlockSpec((1, ni), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((nj, ni), q.dtype),
+        interpret=True,
+    )(q)

@@ -1,0 +1,179 @@
+"""Pure-jnp reference oracles — the *unfused* shapes of the paper's codes.
+
+Each function is the "autovec" form: one jnp pass per kernel with all
+intermediates materialized. These are (a) the correctness oracles for the
+Pallas fused kernels and (b) the unfused AOT artifacts the Rust runtime
+benchmarks against.
+"""
+
+import jax.numpy as jnp
+
+GAMMA = 1.4
+ALPHA = 0.1
+
+
+# ---------------------------------------------------------------------------
+# 5-point Laplace (paper Listing 1)
+# ---------------------------------------------------------------------------
+def laplace(u):
+    """u: (nj, ni) -> interior Laplace, (nj-2, ni-2)."""
+    n = u[:-2, 1:-1]
+    e = u[1:-1, 2:]
+    s = u[2:, 1:-1]
+    w = u[1:-1, :-2]
+    c = u[1:-1, 1:-1]
+    return 0.25 * (n + e + s + w) - c
+
+
+# ---------------------------------------------------------------------------
+# normalization example (paper §3, §5.2) — five separate sweeps
+# ---------------------------------------------------------------------------
+def normalize(q):
+    """q: (nj, ni+1) -> normalized flux differences, (nj, ni)."""
+    f = q[:, 1:] - q[:, :-1]            # sweep 1: flux
+    acc = jnp.zeros(q.shape[0])          # sweep 2: init
+    acc = acc + jnp.sum(f * f, axis=1)   # sweep 3: accumulate
+    r = 1.0 / jnp.sqrt(acc + 1e-30)      # sweep 4: root
+    return f * r[:, None]                # sweep 5: normalize
+
+
+# ---------------------------------------------------------------------------
+# COSMO fourth-order diffusion micro-kernels (paper §5.3)
+# ---------------------------------------------------------------------------
+def _limit(f, du):
+    return jnp.where(f * du > 0.0, 0.0, f)
+
+
+def cosmo(u):
+    """u: (nk, nj, ni) -> diffused interior, (nk, nj-4, ni-4)."""
+    lap = (
+        u[:, :-2, 1:-1] + u[:, 1:-1, 2:] + u[:, 2:, 1:-1] + u[:, 1:-1, :-2]
+        - 4.0 * u[:, 1:-1, 1:-1]
+    )
+    uc = u[:, 1:-1, 1:-1]
+    fx = _limit(lap[:, :, 1:] - lap[:, :, :-1], uc[:, :, 1:] - uc[:, :, :-1])
+    fy = _limit(lap[:, 1:, :] - lap[:, :-1, :], uc[:, 1:, :] - uc[:, :-1, :])
+    out = (
+        u[:, 2:-2, 2:-2]
+        - ALPHA
+        * (
+            fx[:, 1:-1, 1:] - fx[:, 1:-1, :-1]
+            + fy[:, 1:, 1:-1] - fy[:, :-1, 1:-1]
+        )
+    )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Hydro2D sweep (paper §5.4) — eight separate vectorized passes
+# ---------------------------------------------------------------------------
+def _slope(qm, qc, qp):
+    dl = qc - qm
+    dg = qp - qc
+    dc = 0.5 * (dl + dg)
+    s = jnp.where(dc >= 0.0, 1.0, -1.0)
+    lim = jnp.where(dl * dg <= 0.0, 0.0, 2.0 * jnp.minimum(jnp.abs(dl), jnp.abs(dg)))
+    return s * jnp.minimum(lim, jnp.abs(dc))
+
+
+def _riemann(rl, ul, vl, pl, rr, ur, vr, pr):
+    cl = jnp.sqrt(GAMMA * pl / rl)
+    cr = jnp.sqrt(GAMMA * pr / rr)
+    pst = jnp.maximum(
+        1e-10, 0.5 * (pl + pr) - 0.125 * (ur - ul) * (rl + rr) * (cl + cr)
+    )
+    for _ in range(8):
+        al, bl = 0.8333333333333333 / rl, 0.16666666666666666 * pl
+        ar, br = 0.8333333333333333 / rr, 0.16666666666666666 * pr
+        sl = jnp.sqrt(al / (pst + bl))
+        sr = jnp.sqrt(ar / (pst + br))
+        fl = (pst - pl) * sl
+        fr = (pst - pr) * sr
+        dl = sl * (1.0 - (pst - pl) / (2.0 * (pst + bl)))
+        dr = sr * (1.0 - (pst - pr) / (2.0 * (pst + br)))
+        pst = jnp.maximum(1e-10, pst - (fl + fr + (ur - ul)) / (dl + dr))
+    sl0 = jnp.sqrt((0.8333333333333333 / rl) / (pst + 0.16666666666666666 * pl))
+    sr0 = jnp.sqrt((0.8333333333333333 / rr) / (pst + 0.16666666666666666 * pr))
+    ustar = 0.5 * (ul + ur) + 0.5 * ((pst - pr) * sr0 - (pst - pl) * sl0)
+    left = ustar >= 0.0
+    sgn = jnp.where(left, 1.0, -1.0)
+    r0 = jnp.where(left, rl, rr)
+    u0 = jnp.where(left, ul, ur)
+    p0 = jnp.where(left, pl, pr)
+    v0 = jnp.where(left, vl, vr)
+    c0 = jnp.sqrt(GAMMA * p0 / r0)
+    q = pst / p0
+    s_spd = u0 - sgn * c0 * jnp.sqrt(0.8571428571428571 * q + 0.14285714285714285)
+    shock_out = sgn * s_spd >= 0.0
+    ro_sh = jnp.where(
+        shock_out,
+        r0,
+        r0 * ((q + 0.16666666666666666) / (0.16666666666666666 * q + 1.0)),
+    )
+    uo_sh = jnp.where(shock_out, u0, ustar)
+    po_sh = jnp.where(shock_out, p0, pst)
+    cst = c0 * q ** 0.14285714285714285
+    sh_spd = u0 - sgn * c0
+    st_spd = ustar - sgn * cst
+    uo_fan = 0.8333333333333333 * (sgn * c0 + 0.2 * u0)
+    cf = jnp.maximum(sgn * uo_fan, 1e-12)
+    ro_fan = r0 * (cf / c0) ** 5.0
+    po_fan = p0 * (cf / c0) ** 7.0
+    ro_rf = jnp.where(
+        sgn * sh_spd >= 0.0,
+        r0,
+        jnp.where(sgn * st_spd <= 0.0, r0 * q ** 0.7142857142857143, ro_fan),
+    )
+    uo_rf = jnp.where(
+        sgn * sh_spd >= 0.0, u0, jnp.where(sgn * st_spd <= 0.0, ustar, uo_fan)
+    )
+    po_rf = jnp.where(
+        sgn * sh_spd >= 0.0, p0, jnp.where(sgn * st_spd <= 0.0, pst, po_fan)
+    )
+    shock = pst > p0
+    ro = jnp.where(shock, ro_sh, ro_rf)
+    uo = jnp.where(shock, uo_sh, uo_rf)
+    po = jnp.where(shock, po_sh, po_rf)
+    return ro, uo, v0, po
+
+
+def hydro_sweep(rho, rhou, rhov, E, dtdx):
+    """One dimensionally-split sweep over padded rows.
+
+    Inputs: (rows, n+4) padded conservative fields; returns (rows, n)
+    updated interior. Mirrors `apps::hydro2d::solver::RefSweeper`.
+    """
+    r = rho
+    u = rhou / rho
+    v = rhov / rho
+    eint = E / rho - 0.5 * (u * u + v * v)
+    p = jnp.maximum(0.4 * r * eint, 1e-10)
+    dr = _slope(r[:, :-2], r[:, 1:-1], r[:, 2:])
+    du = _slope(u[:, :-2], u[:, 1:-1], u[:, 2:])
+    dv = _slope(v[:, :-2], v[:, 1:-1], v[:, 2:])
+    dp = _slope(p[:, :-2], p[:, 1:-1], p[:, 2:])
+    rc, uc, vc, pc = r[:, 1:-1], u[:, 1:-1], v[:, 1:-1], p[:, 1:-1]
+    h = 0.5 * dtdx
+    r2 = jnp.maximum(rc - h * (uc * dr + rc * du), 1e-10)
+    u2 = uc - h * (uc * du + dp / rc)
+    v2 = vc - h * (uc * dv)
+    p2 = jnp.maximum(pc - h * (GAMMA * pc * du + uc * dp), 1e-10)
+    clamp = lambda x: jnp.maximum(x, 1e-10)  # noqa: E731
+    trm, tum = clamp(r2 - 0.5 * dr), u2 - 0.5 * du
+    tvm, tpm = v2 - 0.5 * dv, clamp(p2 - 0.5 * dp)
+    trp, tup = clamp(r2 + 0.5 * dr), u2 + 0.5 * du
+    tvp, tpp = v2 + 0.5 * dv, clamp(p2 + 0.5 * dp)
+    gr, gu, gv, gp = _riemann(
+        trp[:, :-1], tup[:, :-1], tvp[:, :-1], tpp[:, :-1],
+        trm[:, 1:], tum[:, 1:], tvm[:, 1:], tpm[:, 1:],
+    )
+    e_g = gp / (GAMMA - 1.0) + 0.5 * gr * (gu * gu + gv * gv)
+    frho = gr * gu
+    frhou = gr * gu * gu + gp
+    frhov = gr * gu * gv
+    fE = gu * (e_g + gp)
+    nrho = rho[:, 2:-2] + dtdx * (frho[:, :-1] - frho[:, 1:])
+    nrhou = rhou[:, 2:-2] + dtdx * (frhou[:, :-1] - frhou[:, 1:])
+    nrhov = rhov[:, 2:-2] + dtdx * (frhov[:, :-1] - frhov[:, 1:])
+    nE = E[:, 2:-2] + dtdx * (fE[:, :-1] - fE[:, 1:])
+    return nrho, nrhou, nrhov, nE

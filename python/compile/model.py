@@ -1,0 +1,83 @@
+"""Layer 2: jit-able step functions for every app × variant.
+
+`fused` variants call the Layer-1 Pallas kernels; `unfused` variants are
+the materializing jnp pipelines from `kernels.ref`. Both lower to HLO text
+via `aot.py` and run from the Rust PJRT runtime — Python never sits on the
+request path.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels import ref  # noqa: E402
+from .kernels.cosmo import cosmo_fused  # noqa: E402
+from .kernels.hydro import hydro_sweep_fused  # noqa: E402
+from .kernels.laplace import laplace_fused  # noqa: E402
+from .kernels.normalization import normalize_fused  # noqa: E402
+
+
+def laplace_unfused(u):
+    return (ref.laplace(u),)
+
+
+def laplace_fused_fn(u):
+    return (laplace_fused(u),)
+
+
+def normalize_unfused(q):
+    return (ref.normalize(q),)
+
+
+def normalize_fused_fn(q):
+    return (normalize_fused(q),)
+
+
+def cosmo_unfused(u):
+    return (ref.cosmo(u),)
+
+
+def cosmo_fused_fn(u):
+    return (cosmo_fused(u),)
+
+
+def hydro_unfused(rho, rhou, rhov, E, dtdx):
+    return ref.hydro_sweep(rho, rhou, rhov, E, dtdx[0, 0])
+
+
+def hydro_fused_fn(rho, rhou, rhov, E, dtdx):
+    return hydro_sweep_fused(rho, rhou, rhov, E, dtdx[0, 0])
+
+
+def f64(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float64)
+
+
+#: name -> (callable, example-arg builder over a size parameter table)
+VARIANTS = {
+    "laplace_unfused": (laplace_unfused, lambda s: [f64(s["nj"], s["ni"])]),
+    "laplace_fused": (laplace_fused_fn, lambda s: [f64(s["nj"], s["ni"])]),
+    "normalize_unfused": (normalize_unfused, lambda s: [f64(s["nj"], s["ni"] + 1)]),
+    "normalize_fused": (normalize_fused_fn, lambda s: [f64(s["nj"], s["ni"] + 1)]),
+    "cosmo_unfused": (cosmo_unfused, lambda s: [f64(s["nk"], s["nj"], s["ni"])]),
+    "cosmo_fused": (cosmo_fused_fn, lambda s: [f64(s["nk"], s["nj"], s["ni"])]),
+    "hydro_unfused": (
+        hydro_unfused,
+        lambda s: [f64(s["rows"], s["n"] + 4)] * 4 + [f64(1, 1)],
+    ),
+    "hydro_fused": (
+        hydro_fused_fn,
+        lambda s: [f64(s["rows"], s["n"] + 4)] * 4 + [f64(1, 1)],
+    ),
+}
+
+#: default AOT shapes (the Rust coordinator's executable cache keys on these)
+DEFAULT_SIZES = {
+    "nj": 512,
+    "ni": 512,
+    "nk": 8,
+    "rows": 64,
+    "n": 512,
+}

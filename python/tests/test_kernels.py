@@ -1,0 +1,144 @@
+"""Layer-1 correctness: Pallas fused kernels vs pure-jnp oracles.
+
+This is the core correctness signal for the compile path: the fused
+kernels must agree with the unfused reference pipelines to float64
+round-off across a hypothesis sweep of shapes.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import sys, os  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile.kernels import ref  # noqa: E402
+from compile.kernels.cosmo import cosmo_fused  # noqa: E402
+from compile.kernels.hydro import hydro_sweep_fused  # noqa: E402
+from compile.kernels.laplace import laplace_fused  # noqa: E402
+from compile.kernels.normalization import normalize_fused  # noqa: E402
+
+
+def rng_fill(shape, seed):
+    return jnp.asarray(
+        np.random.default_rng(seed).uniform(0.1, 1.0, size=shape), dtype=jnp.float64
+    )
+
+
+# ---------------------------------------------------------------------------
+# Laplace
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(
+    nj=st.integers(min_value=3, max_value=40),
+    ni=st.integers(min_value=3, max_value=40),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_laplace_fused_matches_ref(nj, ni, seed):
+    u = rng_fill((nj, ni), seed)
+    np.testing.assert_allclose(laplace_fused(u), ref.laplace(u), rtol=1e-12, atol=1e-12)
+
+
+def test_laplace_against_numpy():
+    u = np.random.default_rng(0).uniform(size=(7, 9))
+    got = np.asarray(ref.laplace(jnp.asarray(u)))
+    for j in range(1, 6):
+        for i in range(1, 8):
+            want = 0.25 * (u[j - 1, i] + u[j, i + 1] + u[j + 1, i] + u[j, i - 1]) - u[j, i]
+            assert abs(got[j - 1, i - 1] - want) < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(
+    nj=st.integers(min_value=1, max_value=24),
+    ni=st.integers(min_value=1, max_value=50),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_normalize_fused_matches_ref(nj, ni, seed):
+    q = rng_fill((nj, ni + 1), seed)
+    np.testing.assert_allclose(
+        normalize_fused(q), ref.normalize(q), rtol=1e-12, atol=1e-12
+    )
+
+
+def test_normalize_rows_unit_norm():
+    q = rng_fill((4, 33), 7)
+    out = np.asarray(normalize_fused(q))
+    norms = np.sqrt((out * out).sum(axis=1))
+    np.testing.assert_allclose(norms, 1.0, rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# COSMO diffusion
+# ---------------------------------------------------------------------------
+@settings(max_examples=6, deadline=None)
+@given(
+    nk=st.integers(min_value=1, max_value=4),
+    nj=st.integers(min_value=5, max_value=20),
+    ni=st.integers(min_value=5, max_value=20),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_cosmo_fused_matches_ref(nk, nj, ni, seed):
+    u = rng_fill((nk, nj, ni), seed)
+    np.testing.assert_allclose(cosmo_fused(u), ref.cosmo(u), rtol=1e-12, atol=1e-12)
+
+
+def test_cosmo_constant_field_is_fixed_point():
+    u = jnp.ones((2, 8, 8), dtype=jnp.float64) * 3.5
+    out = np.asarray(cosmo_fused(u))
+    np.testing.assert_allclose(out, 3.5, rtol=0, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Hydro2D sweep
+# ---------------------------------------------------------------------------
+def sod_padded(rows, n):
+    rho = np.full((rows, n + 4), 0.125)
+    rho[:, : (n + 4) // 2] = 1.0
+    e = np.full((rows, n + 4), 0.1 / 0.4)
+    e[:, : (n + 4) // 2] = 1.0 / 0.4
+    z = np.zeros((rows, n + 4))
+    return (
+        jnp.asarray(rho),
+        jnp.asarray(z),
+        jnp.asarray(z),
+        jnp.asarray(e),
+    )
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=4),
+    n=st.integers(min_value=8, max_value=48),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_hydro_fused_matches_ref_random(rows, n, seed):
+    g = np.random.default_rng(seed)
+    rho = jnp.asarray(g.uniform(0.5, 1.5, size=(rows, n + 4)))
+    rhou = jnp.asarray(g.uniform(-0.1, 0.1, size=(rows, n + 4)))
+    rhov = jnp.asarray(g.uniform(-0.1, 0.1, size=(rows, n + 4)))
+    E = jnp.asarray(g.uniform(1.0, 2.0, size=(rows, n + 4)))
+    dtdx = 0.05
+    got = hydro_sweep_fused(rho, rhou, rhov, E, dtdx)
+    want = ref.hydro_sweep(rho, rhou, rhov, E, dtdx)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-12, atol=1e-12)
+
+
+def test_hydro_sod_mass_flux_sane():
+    rho, rhou, rhov, E = sod_padded(2, 64)
+    nrho, _, _, nE = ref.hydro_sweep(rho, rhou, rhov, E, 0.1)[0::3][0], *[None] * 2, None  # noqa
+    # simpler: recompute
+    out = ref.hydro_sweep(rho, rhou, rhov, E, 0.1)
+    nrho = np.asarray(out[0])
+    assert np.all(nrho > 0.0)
+    assert np.all(nrho <= 1.0 + 1e-12)

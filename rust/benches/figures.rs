@@ -1,0 +1,21 @@
+//! `cargo bench` — regenerates every performance figure/table of the paper
+//! (Figs. 11, 12, 13; Table 1; footprint claims §5.3/§5.4; plus the PJRT
+//! artifact comparison). Custom harness (no criterion in the offline
+//! environment); medians over repeated runs via `hfav::bench::time_it`.
+
+fn main() {
+    println!("{}", hfav::bench::sysinfo());
+    println!();
+    hfav::bench::footprint();
+    println!();
+    hfav::bench::normalization(&[128, 256, 512, 1024, 2048]);
+    println!();
+    hfav::bench::cosmo(&[64, 128, 256, 512], 8);
+    println!();
+    hfav::bench::hydro2d(&[64, 128, 256], 5);
+    println!();
+    match hfav::bench::pjrt(&hfav::runtime::default_artifacts_dir()) {
+        Ok(_) => {}
+        Err(e) => println!("PJRT bench unavailable: {e}"),
+    }
+}

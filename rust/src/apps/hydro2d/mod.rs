@@ -1,0 +1,461 @@
+//! Hydro2D (paper §5.4, Fig. 13): the CEA 2D shock-hydrodynamics
+//! benchmark [5] — a dimensionally-split Godunov scheme with nine kernels.
+//!
+//! The deck below carries eight of them (`constoprim`,
+//! `equation_of_state`, `slope`, `trace`, `qleftright`, `riemann`,
+//! `cmpflx`, `update_cons_vars`); `make_boundary` only touches the four
+//! ghost cells per row and is handled by the driver (see
+//! [`solver`]) — fusing it is meaningless for footprint or bandwidth and
+//! our engine's terms cannot express its reflective index arithmetic
+//! (documented substitution, DESIGN.md §Substitutions).
+//!
+//! Each kernel depends only in the sweep dimension `i`; the `j` dimension
+//! indexes independent rows. The y-pass reuses the same deck on transposed
+//! data with the velocity components swapped, exactly like the original
+//! CEA code. HFAV fuses all kernels into a single (j,i) nest and contracts
+//! every intermediate to rolling scalar windows — the paper's
+//! `O(31·Ni·Nj)` → `O(4·Ni·Nj + 112)` claim.
+
+pub mod solver;
+
+use crate::exec::registry::Registry;
+
+/// Ratio of specific heats (ideal gas), as in CEA Hydro2D.
+pub const GAMMA: f64 = 1.4;
+
+/// The sweep deck. Interior cells are `i ∈ [2, Ni+2)` of arrays padded
+/// with two ghost cells per side (the engine derives the `[0, Ni+4)`
+/// terminal spans from the dependency chain).
+pub const DECK: &str = r#"
+name: hydro2d_sweep
+iteration:
+  order: [j, i]
+  domains:
+    j: [0, Nj]
+    i: [2, Ni+2]
+kernels:
+  constoprim:
+    declaration: constoprim(double rho, double rhou, double rhov, double E, double &r, double &u, double &v, double &eint);
+    inputs: |
+      rho  : grho[j?][i?]
+      rhou : grhou[j?][i?]
+      rhov : grhov[j?][i?]
+      E    : gE[j?][i?]
+    outputs: |
+      r    : prim_r(grho[j?][i?])
+      u    : prim_u(grho[j?][i?])
+      v    : prim_v(grho[j?][i?])
+      eint : prim_e(grho[j?][i?])
+    body: |
+      r = rho;
+      u = rhou / rho;
+      v = rhov / rho;
+      eint = E / rho - 0.5 * (u*u + v*v);
+  equation_of_state:
+    declaration: equation_of_state(double r, double eint, double &p);
+    inputs: |
+      r    : prim_r(grho[j?][i?])
+      eint : prim_e(grho[j?][i?])
+    outputs: |
+      p : prim_p(grho[j?][i?])
+    body: "p = 0.4 * r * eint; if (p < 1e-10) { p = 1e-10; }"
+  slope:
+    declaration: slope(double rm, double rc, double rp, double um, double uc, double up, double vm, double vc, double vp, double pm, double pc, double pp, double &dr, double &du, double &dv, double &dp);
+    inputs: |
+      rm : prim_r(grho[j?][i?-1])
+      rc : prim_r(grho[j?][i?])
+      rp : prim_r(grho[j?][i?+1])
+      um : prim_u(grho[j?][i?-1])
+      uc : prim_u(grho[j?][i?])
+      up : prim_u(grho[j?][i?+1])
+      vm : prim_v(grho[j?][i?-1])
+      vc : prim_v(grho[j?][i?])
+      vp : prim_v(grho[j?][i?+1])
+      pm : prim_p(grho[j?][i?-1])
+      pc : prim_p(grho[j?][i?])
+      pp : prim_p(grho[j?][i?+1])
+    outputs: |
+      dr : slope_r(grho[j?][i?])
+      du : slope_u(grho[j?][i?])
+      dv : slope_v(grho[j?][i?])
+      dp : slope_p(grho[j?][i?])
+    body: |
+      { double dl = rc - rm, dg = rp - rc, dc = 0.5*(dl+dg), s = dc >= 0.0 ? 1.0 : -1.0;
+        double lim = (dl*dg <= 0.0) ? 0.0 : 2.0*fmin(fabs(dl), fabs(dg));
+        dr = s * fmin(lim, fabs(dc)); }
+      { double dl = uc - um, dg = up - uc, dc = 0.5*(dl+dg), s = dc >= 0.0 ? 1.0 : -1.0;
+        double lim = (dl*dg <= 0.0) ? 0.0 : 2.0*fmin(fabs(dl), fabs(dg));
+        du = s * fmin(lim, fabs(dc)); }
+      { double dl = vc - vm, dg = vp - vc, dc = 0.5*(dl+dg), s = dc >= 0.0 ? 1.0 : -1.0;
+        double lim = (dl*dg <= 0.0) ? 0.0 : 2.0*fmin(fabs(dl), fabs(dg));
+        dv = s * fmin(lim, fabs(dc)); }
+      { double dl = pc - pm, dg = pp - pc, dc = 0.5*(dl+dg), s = dc >= 0.0 ? 1.0 : -1.0;
+        double lim = (dl*dg <= 0.0) ? 0.0 : 2.0*fmin(fabs(dl), fabs(dg));
+        dp = s * fmin(lim, fabs(dc)); }
+  trace:
+    declaration: trace(double r, double u, double v, double p, double dr, double du, double dv, double dp, double dtdx, double &rm, double &um, double &vm, double &pm, double &rp, double &up, double &vp, double &pp);
+    inputs: |
+      r : prim_r(grho[j?][i?])
+      u : prim_u(grho[j?][i?])
+      v : prim_v(grho[j?][i?])
+      p : prim_p(grho[j?][i?])
+      dr : slope_r(grho[j?][i?])
+      du : slope_u(grho[j?][i?])
+      dv : slope_v(grho[j?][i?])
+      dp : slope_p(grho[j?][i?])
+      dtdx : dtdx
+    outputs: |
+      rm : trace_rm(grho[j?][i?])
+      um : trace_um(grho[j?][i?])
+      vm : trace_vm(grho[j?][i?])
+      pm : trace_pm(grho[j?][i?])
+      rp : trace_rp(grho[j?][i?])
+      up : trace_up(grho[j?][i?])
+      vp : trace_vp(grho[j?][i?])
+      pp : trace_pp(grho[j?][i?])
+    body: |
+      { double h = 0.5 * dtdx;
+        double r2 = r - h*(u*dr + r*du);
+        double u2 = u - h*(u*du + dp/r);
+        double v2 = v - h*(u*dv);
+        double p2 = p - h*(1.4*p*du + u*dp);
+        if (r2 < 1e-10) { r2 = 1e-10; }
+        if (p2 < 1e-10) { p2 = 1e-10; }
+        rm = r2 - 0.5*dr; um = u2 - 0.5*du; vm = v2 - 0.5*dv; pm = p2 - 0.5*dp;
+        rp = r2 + 0.5*dr; up = u2 + 0.5*du; vp = v2 + 0.5*dv; pp = p2 + 0.5*dp;
+        if (rm < 1e-10) { rm = 1e-10; }
+        if (rp < 1e-10) { rp = 1e-10; }
+        if (pm < 1e-10) { pm = 1e-10; }
+        if (pp < 1e-10) { pp = 1e-10; } }
+  qleftright:
+    declaration: qleftright(double rl, double ul, double vl, double pl, double rr, double ur, double vr, double pr, double &orl, double &oul, double &ovl, double &opl, double &orr, double &our, double &ovr, double &opr);
+    inputs: |
+      rl : trace_rp(grho[j?][i?])
+      ul : trace_up(grho[j?][i?])
+      vl : trace_vp(grho[j?][i?])
+      pl : trace_pp(grho[j?][i?])
+      rr : trace_rm(grho[j?][i?+1])
+      ur : trace_um(grho[j?][i?+1])
+      vr : trace_vm(grho[j?][i?+1])
+      pr : trace_pm(grho[j?][i?+1])
+    outputs: |
+      orl : qlr_rl(grho[j?][i?])
+      oul : qlr_ul(grho[j?][i?])
+      ovl : qlr_vl(grho[j?][i?])
+      opl : qlr_pl(grho[j?][i?])
+      orr : qlr_rr(grho[j?][i?])
+      our : qlr_ur(grho[j?][i?])
+      ovr : qlr_vr(grho[j?][i?])
+      opr : qlr_pr(grho[j?][i?])
+    body: |
+      orl = rl; oul = ul; ovl = vl; opl = pl;
+      orr = rr; our = ur; ovr = vr; opr = pr;
+  riemann:
+    declaration: riemann(double rl, double ul, double vl, double pl, double rr, double ur, double vr, double pr, double &gr, double &gu, double &gv, double &gp);
+    inputs: |
+      rl : qlr_rl(grho[j?][i?])
+      ul : qlr_ul(grho[j?][i?])
+      vl : qlr_vl(grho[j?][i?])
+      pl : qlr_pl(grho[j?][i?])
+      rr : qlr_rr(grho[j?][i?])
+      ur : qlr_ur(grho[j?][i?])
+      vr : qlr_vr(grho[j?][i?])
+      pr : qlr_pr(grho[j?][i?])
+    outputs: |
+      gr : gdnv_r(grho[j?][i?])
+      gu : gdnv_u(grho[j?][i?])
+      gv : gdnv_v(grho[j?][i?])
+      gp : gdnv_p(grho[j?][i?])
+    body: |
+      { double cl = sqrt(1.4*pl/rl), cr = sqrt(1.4*pr/rr);
+        double pst = 0.5*(pl+pr) - 0.125*(ur-ul)*(rl+rr)*(cl+cr);
+        if (pst < 1e-10) { pst = 1e-10; }
+        for (int it = 0; it < 8; ++it) {
+          double al = 0.8333333333333333/rl, bl = 0.16666666666666666*pl;
+          double ar = 0.8333333333333333/rr, br = 0.16666666666666666*pr;
+          double sl = sqrt(al/(pst+bl)), sr = sqrt(ar/(pst+br));
+          double fl = (pst-pl)*sl, fr = (pst-pr)*sr;
+          double dl = sl*(1.0 - (pst-pl)/(2.0*(pst+bl)));
+          double dr_ = sr*(1.0 - (pst-pr)/(2.0*(pst+br)));
+          double f = fl + fr + (ur - ul);
+          pst = pst - f/(dl + dr_);
+          if (pst < 1e-10) { pst = 1e-10; }
+        }
+        double sl0 = sqrt((0.8333333333333333/rl)/(pst+0.16666666666666666*pl));
+        double sr0 = sqrt((0.8333333333333333/rr)/(pst+0.16666666666666666*pr));
+        double ustar = 0.5*(ul+ur) + 0.5*((pst-pr)*sr0 - (pst-pl)*sl0);
+        double sgn, r0, u0, p0, v0;
+        if (ustar >= 0.0) { sgn = 1.0; r0 = rl; u0 = ul; p0 = pl; v0 = vl; }
+        else { sgn = -1.0; r0 = rr; u0 = ur; p0 = pr; v0 = vr; }
+        double c0 = sqrt(1.4*p0/r0);
+        double ro, uo, po;
+        if (pst > p0) {
+          double S = u0 - sgn*c0*sqrt(0.8571428571428571*(pst/p0) + 0.14285714285714285);
+          if (sgn*S >= 0.0) { ro = r0; uo = u0; po = p0; }
+          else { double q = pst/p0; ro = r0*((q + 0.16666666666666666)/(0.16666666666666666*q + 1.0)); uo = ustar; po = pst; }
+        } else {
+          double cst = c0*pow(pst/p0, 0.14285714285714285);
+          double SH = u0 - sgn*c0;
+          double ST = ustar - sgn*cst;
+          if (sgn*SH >= 0.0) { ro = r0; uo = u0; po = p0; }
+          else if (sgn*ST <= 0.0) { ro = r0*pow(pst/p0, 0.7142857142857143); uo = ustar; po = pst; }
+          else {
+            uo = 0.8333333333333333*(sgn*c0 + 0.2*u0);
+            double cf = sgn*uo; if (cf < 1e-12) { cf = 1e-12; }
+            ro = r0*pow(cf/c0, 5.0); po = p0*pow(cf/c0, 7.0);
+          }
+        }
+        gr = ro; gu = uo; gv = v0; gp = po; }
+  cmpflx:
+    declaration: cmpflx(double gr, double gu, double gv, double gp, double &frho, double &frhou, double &frhov, double &fE);
+    inputs: |
+      gr : gdnv_r(grho[j?][i?])
+      gu : gdnv_u(grho[j?][i?])
+      gv : gdnv_v(grho[j?][i?])
+      gp : gdnv_p(grho[j?][i?])
+    outputs: |
+      frho  : flux_rho(grho[j?][i?])
+      frhou : flux_rhou(grho[j?][i?])
+      frhov : flux_rhov(grho[j?][i?])
+      fE    : flux_E(grho[j?][i?])
+    body: |
+      { double e = gp/0.4 + 0.5*gr*(gu*gu + gv*gv);
+        frho = gr*gu;
+        frhou = gr*gu*gu + gp;
+        frhov = gr*gu*gv;
+        fE = gu*(e + gp); }
+  update_cons_vars:
+    declaration: update_cons_vars(double rho, double rhou, double rhov, double E, double fm_rho, double fm_rhou, double fm_rhov, double fm_E, double fc_rho, double fc_rhou, double fc_rhov, double fc_E, double dtdx, double &nrho, double &nrhou, double &nrhov, double &nE);
+    inputs: |
+      rho  : grho[j?][i?]
+      rhou : grhou[j?][i?]
+      rhov : grhov[j?][i?]
+      E    : gE[j?][i?]
+      fm_rho  : flux_rho(grho[j?][i?-1])
+      fm_rhou : flux_rhou(grho[j?][i?-1])
+      fm_rhov : flux_rhov(grho[j?][i?-1])
+      fm_E    : flux_E(grho[j?][i?-1])
+      fc_rho  : flux_rho(grho[j?][i?])
+      fc_rhou : flux_rhou(grho[j?][i?])
+      fc_rhov : flux_rhov(grho[j?][i?])
+      fc_E    : flux_E(grho[j?][i?])
+      dtdx : dtdx
+    outputs: |
+      nrho  : new_rho(grho[j?][i?])
+      nrhou : new_rhou(grho[j?][i?])
+      nrhov : new_rhov(grho[j?][i?])
+      nE    : new_E(grho[j?][i?])
+    body: |
+      nrho  = rho  + dtdx*(fm_rho  - fc_rho);
+      nrhou = rhou + dtdx*(fm_rhou - fc_rhou);
+      nrhov = rhov + dtdx*(fm_rhov - fc_rhov);
+      nE    = E    + dtdx*(fm_E    - fc_E);
+globals:
+  inputs: |
+    double g_rho[j?][i?] => grho[j?][i?]
+    double g_rhou[j?][i?] => grhou[j?][i?]
+    double g_rhov[j?][i?] => grhov[j?][i?]
+    double g_E[j?][i?] => gE[j?][i?]
+    double g_dtdx => dtdx
+  outputs: |
+    new_rho(grho[j][i]) => double g_nrho[j][i]
+    new_rhou(grho[j][i]) => double g_nrhou[j][i]
+    new_rhov(grho[j][i]) => double g_nrhov[j][i]
+    new_E(grho[j][i]) => double g_nE[j][i]
+"#;
+
+/// Slope limiter (van-Leer-style, slope_type 2 as in CEA Hydro2D).
+#[inline]
+pub fn limited_slope(qm: f64, qc: f64, qp: f64) -> f64 {
+    let dl = qc - qm;
+    let dg = qp - qc;
+    let dc = 0.5 * (dl + dg);
+    let s = if dc >= 0.0 { 1.0 } else { -1.0 };
+    let lim = if dl * dg <= 0.0 { 0.0 } else { 2.0 * dl.abs().min(dg.abs()) };
+    s * lim.min(dc.abs())
+}
+
+/// Two-shock approximate Riemann solver with Toro-style sampling at
+/// x/t = 0. Returns the Godunov state (r, u, v, p).
+#[inline]
+pub fn riemann_solve(
+    rl: f64,
+    ul: f64,
+    vl: f64,
+    pl: f64,
+    rr: f64,
+    ur: f64,
+    vr: f64,
+    pr: f64,
+) -> (f64, f64, f64, f64) {
+    let cl = (GAMMA * pl / rl).sqrt();
+    let cr = (GAMMA * pr / rr).sqrt();
+    let mut pst = 0.5 * (pl + pr) - 0.125 * (ur - ul) * (rl + rr) * (cl + cr);
+    if pst < 1e-10 {
+        pst = 1e-10;
+    }
+    for _ in 0..8 {
+        let al = 0.8333333333333333 / rl;
+        let bl = 0.16666666666666666 * pl;
+        let ar = 0.8333333333333333 / rr;
+        let br = 0.16666666666666666 * pr;
+        let sl = (al / (pst + bl)).sqrt();
+        let sr = (ar / (pst + br)).sqrt();
+        let fl = (pst - pl) * sl;
+        let fr = (pst - pr) * sr;
+        let dl = sl * (1.0 - (pst - pl) / (2.0 * (pst + bl)));
+        let dr = sr * (1.0 - (pst - pr) / (2.0 * (pst + br)));
+        let f = fl + fr + (ur - ul);
+        pst -= f / (dl + dr);
+        if pst < 1e-10 {
+            pst = 1e-10;
+        }
+    }
+    let sl0 = ((0.8333333333333333 / rl) / (pst + 0.16666666666666666 * pl)).sqrt();
+    let sr0 = ((0.8333333333333333 / rr) / (pst + 0.16666666666666666 * pr)).sqrt();
+    let ustar = 0.5 * (ul + ur) + 0.5 * ((pst - pr) * sr0 - (pst - pl) * sl0);
+    let (sgn, r0, u0, p0, v0) = if ustar >= 0.0 {
+        (1.0, rl, ul, pl, vl)
+    } else {
+        (-1.0, rr, ur, pr, vr)
+    };
+    let c0 = (GAMMA * p0 / r0).sqrt();
+    let (ro, uo, po);
+    if pst > p0 {
+        let s = u0 - sgn * c0 * (0.8571428571428571 * (pst / p0) + 0.14285714285714285).sqrt();
+        if sgn * s >= 0.0 {
+            ro = r0;
+            uo = u0;
+            po = p0;
+        } else {
+            let q = pst / p0;
+            ro = r0 * ((q + 0.16666666666666666) / (0.16666666666666666 * q + 1.0));
+            uo = ustar;
+            po = pst;
+        }
+    } else {
+        let cst = c0 * (pst / p0).powf(0.14285714285714285);
+        let sh = u0 - sgn * c0;
+        let st = ustar - sgn * cst;
+        if sgn * sh >= 0.0 {
+            ro = r0;
+            uo = u0;
+            po = p0;
+        } else if sgn * st <= 0.0 {
+            ro = r0 * (pst / p0).powf(0.7142857142857143);
+            uo = ustar;
+            po = pst;
+        } else {
+            uo = 0.8333333333333333 * (sgn * c0 + 0.2 * u0);
+            let mut cf = sgn * uo;
+            if cf < 1e-12 {
+                cf = 1e-12;
+            }
+            ro = r0 * (cf / c0).powf(5.0);
+            po = p0 * (cf / c0).powf(7.0);
+        }
+    }
+    (ro, uo, v0, po)
+}
+
+/// MUSCL-Hancock predictor half step + edge extrapolation.
+/// Returns (rm, um, vm, pm, rp, up, vp, pp).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn trace_cell(
+    r: f64,
+    u: f64,
+    v: f64,
+    p: f64,
+    dr: f64,
+    du: f64,
+    dv: f64,
+    dp: f64,
+    dtdx: f64,
+) -> (f64, f64, f64, f64, f64, f64, f64, f64) {
+    let h = 0.5 * dtdx;
+    let mut r2 = r - h * (u * dr + r * du);
+    let u2 = u - h * (u * du + dp / r);
+    let v2 = v - h * (u * dv);
+    let mut p2 = p - h * (GAMMA * p * du + u * dp);
+    if r2 < 1e-10 {
+        r2 = 1e-10;
+    }
+    if p2 < 1e-10 {
+        p2 = 1e-10;
+    }
+    let clamp = |x: f64| if x < 1e-10 { 1e-10 } else { x };
+    (
+        clamp(r2 - 0.5 * dr),
+        u2 - 0.5 * du,
+        v2 - 0.5 * dv,
+        clamp(p2 - 0.5 * dp),
+        clamp(r2 + 0.5 * dr),
+        u2 + 0.5 * du,
+        v2 + 0.5 * dv,
+        clamp(p2 + 0.5 * dp),
+    )
+}
+
+/// Interface flux from a Godunov state.
+#[inline]
+pub fn flux_from_gdnv(gr: f64, gu: f64, gv: f64, gp: f64) -> (f64, f64, f64, f64) {
+    let e = gp / (GAMMA - 1.0) + 0.5 * gr * (gu * gu + gv * gv);
+    (gr * gu, gr * gu * gu + gp, gr * gu * gv, gu * (e + gp))
+}
+
+/// Kernel registry (must match the C bodies in [`DECK`] exactly).
+pub fn registry() -> Registry {
+    let mut r = Registry::new();
+    r.register("constoprim", |i, o| {
+        let (rho, rhou, rhov, e) = (i[0], i[1], i[2], i[3]);
+        o[0] = rho;
+        o[1] = rhou / rho;
+        o[2] = rhov / rho;
+        o[3] = e / rho - 0.5 * (o[1] * o[1] + o[2] * o[2]);
+    });
+    r.register("equation_of_state", |i, o| {
+        let p = 0.4 * i[0] * i[1];
+        o[0] = if p < 1e-10 { 1e-10 } else { p };
+    });
+    r.register("slope", |i, o| {
+        o[0] = limited_slope(i[0], i[1], i[2]);
+        o[1] = limited_slope(i[3], i[4], i[5]);
+        o[2] = limited_slope(i[6], i[7], i[8]);
+        o[3] = limited_slope(i[9], i[10], i[11]);
+    });
+    r.register("trace", |i, o| {
+        let t = trace_cell(i[0], i[1], i[2], i[3], i[4], i[5], i[6], i[7], i[8]);
+        o[0] = t.0;
+        o[1] = t.1;
+        o[2] = t.2;
+        o[3] = t.3;
+        o[4] = t.4;
+        o[5] = t.5;
+        o[6] = t.6;
+        o[7] = t.7;
+    });
+    r.register("qleftright", |i, o| o.copy_from_slice(&i[..8]));
+    r.register("riemann", |i, o| {
+        let g = riemann_solve(i[0], i[1], i[2], i[3], i[4], i[5], i[6], i[7]);
+        o[0] = g.0;
+        o[1] = g.1;
+        o[2] = g.2;
+        o[3] = g.3;
+    });
+    r.register("cmpflx", |i, o| {
+        let f = flux_from_gdnv(i[0], i[1], i[2], i[3]);
+        o[0] = f.0;
+        o[1] = f.1;
+        o[2] = f.2;
+        o[3] = f.3;
+    });
+    r.register("update_cons_vars", |i, o| {
+        let dtdx = i[12];
+        o[0] = i[0] + dtdx * (i[4] - i[8]);
+        o[1] = i[1] + dtdx * (i[5] - i[9]);
+        o[2] = i[2] + dtdx * (i[6] - i[10]);
+        o[3] = i[3] + dtdx * (i[7] - i[11]);
+    });
+    r
+}

@@ -1,0 +1,639 @@
+//! Hydro2D solver driver: Sod shock-tube setup, CFL control, reflective
+//! boundaries, dimensional splitting (x-pass, then y-pass on transposed
+//! data) — plus the paper's comparison sweep implementations:
+//!
+//! * [`sweep_reference`] — the original unfused code: one full-grid pass
+//!   per kernel, every intermediate materialized (`autovec`);
+//! * [`sweep_handvec`] — the hand-fused expert version (row-buffered
+//!   single pass, the role of the paper's intrinsics `handvec`);
+//! * [`ExecSweeper`] / [`NativeSweeper`] — the HFAV-generated schedule run
+//!   by the interpreter executor or as compiled C via dlopen.
+
+use super::{flux_from_gdnv, limited_slope, riemann_solve, trace_cell, GAMMA};
+use crate::exec::{self, registry::Registry, ExecOptions};
+use crate::plan::Program;
+use std::collections::BTreeMap;
+
+/// Number of ghost cells per side in the sweep dimension.
+pub const NG: usize = 2;
+
+/// Interior state, row-major `ny × nx`.
+#[derive(Debug, Clone)]
+pub struct State {
+    pub nx: usize,
+    pub ny: usize,
+    pub rho: Vec<f64>,
+    pub rhou: Vec<f64>,
+    pub rhov: Vec<f64>,
+    pub e: Vec<f64>,
+    pub t: f64,
+}
+
+/// Sod shock tube: left state (ρ=1, p=1), right state (ρ=0.125, p=0.1),
+/// discontinuity at x = 0.5 (per-column in x).
+pub fn sod(nx: usize, ny: usize) -> State {
+    let mut s = State {
+        nx,
+        ny,
+        rho: vec![0.0; nx * ny],
+        rhou: vec![0.0; nx * ny],
+        rhov: vec![0.0; nx * ny],
+        e: vec![0.0; nx * ny],
+        t: 0.0,
+    };
+    for j in 0..ny {
+        for i in 0..nx {
+            let x = (i as f64 + 0.5) / nx as f64;
+            let (r, p) = if x < 0.5 { (1.0, 1.0) } else { (0.125, 0.1) };
+            s.rho[j * nx + i] = r;
+            s.e[j * nx + i] = p / (GAMMA - 1.0);
+        }
+    }
+    s
+}
+
+/// CFL-limited timestep.
+pub fn cfl_dt(s: &State, dx: f64, cfl: f64) -> f64 {
+    let mut wmax = 1e-10f64;
+    for k in 0..s.rho.len() {
+        let r = s.rho[k].max(1e-10);
+        let u = s.rhou[k] / r;
+        let v = s.rhov[k] / r;
+        let eint = (s.e[k] / r - 0.5 * (u * u + v * v)).max(1e-10);
+        let p = (GAMMA - 1.0) * r * eint;
+        let c = (GAMMA * p / r).sqrt();
+        wmax = wmax.max(u.abs() + c).max(v.abs() + c);
+    }
+    cfl * dx / wmax
+}
+
+/// Pad one field with reflective ghosts in the sweep dim: row-major
+/// `rows × (n + 4)`; `flip` negates the ghost values (normal momentum).
+pub fn pad(field: &[f64], rows: usize, n: usize, flip: bool) -> Vec<f64> {
+    let w = n + 2 * NG;
+    let mut out = vec![0.0; rows * w];
+    let s = if flip { -1.0 } else { 1.0 };
+    for j in 0..rows {
+        let src = &field[j * n..(j + 1) * n];
+        let dst = &mut out[j * w..(j + 1) * w];
+        dst[NG..NG + n].copy_from_slice(src);
+        dst[1] = s * src[0];
+        dst[0] = s * src[1];
+        dst[NG + n] = s * src[n - 1];
+        dst[NG + n + 1] = s * src[n - 2];
+    }
+    out
+}
+
+/// Transpose a row-major `rows × cols` array.
+pub fn transpose(a: &[f64], rows: usize, cols: usize) -> Vec<f64> {
+    let mut out = vec![0.0; a.len()];
+    for j in 0..rows {
+        for i in 0..cols {
+            out[i * rows + j] = a[j * cols + i];
+        }
+    }
+    out
+}
+
+/// One directional sweep: padded conservative inputs (`rows × (n+4)`) →
+/// updated interior (`rows × n`). The "normal" velocity component is
+/// `rhou`; callers swap components for the y-pass.
+pub trait Sweeper {
+    fn sweep(
+        &mut self,
+        rho: &[f64],
+        rhou: &[f64],
+        rhov: &[f64],
+        e: &[f64],
+        dtdx: f64,
+        rows: usize,
+        n: usize,
+    ) -> Result<[Vec<f64>; 4], String>;
+
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+// autovec reference: one pass per kernel, everything materialized.
+// ---------------------------------------------------------------------------
+
+/// The original unfused Hydro2D sweep (paper `autovec`): eight full-grid
+/// passes with ~33 materialized intermediate arrays.
+pub struct RefSweeper;
+
+impl Sweeper for RefSweeper {
+    fn sweep(
+        &mut self,
+        rho: &[f64],
+        rhou: &[f64],
+        rhov: &[f64],
+        e: &[f64],
+        dtdx: f64,
+        rows: usize,
+        n: usize,
+    ) -> Result<[Vec<f64>; 4], String> {
+        let w = n + 2 * NG;
+        let sz = rows * w;
+        // constoprim
+        let mut pr = vec![0.0; sz];
+        let mut pu = vec![0.0; sz];
+        let mut pv = vec![0.0; sz];
+        let mut pe = vec![0.0; sz];
+        for k in 0..sz {
+            pr[k] = rho[k];
+            pu[k] = rhou[k] / rho[k];
+            pv[k] = rhov[k] / rho[k];
+            pe[k] = e[k] / rho[k] - 0.5 * (pu[k] * pu[k] + pv[k] * pv[k]);
+        }
+        // equation_of_state
+        let mut pp = vec![0.0; sz];
+        for k in 0..sz {
+            pp[k] = (0.4 * pr[k] * pe[k]).max(1e-10);
+        }
+        // slope
+        let mut dr = vec![0.0; sz];
+        let mut du = vec![0.0; sz];
+        let mut dv = vec![0.0; sz];
+        let mut dp = vec![0.0; sz];
+        for j in 0..rows {
+            for i in 1..w - 1 {
+                let k = j * w + i;
+                dr[k] = limited_slope(pr[k - 1], pr[k], pr[k + 1]);
+                du[k] = limited_slope(pu[k - 1], pu[k], pu[k + 1]);
+                dv[k] = limited_slope(pv[k - 1], pv[k], pv[k + 1]);
+                dp[k] = limited_slope(pp[k - 1], pp[k], pp[k + 1]);
+            }
+        }
+        // trace
+        let mut trm = vec![0.0; sz];
+        let mut tum = vec![0.0; sz];
+        let mut tvm = vec![0.0; sz];
+        let mut tpm = vec![0.0; sz];
+        let mut trp = vec![0.0; sz];
+        let mut tup = vec![0.0; sz];
+        let mut tvp = vec![0.0; sz];
+        let mut tpp = vec![0.0; sz];
+        for j in 0..rows {
+            for i in 1..w - 1 {
+                let k = j * w + i;
+                let t =
+                    trace_cell(pr[k], pu[k], pv[k], pp[k], dr[k], du[k], dv[k], dp[k], dtdx);
+                trm[k] = t.0;
+                tum[k] = t.1;
+                tvm[k] = t.2;
+                tpm[k] = t.3;
+                trp[k] = t.4;
+                tup[k] = t.5;
+                tvp[k] = t.6;
+                tpp[k] = t.7;
+            }
+        }
+        // qleftright + riemann + cmpflx (interfaces 1..n+2)
+        let mut frho = vec![0.0; sz];
+        let mut frhou = vec![0.0; sz];
+        let mut frhov = vec![0.0; sz];
+        let mut fe = vec![0.0; sz];
+        // qleftright (materialized, as in the original code)
+        let mut qrl = vec![0.0; sz];
+        let mut qul = vec![0.0; sz];
+        let mut qvl = vec![0.0; sz];
+        let mut qpl = vec![0.0; sz];
+        let mut qrr = vec![0.0; sz];
+        let mut qur = vec![0.0; sz];
+        let mut qvr = vec![0.0; sz];
+        let mut qpr = vec![0.0; sz];
+        for j in 0..rows {
+            for i in 1..w - 2 {
+                let k = j * w + i;
+                qrl[k] = trp[k];
+                qul[k] = tup[k];
+                qvl[k] = tvp[k];
+                qpl[k] = tpp[k];
+                qrr[k] = trm[k + 1];
+                qur[k] = tum[k + 1];
+                qvr[k] = tvm[k + 1];
+                qpr[k] = tpm[k + 1];
+            }
+        }
+        let mut grs = vec![0.0; sz];
+        let mut gus = vec![0.0; sz];
+        let mut gvs = vec![0.0; sz];
+        let mut gps = vec![0.0; sz];
+        for j in 0..rows {
+            for i in 1..w - 2 {
+                let k = j * w + i;
+                let g = riemann_solve(
+                    qrl[k], qul[k], qvl[k], qpl[k], qrr[k], qur[k], qvr[k], qpr[k],
+                );
+                grs[k] = g.0;
+                gus[k] = g.1;
+                gvs[k] = g.2;
+                gps[k] = g.3;
+            }
+        }
+        for j in 0..rows {
+            for i in 1..w - 2 {
+                let k = j * w + i;
+                let f = flux_from_gdnv(grs[k], gus[k], gvs[k], gps[k]);
+                frho[k] = f.0;
+                frhou[k] = f.1;
+                frhov[k] = f.2;
+                fe[k] = f.3;
+            }
+        }
+        // update
+        let mut nrho = vec![0.0; rows * n];
+        let mut nrhou = vec![0.0; rows * n];
+        let mut nrhov = vec![0.0; rows * n];
+        let mut ne = vec![0.0; rows * n];
+        for j in 0..rows {
+            for i in NG..n + NG {
+                let k = j * w + i;
+                let o = j * n + (i - NG);
+                nrho[o] = rho[k] + dtdx * (frho[k - 1] - frho[k]);
+                nrhou[o] = rhou[k] + dtdx * (frhou[k - 1] - frhou[k]);
+                nrhov[o] = rhov[k] + dtdx * (frhov[k - 1] - frhov[k]);
+                ne[o] = e[k] + dtdx * (fe[k - 1] - fe[k]);
+            }
+        }
+        Ok([nrho, nrhou, nrhov, ne])
+    }
+
+    fn name(&self) -> &'static str {
+        "autovec"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// handvec: hand-fused single pass with row-local buffers.
+// ---------------------------------------------------------------------------
+
+/// Expert hand-fused sweep: one pass over the grid per step, all
+/// intermediates in row-length scratch (the role the paper's `handvec`
+/// intrinsics code plays in Fig. 13).
+pub struct HandvecSweeper {
+    scratch: Vec<f64>,
+}
+
+impl HandvecSweeper {
+    pub fn new() -> Self {
+        HandvecSweeper { scratch: Vec::new() }
+    }
+}
+
+impl Default for HandvecSweeper {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sweeper for HandvecSweeper {
+    fn sweep(
+        &mut self,
+        rho: &[f64],
+        rhou: &[f64],
+        rhov: &[f64],
+        e: &[f64],
+        dtdx: f64,
+        rows: usize,
+        n: usize,
+    ) -> Result<[Vec<f64>; 4], String> {
+        let w = n + 2 * NG;
+        // Row scratch: prims (5), slopes (4), traces (8), flux (4) = 21 rows.
+        let nbuf = 21;
+        self.scratch.resize(nbuf * w, 0.0);
+        let mut nrho = vec![0.0; rows * n];
+        let mut nrhou = vec![0.0; rows * n];
+        let mut nrhov = vec![0.0; rows * n];
+        let mut ne = vec![0.0; rows * n];
+        for j in 0..rows {
+            let b = j * w;
+            let (pr, rest) = self.scratch.split_at_mut(w);
+            let (pu, rest) = rest.split_at_mut(w);
+            let (pv, rest) = rest.split_at_mut(w);
+            let (pe, rest) = rest.split_at_mut(w);
+            let (pp, rest) = rest.split_at_mut(w);
+            let (dr, rest) = rest.split_at_mut(w);
+            let (du, rest) = rest.split_at_mut(w);
+            let (dv, rest) = rest.split_at_mut(w);
+            let (dp, rest) = rest.split_at_mut(w);
+            let (trm, rest) = rest.split_at_mut(w);
+            let (tum, rest) = rest.split_at_mut(w);
+            let (tvm, rest) = rest.split_at_mut(w);
+            let (tpm, rest) = rest.split_at_mut(w);
+            let (trp, rest) = rest.split_at_mut(w);
+            let (tup, rest) = rest.split_at_mut(w);
+            let (tvp, rest) = rest.split_at_mut(w);
+            let (tpp, rest) = rest.split_at_mut(w);
+            let (frho, rest) = rest.split_at_mut(w);
+            let (frhou, rest) = rest.split_at_mut(w);
+            let (frhov, rest) = rest.split_at_mut(w);
+            let (fe, _) = rest.split_at_mut(w);
+            for i in 0..w {
+                let k = b + i;
+                pr[i] = rho[k];
+                pu[i] = rhou[k] / rho[k];
+                pv[i] = rhov[k] / rho[k];
+                pe[i] = e[k] / rho[k] - 0.5 * (pu[i] * pu[i] + pv[i] * pv[i]);
+                pp[i] = (0.4 * pr[i] * pe[i]).max(1e-10);
+            }
+            for i in 1..w - 1 {
+                dr[i] = limited_slope(pr[i - 1], pr[i], pr[i + 1]);
+                du[i] = limited_slope(pu[i - 1], pu[i], pu[i + 1]);
+                dv[i] = limited_slope(pv[i - 1], pv[i], pv[i + 1]);
+                dp[i] = limited_slope(pp[i - 1], pp[i], pp[i + 1]);
+                let t = trace_cell(pr[i], pu[i], pv[i], pp[i], dr[i], du[i], dv[i], dp[i], dtdx);
+                trm[i] = t.0;
+                tum[i] = t.1;
+                tvm[i] = t.2;
+                tpm[i] = t.3;
+                trp[i] = t.4;
+                tup[i] = t.5;
+                tvp[i] = t.6;
+                tpp[i] = t.7;
+            }
+            for i in 1..w - 2 {
+                let g = riemann_solve(
+                    trp[i], tup[i], tvp[i], tpp[i], trm[i + 1], tum[i + 1], tvm[i + 1],
+                    tpm[i + 1],
+                );
+                let f = flux_from_gdnv(g.0, g.1, g.2, g.3);
+                frho[i] = f.0;
+                frhou[i] = f.1;
+                frhov[i] = f.2;
+                fe[i] = f.3;
+            }
+            for i in NG..n + NG {
+                let k = b + i;
+                let o = j * n + (i - NG);
+                nrho[o] = rho[k] + dtdx * (frho[i - 1] - frho[i]);
+                nrhou[o] = rhou[k] + dtdx * (frhou[i - 1] - frhou[i]);
+                nrhov[o] = rhov[k] + dtdx * (frhov[i - 1] - frhov[i]);
+                ne[o] = e[k] + dtdx * (fe[i - 1] - fe[i]);
+            }
+        }
+        Ok([nrho, nrhou, nrhov, ne])
+    }
+
+    fn name(&self) -> &'static str {
+        "handvec"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HFAV sweepers: interpreter executor and compiled-C module.
+// ---------------------------------------------------------------------------
+
+/// HFAV schedule run by the interpreter executor.
+pub struct ExecSweeper {
+    pub prog: Program,
+    pub reg: Registry,
+    pub opts: ExecOptions,
+}
+
+impl ExecSweeper {
+    pub fn new(prog: Program) -> Self {
+        ExecSweeper { prog, reg: super::registry(), opts: ExecOptions::default() }
+    }
+}
+
+fn sweep_inputs(
+    rho: &[f64],
+    rhou: &[f64],
+    rhov: &[f64],
+    e: &[f64],
+    dtdx: f64,
+) -> BTreeMap<String, Vec<f64>> {
+    let mut m = BTreeMap::new();
+    m.insert("g_rho".to_string(), rho.to_vec());
+    m.insert("g_rhou".to_string(), rhou.to_vec());
+    m.insert("g_rhov".to_string(), rhov.to_vec());
+    m.insert("g_E".to_string(), e.to_vec());
+    m.insert("g_dtdx".to_string(), vec![dtdx]);
+    m
+}
+
+fn sweep_extents(rows: usize, n: usize) -> BTreeMap<String, i64> {
+    let mut m = BTreeMap::new();
+    m.insert("Nj".to_string(), rows as i64);
+    m.insert("Ni".to_string(), n as i64);
+    m
+}
+
+impl Sweeper for ExecSweeper {
+    fn sweep(
+        &mut self,
+        rho: &[f64],
+        rhou: &[f64],
+        rhov: &[f64],
+        e: &[f64],
+        dtdx: f64,
+        rows: usize,
+        n: usize,
+    ) -> Result<[Vec<f64>; 4], String> {
+        let inputs = sweep_inputs(rho, rhou, rhov, e, dtdx);
+        let ext = sweep_extents(rows, n);
+        let mut out = exec::run(&self.prog, &self.reg, &ext, &inputs, self.opts)?;
+        Ok([
+            out.remove("g_nrho").ok_or("missing g_nrho")?,
+            out.remove("g_nrhou").ok_or("missing g_nrhou")?,
+            out.remove("g_nrhov").ok_or("missing g_nrhov")?,
+            out.remove("g_nE").ok_or("missing g_nE")?,
+        ])
+    }
+
+    fn name(&self) -> &'static str {
+        "hfav-exec"
+    }
+}
+
+/// HFAV schedule compiled to C (`cc -O3 -march=native`) and dlopen'd.
+pub struct NativeSweeper {
+    pub module: crate::codegen::native::NativeModule,
+}
+
+impl NativeSweeper {
+    pub fn new(prog: &Program) -> Result<Self, String> {
+        let module = crate::codegen::native::build(prog, &Default::default())?;
+        Ok(NativeSweeper { module })
+    }
+}
+
+impl Sweeper for NativeSweeper {
+    fn sweep(
+        &mut self,
+        rho: &[f64],
+        rhou: &[f64],
+        rhov: &[f64],
+        e: &[f64],
+        dtdx: f64,
+        rows: usize,
+        n: usize,
+    ) -> Result<[Vec<f64>; 4], String> {
+        let ext = sweep_extents(rows, n);
+        let mut arrays = sweep_inputs(rho, rhou, rhov, e, dtdx);
+        for name in ["g_nrho", "g_nrhou", "g_nrhov", "g_nE"] {
+            arrays.insert(name.to_string(), vec![0.0; rows * n]);
+        }
+        self.module.run(&ext, &mut arrays)?;
+        Ok([
+            arrays.remove("g_nrho").unwrap(),
+            arrays.remove("g_nrhou").unwrap(),
+            arrays.remove("g_nrhov").unwrap(),
+            arrays.remove("g_nE").unwrap(),
+        ])
+    }
+
+    fn name(&self) -> &'static str {
+        "hfav-native"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// driver
+// ---------------------------------------------------------------------------
+
+/// Advance one dimensionally-split step (x-pass then y-pass), returning dt.
+pub fn step(s: &mut State, dx: f64, cfl: f64, sweeper: &mut dyn Sweeper) -> Result<f64, String> {
+    let dt = cfl_dt(s, dx, cfl);
+    let dtdx = dt / dx;
+    let (nx, ny) = (s.nx, s.ny);
+
+    // x-pass: rows are y, sweep dim is x; rhou is normal.
+    {
+        let rho = pad(&s.rho, ny, nx, false);
+        let rhou = pad(&s.rhou, ny, nx, true);
+        let rhov = pad(&s.rhov, ny, nx, false);
+        let e = pad(&s.e, ny, nx, false);
+        let [a, b, c, d] = sweeper.sweep(&rho, &rhou, &rhov, &e, dtdx, ny, nx)?;
+        s.rho = a;
+        s.rhou = b;
+        s.rhov = c;
+        s.e = d;
+    }
+
+    // y-pass: transpose; rhov becomes the normal component.
+    {
+        let rho_t = transpose(&s.rho, ny, nx);
+        let rhou_t = transpose(&s.rhou, ny, nx);
+        let rhov_t = transpose(&s.rhov, ny, nx);
+        let e_t = transpose(&s.e, ny, nx);
+        let rho = pad(&rho_t, nx, ny, false);
+        let rhov = pad(&rhov_t, nx, ny, true); // normal: flip in ghosts
+        let rhou = pad(&rhou_t, nx, ny, false);
+        let e = pad(&e_t, nx, ny, false);
+        // swap: sweeper's "rhou" slot carries the normal component (rhov).
+        let [a, b, c, d] = sweeper.sweep(&rho, &rhov, &rhou, &e, dtdx, nx, ny)?;
+        s.rho = transpose(&a, nx, ny);
+        s.rhov = transpose(&b, nx, ny);
+        s.rhou = transpose(&c, nx, ny);
+        s.e = transpose(&d, nx, ny);
+    }
+    s.t += dt;
+    Ok(dt)
+}
+
+/// Total mass and energy (conservation diagnostics).
+pub fn totals(s: &State) -> (f64, f64) {
+    (s.rho.iter().sum(), s.e.iter().sum())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{compile_variant, max_err, Variant};
+
+    #[test]
+    fn sweepers_agree_one_pass() {
+        let (nx, ny) = (40usize, 6usize);
+        let s = sod(nx, ny);
+        let rho = pad(&s.rho, ny, nx, false);
+        let rhou = pad(&s.rhou, ny, nx, true);
+        let rhov = pad(&s.rhov, ny, nx, false);
+        let e = pad(&s.e, ny, nx, false);
+        let dtdx = 0.1;
+
+        let mut rs = RefSweeper;
+        let want = rs.sweep(&rho, &rhou, &rhov, &e, dtdx, ny, nx).unwrap();
+
+        let mut hv = HandvecSweeper::new();
+        let got = hv.sweep(&rho, &rhou, &rhov, &e, dtdx, ny, nx).unwrap();
+        for k in 0..4 {
+            assert!(max_err(&want[k], &got[k]) < 1e-13, "handvec field {k}");
+        }
+
+        for variant in [Variant::Hfav, Variant::Autovec] {
+            let prog = compile_variant(super::super::DECK, variant).unwrap();
+            let mut ex = ExecSweeper::new(prog);
+            let got = ex.sweep(&rho, &rhou, &rhov, &e, dtdx, ny, nx).unwrap();
+            for k in 0..4 {
+                assert!(
+                    max_err(&want[k], &got[k]) < 1e-12,
+                    "exec {variant:?} field {k}: err {}",
+                    max_err(&want[k], &got[k])
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn native_sweeper_matches() {
+        let (nx, ny) = (32usize, 4usize);
+        let s = sod(nx, ny);
+        let rho = pad(&s.rho, ny, nx, false);
+        let rhou = pad(&s.rhou, ny, nx, true);
+        let rhov = pad(&s.rhov, ny, nx, false);
+        let e = pad(&s.e, ny, nx, false);
+        let dtdx = 0.08;
+        let mut rs = RefSweeper;
+        let want = rs.sweep(&rho, &rhou, &rhov, &e, dtdx, ny, nx).unwrap();
+        let prog = compile_variant(super::super::DECK, Variant::Hfav).unwrap();
+        let mut ns = NativeSweeper::new(&prog).unwrap();
+        let got = ns.sweep(&rho, &rhou, &rhov, &e, dtdx, ny, nx).unwrap();
+        for k in 0..4 {
+            assert!(
+                max_err(&want[k], &got[k]) < 1e-12,
+                "native field {k}: err {}",
+                max_err(&want[k], &got[k])
+            );
+        }
+    }
+
+    #[test]
+    fn sod_conserves_and_stays_physical() {
+        let (nx, ny) = (64usize, 8usize);
+        let mut s = sod(nx, ny);
+        let (m0, e0) = totals(&s);
+        let mut sw = HandvecSweeper::new();
+        for _ in 0..25 {
+            step(&mut s, 1.0 / nx as f64, 0.4, &mut sw).unwrap();
+        }
+        let (m1, e1) = totals(&s);
+        assert!(((m1 - m0) / m0).abs() < 1e-10, "mass drift {}", (m1 - m0) / m0);
+        assert!(((e1 - e0) / e0).abs() < 1e-10, "energy drift {}", (e1 - e0) / e0);
+        assert!(s.rho.iter().all(|&r| r > 0.0 && r < 1.5));
+        // Shock moved right: density right of the midpoint increased.
+        let j = ny / 2;
+        let right = s.rho[j * nx + 3 * nx / 4];
+        assert!(right > 0.125, "shock should have raised density: {right}");
+    }
+
+    #[test]
+    fn hfav_contracts_hydro_to_scalars() {
+        let prog = compile_variant(super::super::DECK, Variant::Hfav).unwrap();
+        assert_eq!(prog.fd.nests.len(), 1, "all eight kernels fuse into one nest");
+        // Footprint: O(1) per row (scalar windows), vs O(Ni*Nj) unfused.
+        let mut ext = BTreeMap::new();
+        ext.insert("Nj".to_string(), 1024i64);
+        ext.insert("Ni".to_string(), 1024i64);
+        let fused = prog.footprint_words(&ext).unwrap();
+        let naive = compile_variant(super::super::DECK, Variant::Autovec).unwrap();
+        let naive_words = naive.footprint_words(&ext).unwrap();
+        assert!(fused < 512, "fused intermediate footprint is O(1): {fused} words");
+        assert!(
+            naive_words > 25 * 1024 * 1024,
+            "naive footprint is O(~30 N²): {naive_words} words"
+        );
+    }
+}

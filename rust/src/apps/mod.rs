@@ -1,0 +1,73 @@
+//! The paper's application codes (§3, §5): Laplace, the normalization
+//! example, the COSMO fourth-order-diffusion micro-kernels, and the
+//! Hydro2D shock-hydrodynamics benchmark — each with its HFAV deck, a
+//! kernel registry for the executor, hand-written baselines
+//! (`autovec`-shaped unfused loops, plus the paper's comparison variants),
+//! and workload generators.
+
+pub mod cosmo;
+pub mod hydro2d;
+pub mod laplace;
+pub mod normalization;
+
+use crate::analysis::AnalysisOptions;
+use crate::fusion::FusionOptions;
+use crate::plan::{compile_src, CompileOptions, Program};
+
+/// The two program shapes the paper compares everywhere.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Fully fused + contracted + pipelined (the HFAV output).
+    Hfav,
+    /// One loop nest per kernel, all intermediates materialized — the
+    /// shape of the original code (paper: "autovec").
+    Autovec,
+}
+
+/// Compile with the "HFAV + Tuning" options (paper §5.3): full fusion,
+/// but innermost-dim windows stay full rows so the steady state
+/// auto-vectorizes (the manual-tuning step the paper applied to COSMO).
+pub fn compile_tuned(src: &str) -> Result<Program, String> {
+    compile_src(
+        src,
+        CompileOptions {
+            analysis: AnalysisOptions { contract_innermost: false, ..Default::default() },
+            ..Default::default()
+        },
+    )
+}
+
+/// Compile a deck source in one of the two standard shapes.
+pub fn compile_variant(src: &str, v: Variant) -> Result<Program, String> {
+    let opts = match v {
+        Variant::Hfav => CompileOptions::default(),
+        Variant::Autovec => CompileOptions {
+            fusion: FusionOptions { enabled: false },
+            analysis: AnalysisOptions { contraction: false, ..Default::default() },
+            ..Default::default()
+        },
+    };
+    compile_src(src, opts)
+}
+
+/// Deterministic pseudo-random fill in [0, 1) (xorshift64*).
+pub fn seeded(n: usize, seed: u64) -> Vec<f64> {
+    let mut s = seed.wrapping_mul(2685821657736338717).max(1);
+    (0..n)
+        .map(|_| {
+            s ^= s >> 12;
+            s ^= s << 25;
+            s ^= s >> 27;
+            ((s.wrapping_mul(0x2545F4914F6CDD1D) >> 11) as f64) / ((1u64 << 53) as f64)
+        })
+        .collect()
+}
+
+/// Max relative-ish error between two slices.
+pub fn max_err(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y).abs() / (1.0 + x.abs().max(y.abs())))
+        .fold(0.0, f64::max)
+}

@@ -1,0 +1,256 @@
+//! Benchmark harness: timing utilities and one driver per paper
+//! table/figure. Each driver prints the same rows/series the paper
+//! reports (throughput vs problem size per implementation variant) and a
+//! CSV block for plotting.
+
+use crate::apps::{self, Variant};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Run `f` repeatedly: a warmup call, then at least `min_reps` reps or
+/// until `min_time_s` elapsed; returns seconds-per-call (median of reps).
+pub fn time_it<F: FnMut()>(mut f: F, min_reps: usize, min_time_s: f64) -> f64 {
+    f(); // warmup
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while times.len() < min_reps || start.elapsed().as_secs_f64() < min_time_s {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+        if times.len() > 1000 {
+            break;
+        }
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+/// Table-row printer: name, size, cell-updates/s.
+pub fn row(label: &str, size: usize, secs: f64, cells: f64) {
+    println!(
+        "  {label:<14} n={size:<6} {:>10.1} Mcells/s   ({:.3} ms)",
+        cells / secs / 1e6,
+        secs * 1e3
+    );
+}
+
+/// §T1: print the testbed description (the paper's Table 1 analogue).
+pub fn sysinfo() -> String {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let model = std::fs::read_to_string("/proc/cpuinfo")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("model name"))
+                .map(|l| l.split(':').nth(1).unwrap_or("?").trim().to_string())
+        })
+        .unwrap_or_else(|| "unknown".into());
+    let mem_kb = std::fs::read_to_string("/proc/meminfo")
+        .ok()
+        .and_then(|s| {
+            s.lines().find(|l| l.starts_with("MemTotal")).and_then(|l| {
+                l.split_whitespace().nth(1).and_then(|x| x.parse::<u64>().ok())
+            })
+        })
+        .unwrap_or(0);
+    format!(
+        "Table 1 (testbed): cpu=\"{model}\" logical_cores={cores} mem={:.1} GiB os=linux\n\
+         (paper used SKX 2x24c / KNL 68c; shapes, not absolute numbers, are the claim)",
+        mem_kb as f64 / 1024.0 / 1024.0
+    )
+}
+
+/// Figure 12: normalization throughput, autovec vs HFAV (native-compiled
+/// generated code), across problem sizes. Returns CSV lines.
+pub fn normalization(sizes: &[usize]) -> Vec<String> {
+    let mut csv = vec!["app,size,variant,mcells_per_s".to_string()];
+    println!("Figure 12 — normalization example (cell updates/s):");
+    for &n in sizes {
+        let q = apps::seeded(n * (n + 1), 42);
+        let mut out = vec![0.0; n * n];
+        // autovec: hand-written unfused sweeps (what the compiler sees).
+        let t_auto = time_it(
+            || apps::normalization::reference(&q, n, n, &mut out),
+            3,
+            0.2,
+        );
+        row("autovec", n, t_auto, (n * n) as f64);
+        csv.push(format!("normalize,{n},autovec,{:.3}", (n * n) as f64 / t_auto / 1e6));
+        // HFAV: generated C, cc -O3, dlopen.
+        let prog = apps::compile_variant(apps::normalization::DECK, Variant::Hfav).unwrap();
+        let module = crate::codegen::native::build(&prog, &Default::default()).unwrap();
+        let mut ext = BTreeMap::new();
+        ext.insert("Nj".to_string(), n as i64);
+        ext.insert("Ni".to_string(), n as i64);
+        let mut arrays = BTreeMap::new();
+        arrays.insert("g_q".to_string(), q.clone());
+        arrays.insert("g_out".to_string(), vec![0.0; n * n]);
+        let t_hfav = time_it(|| module.run(&ext, &mut arrays).unwrap(), 3, 0.2);
+        row("HFAV", n, t_hfav, (n * n) as f64);
+        csv.push(format!("normalize,{n},hfav,{:.3}", (n * n) as f64 / t_hfav / 1e6));
+        println!("    speedup {:.2}x", t_auto / t_hfav);
+    }
+    csv
+}
+
+/// Figure 11: COSMO micro-kernels — STELLA-like vs HFAV vs HFAV+Tuning.
+pub fn cosmo(sizes: &[usize], nk: usize) -> Vec<String> {
+    let mut csv = vec!["app,size,variant,mcells_per_s".to_string()];
+    println!("Figure 11 — COSMO micro-kernels (cell updates/s, nk={nk}):");
+    for &n in sizes {
+        let u = apps::seeded(nk * n * n, 7);
+        let cells = (nk * (n - 4) * (n - 4)) as f64;
+        let mut out = vec![0.0; nk * (n - 4) * (n - 4)];
+        let t_ref = time_it(|| apps::cosmo::reference(&u, nk, n, n, &mut out), 3, 0.2);
+        row("autovec", n, t_ref, cells);
+        csv.push(format!("cosmo,{n},autovec,{:.3}", cells / t_ref / 1e6));
+        let t_st = time_it(|| apps::cosmo::stella(&u, nk, n, n, &mut out), 3, 0.2);
+        row("STELLA", n, t_st, cells);
+        csv.push(format!("cosmo,{n},stella,{:.3}", cells / t_st / 1e6));
+
+        let prog = apps::compile_variant(apps::cosmo::DECK, Variant::Hfav).unwrap();
+        let module = crate::codegen::native::build(&prog, &Default::default()).unwrap();
+        let mut ext = BTreeMap::new();
+        ext.insert("Nk".to_string(), nk as i64);
+        ext.insert("Nj".to_string(), n as i64);
+        ext.insert("Ni".to_string(), n as i64);
+        let mut arrays = BTreeMap::new();
+        arrays.insert("g_u".to_string(), u.clone());
+        arrays.insert("g_out".to_string(), vec![0.0; nk * (n - 4) * (n - 4)]);
+        let t_hfav = time_it(|| module.run(&ext, &mut arrays).unwrap(), 3, 0.2);
+        row("HFAV", n, t_hfav, cells);
+        csv.push(format!("cosmo,{n},hfav,{:.3}", cells / t_hfav / 1e6));
+
+        // HFAV + Tuning (paper §5.3): innermost windows kept as full
+        // rows so the steady state vectorizes.
+        let tuned = apps::compile_tuned(apps::cosmo::DECK).unwrap();
+        let module_t = crate::codegen::native::build(&tuned, &Default::default()).unwrap();
+        let mut arrays_t = BTreeMap::new();
+        arrays_t.insert("g_u".to_string(), u.clone());
+        arrays_t.insert("g_out".to_string(), vec![0.0; nk * (n - 4) * (n - 4)]);
+        let t_tuned = time_it(|| module_t.run(&ext, &mut arrays_t).unwrap(), 3, 0.2);
+        row("HFAV+Tuning", n, t_tuned, cells);
+        csv.push(format!("cosmo,{n},hfav_tuned,{:.3}", cells / t_tuned / 1e6));
+        println!(
+            "    STELLA/HFAV+T {:.2}x   autovec/HFAV+T {:.2}x",
+            t_st / t_tuned,
+            t_ref / t_tuned
+        );
+    }
+    csv
+}
+
+/// Figure 13: Hydro2D — autovec vs handvec vs HFAV (native).
+pub fn hydro2d(sizes: &[usize], steps: usize) -> Vec<String> {
+    use crate::apps::hydro2d::solver::*;
+    let mut csv = vec!["app,size,variant,mcells_per_s".to_string()];
+    println!("Figure 13 — Hydro2D (cell updates/s over {steps} steps):");
+    for &n in sizes {
+        let cells = (n * n * steps) as f64;
+        for (label, mk) in [
+            ("autovec", 0usize),
+            ("handvec", 1usize),
+            ("HFAV", 2usize),
+            ("HFAV+Tuning", 3usize),
+        ] {
+            let mut state = sod(n, n);
+            let mut sweeper: Box<dyn Sweeper> = match mk {
+                0 => Box::new(RefSweeper),
+                1 => Box::new(HandvecSweeper::new()),
+                2 => {
+                    let prog =
+                        apps::compile_variant(crate::apps::hydro2d::DECK, Variant::Hfav).unwrap();
+                    Box::new(NativeSweeper::new(&prog).unwrap())
+                }
+                _ => {
+                    let prog = apps::compile_tuned(crate::apps::hydro2d::DECK).unwrap();
+                    Box::new(NativeSweeper::new(&prog).unwrap())
+                }
+            };
+            let t0 = Instant::now();
+            for _ in 0..steps {
+                step(&mut state, 1.0 / n as f64, 0.4, sweeper.as_mut()).unwrap();
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            row(label, n, secs, cells);
+            csv.push(format!(
+                "hydro2d,{n},{},{:.3}",
+                label.to_lowercase(),
+                cells / secs / 1e6
+            ));
+        }
+    }
+    csv
+}
+
+/// §M1/M2: footprint table — measured intermediate words, fused vs
+/// autovec, with the paper's formulas for comparison.
+pub fn footprint() -> Vec<String> {
+    let mut lines = Vec::new();
+    println!("Footprint (intermediate storage words):");
+    let cases = [
+        ("cosmo", apps::cosmo::DECK, vec![("Nk", 8i64), ("Nj", 512), ("Ni", 512)]),
+        ("hydro2d", crate::apps::hydro2d::DECK, vec![("Nj", 1024), ("Ni", 1024)]),
+        ("normalize", apps::normalization::DECK, vec![("Nj", 512), ("Ni", 512)]),
+        ("laplace", apps::laplace::DECK, vec![("Nj", 512), ("Ni", 512)]),
+    ];
+    for (name, deck, ext) in cases {
+        let extents: BTreeMap<String, i64> =
+            ext.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+        let fused = apps::compile_variant(deck, Variant::Hfav).unwrap();
+        let naive = apps::compile_variant(deck, Variant::Autovec).unwrap();
+        let fw = fused.footprint_words(&extents).unwrap();
+        let nw = naive.footprint_words(&extents).unwrap();
+        let line = format!(
+            "  {name:<10} autovec={nw:>12} words   hfav={fw:>8} words   reduction {:.0}x",
+            nw as f64 / fw.max(1) as f64
+        );
+        println!("{line}");
+        lines.push(line);
+    }
+    lines
+}
+
+/// P1: PJRT artifacts — fused (Pallas) vs unfused (jnp) on the CPU PJRT
+/// client, loaded and driven from Rust.
+pub fn pjrt(artifacts: &std::path::Path) -> Result<Vec<String>, String> {
+    let rt = crate::runtime::Runtime::cpu(artifacts).map_err(|e| e.to_string())?;
+    let mut csv = vec!["artifact,ms_per_call".to_string()];
+    println!("PJRT artifacts (platform {}):", rt.platform());
+    for name in [
+        "laplace_unfused",
+        "laplace_fused",
+        "normalize_unfused",
+        "normalize_fused",
+        "hydro_unfused",
+        "hydro_fused",
+    ] {
+        let exe = match rt.load(name) {
+            Ok(e) => e,
+            Err(e) => {
+                println!("  {name:<18} unavailable: {e}");
+                continue;
+            }
+        };
+        let bufs: Vec<Vec<f64>> = exe
+            .meta
+            .inputs
+            .iter()
+            .map(|s| {
+                let n: usize = s.iter().product();
+                apps::seeded(n, 3).iter().map(|x| 0.2 + 0.5 * x).collect()
+            })
+            .collect();
+        let refs: Vec<&[f64]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let secs = time_it(
+            || {
+                exe.run(&refs).unwrap();
+            },
+            2,
+            0.1,
+        );
+        println!("  {name:<18} {:.3} ms/call", secs * 1e3);
+        csv.push(format!("{name},{:.4}", secs * 1e3));
+    }
+    Ok(csv)
+}

@@ -1,0 +1,157 @@
+//! DOT (graphviz) debug output (paper §4 "Debugging output" — the basis
+//! for the paper's Figures 2–4, 6 and 8).
+
+use crate::analysis::StoragePlan;
+use crate::dataflow::{Dataflow, Terminal};
+use crate::fusion::FusedDag;
+use std::fmt::Write;
+
+/// Dataflow DAG (Fig. 2/3): kernel callsites as vertices, variables as
+/// edges; load/store pseudo-kernels for terminals.
+pub fn dataflow(df: &Dataflow) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "digraph dataflow {{");
+    let _ = writeln!(s, "  rankdir=TB; node [shape=box, fontname=monospace];");
+    for cs in &df.callsites {
+        let _ = writeln!(s, "  k{} [label=\"{}\"];", cs.id, cs.name);
+    }
+    for v in &df.vars {
+        match &v.terminal {
+            Terminal::Input { storage, .. } => {
+                let _ = writeln!(
+                    s,
+                    "  in_{} [label=\"load {}\", shape=ellipse, style=dashed];",
+                    v.id, storage
+                );
+                for r in &df.reads_of[v.id] {
+                    let _ = writeln!(
+                        s,
+                        "  in_{} -> k{} [label=\"{}{:?}\"];",
+                        v.id, r.consumer, v.ident, r.offsets
+                    );
+                }
+            }
+            Terminal::Output { storage, .. } => {
+                let _ = writeln!(
+                    s,
+                    "  out_{} [label=\"store {}\", shape=ellipse, style=dashed];",
+                    v.id, storage
+                );
+                if let Some(p) = v.producer {
+                    let _ = writeln!(s, "  k{} -> out_{} [label=\"{}\"];", p, v.id, v.ident);
+                }
+            }
+            Terminal::No => {}
+        }
+        if let Some(p) = v.producer {
+            for r in &df.reads_of[v.id] {
+                let _ = writeln!(
+                    s,
+                    "  k{} -> k{} [label=\"{}{:?}\"];",
+                    p, r.consumer, v.ident, r.offsets
+                );
+            }
+        }
+    }
+    let _ = writeln!(s, "}}");
+    s
+}
+
+/// Fused iteration-nest DAG (Fig. 4/6): one cluster per nest, members
+/// listed with their phase roles; splits annotated.
+pub fn inest(df: &Dataflow, fd: &FusedDag) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "digraph inest {{");
+    let _ = writeln!(s, "  rankdir=TB; node [shape=box, fontname=monospace];");
+    for nest in &fd.nests {
+        let _ = writeln!(s, "  subgraph cluster_{} {{", nest.id);
+        let _ = writeln!(s, "    label=\"nest {} ({})\";", nest.id, nest.dims.join(","));
+        for m in &nest.members {
+            let cs = &df.callsites[m.callsite];
+            let roles: Vec<String> = nest
+                .dims
+                .iter()
+                .zip(&m.roles)
+                .map(|(d, r)| format!("{d}:{r:?}"))
+                .collect();
+            let _ = writeln!(
+                s,
+                "    k{} [label=\"{}\\n{}\"];",
+                cs.id,
+                cs.name,
+                roles.join(" ")
+            );
+        }
+        let _ = writeln!(s, "  }}");
+    }
+    for (a, b, vars) in df.edges() {
+        let labels: Vec<&str> = vars.iter().map(|&v| df.vars[v].ident.as_str()).collect();
+        let split = fd
+            .splits
+            .iter()
+            .any(|sp| sp.producer == a && sp.consumer == b);
+        let _ = writeln!(
+            s,
+            "  k{a} -> k{b} [label=\"{}\"{}];",
+            labels.join(","),
+            if split { ", color=red, style=bold" } else { "" }
+        );
+    }
+    let _ = writeln!(s, "}}");
+    s
+}
+
+/// Reuse diagram for one variable (Fig. 8): read offsets linked along the
+/// Hamiltonian reuse path.
+pub fn reuse(df: &Dataflow, sp: &StoragePlan, ident: &str) -> Option<String> {
+    let v = df.var(ident)?;
+    let r = sp.reuse.iter().find(|r| r.var == v.id)?;
+    let mut s = String::new();
+    let _ = writeln!(s, "digraph reuse {{");
+    let _ = writeln!(s, "  rankdir=LR; node [shape=circle, fontname=monospace];");
+    for (k, off) in r.path.iter().enumerate() {
+        let label: Vec<String> = v
+            .dims
+            .iter()
+            .zip(off.iter())
+            .map(|(d, o)| match o.cmp(&0) {
+                std::cmp::Ordering::Equal => d.clone(),
+                std::cmp::Ordering::Greater => format!("{d}+{o}"),
+                std::cmp::Ordering::Less => format!("{d}{o}"),
+            })
+            .collect();
+        let _ = writeln!(s, "  n{k} [label=\"({})\"];", label.join(","));
+    }
+    for k in 0..r.path.len().saturating_sub(1) {
+        let _ = writeln!(s, "  n{k} -> n{} [color=orange];", k + 1);
+    }
+    let _ = writeln!(s, "}}");
+    Some(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::frontend::testdecks;
+    use crate::plan::{compile_src, CompileOptions};
+
+    #[test]
+    fn dot_outputs_nonempty() {
+        let prog = compile_src(testdecks::NORMALIZE, CompileOptions::default()).unwrap();
+        let d = super::dataflow(&prog.df);
+        assert!(d.contains("digraph dataflow"));
+        assert!(d.contains("norm_acc"));
+        let i = super::inest(&prog.df, &prog.fd);
+        assert!(i.contains("cluster_0"));
+        assert!(i.contains("cluster_1"));
+        assert!(i.contains("color=red"), "split edge should be marked:\n{i}");
+    }
+
+    #[test]
+    fn reuse_diagram_for_laplace() {
+        let prog = compile_src(testdecks::LAPLACE, CompileOptions::default()).unwrap();
+        let r = super::reuse(&prog.df, &prog.sp, "cell").unwrap();
+        assert!(r.contains("(j+1,i)"), "{r}");
+        assert!(r.contains("orange"));
+        assert!(super::reuse(&prog.df, &prog.sp, "nosuch").is_none());
+    }
+}

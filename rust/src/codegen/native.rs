@@ -1,0 +1,219 @@
+//! Native harness: compile the C99 output with the system compiler and
+//! load it via `dlopen` — this is the measured artifact in benchmarks, the
+//! analogue of the paper compiling HFAV's output with `icc -O3 -xHost`.
+
+use super::c99;
+use crate::plan::Program;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::PathBuf;
+
+/// A compiled, loaded generated-code module.
+pub struct NativeModule {
+    /// Keep the library alive for the lifetime of `run_fn`.
+    _lib: libloading::Library,
+    run_fn: unsafe extern "C" fn(*const i64, *const *mut f64),
+    pub extents: Vec<String>,
+    pub externals: Vec<String>,
+    pub c_source: String,
+    pub so_path: PathBuf,
+}
+
+/// Compiler configuration.
+#[derive(Debug, Clone)]
+pub struct CcOptions {
+    pub cc: String,
+    pub flags: Vec<String>,
+}
+
+impl Default for CcOptions {
+    fn default() -> Self {
+        CcOptions {
+            cc: std::env::var("CC").unwrap_or_else(|_| "cc".to_string()),
+            flags: vec![
+                "-O3".into(),
+                "-march=native".into(),
+                "-fno-math-errno".into(),
+                "-shared".into(),
+                "-fPIC".into(),
+            ],
+        }
+    }
+}
+
+/// Emit, compile and load a program's generated C.
+pub fn build(prog: &Program, opts: &CcOptions) -> Result<NativeModule, String> {
+    let c_source = c99::emit(prog)?;
+    let dir = std::env::temp_dir().join(format!(
+        "hfav-{}-{}",
+        super::mangle(&prog.deck.name),
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+    // Unique name per emitted source to avoid stale dlopen caching.
+    let digest = fnv(&c_source);
+    let c_path = dir.join(format!("gen_{digest:016x}.c"));
+    let so_path = dir.join(format!("gen_{digest:016x}.so"));
+    {
+        let mut f = std::fs::File::create(&c_path).map_err(|e| e.to_string())?;
+        f.write_all(c_source.as_bytes()).map_err(|e| e.to_string())?;
+    }
+    let output = std::process::Command::new(&opts.cc)
+        .args(&opts.flags)
+        .arg("-o")
+        .arg(&so_path)
+        .arg(&c_path)
+        .arg("-lm")
+        .output()
+        .map_err(|e| format!("failed to spawn {}: {e}", opts.cc))?;
+    if !output.status.success() {
+        return Err(format!(
+            "{} failed:\n{}\n--- source ---\n{}",
+            opts.cc,
+            String::from_utf8_lossy(&output.stderr),
+            c_source
+        ));
+    }
+    let lib = unsafe { libloading::Library::new(&so_path) }.map_err(|e| e.to_string())?;
+    let run_fn = unsafe {
+        let sym: libloading::Symbol<unsafe extern "C" fn(*const i64, *const *mut f64)> =
+            lib.get(b"hfav_run").map_err(|e| e.to_string())?;
+        *sym
+    };
+    Ok(NativeModule {
+        _lib: lib,
+        run_fn,
+        extents: c99::extent_names(prog),
+        externals: c99::external_names(prog),
+        c_source,
+        so_path,
+    })
+}
+
+impl NativeModule {
+    /// Run with named extents and external arrays. Externals must include
+    /// every array (inputs and outputs); alias pairs may map two names to
+    /// the same buffer by passing the same Vec under one name and declaring
+    /// the pair in the deck (use [`run_aliased`](Self::run_aliased)).
+    pub fn run(
+        &self,
+        extents: &BTreeMap<String, i64>,
+        arrays: &mut BTreeMap<String, Vec<f64>>,
+    ) -> Result<(), String> {
+        let ext: Vec<i64> = self
+            .extents
+            .iter()
+            .map(|e| extents.get(e).copied().ok_or(format!("missing extent `{e}`")))
+            .collect::<Result<_, _>>()?;
+        // Collect raw pointers in declaration order; disjointness is
+        // guaranteed by BTreeMap ownership of separate Vecs.
+        let mut ptrs: Vec<*mut f64> = Vec::with_capacity(self.externals.len());
+        for name in &self.externals {
+            let a = arrays
+                .get_mut(name)
+                .ok_or_else(|| format!("missing external array `{name}`"))?;
+            ptrs.push(a.as_mut_ptr());
+        }
+        unsafe { (self.run_fn)(ext.as_ptr(), ptrs.as_ptr()) };
+        Ok(())
+    }
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{self, ExecOptions};
+    use crate::frontend::testdecks;
+    use crate::plan::{compile_src, CompileOptions};
+
+    fn seeded(n: usize, seed: u64) -> Vec<f64> {
+        let mut s = seed.wrapping_mul(2685821657736338717).max(1);
+        (0..n)
+            .map(|_| {
+                s ^= s >> 12;
+                s ^= s << 25;
+                s ^= s >> 27;
+                ((s.wrapping_mul(0x2545F4914F6CDD1D) >> 11) as f64) / ((1u64 << 53) as f64)
+            })
+            .collect()
+    }
+
+    fn extmap(pairs: &[(&str, i64)]) -> BTreeMap<String, i64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    /// Compile the generated C for each test deck and check it agrees with
+    /// the interpreter executor.
+    #[test]
+    fn native_matches_executor() {
+        let regs: Vec<(&str, crate::exec::registry::Registry)> = vec![
+            (testdecks::LAPLACE, {
+                let mut r = crate::exec::registry::Registry::new();
+                r.register("laplace5", |i, o| o[0] = 0.25 * (i[0] + i[1] + i[2] + i[3]) - i[4]);
+                r
+            }),
+            (testdecks::CHAIN1D, {
+                let mut r = crate::exec::registry::Registry::new();
+                r.register("dbl", |i, o| o[0] = 2.0 * i[0]);
+                r.register("diff", |i, o| o[0] = i[1] - i[0]);
+                r
+            }),
+            (testdecks::NORMALIZE, {
+                let mut r = crate::exec::registry::Registry::new();
+                r.register("flux", |i, o| o[0] = i[1] - i[0]);
+                r.register("norm_init", |_i, o| o[0] = 0.0);
+                r.register("norm_acc", |i, o| o[0] = i[0] + i[1] * i[1]);
+                r.register("norm_root", |i, o| o[0] = 1.0 / (i[0] + 1e-30).sqrt());
+                r.register("normalize", |i, o| o[0] = i[0] * i[1]);
+                r
+            }),
+        ];
+        let ext = extmap(&[("Nj", 12), ("Ni", 15), ("N", 33)]);
+        for (src, reg) in regs {
+            let prog = compile_src(src, CompileOptions::default()).unwrap();
+            // Interpreter result.
+            let mut inputs = BTreeMap::new();
+            for (name, _, _) in prog.external_inputs() {
+                let len = exec::external_len(&prog, &name, &ext).unwrap();
+                inputs.insert(name, seeded(len, 5));
+            }
+            let want = exec::run(&prog, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+
+            // Native result.
+            let module = build(&prog, &CcOptions::default()).unwrap();
+            let mut arrays: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+            for name in &module.externals {
+                match inputs.get(name) {
+                    Some(v) => {
+                        arrays.insert(name.clone(), v.clone());
+                    }
+                    None => {
+                        let len = exec::external_len(&prog, name, &ext).unwrap();
+                        arrays.insert(name.clone(), vec![0.0; len]);
+                    }
+                }
+            }
+            module.run(&ext, &mut arrays).unwrap();
+            for (name, w) in &want {
+                let got = &arrays[name];
+                assert_eq!(got.len(), w.len());
+                for (k, (a, b)) in got.iter().zip(w.iter()).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-12 * (1.0 + a.abs().max(b.abs())),
+                        "deck `{}` out `{name}` elem {k}: {a} vs {b}",
+                        prog.deck.name
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,494 @@
+//! Job coordinator: a leader/worker runtime that dispatches grid-update
+//! jobs to the available engines (interpreter executor, compiled-C native
+//! modules, PJRT executables) with per-worker executable caches, dynamic
+//! batching of same-kind jobs, and latency/throughput metrics.
+//!
+//! The paper's contribution is the *generator*; the coordinator is the
+//! thin L3 driver that makes the generated artifacts deployable: load
+//! once, serve many requests, never touch Python.
+
+use crate::apps::{self, Variant};
+use crate::runtime::Runtime;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Which engine executes a job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Interpreter executor over the HFAV schedule.
+    Exec,
+    /// Generated C compiled with the system compiler, dlopen'd.
+    Native,
+    /// AOT JAX/Pallas artifact on the PJRT CPU client.
+    Pjrt,
+}
+
+impl std::str::FromStr for Engine {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "exec" => Ok(Engine::Exec),
+            "native" => Ok(Engine::Native),
+            "pjrt" => Ok(Engine::Pjrt),
+            _ => Err(format!("unknown engine `{s}` (exec|native|pjrt)")),
+        }
+    }
+}
+
+/// A grid-update job.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: u64,
+    /// `laplace` | `normalize` | `cosmo` | `hydro2d`
+    pub app: String,
+    pub variant: Variant,
+    pub engine: Engine,
+    /// Problem size (per side).
+    pub size: usize,
+    /// Number of repeated applications (time steps / sweeps).
+    pub steps: usize,
+}
+
+/// Result of one job.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub id: u64,
+    pub ok: bool,
+    pub detail: String,
+    pub latency: Duration,
+    /// Cell-updates per second achieved.
+    pub cups: f64,
+    pub checksum: f64,
+}
+
+/// Aggregated metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub latencies_us: Mutex<Vec<u64>>,
+    pub total_cells: AtomicU64,
+}
+
+impl Metrics {
+    pub fn record(&self, r: &JobResult, cells: u64) {
+        if r.ok {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+            self.total_cells.fetch_add(cells, Ordering::Relaxed);
+        } else {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        self.latencies_us.lock().unwrap().push(r.latency.as_micros() as u64);
+    }
+
+    pub fn percentile(&self, p: f64) -> Duration {
+        let mut v = self.latencies_us.lock().unwrap().clone();
+        if v.is_empty() {
+            return Duration::ZERO;
+        }
+        v.sort_unstable();
+        let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
+        Duration::from_micros(v[idx])
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "completed={} failed={} p50={:?} p95={:?} total_cells={}",
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.percentile(0.5),
+            self.percentile(0.95),
+            self.total_cells.load(Ordering::Relaxed),
+        )
+    }
+}
+
+enum Msg {
+    Run(Job, mpsc::Sender<JobResult>),
+    Stop,
+}
+
+/// The coordinator: owns the worker pool.
+pub struct Coordinator {
+    tx: mpsc::Sender<Msg>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Start `nworkers` workers. `artifacts_dir` may be None (PJRT jobs
+    /// will then fail gracefully).
+    pub fn start(nworkers: usize, artifacts_dir: Option<std::path::PathBuf>) -> Coordinator {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::default());
+        let mut workers = Vec::new();
+        for wid in 0..nworkers.max(1) {
+            let rx = rx.clone();
+            let metrics = metrics.clone();
+            // PJRT clients are not Send: each worker owns its own runtime,
+            // created lazily on the first PJRT job.
+            let artifacts = artifacts_dir.clone();
+            workers.push(std::thread::spawn(move || {
+                let mut worker = Worker::new(wid, artifacts);
+                loop {
+                    let msg = { rx.lock().unwrap().recv() };
+                    match msg {
+                        Ok(Msg::Run(job, reply)) => {
+                            let cells =
+                                (job.size * job.size) as u64 * job.steps.max(1) as u64;
+                            let res = worker.run(&job);
+                            metrics.record(&res, cells);
+                            let _ = reply.send(res);
+                        }
+                        Ok(Msg::Stop) | Err(_) => break,
+                    }
+                }
+            }));
+        }
+        Coordinator { tx, workers, metrics }
+    }
+
+    /// Submit a job; returns a receiver for its result.
+    pub fn submit(&self, job: Job) -> mpsc::Receiver<JobResult> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx.send(Msg::Run(job, rtx)).expect("coordinator stopped");
+        rrx
+    }
+
+    /// Submit a batch and wait for all results (dynamic batching: jobs of
+    /// the same kind hit warm per-worker caches).
+    pub fn run_batch(&self, jobs: Vec<Job>) -> Vec<JobResult> {
+        let rxs: Vec<_> = jobs.into_iter().map(|j| self.submit(j)).collect();
+        rxs.into_iter().map(|rx| rx.recv().expect("worker died")).collect()
+    }
+
+    pub fn shutdown(mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Stop);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Per-worker state: compiled program / native-module caches.
+struct Worker {
+    #[allow(dead_code)]
+    id: usize,
+    artifacts: Option<std::path::PathBuf>,
+    runtime: Option<Runtime>,
+    progs: BTreeMap<(String, bool), Arc<crate::plan::Program>>,
+    natives: BTreeMap<(String, bool), Arc<crate::codegen::native::NativeModule>>,
+}
+
+impl Worker {
+    fn new(id: usize, artifacts: Option<std::path::PathBuf>) -> Worker {
+        Worker { id, artifacts, runtime: None, progs: BTreeMap::new(), natives: BTreeMap::new() }
+    }
+
+    /// Lazily create this worker's PJRT runtime (clients are not Send).
+    fn runtime(&mut self) -> Result<&Runtime, String> {
+        if self.runtime.is_none() {
+            let dir = self.artifacts.clone().ok_or("no artifacts dir — PJRT unavailable")?;
+            self.runtime = Some(Runtime::cpu(dir).map_err(|e| e.to_string())?);
+        }
+        Ok(self.runtime.as_ref().unwrap())
+    }
+
+    fn prog(&mut self, app: &str, variant: Variant) -> Result<Arc<crate::plan::Program>, String> {
+        let key = (app.to_string(), variant == Variant::Hfav);
+        if let Some(p) = self.progs.get(&key) {
+            return Ok(p.clone());
+        }
+        let deck = deck_of(app)?;
+        let p = Arc::new(apps::compile_variant(deck, variant)?);
+        self.progs.insert(key, p.clone());
+        Ok(p)
+    }
+
+    fn native(
+        &mut self,
+        app: &str,
+        variant: Variant,
+    ) -> Result<Arc<crate::codegen::native::NativeModule>, String> {
+        let key = (app.to_string(), variant == Variant::Hfav);
+        if let Some(m) = self.natives.get(&key) {
+            return Ok(m.clone());
+        }
+        let prog = self.prog(app, variant)?;
+        let m = Arc::new(crate::codegen::native::build(&prog, &Default::default())?);
+        self.natives.insert(key, m.clone());
+        Ok(m)
+    }
+
+    fn run(&mut self, job: &Job) -> JobResult {
+        let start = Instant::now();
+        let out = self.dispatch(job);
+        let latency = start.elapsed();
+        match out {
+            Ok(checksum) => {
+                let cells = (job.size * job.size) as f64 * job.steps.max(1) as f64;
+                JobResult {
+                    id: job.id,
+                    ok: true,
+                    detail: String::new(),
+                    latency,
+                    cups: cells / latency.as_secs_f64(),
+                    checksum,
+                }
+            }
+            Err(e) => JobResult {
+                id: job.id,
+                ok: false,
+                detail: e,
+                latency,
+                cups: 0.0,
+                checksum: 0.0,
+            },
+        }
+    }
+
+    fn dispatch(&mut self, job: &Job) -> Result<f64, String> {
+        match job.app.as_str() {
+            "hydro2d" => self.run_hydro(job),
+            "laplace" | "normalize" | "cosmo" => self.run_stencil(job),
+            other => Err(format!("unknown app `{other}`")),
+        }
+    }
+
+    fn run_hydro(&mut self, job: &Job) -> Result<f64, String> {
+        use crate::apps::hydro2d::solver::*;
+        let n = job.size;
+        let mut state = sod(n, n);
+        let mut sweeper: Box<dyn Sweeper> = match job.engine {
+            Engine::Exec => Box::new(ExecSweeper::new(apps::compile_variant(
+                crate::apps::hydro2d::DECK,
+                job.variant,
+            )?)),
+            Engine::Native => {
+                let m = self.native("hydro2d", job.variant)?;
+                // NativeModule isn't cloneable into the Box; rebuild a thin
+                // wrapper around the shared Arc.
+                Box::new(SharedNativeSweeper { module: m })
+            }
+            Engine::Pjrt => {
+                return Err("hydro2d PJRT path requires fixed artifact shape; use bench pjrt".into())
+            }
+        };
+        for _ in 0..job.steps {
+            step(&mut state, 1.0 / n as f64, 0.4, sweeper.as_mut())?;
+        }
+        Ok(state.rho.iter().sum())
+    }
+
+    fn run_stencil(&mut self, job: &Job) -> Result<f64, String> {
+        let n = job.size;
+        let (_deck, reg, extents, input_name): (&str, _, Vec<(&str, i64)>, &str) =
+            match job.app.as_str() {
+                "laplace" => (
+                    crate::apps::laplace::DECK,
+                    crate::apps::laplace::registry(),
+                    vec![("Nj", n as i64), ("Ni", n as i64)],
+                    "g_cell",
+                ),
+                "normalize" => (
+                    crate::apps::normalization::DECK,
+                    crate::apps::normalization::registry(),
+                    vec![("Nj", n as i64), ("Ni", n as i64)],
+                    "g_q",
+                ),
+                "cosmo" => (
+                    crate::apps::cosmo::DECK,
+                    crate::apps::cosmo::registry(),
+                    vec![("Nk", 4), ("Nj", n as i64), ("Ni", n as i64)],
+                    "g_u",
+                ),
+                _ => unreachable!(),
+            };
+        let prog = self.prog(&job.app, job.variant)?;
+        let ext: BTreeMap<String, i64> =
+            extents.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+        let len = crate::exec::external_len(&prog, input_name, &ext)?;
+        let mut inputs = BTreeMap::new();
+        inputs.insert(input_name.to_string(), apps::seeded(len, job.id));
+        let mut checksum = 0.0;
+        match job.engine {
+            Engine::Exec => {
+                for _ in 0..job.steps.max(1) {
+                    let out = crate::exec::run(&prog, &reg, &ext, &inputs, Default::default())?;
+                    checksum = out.values().next().map(|v| v.iter().sum()).unwrap_or(0.0);
+                }
+            }
+            Engine::Native => {
+                let m = self.native(&job.app, job.variant)?;
+                let mut arrays = inputs.clone();
+                for name in &m.externals {
+                    arrays
+                        .entry(name.clone())
+                        .or_insert_with(|| vec![0.0; crate::exec::external_len(&prog, name, &ext).unwrap_or(0)]);
+                }
+                for _ in 0..job.steps.max(1) {
+                    m.run(&ext, &mut arrays)?;
+                }
+                checksum = arrays
+                    .iter()
+                    .filter(|(k, _)| !inputs.contains_key(*k))
+                    .map(|(_, v)| v.iter().sum::<f64>())
+                    .sum();
+            }
+            Engine::Pjrt => {
+                let rt = self.runtime()?;
+                let variant = if job.variant == Variant::Hfav { "fused" } else { "unfused" };
+                let name = format!(
+                    "{}_{}",
+                    if job.app == "normalize" { "normalize" } else { job.app.as_str() },
+                    variant
+                );
+                let exe = rt.load(&name).map_err(|e| e.to_string())?;
+                // PJRT artifacts are fixed-shape; synthesize matching input.
+                let shapes = exe.meta.inputs.clone();
+                let bufs: Vec<Vec<f64>> = shapes
+                    .iter()
+                    .map(|s| apps::seeded(s.iter().product(), job.id))
+                    .collect();
+                let refs: Vec<&[f64]> = bufs.iter().map(|b| b.as_slice()).collect();
+                for _ in 0..job.steps.max(1) {
+                    let out = exe.run(&refs).map_err(|e| e.to_string())?;
+                    checksum = out[0].iter().sum();
+                }
+            }
+        }
+        Ok(checksum)
+    }
+}
+
+/// Native sweeper over a shared module (coordinator cache).
+struct SharedNativeSweeper {
+    module: Arc<crate::codegen::native::NativeModule>,
+}
+
+impl crate::apps::hydro2d::solver::Sweeper for SharedNativeSweeper {
+    fn sweep(
+        &mut self,
+        rho: &[f64],
+        rhou: &[f64],
+        rhov: &[f64],
+        e: &[f64],
+        dtdx: f64,
+        rows: usize,
+        n: usize,
+    ) -> Result<[Vec<f64>; 4], String> {
+        let mut ext = BTreeMap::new();
+        ext.insert("Nj".to_string(), rows as i64);
+        ext.insert("Ni".to_string(), n as i64);
+        let mut arrays = BTreeMap::new();
+        arrays.insert("g_rho".to_string(), rho.to_vec());
+        arrays.insert("g_rhou".to_string(), rhou.to_vec());
+        arrays.insert("g_rhov".to_string(), rhov.to_vec());
+        arrays.insert("g_E".to_string(), e.to_vec());
+        arrays.insert("g_dtdx".to_string(), vec![dtdx]);
+        for name in ["g_nrho", "g_nrhou", "g_nrhov", "g_nE"] {
+            arrays.insert(name.to_string(), vec![0.0; rows * n]);
+        }
+        self.module.run(&ext, &mut arrays)?;
+        Ok([
+            arrays.remove("g_nrho").unwrap(),
+            arrays.remove("g_nrhou").unwrap(),
+            arrays.remove("g_nrhov").unwrap(),
+            arrays.remove("g_nE").unwrap(),
+        ])
+    }
+
+    fn name(&self) -> &'static str {
+        "hfav-native-shared"
+    }
+}
+
+/// Deck lookup for the built-in apps.
+pub fn deck_of(app: &str) -> Result<&'static str, String> {
+    match app {
+        "laplace" => Ok(crate::apps::laplace::DECK),
+        "normalize" => Ok(crate::apps::normalization::DECK),
+        "cosmo" => Ok(crate::apps::cosmo::DECK),
+        "hydro2d" => Ok(crate::apps::hydro2d::DECK),
+        _ => Err(format!("unknown app `{app}` (laplace|normalize|cosmo|hydro2d)")),
+    }
+}
+
+/// Parse a job-trace line: `app,variant,engine,size,steps`.
+pub fn parse_trace_line(id: u64, line: &str) -> Result<Job, String> {
+    let f: Vec<&str> = line.split(',').map(str::trim).collect();
+    if f.len() != 5 {
+        return Err(format!("bad trace line `{line}` (app,variant,engine,size,steps)"));
+    }
+    let variant = match f[1] {
+        "hfav" => Variant::Hfav,
+        "autovec" => Variant::Autovec,
+        other => return Err(format!("unknown variant `{other}`")),
+    };
+    Ok(Job {
+        id,
+        app: f[0].to_string(),
+        variant,
+        engine: f[2].parse()?,
+        size: f[3].parse().map_err(|e| format!("size: {e}"))?,
+        steps: f[4].parse().map_err(|e| format!("steps: {e}"))?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coordinator_runs_mixed_batch() {
+        let c = Coordinator::start(2, None);
+        let jobs = vec![
+            Job { id: 1, app: "laplace".into(), variant: Variant::Hfav, engine: Engine::Exec, size: 64, steps: 1 },
+            Job { id: 2, app: "normalize".into(), variant: Variant::Autovec, engine: Engine::Exec, size: 48, steps: 1 },
+            Job { id: 3, app: "hydro2d".into(), variant: Variant::Hfav, engine: Engine::Exec, size: 16, steps: 2 },
+            Job { id: 4, app: "laplace".into(), variant: Variant::Hfav, engine: Engine::Native, size: 64, steps: 2 },
+        ];
+        let results = c.run_batch(jobs);
+        for r in &results {
+            assert!(r.ok, "job {} failed: {}", r.id, r.detail);
+            assert!(r.cups > 0.0);
+        }
+        assert_eq!(c.metrics.completed.load(std::sync::atomic::Ordering::Relaxed), 4);
+        assert!(c.metrics.percentile(0.5) > Duration::ZERO);
+        c.shutdown();
+    }
+
+    #[test]
+    fn coordinator_reports_failures() {
+        let c = Coordinator::start(1, None);
+        let r = c
+            .submit(Job {
+                id: 9,
+                app: "nope".into(),
+                variant: Variant::Hfav,
+                engine: Engine::Exec,
+                size: 8,
+                steps: 1,
+            })
+            .recv()
+            .unwrap();
+        assert!(!r.ok);
+        assert!(r.detail.contains("unknown app"));
+        c.shutdown();
+    }
+
+    #[test]
+    fn trace_parsing() {
+        let j = parse_trace_line(5, "hydro2d, hfav, native, 128, 10").unwrap();
+        assert_eq!(j.app, "hydro2d");
+        assert_eq!(j.engine, Engine::Native);
+        assert_eq!(j.size, 128);
+        assert!(parse_trace_line(0, "bad line").is_err());
+        assert!(parse_trace_line(0, "a,b,c,d,e").is_err());
+    }
+}

@@ -1,0 +1,344 @@
+//! Dataflow graph: the RAP-dual DAG of grouped kernel callsites (paper
+//! §3.2, Fig. 2/3), plus interval domain propagation.
+//!
+//! Vertices are *grouped* callsites (rule instances canonicalized modulo
+//! spatial displacement — the paper's "Grouping" step falls out of this
+//! canonicalization), and edges are variables (term families) annotated
+//! with the read offsets of each consumer.
+
+use crate::ir::{Bound, Deck, Domain, Scalar};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Identifier of a callsite vertex in the dataflow graph.
+pub type CallsiteId = usize;
+/// Identifier of a variable (term family).
+pub type VarId = usize;
+
+/// How a variable reaches the outside world (terminal behaviour).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Terminal {
+    /// Not terminal: a pure intermediate.
+    No,
+    /// Terminal input (axiom): backed by external storage of this name.
+    Input { storage: String, ty: Scalar },
+    /// Terminal output (goal): must be stored to external storage.
+    Output { storage: String, ty: Scalar },
+}
+
+/// A variable: one term family, e.g. `laplace(cell)` over dims `[j, i]`.
+#[derive(Debug, Clone)]
+pub struct VarInfo {
+    pub id: VarId,
+    /// Unique identifier, e.g. `laplace(cell)`.
+    pub ident: String,
+    /// Dimension vars, outermost-first (global loop order).
+    pub dims: Vec<String>,
+    /// Producing callsite (None for axiom terminals).
+    pub producer: Option<CallsiteId>,
+    /// Offset (per dim of `dims`) at which the producer writes, relative to
+    /// its iteration point. Canonically zero for the first output.
+    pub write_offset: Vec<i64>,
+    pub terminal: Terminal,
+    /// Required span per dim (half-open), derived by domain propagation.
+    pub span: BTreeMap<String, Domain>,
+    pub ty: Scalar,
+}
+
+/// One consumer read: `callsite` reads the variable at `offsets` (aligned
+/// with `VarInfo::dims`) through kernel parameter `param`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Read {
+    pub consumer: CallsiteId,
+    pub param: String,
+    pub offsets: Vec<i64>,
+}
+
+/// A grouped callsite: one rule instance (modulo displacement).
+#[derive(Debug, Clone)]
+pub struct Callsite {
+    pub id: CallsiteId,
+    /// Index into `Deck::rules`.
+    pub rule: usize,
+    /// Rule name (copied for convenience/diagnostics).
+    pub name: String,
+    /// Binding of base pattern vars, e.g. `q -> cell`.
+    pub base_binding: BTreeMap<String, String>,
+    /// Iteration-space dims, outermost-first.
+    pub dims: Vec<String>,
+    /// Iteration domain per dim (half-open), from domain propagation.
+    pub domain: BTreeMap<String, Domain>,
+    /// For each input param (in rule order): (var id, offsets per var dim).
+    pub reads: Vec<(String, VarId, Vec<i64>)>,
+    /// For each output param: (var id, offsets per var dim).
+    pub writes: Vec<(String, VarId, Vec<i64>)>,
+    /// Dims present in the iteration space but absent from some output —
+    /// i.e. dims over which this callsite reduces that output.
+    pub reduce_dims: BTreeSet<String>,
+}
+
+/// The dataflow graph.
+#[derive(Debug, Clone, Default)]
+pub struct Dataflow {
+    pub callsites: Vec<Callsite>,
+    pub vars: Vec<VarInfo>,
+    pub reads_of: Vec<Vec<Read>>, // indexed by VarId
+    /// ident -> VarId
+    pub var_by_ident: BTreeMap<String, VarId>,
+    /// Global loop order (outermost first), copied from the deck.
+    pub loop_order: Vec<String>,
+}
+
+impl Dataflow {
+    pub fn var(&self, ident: &str) -> Option<&VarInfo> {
+        self.var_by_ident.get(ident).map(|&v| &self.vars[v])
+    }
+
+    /// Producer→consumer edges between callsites (deduped), with the vars
+    /// carried on each edge.
+    pub fn edges(&self) -> Vec<(CallsiteId, CallsiteId, Vec<VarId>)> {
+        let mut map: BTreeMap<(CallsiteId, CallsiteId), Vec<VarId>> = BTreeMap::new();
+        for v in &self.vars {
+            if let Some(p) = v.producer {
+                for r in &self.reads_of[v.id] {
+                    let e = map.entry((p, r.consumer)).or_default();
+                    if !e.contains(&v.id) {
+                        e.push(v.id);
+                    }
+                }
+            }
+        }
+        map.into_iter().map(|((a, b), vs)| (a, b, vs)).collect()
+    }
+
+    /// Topological order of callsites (producers first). Errors on a cycle
+    /// (should be impossible by construction — one producer per term).
+    pub fn topo_order(&self) -> Result<Vec<CallsiteId>, String> {
+        let n = self.callsites.len();
+        let mut indeg = vec![0usize; n];
+        let mut adj: Vec<Vec<CallsiteId>> = vec![Vec::new(); n];
+        for (a, b, _) in self.edges() {
+            if a != b {
+                adj[a].push(b);
+                indeg[b] += 1;
+            }
+        }
+        let mut queue: Vec<CallsiteId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(u) = queue.pop() {
+            order.push(u);
+            for &w in &adj[u] {
+                indeg[w] -= 1;
+                if indeg[w] == 0 {
+                    queue.push(w);
+                }
+            }
+        }
+        if order.len() != n {
+            return Err("cycle in dataflow graph".into());
+        }
+        Ok(order)
+    }
+
+    /// Can every callsite in `r` be topologically ordered no later than
+    /// every callsite in `s`? (paper §3.3.2 `dataflow_le`). Equivalently:
+    /// there is no path from any element of `s` to any element of `r`
+    /// through the graph (excluding trivial identity).
+    pub fn dataflow_le(&self, r: &BTreeSet<CallsiteId>, s: &BTreeSet<CallsiteId>) -> bool {
+        if r.is_empty() || s.is_empty() {
+            return true;
+        }
+        // Reachability from s.
+        let reach = self.reachable_from(s);
+        // If any r-node is strictly reachable from s (and not also in s via
+        // identity), ordering r <= s fails.
+        for &x in r {
+            if reach.contains(&x) && !s.contains(&x) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// All callsites reachable from `from` (excluding the start set unless
+    /// revisited).
+    pub fn reachable_from(&self, from: &BTreeSet<CallsiteId>) -> BTreeSet<CallsiteId> {
+        let mut adj: Vec<Vec<CallsiteId>> = vec![Vec::new(); self.callsites.len()];
+        for (a, b, _) in self.edges() {
+            adj[a].push(b);
+        }
+        let mut seen = BTreeSet::new();
+        let mut stack: Vec<CallsiteId> = from.iter().copied().collect();
+        while let Some(u) = stack.pop() {
+            for &w in &adj[u] {
+                if seen.insert(w) {
+                    stack.push(w);
+                }
+            }
+        }
+        seen
+    }
+
+    /// Dims "reduced away" somewhere upstream of each variable — used for
+    /// concave-dataflow (split) detection (paper §3.4).
+    pub fn reduced_dims_upstream(&self) -> Vec<BTreeSet<String>> {
+        let mut out: Vec<BTreeSet<String>> = vec![BTreeSet::new(); self.vars.len()];
+        let order = self.topo_order().expect("acyclic");
+        // Walk callsites in topo order; each output var accumulates the
+        // producer's reduce_dims plus everything upstream of its inputs.
+        for &cs_id in &order {
+            let cs = &self.callsites[cs_id];
+            let mut acc: BTreeSet<String> = cs.reduce_dims.iter().cloned().collect();
+            for (_, v, _) in &cs.reads {
+                acc.extend(out[*v].iter().cloned());
+            }
+            for (_, v, _) in &cs.writes {
+                out[*v].extend(acc.iter().cloned());
+            }
+        }
+        out
+    }
+}
+
+/// Union two symbolic half-open domains (interval hull). Errors if bounds
+/// mix different extent bases (not meaningful for stencil spans).
+pub fn domain_union(a: &Domain, b: &Domain) -> Result<Domain, String> {
+    Ok(Domain::new(bound_min(&a.lo, &b.lo)?, bound_max(&a.hi, &b.hi)?))
+}
+
+pub fn bound_min(a: &Bound, b: &Bound) -> Result<Bound, String> {
+    if a.base == b.base {
+        Ok(Bound { base: a.base.clone(), offset: a.offset.min(b.offset) })
+    } else {
+        Err(format!("cannot compare bounds `{a}` and `{b}`"))
+    }
+}
+
+pub fn bound_max(a: &Bound, b: &Bound) -> Result<Bound, String> {
+    if a.base == b.base {
+        Ok(Bound { base: a.base.clone(), offset: a.offset.max(b.offset) })
+    } else {
+        Err(format!("cannot compare bounds `{a}` and `{b}`"))
+    }
+}
+
+/// Shift a domain by an offset range `[min_o, max_o]` (consumer-driven
+/// producer span: values read at `t + o` for `t` in `dom`).
+pub fn domain_shift(dom: &Domain, min_o: i64, max_o: i64) -> Domain {
+    Domain::new(dom.lo.plus(min_o), dom.hi.plus(max_o))
+}
+
+/// Allocation extents of a terminal array given its required span and the
+/// deck's declared domain for each dim — used for halo accounting.
+pub fn span_words(span: &BTreeMap<String, Domain>, extents: &BTreeMap<String, i64>) -> Result<i64, String> {
+    let mut words = 1i64;
+    for d in span.values() {
+        let lo = d.lo.eval(extents)?;
+        let hi = d.hi.eval(extents)?;
+        words *= (hi - lo).max(0);
+    }
+    Ok(words)
+}
+
+/// Build the dataflow graph from a deck: run the inference engine.
+pub fn build(deck: &Deck) -> Result<Dataflow, String> {
+    crate::inference::infer(deck)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::testdecks;
+
+    fn laplace_df() -> Dataflow {
+        let deck = crate::frontend::parse_deck(testdecks::LAPLACE).unwrap();
+        build(&deck).unwrap()
+    }
+
+    #[test]
+    fn laplace_graph_shape() {
+        let df = laplace_df();
+        // One callsite (laplace5); vars: cell (terminal in), laplace(cell)
+        // (terminal out).
+        assert_eq!(df.callsites.len(), 1);
+        assert_eq!(df.vars.len(), 2);
+        let lap = df.var("laplace(cell)").unwrap();
+        assert!(matches!(lap.terminal, Terminal::Output { .. }));
+        let cell = df.var("cell").unwrap();
+        assert!(matches!(cell.terminal, Terminal::Input { .. }));
+        // 5 reads of cell with the stencil offsets.
+        let offs: BTreeSet<Vec<i64>> =
+            df.reads_of[cell.id].iter().map(|r| r.offsets.clone()).collect();
+        let expect: BTreeSet<Vec<i64>> = [
+            vec![-1, 0],
+            vec![0, 1],
+            vec![1, 0],
+            vec![0, -1],
+            vec![0, 0],
+        ]
+        .into_iter()
+        .collect();
+        assert_eq!(offs, expect);
+    }
+
+    #[test]
+    fn laplace_halo_span() {
+        let df = laplace_df();
+        let cell = df.var("cell").unwrap();
+        // Goal domain is [1, N-1); reads at ±1 → span [0, N).
+        let sj = &cell.span["j"];
+        assert_eq!(sj.lo, Bound::constant(0));
+        assert_eq!(sj.hi, Bound::of("Nj", 0));
+    }
+
+    #[test]
+    fn normalize_graph_shape() {
+        let deck = crate::frontend::parse_deck(testdecks::NORMALIZE).unwrap();
+        let df = build(&deck).unwrap();
+        // Callsites: flux, norm_init, norm_acc, norm_root, normalize.
+        assert_eq!(df.callsites.len(), 5);
+        let acc = df.callsites.iter().find(|c| c.name == "norm_acc").unwrap();
+        assert_eq!(acc.dims, vec!["j".to_string(), "i".to_string()]);
+        assert!(acc.reduce_dims.contains("i"));
+        let init = df.callsites.iter().find(|c| c.name == "norm_init").unwrap();
+        assert_eq!(init.dims, vec!["j".to_string()]);
+        // Concavity: rsqrt(acc) has i reduced upstream.
+        let rd = df.reduced_dims_upstream();
+        let rs = df.var("rsqrt(acc)").unwrap();
+        assert!(rd[rs.id].contains("i"));
+        let fx = df.var("flux(q)").unwrap();
+        assert!(rd[fx.id].is_empty());
+    }
+
+    #[test]
+    fn topo_and_le() {
+        let deck = crate::frontend::parse_deck(testdecks::NORMALIZE).unwrap();
+        let df = build(&deck).unwrap();
+        let order = df.topo_order().unwrap();
+        let pos = |name: &str| {
+            let id = df.callsites.iter().find(|c| c.name == name).unwrap().id;
+            order.iter().position(|&x| x == id).unwrap()
+        };
+        assert!(pos("flux") < pos("norm_acc"));
+        assert!(pos("norm_acc") < pos("norm_root"));
+        assert!(pos("norm_root") < pos("normalize"));
+
+        let id = |name: &str| df.callsites.iter().find(|c| c.name == name).unwrap().id;
+        let r: BTreeSet<_> = [id("flux")].into_iter().collect();
+        let s: BTreeSet<_> = [id("normalize")].into_iter().collect();
+        assert!(df.dataflow_le(&r, &s));
+        assert!(!df.dataflow_le(&s, &r));
+    }
+
+    #[test]
+    fn domain_helpers() {
+        let a = Domain::new(Bound::constant(1), Bound::of("N", -1));
+        let b = Domain::new(Bound::constant(0), Bound::of("N", 0));
+        let u = domain_union(&a, &b).unwrap();
+        assert_eq!(u.lo, Bound::constant(0));
+        assert_eq!(u.hi, Bound::of("N", 0));
+        let s = domain_shift(&a, -1, 2);
+        assert_eq!(s.lo, Bound::constant(0));
+        assert_eq!(s.hi, Bound::of("N", 1));
+        assert!(bound_min(&Bound::of("N", 0), &Bound::of("M", 0)).is_err());
+    }
+}

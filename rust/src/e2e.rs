@@ -1,0 +1,77 @@
+//! End-to-end demo: Sod shock tube through the full stack — HFAV deck →
+//! fusion/contraction → generated C → cc -O3 → dlopen → time loop — with
+//! a comparison against the autovec baseline and a printed density
+//! profile. This is the run recorded in EXPERIMENTS.md §E2E.
+
+use crate::apps::hydro2d::solver::*;
+use crate::apps::{compile_variant, Variant};
+
+/// Run the Sod demo and print throughput + the final mid-row density
+/// profile (coarse ASCII) for both engines.
+pub fn sod_demo(size: usize, steps: usize) -> Result<(), String> {
+    println!("Hydro2D Sod shock tube: {size}x{size}, {steps} split steps");
+    let prog = compile_variant(crate::apps::hydro2d::DECK, Variant::Hfav)?;
+    println!(
+        "HFAV schedule: {} nest(s); intermediate footprint {} words @1024^2 (autovec: {})",
+        prog.fd.nests.len(),
+        prog.footprint_words(
+            &[("Nj".to_string(), 1024i64), ("Ni".to_string(), 1024i64)].into_iter().collect()
+        )?,
+        compile_variant(crate::apps::hydro2d::DECK, Variant::Autovec)?.footprint_words(
+            &[("Nj".to_string(), 1024i64), ("Ni".to_string(), 1024i64)].into_iter().collect()
+        )?,
+    );
+
+    let mut results = Vec::new();
+    for engine in ["autovec", "hfav-native"] {
+        let mut sweeper: Box<dyn Sweeper> = match engine {
+            "autovec" => Box::new(RefSweeper),
+            _ => Box::new(NativeSweeper::new(&prog)?),
+        };
+        let mut s = sod(size, size);
+        let (m0, e0) = totals(&s);
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            step(&mut s, 1.0 / size as f64, 0.4, sweeper.as_mut())?;
+        }
+        let wall = t0.elapsed();
+        let (m1, e1) = totals(&s);
+        let cups = (size * size * steps) as f64 / wall.as_secs_f64();
+        println!(
+            "  {engine:<12} t={:.4}  {:.1} Mcells/s  wall={wall:?}  mass_drift={:.2e} energy_drift={:.2e}",
+            s.t,
+            cups / 1e6,
+            (m1 - m0) / m0,
+            (e1 - e0) / e0
+        );
+        results.push((engine, s, cups));
+    }
+    // Cross-check final states.
+    let a = &results[0].1;
+    let b = &results[1].1;
+    let err = crate::apps::max_err(&a.rho, &b.rho);
+    println!("  final-density max err autovec vs hfav: {err:.2e}");
+    if err > 1e-10 {
+        return Err(format!("engines diverged: {err}"));
+    }
+    // ASCII mid-row density profile.
+    let j = size / 2;
+    let cols = 64.min(size);
+    println!("  density profile (mid row):");
+    let mut line = String::from("  ");
+    for c in 0..cols {
+        let i = c * size / cols;
+        let r = a.rho[j * size + i];
+        let ch = match (r * 10.0) as i64 {
+            0..=2 => '.',
+            3..=4 => ':',
+            5..=6 => '+',
+            7..=8 => '#',
+            _ => '@',
+        };
+        line.push(ch);
+    }
+    println!("{line}");
+    println!("  speedup hfav/autovec: {:.2}x", results[1].2 / results[0].2);
+    Ok(())
+}

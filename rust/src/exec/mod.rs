@@ -1,0 +1,715 @@
+//! In-process schedule executor.
+//!
+//! Runs a compiled [`Program`] over concrete grids with kernels registered
+//! as Rust functions. This substitutes for "compile the emitted C and run
+//! it": the executor walks exactly the fused/contracted/pipelined schedule
+//! the generator produced, so fused-vs-unfused comparisons measure the same
+//! locality effects the paper measures.
+//!
+//! Two modes:
+//! * [`Mode::Peeled`] — loop ranges are segmented so each segment has a
+//!   fixed set of active callsites (the paper's explicit
+//!   prologue/steady-state/epilogue phases). No per-iteration guards.
+//! * [`Mode::Guarded`] — one uniform loop with per-callsite masking (the
+//!   shape of the paper's "HFAV + Tuning" fold-into-steady-state variant).
+
+pub mod registry;
+
+use crate::analysis::DimSize;
+use crate::dataflow::Terminal;
+use crate::fusion::{FusedNest, Member, Role};
+use crate::plan::Program;
+use registry::Registry;
+use std::collections::BTreeMap;
+
+/// Execution mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Peeled,
+    Guarded,
+}
+
+/// Executor options.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecOptions {
+    pub mode: Mode,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions { mode: Mode::Peeled }
+    }
+}
+
+/// Concrete per-dim bounds.
+#[derive(Debug, Clone, Copy)]
+struct Range {
+    lo: i64,
+    hi: i64,
+}
+
+/// Resolved access path for one argument: storage buffer + per-dim
+/// (dim level in nest, shift+offset, size class data).
+#[derive(Debug, Clone)]
+struct Access {
+    storage: usize,
+    /// per var-dim: (nest level, added offset = shift + read offset)
+    dims: Vec<(usize, i64)>,
+    /// per var-dim: index rule
+    rules: Vec<IndexRule>,
+    /// per var-dim stride
+    strides: Vec<i64>,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum IndexRule {
+    /// Full span: subtract `lo`.
+    Full { lo: i64 },
+    /// Window: wrap modulo `alloc` (power of two → mask).
+    Window { alloc: i64 },
+    /// Single slot.
+    One,
+}
+
+/// A compiled callsite: kernel fn + resolved argument accesses.
+struct Compiled {
+    kernel: registry::Kernel,
+    reads: Vec<Access>,
+    writes: Vec<Access>,
+    /// Concrete iteration domain per nest level (None = member lacks dim).
+    domain: Vec<Option<Range>>,
+    /// shifts per nest level.
+    shifts: Vec<i64>,
+    /// phase per nest level (from fusion roles).
+    phases: Vec<Phase>,
+    name: String,
+}
+
+/// The result of a run: named external outputs (row-major over their span).
+pub type Outputs = BTreeMap<String, Vec<f64>>;
+
+/// Shape of an external array: per-dim concrete half-open bounds.
+pub fn external_shape(
+    prog: &Program,
+    name: &str,
+    extents: &BTreeMap<String, i64>,
+) -> Result<Vec<(i64, i64)>, String> {
+    for v in &prog.df.vars {
+        let store = match &v.terminal {
+            Terminal::Input { storage, .. } | Terminal::Output { storage, .. } => storage,
+            Terminal::No => continue,
+        };
+        if store == name {
+            return v
+                .dims
+                .iter()
+                .map(|d| {
+                    let s = &v.span[d];
+                    Ok((s.lo.eval(extents)?, s.hi.eval(extents)?))
+                })
+                .collect();
+        }
+    }
+    Err(format!("no external array `{name}`"))
+}
+
+/// Number of elements of an external array.
+pub fn external_len(
+    prog: &Program,
+    name: &str,
+    extents: &BTreeMap<String, i64>,
+) -> Result<usize, String> {
+    Ok(external_shape(prog, name, extents)?
+        .iter()
+        .map(|(lo, hi)| (hi - lo).max(0) as usize)
+        .product())
+}
+
+/// Run a program.
+///
+/// `inputs` maps terminal-input storage names to row-major arrays over
+/// their required span (see [`external_shape`]). Returns terminal outputs.
+/// Deck alias pairs share one underlying buffer (in-place execution).
+pub fn run(
+    prog: &Program,
+    reg: &Registry,
+    extents: &BTreeMap<String, i64>,
+    inputs: &BTreeMap<String, Vec<f64>>,
+    opts: ExecOptions,
+) -> Result<Outputs, String> {
+    // ---- allocate storage -------------------------------------------------
+    // external name -> workspace buffer index (aliases share).
+    let mut ext_buf: BTreeMap<String, usize> = BTreeMap::new();
+    let mut buffers: Vec<Vec<f64>> = Vec::new();
+    let mut storage_buf: Vec<usize> = vec![usize::MAX; prog.sp.storages.len()];
+
+    // Pre-size externals from their var spans.
+    for s in &prog.sp.storages {
+        if let Some(name) = &s.external {
+            // Alias resolution: find canonical name.
+            let canon = canonical_alias(prog, name);
+            let idx = match ext_buf.get(&canon) {
+                Some(&i) => i,
+                None => {
+                    let len = external_len_by_storage(prog, s, extents)?;
+                    let mut buf = vec![0f64; len];
+                    // Fill from inputs if provided under any aliased name.
+                    if let Some(src) = inputs.get(name).or_else(|| inputs.get(&canon)) {
+                        if src.len() != len {
+                            return Err(format!(
+                                "input `{name}`: expected {len} elements, got {}",
+                                src.len()
+                            ));
+                        }
+                        buf.copy_from_slice(src);
+                    }
+                    buffers.push(buf);
+                    let i = buffers.len() - 1;
+                    ext_buf.insert(canon.clone(), i);
+                    i
+                }
+            };
+            // If an aliased input arrives under this name, copy it in.
+            if let Some(src) = inputs.get(name) {
+                if src.len() == buffers[idx].len() && buffers[idx].iter().all(|&x| x == 0.0) {
+                    buffers[idx].copy_from_slice(src);
+                }
+            }
+            storage_buf[s.id] = idx;
+        } else {
+            let words = crate::analysis::storage_words(s, &prog.df, extents)?;
+            buffers.push(vec![0f64; words.max(0) as usize]);
+            storage_buf[s.id] = buffers.len() - 1;
+        }
+    }
+
+    // ---- compile callsites per nest ---------------------------------------
+    let mut scratch_in: Vec<f64> = Vec::with_capacity(32);
+    let mut scratch_out: Vec<f64> = Vec::with_capacity(16);
+
+    for nest in &prog.fd.nests {
+        let compiled: Vec<Compiled> = nest
+            .members
+            .iter()
+            .map(|m| compile_member(prog, reg, nest, m, extents, &storage_buf))
+            .collect::<Result<_, _>>()?;
+        let refs: Vec<usize> = (0..compiled.len()).collect();
+        let mut idx = vec![0i64; nest.dims.len()];
+        exec_level(
+            &compiled,
+            &refs,
+            0,
+            nest.dims.len(),
+            &mut idx,
+            &mut buffers,
+            opts.mode,
+            &mut scratch_in,
+            &mut scratch_out,
+        )?;
+    }
+
+    // ---- collect outputs ----------------------------------------------------
+    let mut outputs = Outputs::new();
+    for s in &prog.sp.storages {
+        if let Some(name) = &s.external {
+            let is_output = s.vars.iter().any(|&v| {
+                matches!(prog.df.vars[v].terminal, Terminal::Output { .. })
+            });
+            if is_output {
+                outputs.insert(name.clone(), buffers[storage_buf[s.id]].clone());
+            }
+        }
+    }
+    Ok(outputs)
+}
+
+/// Canonical name for aliased externals (first element of the alias pair).
+fn canonical_alias(prog: &Program, name: &str) -> String {
+    for (a, b) in &prog.deck.aliases {
+        if name == b {
+            return a.clone();
+        }
+    }
+    name.to_string()
+}
+
+fn external_len_by_storage(
+    prog: &Program,
+    s: &crate::analysis::Storage,
+    extents: &BTreeMap<String, i64>,
+) -> Result<usize, String> {
+    let rep = &prog.df.vars[s.vars[0]];
+    let mut len = 1usize;
+    for d in &rep.dims {
+        let span = &rep.span[d];
+        len *= (span.hi.eval(extents)? - span.lo.eval(extents)?).max(0) as usize;
+    }
+    Ok(len)
+}
+
+fn compile_member(
+    prog: &Program,
+    reg: &Registry,
+    nest: &FusedNest,
+    m: &Member,
+    extents: &BTreeMap<String, i64>,
+    storage_buf: &[usize],
+) -> Result<Compiled, String> {
+    let cs = &prog.df.callsites[m.callsite];
+    let kernel = reg
+        .get(&cs.name)
+        .ok_or_else(|| format!("no kernel registered for `{}`", cs.name))?;
+
+    let access = |vid: usize, offsets: &[i64]| -> Result<Access, String> {
+        let var = &prog.df.vars[vid];
+        let sid = prog.sp.of_var[vid];
+        let st = &prog.sp.storages[sid];
+        let mut dims = Vec::with_capacity(var.dims.len());
+        let mut rules = Vec::with_capacity(var.dims.len());
+        let mut sizes = Vec::with_capacity(var.dims.len());
+        for (k, d) in var.dims.iter().enumerate() {
+            let level = nest
+                .dim_index(d)
+                .ok_or_else(|| format!("dim `{d}` of `{}` not in nest", var.ident))?;
+            let shift = if m.roles[level] == Role::Loop { m.shifts[level] } else { 0 };
+            dims.push((level, shift + offsets[k]));
+            let (rule, size) = match &st.sizes[k] {
+                DimSize::One => (IndexRule::One, 1i64),
+                DimSize::Window { alloc, .. } => (IndexRule::Window { alloc: *alloc }, *alloc),
+                DimSize::Full => {
+                    let span = &var.span[d];
+                    let lo = span.lo.eval(extents)?;
+                    let hi = span.hi.eval(extents)?;
+                    (IndexRule::Full { lo }, (hi - lo).max(0))
+                }
+            };
+            rules.push(rule);
+            sizes.push(size);
+        }
+        // Row-major strides.
+        let mut strides = vec![1i64; sizes.len()];
+        for k in (0..sizes.len().saturating_sub(1)).rev() {
+            strides[k] = strides[k + 1] * sizes[k + 1];
+        }
+        Ok(Access { storage: storage_buf[sid], dims, rules, strides })
+    };
+
+    let mut reads = Vec::new();
+    for (_, vid, offsets) in &cs.reads {
+        reads.push(access(*vid, offsets)?);
+    }
+    let mut writes = Vec::new();
+    for (_, vid, offsets) in &cs.writes {
+        writes.push(access(*vid, offsets)?);
+    }
+
+    let mut domain = Vec::with_capacity(nest.dims.len());
+    let mut shifts = Vec::with_capacity(nest.dims.len());
+    let mut phases = Vec::with_capacity(nest.dims.len());
+    for (lvl, d) in nest.dims.iter().enumerate() {
+        if m.roles[lvl] == Role::Loop {
+            let dom = &cs.domain[d];
+            domain.push(Some(Range { lo: dom.lo.eval(extents)?, hi: dom.hi.eval(extents)? }));
+            shifts.push(m.shifts[lvl]);
+            phases.push(Phase::Loop);
+        } else {
+            domain.push(None);
+            shifts.push(0);
+            phases.push(if m.roles[lvl] == Role::Pre { Phase::Pre } else { Phase::Post });
+        }
+    }
+
+    Ok(Compiled {
+        kernel: kernel.clone(),
+        reads,
+        writes,
+        domain,
+        shifts,
+        phases,
+        name: cs.name.clone(),
+    })
+}
+
+/// Recursive phase/loop execution (paper §3.6 code generation, interpreted).
+#[allow(clippy::too_many_arguments)]
+fn exec_level(
+    compiled: &[Compiled],
+    members: &[usize],
+    level: usize,
+    nlevels: usize,
+    idx: &mut Vec<i64>,
+    buffers: &mut [Vec<f64>],
+    mode: Mode,
+    scratch_in: &mut Vec<f64>,
+    scratch_out: &mut Vec<f64>,
+) -> Result<(), String> {
+    if members.is_empty() {
+        return Ok(());
+    }
+    if level == nlevels {
+        for &mi in members {
+            let c = &compiled[mi];
+            if mode == Mode::Guarded && !active(c, idx, nlevels) {
+                continue;
+            }
+            invoke(c, idx, buffers, scratch_in, scratch_out)?;
+        }
+        return Ok(());
+    }
+
+    // Partition by role at this level. Role is encoded via domain/shift on
+    // the compiled member: domain None = dim absent. We kept roles implicit:
+    // recompute partition from the original member data stored in `compiled`
+    // ordering — pre/post were resolved at compile time into `phase` info.
+    // Simpler: we stored domains only; rely on the phase tags captured at
+    // compile time.
+    let pre: Vec<usize> =
+        members.iter().copied().filter(|&m| compiled[m].phase_at(level) == Phase::Pre).collect();
+    let inl: Vec<usize> =
+        members.iter().copied().filter(|&m| compiled[m].phase_at(level) == Phase::Loop).collect();
+    let post: Vec<usize> =
+        members.iter().copied().filter(|&m| compiled[m].phase_at(level) == Phase::Post).collect();
+
+    exec_level(compiled, &pre, level + 1, nlevels, idx, buffers, mode, scratch_in, scratch_out)?;
+
+    if !inl.is_empty() {
+        // Loop range: union of member ranges at this level.
+        let mut lo = i64::MAX;
+        let mut hi = i64::MIN;
+        for &mi in &inl {
+            if let Some(r) = compiled[mi].domain[level] {
+                lo = lo.min(r.lo - compiled[mi].shifts[level]);
+                hi = hi.max(r.hi - compiled[mi].shifts[level]);
+            }
+        }
+        match mode {
+            Mode::Guarded => {
+                for t in lo..hi {
+                    idx[level] = t;
+                    exec_level(
+                        compiled, &inl, level + 1, nlevels, idx, buffers, mode, scratch_in,
+                        scratch_out,
+                    )?;
+                }
+            }
+            Mode::Peeled => {
+                // Segment boundaries: each member active on [r.lo-s, r.hi-s).
+                let mut cuts: Vec<i64> = vec![lo, hi];
+                for &mi in &inl {
+                    if let Some(r) = compiled[mi].domain[level] {
+                        cuts.push(r.lo - compiled[mi].shifts[level]);
+                        cuts.push(r.hi - compiled[mi].shifts[level]);
+                    }
+                }
+                cuts.sort_unstable();
+                cuts.dedup();
+                for w in cuts.windows(2) {
+                    let (a, b) = (w[0].max(lo), w[1].min(hi));
+                    if a >= b {
+                        continue;
+                    }
+                    let active_set: Vec<usize> = inl
+                        .iter()
+                        .copied()
+                        .filter(|&mi| {
+                            let r = compiled[mi].domain[level].unwrap();
+                            let s = compiled[mi].shifts[level];
+                            a >= r.lo - s && b <= r.hi - s
+                        })
+                        .collect();
+                    if active_set.is_empty() {
+                        continue;
+                    }
+                    for t in a..b {
+                        idx[level] = t;
+                        exec_level(
+                            compiled, &active_set, level + 1, nlevels, idx, buffers, mode,
+                            scratch_in, scratch_out,
+                        )?;
+                    }
+                }
+            }
+        }
+    }
+
+    exec_level(compiled, &post, level + 1, nlevels, idx, buffers, mode, scratch_in, scratch_out)
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Pre,
+    Loop,
+    Post,
+}
+
+impl Compiled {
+    fn phase_at(&self, level: usize) -> Phase {
+        match self.phases.get(level) {
+            Some(p) => *p,
+            None => Phase::Loop,
+        }
+    }
+}
+
+/// Is the member active at the current index (guarded mode)?
+fn active(c: &Compiled, idx: &[i64], nlevels: usize) -> bool {
+    for lvl in 0..nlevels {
+        if let Some(r) = c.domain[lvl] {
+            if c.phase_at(lvl) == Phase::Loop {
+                let p = idx[lvl] + c.shifts[lvl];
+                if p < r.lo || p >= r.hi {
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+fn invoke(
+    c: &Compiled,
+    idx: &[i64],
+    buffers: &mut [Vec<f64>],
+    scratch_in: &mut Vec<f64>,
+    scratch_out: &mut Vec<f64>,
+) -> Result<(), String> {
+    scratch_in.clear();
+    for a in &c.reads {
+        scratch_in.push(buffers[a.storage][resolve(a, idx)]);
+    }
+    scratch_out.clear();
+    scratch_out.resize(c.writes.len(), 0.0);
+    (c.kernel)(scratch_in, scratch_out);
+    for (k, a) in c.writes.iter().enumerate() {
+        let off = resolve(a, idx);
+        buffers[a.storage][off] = scratch_out[k];
+    }
+    let _ = &c.name;
+    Ok(())
+}
+
+#[inline]
+fn resolve(a: &Access, idx: &[i64]) -> usize {
+    let mut off = 0i64;
+    for k in 0..a.dims.len() {
+        let (level, add) = a.dims[k];
+        let pos = idx[level] + add;
+        let x = match a.rules[k] {
+            IndexRule::One => 0,
+            IndexRule::Window { alloc } => pos.rem_euclid(alloc),
+            IndexRule::Full { lo } => pos - lo,
+        };
+        off += x * a.strides[k];
+    }
+    off as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::testdecks;
+    use crate::plan::{compile_src, CompileOptions};
+
+    fn laplace_registry() -> Registry {
+        let mut r = Registry::new();
+        r.register("laplace5", |i, o| o[0] = 0.25 * (i[0] + i[1] + i[2] + i[3]) - i[4]);
+        r
+    }
+
+    fn norm_registry() -> Registry {
+        let mut r = Registry::new();
+        r.register("flux", |i, o| o[0] = i[1] - i[0]);
+        r.register("norm_init", |_i, o| o[0] = 0.0);
+        r.register("norm_acc", |i, o| o[0] = i[0] + i[1] * i[1]);
+        r.register("norm_root", |i, o| o[0] = 1.0 / (i[0] + 1e-30).sqrt());
+        r.register("normalize", |i, o| o[0] = i[0] * i[1]);
+        r
+    }
+
+    fn chain_registry() -> Registry {
+        let mut r = Registry::new();
+        r.register("dbl", |i, o| o[0] = 2.0 * i[0]);
+        r.register("diff", |i, o| o[0] = i[1] - i[0]);
+        r
+    }
+
+    fn extents(pairs: &[(&str, i64)]) -> BTreeMap<String, i64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    fn seeded(n: usize, seed: u64) -> Vec<f64> {
+        // xorshift64* deterministic fill in [0,1)
+        let mut s = seed.wrapping_mul(2685821657736338717).max(1);
+        (0..n)
+            .map(|_| {
+                s ^= s >> 12;
+                s ^= s << 25;
+                s ^= s >> 27;
+                ((s.wrapping_mul(0x2545F4914F6CDD1D) >> 11) as f64) / ((1u64 << 53) as f64)
+            })
+            .collect()
+    }
+
+    fn laplace_ref(u: &[f64], nj: usize, ni: usize) -> Vec<f64> {
+        // output over interior span [1, N-1) per dim → (nj-2)x(ni-2)
+        let mut out = vec![0.0; (nj - 2) * (ni - 2)];
+        for j in 1..nj - 1 {
+            for i in 1..ni - 1 {
+                let n = u[(j - 1) * ni + i];
+                let e = u[j * ni + i + 1];
+                let s = u[(j + 1) * ni + i];
+                let w = u[j * ni + i - 1];
+                let c = u[j * ni + i];
+                out[(j - 1) * (ni - 2) + (i - 1)] = 0.25 * (n + e + s + w) - c;
+            }
+        }
+        out
+    }
+
+    fn assert_close(a: &[f64], b: &[f64], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (k, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())), "elem {k}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn laplace_matches_reference_both_modes() {
+        let prog = compile_src(testdecks::LAPLACE, CompileOptions::default()).unwrap();
+        let reg = laplace_registry();
+        let (nj, ni) = (13usize, 17usize);
+        let ext = extents(&[("Nj", nj as i64), ("Ni", ni as i64)]);
+        // g_cell span: [0, Nj) x [0, Ni).
+        assert_eq!(external_shape(&prog, "g_cell", &ext).unwrap(), vec![(0, nj as i64), (0, ni as i64)]);
+        let u = seeded(nj * ni, 42);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("g_cell".to_string(), u.clone());
+        let want = laplace_ref(&u, nj, ni);
+        for mode in [Mode::Peeled, Mode::Guarded] {
+            let out = run(&prog, &reg, &ext, &inputs, ExecOptions { mode }).unwrap();
+            assert_close(&out["g_out"], &want, 1e-12);
+        }
+    }
+
+    #[test]
+    fn laplace_rolled_inputs_match() {
+        let opts = CompileOptions { roll_all_inputs: true, ..Default::default() };
+        let prog = compile_src(testdecks::LAPLACE, opts).unwrap();
+        let reg = laplace_registry();
+        let (nj, ni) = (9usize, 11usize);
+        let ext = extents(&[("Nj", nj as i64), ("Ni", ni as i64)]);
+        let u = seeded(nj * ni, 7);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("g_cell".to_string(), u.clone());
+        let want = laplace_ref(&u, nj, ni);
+        let out = run(&prog, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+        assert_close(&out["g_out"], &want, 1e-12);
+    }
+
+    #[test]
+    fn chain1d_matches_reference() {
+        let prog = compile_src(testdecks::CHAIN1D, CompileOptions::default()).unwrap();
+        let reg = chain_registry();
+        let n = 23usize;
+        let ext = extents(&[("N", n as i64)]);
+        let u = seeded(n, 3);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("g_u".to_string(), u.clone());
+        let mut want = vec![0.0; n - 2];
+        for i in 1..n - 1 {
+            want[i - 1] = 2.0 * u[i + 1] - 2.0 * u[i - 1];
+        }
+        for mode in [Mode::Peeled, Mode::Guarded] {
+            let out = run(&prog, &reg, &ext, &inputs, ExecOptions { mode }).unwrap();
+            assert_close(&out["g_d"], &want, 1e-12);
+        }
+    }
+
+    #[test]
+    fn normalize_matches_reference() {
+        let prog = compile_src(testdecks::NORMALIZE, CompileOptions::default()).unwrap();
+        let reg = norm_registry();
+        let (nj, ni) = (6usize, 10usize);
+        let ext = extents(&[("Nj", nj as i64), ("Ni", ni as i64)]);
+        // q span: [0,Nj) x [0,Ni+1) (flux reads i+1).
+        assert_eq!(
+            external_shape(&prog, "g_q", &ext).unwrap(),
+            vec![(0, nj as i64), (0, ni as i64 + 1)]
+        );
+        let q = seeded(nj * (ni + 1), 11);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("g_q".to_string(), q.clone());
+        let mut want = vec![0.0; nj * ni];
+        for j in 0..nj {
+            let mut acc = 0.0;
+            let f: Vec<f64> =
+                (0..ni).map(|i| q[j * (ni + 1) + i + 1] - q[j * (ni + 1) + i]).collect();
+            for i in 0..ni {
+                acc += f[i] * f[i];
+            }
+            let r = 1.0 / (acc + 1e-30).sqrt();
+            for i in 0..ni {
+                want[j * ni + i] = f[i] * r;
+            }
+        }
+        for mode in [Mode::Peeled, Mode::Guarded] {
+            let out = run(&prog, &reg, &ext, &inputs, ExecOptions { mode }).unwrap();
+            assert_close(&out["g_out"], &want, 1e-12);
+        }
+    }
+
+    #[test]
+    fn unfused_uncontracted_matches_fused() {
+        // The "autovec baseline" plan must agree numerically with the fully
+        // fused + contracted plan.
+        let baseline_opts = CompileOptions {
+            fusion: crate::fusion::FusionOptions { enabled: false },
+            analysis: crate::analysis::AnalysisOptions {
+                contraction: false,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        for (src, reg) in [
+            (testdecks::LAPLACE, laplace_registry()),
+            (testdecks::NORMALIZE, norm_registry()),
+            (testdecks::CHAIN1D, chain_registry()),
+        ] {
+            let fused = compile_src(src, CompileOptions::default()).unwrap();
+            let naive = compile_src(src, baseline_opts.clone()).unwrap();
+            let ext = extents(&[("Nj", 8), ("Ni", 9), ("N", 16)]);
+            let mut inputs = BTreeMap::new();
+            for (name, _, _) in fused.external_inputs() {
+                let len = external_len(&fused, &name, &ext).unwrap();
+                inputs.insert(name, seeded(len, 99));
+            }
+            let a = run(&fused, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+            let b = run(&naive, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+            for (k, v) in &a {
+                assert_close(v, &b[k], 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn missing_kernel_reported() {
+        let prog = compile_src(testdecks::CHAIN1D, CompileOptions::default()).unwrap();
+        let reg = Registry::new();
+        let ext = extents(&[("N", 8)]);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("g_u".to_string(), vec![0.0; 8]);
+        let err = run(&prog, &reg, &ext, &inputs, ExecOptions::default()).unwrap_err();
+        assert!(err.contains("no kernel registered"), "{err}");
+    }
+
+    #[test]
+    fn wrong_input_size_reported() {
+        let prog = compile_src(testdecks::CHAIN1D, CompileOptions::default()).unwrap();
+        let reg = chain_registry();
+        let ext = extents(&[("N", 8)]);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("g_u".to_string(), vec![0.0; 3]);
+        let err = run(&prog, &reg, &ext, &inputs, ExecOptions::default()).unwrap_err();
+        assert!(err.contains("expected"), "{err}");
+    }
+}

@@ -1,0 +1,80 @@
+//! Kernel registry: maps rule names to Rust implementations.
+//!
+//! Kernels follow the paper's model: pure functions of their scalar
+//! arguments (no side effects, no iteration-order dependence) — inputs in
+//! declaration order, outputs in declaration order.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// A kernel implementation: reads `inputs` (rule input params, in order),
+/// writes `outputs` (rule output params, in order).
+pub type Kernel = Arc<dyn Fn(&[f64], &mut [f64]) + Send + Sync>;
+
+/// Registry of kernel implementations.
+#[derive(Clone, Default)]
+pub struct Registry {
+    map: BTreeMap<String, Kernel>,
+    identity: Option<Kernel>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry {
+            map: BTreeMap::new(),
+            identity: Some(Arc::new(|i: &[f64], o: &mut [f64]| {
+                o.copy_from_slice(&i[..o.len()]);
+            })),
+        }
+    }
+
+    /// Register a kernel under a rule name.
+    pub fn register<F>(&mut self, name: &str, f: F) -> &mut Self
+    where
+        F: Fn(&[f64], &mut [f64]) + Send + Sync + 'static,
+    {
+        self.map.insert(name.to_string(), Arc::new(f));
+        self
+    }
+
+    /// Look up a kernel. Synthetic `__roll_*` copy callsites (inserted by
+    /// in/out chaining) resolve to the identity kernel.
+    pub fn get(&self, name: &str) -> Option<&Kernel> {
+        if let Some(k) = self.map.get(name) {
+            return Some(k);
+        }
+        if name.starts_with("__roll_") {
+            return self.identity.as_ref();
+        }
+        None
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_and_get() {
+        let mut r = Registry::new();
+        r.register("add", |i, o| o[0] = i[0] + i[1]);
+        let k = r.get("add").unwrap();
+        let mut out = [0.0];
+        k(&[2.0, 3.0], &mut out);
+        assert_eq!(out[0], 5.0);
+        assert!(r.get("missing").is_none());
+    }
+
+    #[test]
+    fn roll_resolves_to_identity() {
+        let r = Registry::new();
+        let k = r.get("__roll_cell").unwrap();
+        let mut out = [0.0];
+        k(&[7.5], &mut out);
+        assert_eq!(out[0], 7.5);
+    }
+}

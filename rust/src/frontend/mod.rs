@@ -1,0 +1,310 @@
+//! Front-end: parse a YAML deck (paper §4, Fig. 10) into an [`ir::Deck`].
+//!
+//! Deck format (a superset of the paper's, with the iteration section made
+//! explicit so decks are self-contained):
+//!
+//! ```yaml
+//! name: laplace
+//! iteration:
+//!   order: [j, i]            # outermost first
+//!   domains:
+//!     j: [1, Nj-1]           # half-open [lo, hi)
+//!     i: [1, Ni-1]
+//! kernels:
+//!   laplace:
+//!     declaration: laplace5(double n, double e, double s, double w, double c, double &o);
+//!     inputs: |
+//!       n : q?[j?-1][i?]
+//!       ...
+//!     outputs: |
+//!       o : laplace(q?[j?][i?])
+//!     body: "o = 0.25*(n + e + s + w) - c;"   # optional, for inlining emitters
+//! globals:
+//!   inputs: |
+//!     double g_cell[j?][i?] => cell[j?][i?]
+//!   outputs: |
+//!     laplace(cell[j][i]) => double g_cell[j][i]
+//! aliases:                    # optional: in-place updates (paper §3.5)
+//!   - [g_cell, g_out]
+//! vector_len: 8               # optional: vector-expanded rotation (Fig. 9c)
+//! ```
+
+use crate::ir::{Axiom, Bound, Deck, Domain, Goal, IterationCfg, ParamDir, Rule, Scalar, Term};
+use crate::yaml::{self, Node};
+use std::collections::BTreeMap;
+
+/// Parse deck source text.
+pub fn parse_deck(src: &str) -> Result<Deck, String> {
+    let root = yaml::parse(src)?;
+    deck_from_node(&root)
+}
+
+/// Parse a deck from a file path.
+pub fn load_deck(path: &str) -> Result<Deck, String> {
+    let src = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    parse_deck(&src)
+}
+
+fn deck_from_node(root: &Node) -> Result<Deck, String> {
+    let mut deck = Deck {
+        name: root.get("name").and_then(|n| n.as_str()).unwrap_or("deck").to_string(),
+        vector_len: 1,
+        ..Default::default()
+    };
+
+    // iteration
+    let iter = root.get("iteration").ok_or("missing `iteration` section")?;
+    let order_node = iter.get("order").ok_or("missing `iteration.order`")?;
+    let order: Vec<String> = order_node
+        .as_seq()
+        .ok_or("`iteration.order` must be a sequence")?
+        .iter()
+        .map(|n| n.as_str().map(str::to_string).ok_or("non-scalar in order".to_string()))
+        .collect::<Result<_, _>>()?;
+    let mut domains = BTreeMap::new();
+    let dom_node = iter.get("domains").ok_or("missing `iteration.domains`")?;
+    for (var, v) in dom_node.as_map().ok_or("`iteration.domains` must be a map")? {
+        let seq = v.as_seq().ok_or_else(|| format!("domain of `{var}` must be [lo, hi]"))?;
+        if seq.len() != 2 {
+            return Err(format!("domain of `{var}` must have exactly [lo, hi]"));
+        }
+        let lo = Bound::parse(seq[0].as_str().ok_or("bad lo bound")?)?;
+        let hi = Bound::parse(seq[1].as_str().ok_or("bad hi bound")?)?;
+        domains.insert(var.clone(), Domain::new(lo, hi));
+    }
+    deck.iteration = IterationCfg { order, domains };
+
+    // kernels
+    if let Some(kernels) = root.get("kernels") {
+        for (kname, knode) in kernels.as_map().ok_or("`kernels` must be a map")? {
+            deck.rules.push(parse_kernel(kname, knode)?);
+        }
+    }
+
+    // globals
+    let globals = root.get("globals").ok_or("missing `globals` section")?;
+    if let Some(inputs) = globals.get("inputs").and_then(|n| n.as_str()) {
+        for line in nonempty_lines(inputs) {
+            deck.axioms.push(parse_axiom(line)?);
+        }
+    }
+    if let Some(outputs) = globals.get("outputs").and_then(|n| n.as_str()) {
+        for line in nonempty_lines(outputs) {
+            deck.goals.push(parse_goal(line)?);
+        }
+    }
+
+    // aliases
+    if let Some(aliases) = root.get("aliases") {
+        for a in aliases.as_seq().ok_or("`aliases` must be a sequence")? {
+            let pair = a.as_seq().ok_or("alias entries must be [in, out]")?;
+            if pair.len() != 2 {
+                return Err("alias entries must be [in, out]".into());
+            }
+            deck.aliases.push((
+                pair[0].as_str().unwrap_or("").to_string(),
+                pair[1].as_str().unwrap_or("").to_string(),
+            ));
+        }
+    }
+
+    if let Some(vl) = root.get("vector_len").and_then(|n| n.as_str()) {
+        deck.vector_len = vl.parse::<usize>().map_err(|_| format!("bad vector_len `{vl}`"))?;
+        if deck.vector_len == 0 {
+            return Err("vector_len must be >= 1".into());
+        }
+    }
+
+    let errs = deck.validate();
+    if !errs.is_empty() {
+        return Err(format!("invalid deck `{}`:\n  {}", deck.name, errs.join("\n  ")));
+    }
+    Ok(deck)
+}
+
+fn parse_kernel(name: &str, node: &Node) -> Result<Rule, String> {
+    let decl = node
+        .get("declaration")
+        .and_then(|n| n.as_str())
+        .ok_or_else(|| format!("kernel `{name}`: missing declaration"))?;
+    let (decl_name, params) = Rule::parse_declaration(decl)?;
+
+    let mut inputs = Vec::new();
+    if let Some(block) = node.get("inputs").and_then(|n| n.as_str()) {
+        for line in nonempty_lines(block) {
+            let (pname, term) = parse_binding(line)?;
+            inputs.push((pname, term));
+        }
+    }
+    let mut outputs = Vec::new();
+    if let Some(block) = node.get("outputs").and_then(|n| n.as_str()) {
+        for line in nonempty_lines(block) {
+            let (pname, term) = parse_binding(line)?;
+            outputs.push((pname, term));
+        }
+    }
+    let body = node.get("body").and_then(|n| n.as_str()).map(str::to_string);
+
+    // Check coverage: every In param bound in inputs, every Out in outputs.
+    for p in &params {
+        let list = if p.dir == ParamDir::In { &inputs } else { &outputs };
+        if !list.iter().any(|(n, _)| n == &p.name) {
+            return Err(format!(
+                "kernel `{name}`: parameter `{}` ({:?}) has no term binding",
+                p.name, p.dir
+            ));
+        }
+    }
+    for (pname, _) in inputs.iter() {
+        match params.iter().find(|p| &p.name == pname) {
+            Some(p) if p.dir == ParamDir::In => {}
+            Some(_) => return Err(format!("kernel `{name}`: `{pname}` bound as input but declared output")),
+            None => return Err(format!("kernel `{name}`: unknown input param `{pname}`")),
+        }
+    }
+    for (pname, _) in outputs.iter() {
+        match params.iter().find(|p| &p.name == pname) {
+            Some(p) if p.dir == ParamDir::Out => {}
+            Some(_) => return Err(format!("kernel `{name}`: `{pname}` bound as output but declared input")),
+            None => return Err(format!("kernel `{name}`: unknown output param `{pname}`")),
+        }
+    }
+
+    Ok(Rule { name: decl_name, params, inputs, outputs, body })
+}
+
+/// `n : q?[j?-1][i?]`
+fn parse_binding(line: &str) -> Result<(String, Term), String> {
+    let (pname, rest) = line
+        .split_once(':')
+        .ok_or_else(|| format!("expected `param : term` in `{line}`"))?;
+    let term = Term::parse(rest)?;
+    Ok((pname.trim().to_string(), term))
+}
+
+/// `double g_cell[j?][i?] => cell[j?][i?]`
+fn parse_axiom(line: &str) -> Result<Axiom, String> {
+    let (lhs, rhs) = line
+        .split_once("=>")
+        .ok_or_else(|| format!("expected `storage => term` in axiom `{line}`"))?;
+    let (ty, storage) = parse_typed_storage(lhs)?;
+    let provides = Term::parse(rhs)?;
+    Ok(Axiom { storage, ty, provides })
+}
+
+/// `laplace(cell[j][i]) => double g_cell[j][i]`
+fn parse_goal(line: &str) -> Result<Goal, String> {
+    let (lhs, rhs) = line
+        .split_once("=>")
+        .ok_or_else(|| format!("expected `term => storage` in goal `{line}`"))?;
+    let requires = Term::parse(lhs)?;
+    let (ty, storage) = parse_typed_storage(rhs)?;
+    Ok(Goal { requires, ty, storage })
+}
+
+fn parse_typed_storage(s: &str) -> Result<(Scalar, Term), String> {
+    let s = s.trim();
+    let (ty_raw, rest) = s
+        .split_once(char::is_whitespace)
+        .ok_or_else(|| format!("expected `type storage[...]` in `{s}`"))?;
+    let ty = Scalar::parse(ty_raw).ok_or_else(|| format!("unknown type `{ty_raw}`"))?;
+    let storage = Term::parse(rest)?;
+    if !storage.tags.is_empty() {
+        return Err(format!("storage `{rest}` must be untagged"));
+    }
+    Ok((ty, storage))
+}
+
+fn nonempty_lines(block: &str) -> impl Iterator<Item = &str> {
+    block.lines().map(str::trim).filter(|l| !l.is_empty())
+}
+
+#[cfg(test)]
+pub mod testdecks;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_laplace_deck() {
+        let deck = parse_deck(testdecks::LAPLACE).unwrap();
+        assert_eq!(deck.name, "laplace");
+        assert_eq!(deck.rules.len(), 1);
+        let r = &deck.rules[0];
+        assert_eq!(r.name, "laplace5");
+        assert_eq!(r.inputs.len(), 5);
+        assert_eq!(r.outputs.len(), 1);
+        assert_eq!(deck.axioms.len(), 1);
+        assert_eq!(deck.goals.len(), 1);
+        assert_eq!(deck.iteration.order, vec!["j", "i"]);
+        assert_eq!(deck.iteration.rank("i"), 0);
+    }
+
+    #[test]
+    fn missing_iteration_rejected() {
+        assert!(parse_deck("kernels:\n").is_err());
+    }
+
+    #[test]
+    fn unbound_param_rejected() {
+        let src = r#"
+name: bad
+iteration:
+  order: [i]
+  domains:
+    i: [0, N]
+kernels:
+  k:
+    declaration: k(double a, double &b);
+    inputs: |
+      a : u?[i?]
+globals:
+  inputs: |
+    double g_u[i?] => u[i?]
+  outputs: |
+    k(u[i]) => double g_o[i]
+"#;
+        let err = parse_deck(src).unwrap_err();
+        assert!(err.contains("has no term binding"), "{err}");
+    }
+
+    #[test]
+    fn goal_must_be_concrete() {
+        let src = r#"
+name: bad
+iteration:
+  order: [i]
+  domains:
+    i: [0, N]
+globals:
+  inputs: |
+    double g_u[i?] => u[i?]
+  outputs: |
+    f(u[i?]) => double g_o[i]
+"#;
+        assert!(parse_deck(src).is_err());
+    }
+
+    #[test]
+    fn aliases_and_vector_len() {
+        let src = r#"
+name: t
+iteration:
+  order: [i]
+  domains:
+    i: [1, N-1]
+globals:
+  inputs: |
+    double g_u[i?] => u[i?]
+  outputs: |
+    u[i] => double g_u2[i]
+aliases:
+  - [g_u, g_u2]
+vector_len: 8
+"#;
+        let deck = parse_deck(src).unwrap();
+        assert_eq!(deck.aliases, vec![("g_u".to_string(), "g_u2".to_string())]);
+        assert_eq!(deck.vector_len, 8);
+    }
+}

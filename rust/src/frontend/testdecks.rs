@@ -1,0 +1,114 @@
+//! Shared deck fixtures for unit tests across engine modules.
+
+/// The paper's running example (Listing 1 / Fig. 10): 5-point Laplace.
+pub const LAPLACE: &str = r#"
+name: laplace
+iteration:
+  order: [j, i]
+  domains:
+    j: [1, Nj-1]
+    i: [1, Ni-1]
+kernels:
+  laplace:
+    declaration: laplace5(double n, double e, double s, double w, double c, double &o);
+    inputs: |
+      n : q?[j?-1][i?]
+      e : q?[j?][i?+1]
+      s : q?[j?+1][i?]
+      w : q?[j?][i?-1]
+      c : q?[j?][i?]
+    outputs: |
+      o : laplace(q?[j?][i?])
+    body: "o = 0.25*(n + e + s + w) - c;"
+globals:
+  inputs: |
+    double g_cell[j?][i?] => cell[j?][i?]
+  outputs: |
+    laplace(cell[j][i]) => double g_out[j][i]
+"#;
+
+/// The paper's normalization example (§3, Figs. 3/4/6, §5.2): per-row flux
+/// differences, an L2-norm reduction over `i`, and a normalize broadcast.
+/// Unfused this visits the (j,i) space five times; fused it is two nests
+/// split at the reduction→broadcast concavity.
+pub const NORMALIZE: &str = r#"
+name: normalize
+iteration:
+  order: [j, i]
+  domains:
+    j: [0, Nj]
+    i: [0, Ni]
+kernels:
+  flux:
+    declaration: flux(double l, double r, double &f);
+    inputs: |
+      l : q?[j?][i?]
+      r : q?[j?][i?+1]
+    outputs: |
+      f : flux(q?[j?][i?])
+    body: "f = r - l;"
+  norm_init:
+    declaration: norm_init(double &a);
+    outputs: |
+      a : zero(acc[j?])
+    body: "a = 0.0;"
+  norm_acc:
+    declaration: norm_acc(double a0, double f, double &a);
+    inputs: |
+      a0 : zero(acc[j?])
+      f : flux(q[j?][i?])
+    outputs: |
+      a : sum(acc[j?])
+    body: "a = a0 + f*f;"
+  norm_root:
+    declaration: norm_root(double a, double &r);
+    inputs: |
+      a : sum(acc[j?])
+    outputs: |
+      r : rsqrt(acc[j?])
+    body: "r = 1.0/sqrt(a + 1e-30);"
+  normalize:
+    declaration: normalize(double f, double r, double &o);
+    inputs: |
+      f : flux(q[j?][i?])
+      r : rsqrt(acc[j?])
+    outputs: |
+      o : normed(q[j?][i?])
+    body: "o = f*r;"
+globals:
+  inputs: |
+    double g_q[j?][i?] => q[j?][i?]
+  outputs: |
+    normed(q[j][i]) => double g_out[j][i]
+"#;
+
+/// A 1D 3-point stencil chain used to exercise pipelining/contraction:
+/// d[i] = b[i+1]-b[i-1] where b = a*2 — producer must run ahead of consumer.
+pub const CHAIN1D: &str = r#"
+name: chain1d
+iteration:
+  order: [i]
+  domains:
+    i: [1, N-1]
+kernels:
+  dbl:
+    declaration: dbl(double a, double &b);
+    inputs: |
+      a : u?[i?]
+    outputs: |
+      b : dbl(u?[i?])
+    body: "b = 2.0*a;"
+  diff:
+    declaration: diff(double l, double r, double &d);
+    inputs: |
+      l : dbl(u?[i?-1])
+      r : dbl(u?[i?+1])
+    outputs: |
+      d : diff(u?[i?])
+    body: "d = r - l;"
+globals:
+  inputs: |
+    double g_u[i?] => u[i?]
+  outputs: |
+    diff(u[i]) => double g_d[i]
+"#;

@@ -1,0 +1,505 @@
+//! Iteration-nest fusion (paper §3.3–§3.4, Figs. 5 & 7).
+//!
+//! The iteration-nest DAG starts with one (perfect) nest per grouped
+//! callsite; fusion merges nests along dataflow edges as long as:
+//!
+//! * no *concave dataflow* crosses the merge — a broadcast consuming the
+//!   (transitive) result of a reduction forces a **split** (paper §3.4);
+//! * the merge keeps the group schedulable — every member missing a loop
+//!   dim must have a consistent placement (prologue or epilogue) relative
+//!   to that loop, derived from dataflow (this is the rank-difference case
+//!   of `fuse_inest`, Fig. 7: the lower-ranked nest fuses into the
+//!   higher-ranked nest's prologue/epilogue);
+//! * no dataflow path leaves the group and re-enters it (cycle check —
+//!   the `dataflow_le` conditions of Fig. 7).
+//!
+//! Within a fused group, *software-pipeline shifts* are assigned per dim by
+//! longest-path over the group's dataflow edges, so every producer runs
+//! just far enough ahead of its consumers (this realizes the paper's
+//! prologue/steady-state/epilogue phases; see [`crate::plan`]).
+
+use crate::dataflow::{CallsiteId, Dataflow, VarId};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Placement of a callsite relative to a loop dim it does not iterate
+/// (paper: which *phase* of the enclosing nest it lands in).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Iterates this dim in the loop body (steady state).
+    Loop,
+    /// Runs before the loop (prologue) at each outer iteration.
+    Pre,
+    /// Runs after the loop (epilogue) at each outer iteration.
+    Post,
+}
+
+/// One member of a fused nest.
+#[derive(Debug, Clone)]
+pub struct Member {
+    pub callsite: CallsiteId,
+    /// Role per nest dim (aligned with `FusedNest::dims`).
+    pub roles: Vec<Role>,
+    /// Pipeline shift per nest dim (0 for dims the member doesn't iterate).
+    pub shifts: Vec<i64>,
+}
+
+/// A fused iteration nest: a set of callsites scheduled under one loop
+/// tree over `dims`.
+#[derive(Debug, Clone)]
+pub struct FusedNest {
+    pub id: usize,
+    /// Union of member dims, outermost-first.
+    pub dims: Vec<String>,
+    /// Members in dataflow-topological order (the emission order).
+    pub members: Vec<Member>,
+}
+
+impl FusedNest {
+    pub fn member(&self, cs: CallsiteId) -> Option<&Member> {
+        self.members.iter().find(|m| m.callsite == cs)
+    }
+    pub fn dim_index(&self, d: &str) -> Option<usize> {
+        self.dims.iter().position(|x| x == d)
+    }
+}
+
+/// The fused iteration-nest DAG: nests in execution order (edges always go
+/// from earlier to later nests by construction).
+#[derive(Debug, Clone)]
+pub struct FusedDag {
+    pub nests: Vec<FusedNest>,
+    /// Why each split happened, for diagnostics/DOT: (producer callsite,
+    /// consumer callsite, variable, reason).
+    pub splits: Vec<SplitInfo>,
+}
+
+#[derive(Debug, Clone)]
+pub struct SplitInfo {
+    pub producer: CallsiteId,
+    pub consumer: CallsiteId,
+    pub var: VarId,
+    pub reason: String,
+}
+
+impl FusedDag {
+    /// Which nest a callsite landed in.
+    pub fn nest_of(&self, cs: CallsiteId) -> usize {
+        self.nests
+            .iter()
+            .position(|n| n.member(cs).is_some())
+            .expect("callsite not in any nest")
+    }
+}
+
+/// Options controlling fusion.
+#[derive(Debug, Clone)]
+pub struct FusionOptions {
+    /// Disable fusion entirely (one nest per callsite) — the "autovec"
+    /// baseline shape used in the paper's performance comparisons.
+    pub enabled: bool,
+}
+
+impl Default for FusionOptions {
+    fn default() -> Self {
+        FusionOptions { enabled: true }
+    }
+}
+
+/// Fuse the iteration-nest DAG (paper Fig. 5 `fuse_inest_dag`).
+pub fn fuse(df: &Dataflow, opts: &FusionOptions) -> Result<FusedDag, String> {
+    let order = df.topo_order()?;
+    let reduced_upstream = df.reduced_dims_upstream();
+
+    let mut splits = Vec::new();
+
+    // Precompute adjacency for descendant queries.
+    let edges = df.edges();
+    let mut adj: Vec<Vec<CallsiteId>> = vec![Vec::new(); df.callsites.len()];
+    for (a, b, _) in &edges {
+        adj[*a].push(*b);
+    }
+    let descendants = |v: CallsiteId| -> BTreeSet<CallsiteId> {
+        let mut seen = BTreeSet::new();
+        let mut stack = vec![v];
+        while let Some(u) = stack.pop() {
+            for &w in &adj[u] {
+                if seen.insert(w) {
+                    stack.push(w);
+                }
+            }
+        }
+        seen
+    };
+
+    // Record concave edges once (they are properties of the dataflow, not
+    // of the grouping state).
+    let mut concave: BTreeSet<(CallsiteId, CallsiteId)> = BTreeSet::new();
+    for v in &df.vars {
+        if let Some(p) = v.producer {
+            for r in &df.reads_of[v.id] {
+                let c = &df.callsites[r.consumer];
+                // Broadcast: consumer iterates dims the variable lacks.
+                let extra: Vec<&String> =
+                    c.dims.iter().filter(|d| !v.dims.contains(d)).collect();
+                if extra.is_empty() {
+                    continue;
+                }
+                // Concave iff any such dim was reduced away upstream.
+                if extra.iter().any(|d| reduced_upstream[v.id].contains(*d)) {
+                    if concave.insert((p, r.consumer)) {
+                        splits.push(SplitInfo {
+                            producer: p,
+                            consumer: r.consumer,
+                            var: v.id,
+                            reason: format!(
+                                "concave dataflow: `{}` re-expands reduced dim(s) {:?}",
+                                v.ident,
+                                extra.iter().map(|d| d.as_str()).collect::<Vec<_>>()
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    let mut remaining: Vec<CallsiteId> = order.clone();
+    let mut nests: Vec<FusedNest> = Vec::new();
+
+    while !remaining.is_empty() {
+        let mut group: Vec<CallsiteId> = vec![remaining[0]];
+        let mut blocked: BTreeSet<CallsiteId> = BTreeSet::new();
+
+        if opts.enabled {
+            for &v in remaining.iter().skip(1) {
+                if blocked.contains(&v) {
+                    continue;
+                }
+                let mut candidate = group.clone();
+                candidate.push(v);
+                match group_feasible(df, &candidate, &concave) {
+                    Ok(()) => group.push(v),
+                    Err(_) => {
+                        blocked.insert(v);
+                        blocked.extend(descendants(v));
+                    }
+                }
+            }
+        }
+
+        let nest = build_nest(df, nests.len(), &group)?;
+        nests.push(nest);
+        let in_group: BTreeSet<CallsiteId> = group.into_iter().collect();
+        remaining.retain(|c| !in_group.contains(c));
+    }
+
+    Ok(FusedDag { nests, splits })
+}
+
+/// Check that a candidate member set forms a valid fused nest.
+fn group_feasible(
+    df: &Dataflow,
+    members: &[CallsiteId],
+    concave: &BTreeSet<(CallsiteId, CallsiteId)>,
+) -> Result<(), String> {
+    let set: BTreeSet<CallsiteId> = members.iter().copied().collect();
+
+    // 1. No concave edge inside the group.
+    for &(p, c) in concave {
+        if set.contains(&p) && set.contains(&c) {
+            return Err(format!("concave edge {p}->{c} inside group"));
+        }
+    }
+
+    // 2. No path from a member to a member through a non-member (merging
+    //    would create a cycle in the nest DAG).
+    //    Find everything reachable from the group through non-members; if a
+    //    member is reached via a non-member, reject.
+    let edges = df.edges();
+    let mut adj: Vec<Vec<CallsiteId>> = vec![Vec::new(); df.callsites.len()];
+    for (a, b, _) in &edges {
+        adj[*a].push(*b);
+    }
+    let mut outside_reached: BTreeSet<CallsiteId> = BTreeSet::new();
+    let mut stack: Vec<CallsiteId> = Vec::new();
+    for &m in members {
+        for &w in &adj[m] {
+            if !set.contains(&w) && outside_reached.insert(w) {
+                stack.push(w);
+            }
+        }
+    }
+    while let Some(u) = stack.pop() {
+        for &w in &adj[u] {
+            if set.contains(&w) {
+                return Err(format!("path re-enters group at callsite {w}"));
+            }
+            if outside_reached.insert(w) {
+                stack.push(w);
+            }
+        }
+    }
+
+    // 3. Placement consistency for members missing dims.
+    compute_roles(df, members).map(|_| ())
+}
+
+/// Union of member dims, outermost-first (uses the order carried on the
+/// callsites, which inference sorted by the deck's global loop order).
+fn union_dims(df: &Dataflow, members: &[CallsiteId]) -> Vec<String> {
+    let mut dims: Vec<String> = Vec::new();
+    for &m in members {
+        for d in &df.callsites[m].dims {
+            if !dims.contains(d) {
+                dims.push(d.clone());
+            }
+        }
+    }
+    dims.sort_by_key(|d| df.loop_order.iter().position(|v| v == d).unwrap_or(usize::MAX));
+    dims
+}
+
+/// Derive the Pre/Post role of every member for every dim it lacks.
+/// Errors if any member would need to be both before and after the loop
+/// over some dim.
+fn compute_roles(df: &Dataflow, members: &[CallsiteId]) -> Result<Vec<Vec<Role>>, String> {
+    let set: BTreeSet<CallsiteId> = members.iter().copied().collect();
+    let dims = union_dims(df, members);
+    let edges: Vec<(CallsiteId, CallsiteId)> = df
+        .edges()
+        .into_iter()
+        .filter(|(a, b, _)| set.contains(a) && set.contains(b) && a != b)
+        .map(|(a, b, _)| (a, b))
+        .collect();
+
+    let idx: BTreeMap<CallsiteId, usize> =
+        members.iter().enumerate().map(|(i, &c)| (c, i)).collect();
+
+    let mut roles: Vec<Vec<Role>> = members
+        .iter()
+        .map(|&m| {
+            dims.iter()
+                .map(|d| {
+                    if df.callsites[m].dims.contains(d) {
+                        Role::Loop
+                    } else {
+                        Role::Pre // provisional
+                    }
+                })
+                .collect()
+        })
+        .collect();
+
+    for (k, d) in dims.iter().enumerate() {
+        // Constraint lattice per member: {Pre, Post}; start unknown (None).
+        let mut need_pre = vec![false; members.len()];
+        let mut need_post = vec![false; members.len()];
+        // Direct constraints from edges touching d-having members.
+        // Fixed-point: propagate along edges among d-missing members.
+        loop {
+            let mut changed = false;
+            for &(a, b) in &edges {
+                let (ia, ib) = (idx[&a], idx[&b]);
+                let a_has = roles[ia][k] == Role::Loop;
+                let b_has = roles[ib][k] == Role::Loop;
+                match (a_has, b_has) {
+                    (true, false) => {
+                        // d-having producer feeds d-missing consumer: the
+                        // consumer must run after the loop completes.
+                        if !need_post[ib] {
+                            need_post[ib] = true;
+                            changed = true;
+                        }
+                    }
+                    (false, true) => {
+                        // d-missing producer feeds d-having consumer: run
+                        // before the loop (prologue).
+                        if !need_pre[ia] {
+                            need_pre[ia] = true;
+                            changed = true;
+                        }
+                    }
+                    (false, false) => {
+                        // order within the missing set: b >= a.
+                        if need_post[ia] && !need_post[ib] {
+                            need_post[ib] = true;
+                            changed = true;
+                        }
+                        if need_pre[ib] && !need_pre[ia] {
+                            need_pre[ia] = true;
+                            changed = true;
+                        }
+                    }
+                    (true, true) => {}
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        for (m, r) in roles.iter_mut().enumerate() {
+            if r[k] == Role::Loop {
+                continue;
+            }
+            match (need_pre[m], need_post[m]) {
+                (true, true) => {
+                    return Err(format!(
+                        "callsite `{}` needs both prologue and epilogue placement for dim `{d}`",
+                        df.callsites[members[m]].name
+                    ));
+                }
+                (false, true) => r[k] = Role::Post,
+                _ => r[k] = Role::Pre,
+            }
+        }
+    }
+    Ok(roles)
+}
+
+/// Assemble a fused nest: roles, member order, pipeline shifts.
+fn build_nest(df: &Dataflow, id: usize, group: &[CallsiteId]) -> Result<FusedNest, String> {
+    let dims = union_dims(df, group);
+    let roles = compute_roles(df, group)?;
+
+    // Member order: topological within the group.
+    let set: BTreeSet<CallsiteId> = group.iter().copied().collect();
+    let order = df.topo_order()?;
+    let sorted: Vec<CallsiteId> = order.into_iter().filter(|c| set.contains(c)).collect();
+    // Map group position -> roles index (roles computed in `group` order).
+    let role_of: BTreeMap<CallsiteId, Vec<Role>> = group
+        .iter()
+        .zip(roles.into_iter())
+        .map(|(&c, r)| (c, r))
+        .collect();
+
+    // Pipeline shifts per dim: longest path over in-group edges,
+    // s_p >= s_c + max_read_offset - write_offset, in reverse topo order.
+    let mut shifts: BTreeMap<CallsiteId, Vec<i64>> =
+        sorted.iter().map(|&c| (c, vec![0i64; dims.len()])).collect();
+    for &c in sorted.iter().rev() {
+        // For each input var of c produced inside the group:
+        for (_, vid, offsets) in &df.callsites[c].reads {
+            let var = &df.vars[*vid];
+            if let Some(p) = var.producer {
+                if !set.contains(&p) || p == c {
+                    continue;
+                }
+                for (vk, d) in var.dims.iter().enumerate() {
+                    let nd = match dims.iter().position(|x| x == d) {
+                        Some(nd) => nd,
+                        None => continue,
+                    };
+                    let o = offsets[vk];
+                    let wo = var.write_offset[vk];
+                    let sc = shifts[&c][nd];
+                    let req = sc + o - wo;
+                    let sp = shifts.get_mut(&p).unwrap();
+                    if req > sp[nd] {
+                        sp[nd] = req;
+                    }
+                }
+            }
+        }
+    }
+
+    // Aggregate all reads of a var: the producer shift must satisfy the
+    // *maximum* over every consumer read; the loop above processes each
+    // read, and reverse-topo order guarantees consumer shifts are final
+    // before the producer's is read... except chains where producer==consumer
+    // order ties; the DAG has no such ties (p != c enforced).
+
+    let members = sorted
+        .iter()
+        .map(|&c| Member {
+            callsite: c,
+            roles: role_of[&c].clone(),
+            shifts: shifts[&c].clone(),
+        })
+        .collect();
+
+    Ok(FusedNest { id, dims, members })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{parse_deck, testdecks};
+
+    fn fused(src: &str) -> (crate::ir::Deck, Dataflow, FusedDag) {
+        let deck = parse_deck(src).unwrap();
+        let df = crate::dataflow::build(&deck).unwrap();
+        let fd = fuse(&df, &FusionOptions::default()).unwrap();
+        (deck, df, fd)
+    }
+
+    #[test]
+    fn laplace_single_nest() {
+        let (_, _, fd) = fused(testdecks::LAPLACE);
+        assert_eq!(fd.nests.len(), 1);
+        assert_eq!(fd.nests[0].dims, vec!["j".to_string(), "i".to_string()]);
+        assert!(fd.splits.is_empty());
+    }
+
+    #[test]
+    fn chain1d_fuses_with_shift() {
+        let (_, df, fd) = fused(testdecks::CHAIN1D);
+        assert_eq!(fd.nests.len(), 1);
+        let nest = &fd.nests[0];
+        let dbl = df.callsites.iter().find(|c| c.name == "dbl").unwrap().id;
+        let diff = df.callsites.iter().find(|c| c.name == "diff").unwrap().id;
+        // diff reads dbl(u) at i+1 → dbl runs 1 ahead.
+        assert_eq!(nest.member(dbl).unwrap().shifts, vec![1]);
+        assert_eq!(nest.member(diff).unwrap().shifts, vec![0]);
+        // dbl before diff in emission order.
+        let pos = |c| nest.members.iter().position(|m| m.callsite == c).unwrap();
+        assert!(pos(dbl) < pos(diff));
+    }
+
+    #[test]
+    fn normalize_splits_at_concavity() {
+        let (_, df, fd) = fused(testdecks::NORMALIZE);
+        // Two nests: {flux, norm_init, norm_acc, norm_root} and {normalize}.
+        assert_eq!(fd.nests.len(), 2, "splits: {:?}", fd.splits);
+        assert!(!fd.splits.is_empty());
+        let name = |c: CallsiteId| df.callsites[c].name.clone();
+        let n0: Vec<String> = fd.nests[0].members.iter().map(|m| name(m.callsite)).collect();
+        let n1: Vec<String> = fd.nests[1].members.iter().map(|m| name(m.callsite)).collect();
+        assert!(n0.contains(&"flux".to_string()));
+        assert!(n0.contains(&"norm_acc".to_string()));
+        assert!(n0.contains(&"norm_root".to_string()));
+        assert_eq!(n1, vec!["normalize".to_string()]);
+    }
+
+    #[test]
+    fn normalize_roles() {
+        let (_, df, fd) = fused(testdecks::NORMALIZE);
+        let nest = &fd.nests[0];
+        assert_eq!(nest.dims, vec!["j".to_string(), "i".to_string()]);
+        let by_name = |n: &str| {
+            let id = df.callsites.iter().find(|c| c.name == n).unwrap().id;
+            nest.member(id).unwrap().clone()
+        };
+        // i is dim index 1.
+        assert_eq!(by_name("norm_init").roles[1], Role::Pre);
+        assert_eq!(by_name("norm_acc").roles[1], Role::Loop);
+        assert_eq!(by_name("norm_root").roles[1], Role::Post);
+        assert_eq!(by_name("flux").roles[1], Role::Loop);
+        // All iterate j.
+        assert_eq!(by_name("norm_init").roles[0], Role::Loop);
+    }
+
+    #[test]
+    fn fusion_disabled_gives_one_nest_per_callsite() {
+        let deck = parse_deck(testdecks::NORMALIZE).unwrap();
+        let df = crate::dataflow::build(&deck).unwrap();
+        let fd = fuse(&df, &FusionOptions { enabled: false }).unwrap();
+        assert_eq!(fd.nests.len(), df.callsites.len());
+        // Nest order must respect dataflow: flux before norm_acc.
+        let nest_of_name = |n: &str| {
+            let id = df.callsites.iter().find(|c| c.name == n).unwrap().id;
+            fd.nest_of(id)
+        };
+        assert!(nest_of_name("flux") < nest_of_name("norm_acc"));
+        assert!(nest_of_name("norm_root") < nest_of_name("normalize"));
+    }
+}

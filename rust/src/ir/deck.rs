@@ -1,0 +1,271 @@
+//! Decks: the full declarative input to the generator.
+
+use super::rule::Rule;
+use super::term::Term;
+use super::Scalar;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A symbolic loop bound: `base + offset` where `base` is the name of a
+/// runtime extent parameter (e.g. `Ni`) or absent for a constant.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Bound {
+    pub base: Option<String>,
+    pub offset: i64,
+}
+
+impl Bound {
+    pub fn constant(v: i64) -> Bound {
+        Bound { base: None, offset: v }
+    }
+    pub fn of(base: &str, offset: i64) -> Bound {
+        Bound { base: Some(base.to_string()), offset }
+    }
+
+    /// Evaluate against runtime extent bindings.
+    pub fn eval(&self, extents: &BTreeMap<String, i64>) -> Result<i64, String> {
+        match &self.base {
+            None => Ok(self.offset),
+            Some(b) => extents
+                .get(b)
+                .map(|v| v + self.offset)
+                .ok_or_else(|| format!("unbound extent `{b}`")),
+        }
+    }
+
+    /// Add a constant.
+    pub fn plus(&self, d: i64) -> Bound {
+        Bound { base: self.base.clone(), offset: self.offset + d }
+    }
+
+    /// Parse `0`, `Ni`, `Ni-1`, `Ni+2`.
+    pub fn parse(s: &str) -> Result<Bound, String> {
+        let s = s.trim();
+        if let Ok(v) = s.parse::<i64>() {
+            return Ok(Bound::constant(v));
+        }
+        let split = s.find(['+', '-']);
+        match split {
+            Some(p) if p > 0 => {
+                let off: i64 = s[p..]
+                    .replace(' ', "")
+                    .parse()
+                    .map_err(|_| format!("bad bound offset in `{s}`"))?;
+                Ok(Bound::of(s[..p].trim(), off))
+            }
+            _ => Ok(Bound::of(s, 0)),
+        }
+    }
+}
+
+impl fmt::Display for Bound {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.base {
+            None => write!(f, "{}", self.offset),
+            Some(b) => match self.offset.cmp(&0) {
+                std::cmp::Ordering::Equal => write!(f, "{b}"),
+                std::cmp::Ordering::Greater => write!(f, "{b}+{}", self.offset),
+                std::cmp::Ordering::Less => write!(f, "{b}{}", self.offset),
+            },
+        }
+    }
+}
+
+/// Half-open iteration domain `[lo, hi)` for one loop variable.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Domain {
+    pub lo: Bound,
+    pub hi: Bound,
+}
+
+impl Domain {
+    pub fn new(lo: Bound, hi: Bound) -> Domain {
+        Domain { lo, hi }
+    }
+}
+
+impl fmt::Display for Domain {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}, {})", self.lo, self.hi)
+    }
+}
+
+/// Iteration configuration: global loop order (outermost first) and the
+/// default domain of each loop variable.
+#[derive(Debug, Clone, Default)]
+pub struct IterationCfg {
+    /// Outermost-first, e.g. `["k", "j", "i"]`.
+    pub order: Vec<String>,
+    pub domains: BTreeMap<String, Domain>,
+}
+
+impl IterationCfg {
+    /// Rank of a loop variable: 0 = innermost. Unknown vars error at deck
+    /// validation, so this may panic on unvalidated input.
+    pub fn rank(&self, var: &str) -> usize {
+        let pos = self
+            .order
+            .iter()
+            .position(|v| v == var)
+            .unwrap_or_else(|| panic!("unknown loop var `{var}`"));
+        self.order.len() - 1 - pos
+    }
+
+    /// Sort dimension variables outermost-first according to the global
+    /// order.
+    pub fn sort_outer_first(&self, dims: &mut Vec<String>) {
+        let order = &self.order;
+        dims.sort_by_key(|d| order.iter().position(|v| v == d).unwrap_or(usize::MAX));
+        dims.dedup();
+    }
+}
+
+/// An axiom: a terminal input array that provides a family of terms.
+/// `float g_cell[j?][i?] => cell[j?][i?]`.
+#[derive(Debug, Clone)]
+pub struct Axiom {
+    pub storage: Term,
+    pub ty: Scalar,
+    pub provides: Term,
+}
+
+/// A goal: a requested terminal output. `laplace(cell[j][i]) => float
+/// g_out[j][i]`. The left side is a *concrete* term family over the deck
+/// domains of its loop vars.
+#[derive(Debug, Clone)]
+pub struct Goal {
+    pub requires: Term,
+    pub ty: Scalar,
+    pub storage: Term,
+}
+
+/// A full deck.
+#[derive(Debug, Clone, Default)]
+pub struct Deck {
+    pub name: String,
+    pub rules: Vec<Rule>,
+    pub axioms: Vec<Axiom>,
+    pub goals: Vec<Goal>,
+    pub iteration: IterationCfg,
+    /// Terminal inputs that alias terminal outputs (pairs of storage base
+    /// names), e.g. an in-place stencil update. Paper §3.5 "In/out chaining".
+    pub aliases: Vec<(String, String)>,
+    /// Target vector length for vector-expanded rotation (paper Fig. 9c).
+    /// 1 disables vector expansion.
+    pub vector_len: usize,
+}
+
+impl Deck {
+    /// Validate internal consistency; returns a list of problems (empty =
+    /// valid).
+    pub fn validate(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        if self.iteration.order.is_empty() {
+            errs.push("iteration.order is empty".into());
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for v in &self.iteration.order {
+            if !seen.insert(v.clone()) {
+                errs.push(format!("duplicate loop var `{v}` in iteration.order"));
+            }
+            if !self.iteration.domains.contains_key(v) {
+                errs.push(format!("loop var `{v}` has no domain"));
+            }
+        }
+        for r in &self.rules {
+            for (pname, _) in r.inputs.iter() {
+                if !r.params.iter().any(|p| &p.name == pname) {
+                    errs.push(format!("rule `{}`: input `{pname}` not in declaration", r.name));
+                }
+            }
+            for (pname, t) in r.outputs.iter() {
+                if !r.params.iter().any(|p| &p.name == pname) {
+                    errs.push(format!("rule `{}`: output `{pname}` not in declaration", r.name));
+                }
+                if t.tags.is_empty() && t.base_pattern {
+                    // outputs like `q?[...]` with no tag would collide with the
+                    // input variable family; the paper always tags derived terms.
+                    errs.push(format!(
+                        "rule `{}`: output `{t}` is an untagged pattern base",
+                        r.name
+                    ));
+                }
+            }
+            for s in r
+                .inputs
+                .iter()
+                .chain(r.outputs.iter())
+                .flat_map(|(_, t)| t.subs.iter())
+            {
+                if !s.pattern && !self.iteration.order.contains(&s.var) {
+                    errs.push(format!(
+                        "rule `{}`: concrete subscript var `{}` is not a loop var",
+                        r.name, s.var
+                    ));
+                }
+            }
+        }
+        for g in &self.goals {
+            if g.requires.is_pattern() {
+                errs.push(format!("goal `{}` must be concrete", g.requires));
+            }
+            for s in &g.requires.subs {
+                if !self.iteration.order.contains(&s.var) {
+                    errs.push(format!("goal `{}`: `{}` is not a loop var", g.requires, s.var));
+                }
+            }
+        }
+        for a in &self.axioms {
+            for s in &a.provides.subs {
+                if !s.pattern && !self.iteration.order.contains(&s.var) {
+                    errs.push(format!("axiom `{}`: `{}` is not a loop var", a.provides, s.var));
+                }
+            }
+        }
+        errs
+    }
+
+    pub fn rule(&self, name: &str) -> Option<&Rule> {
+        self.rules.iter().find(|r| r.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bound_parse_eval() {
+        let b = Bound::parse("Ni-1").unwrap();
+        assert_eq!(b, Bound::of("Ni", -1));
+        let mut ext = BTreeMap::new();
+        ext.insert("Ni".to_string(), 100i64);
+        assert_eq!(b.eval(&ext).unwrap(), 99);
+        assert_eq!(Bound::parse("7").unwrap().eval(&ext).unwrap(), 7);
+        assert!(Bound::parse("Nq").unwrap().eval(&ext).is_err());
+        assert_eq!(Bound::parse("Ni+2").unwrap().to_string(), "Ni+2");
+    }
+
+    #[test]
+    fn rank_order() {
+        let cfg = IterationCfg {
+            order: vec!["k".into(), "j".into(), "i".into()],
+            domains: BTreeMap::new(),
+        };
+        assert_eq!(cfg.rank("i"), 0);
+        assert_eq!(cfg.rank("k"), 2);
+        let mut dims = vec!["i".to_string(), "k".to_string()];
+        cfg.sort_outer_first(&mut dims);
+        assert_eq!(dims, vec!["k".to_string(), "i".to_string()]);
+    }
+
+    #[test]
+    fn validate_catches_missing_domain() {
+        let deck = Deck {
+            iteration: IterationCfg { order: vec!["i".into()], domains: BTreeMap::new() },
+            ..Default::default()
+        };
+        let errs = deck.validate();
+        assert!(errs.iter().any(|e| e.contains("no domain")));
+    }
+}

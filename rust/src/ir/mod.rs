@@ -1,0 +1,87 @@
+//! Core intermediate representation for HFAV decks.
+//!
+//! A *deck* is the declarative input to the generator (paper §4, Fig. 10):
+//! kernel production rules, terminal axioms (available inputs), terminal
+//! goals (requested outputs), and the iteration configuration (global loop
+//! order and per-variable domains).
+//!
+//! Terms follow the paper's grammar: an optional *tag* (a function symbol
+//! such as `laplace(...)` used to distinguish stages of a value), a base
+//! identifier, and a subscript list of `var ± offset` displacements, e.g.
+//! `q?[j?-1][i?+1]`. Identifiers ending in `?` are unification variables.
+
+pub mod term;
+pub mod rule;
+pub mod deck;
+
+pub use deck::{Axiom, Bound, Deck, Domain, Goal, IterationCfg};
+pub use rule::{Param, ParamDir, Rule};
+pub use term::{Subscript, Term};
+
+/// Scalar element types supported by the backends.
+///
+/// The paper's applications all use `double`; `float` is carried through for
+/// completeness of the front-end (declarations in decks may use either).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scalar {
+    F32,
+    F64,
+    I32,
+    I64,
+}
+
+impl Scalar {
+    /// Parse a C-like type name.
+    pub fn parse(s: &str) -> Option<Scalar> {
+        match s {
+            "float" => Some(Scalar::F32),
+            "double" => Some(Scalar::F64),
+            "int" | "int32_t" => Some(Scalar::I32),
+            "long" | "int64_t" => Some(Scalar::I64),
+            _ => None,
+        }
+    }
+
+    /// C99 spelling.
+    pub fn c_name(&self) -> &'static str {
+        match self {
+            Scalar::F32 => "float",
+            Scalar::F64 => "double",
+            Scalar::I32 => "int32_t",
+            Scalar::I64 => "int64_t",
+        }
+    }
+
+    /// Rust spelling.
+    pub fn rust_name(&self) -> &'static str {
+        match self {
+            Scalar::F32 => "f32",
+            Scalar::F64 => "f64",
+            Scalar::I32 => "i32",
+            Scalar::I64 => "i64",
+        }
+    }
+
+    /// Size in bytes (used by footprint accounting).
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            Scalar::F32 | Scalar::I32 => 4,
+            Scalar::F64 | Scalar::I64 => 8,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_parse_roundtrip() {
+        assert_eq!(Scalar::parse("double"), Some(Scalar::F64));
+        assert_eq!(Scalar::parse("float"), Some(Scalar::F32));
+        assert_eq!(Scalar::parse("void"), None);
+        assert_eq!(Scalar::F64.c_name(), "double");
+        assert_eq!(Scalar::F32.rust_name(), "f32");
+        assert_eq!(Scalar::F64.size_bytes(), 8);
+    }
+}

@@ -1,0 +1,153 @@
+//! Kernel production rules.
+
+use super::term::Term;
+use super::Scalar;
+use std::fmt;
+
+/// Direction of a kernel parameter (C-style `&` marks outputs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamDir {
+    In,
+    Out,
+}
+
+/// One kernel parameter from the C-like declaration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Param {
+    pub name: String,
+    pub ty: Scalar,
+    pub dir: ParamDir,
+}
+
+/// A production rule: a kernel with a declaration, input term patterns
+/// (one per `In` parameter) and output term patterns (one per `Out`
+/// parameter). Patterns share unification variables, e.g. the Laplace rule
+/// consumes `q?[j?±1][i?±1]` and produces `laplace(q?[j?][i?])`.
+#[derive(Debug, Clone)]
+pub struct Rule {
+    pub name: String,
+    pub params: Vec<Param>,
+    /// (param name, term pattern) for inputs, in declaration order.
+    pub inputs: Vec<(String, Term)>,
+    /// (param name, term pattern) for outputs, in declaration order.
+    pub outputs: Vec<(String, Term)>,
+    /// Optional inline body (an expression / statement list in the backend
+    /// language) used by code generators to inline the kernel. Purely
+    /// substitution-based, as in the paper's front-end.
+    pub body: Option<String>,
+}
+
+impl Rule {
+    /// All dimension variable names mentioned by this rule's patterns.
+    pub fn pattern_dims(&self) -> Vec<String> {
+        let mut dims = Vec::new();
+        for (_, t) in self.inputs.iter().chain(self.outputs.iter()) {
+            for s in &t.subs {
+                if !dims.contains(&s.var) {
+                    dims.push(s.var.clone());
+                }
+            }
+        }
+        dims
+    }
+
+    /// Parse a C-like declaration: `name(double a, double b, double &out)`.
+    /// A trailing `;` is tolerated.
+    pub fn parse_declaration(src: &str) -> Result<(String, Vec<Param>), String> {
+        let src = src.trim().trim_end_matches(';').trim();
+        let lp = src.find('(').ok_or_else(|| format!("missing `(` in declaration `{src}`"))?;
+        if !src.ends_with(')') {
+            return Err(format!("missing `)` in declaration `{src}`"));
+        }
+        let name = src[..lp].trim();
+        // Tolerate an optional leading return type (e.g. `void laplace5(...)`).
+        let name = name.split_whitespace().last().unwrap_or("");
+        if name.is_empty() {
+            return Err(format!("missing kernel name in `{src}`"));
+        }
+        let inner = src[lp + 1..src.len() - 1].trim();
+        let mut params = Vec::new();
+        if !inner.is_empty() {
+            for part in inner.split(',') {
+                let part = part.trim();
+                let toks: Vec<&str> = part.split_whitespace().collect();
+                if toks.len() < 2 {
+                    return Err(format!("bad parameter `{part}` in `{src}`"));
+                }
+                let ty = Scalar::parse(toks[0])
+                    .ok_or_else(|| format!("unknown type `{}` in `{src}`", toks[0]))?;
+                let mut pname = toks[1..].join("");
+                let mut dir = ParamDir::In;
+                if let Some(stripped) = pname.strip_prefix('&') {
+                    dir = ParamDir::Out;
+                    pname = stripped.to_string();
+                }
+                if let Some(stripped) = pname.strip_prefix('*') {
+                    dir = ParamDir::Out;
+                    pname = stripped.to_string();
+                }
+                params.push(Param { name: pname, ty, dir });
+            }
+        }
+        Ok((name.to_string(), params))
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}(", self.name)?;
+        let mut first = true;
+        for p in &self.params {
+            if !first {
+                write!(f, ", ")?;
+            }
+            first = false;
+            write!(
+                f,
+                "{} {}{}",
+                p.ty.c_name(),
+                if p.dir == ParamDir::Out { "&" } else { "" },
+                p.name
+            )?;
+        }
+        write!(f, ")")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decl_basic() {
+        let (name, ps) =
+            Rule::parse_declaration("laplace5(float n, float e, float s, float w, float c, float &o);")
+                .unwrap();
+        assert_eq!(name, "laplace5");
+        assert_eq!(ps.len(), 6);
+        assert_eq!(ps[0].dir, ParamDir::In);
+        assert_eq!(ps[5].dir, ParamDir::Out);
+        assert_eq!(ps[5].name, "o");
+    }
+
+    #[test]
+    fn decl_return_type_and_star() {
+        let (name, ps) = Rule::parse_declaration("void f(double x, double *y)").unwrap();
+        assert_eq!(name, "f");
+        assert_eq!(ps[1].dir, ParamDir::Out);
+    }
+
+    #[test]
+    fn decl_amp_space() {
+        let (_, ps) = Rule::parse_declaration("f(double & y)").unwrap();
+        assert_eq!(ps[0].dir, ParamDir::Out);
+        assert_eq!(ps[0].name, "y");
+    }
+
+    #[test]
+    fn decl_errors() {
+        assert!(Rule::parse_declaration("nope").is_err());
+        assert!(Rule::parse_declaration("f(badtype x)").is_err());
+        assert!(Rule::parse_declaration("f(double)").is_err());
+    }
+}

@@ -1,0 +1,263 @@
+//! Terms: tagged array references with symbolic subscripts.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// One subscript: `var ± offset`. `var` may be a unification variable
+/// (spelled `i?` in deck source; stored here with the trailing `?` stripped
+/// and `pattern = true`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Subscript {
+    pub var: String,
+    pub offset: i64,
+    pub pattern: bool,
+}
+
+impl Subscript {
+    pub fn new(var: &str, offset: i64) -> Self {
+        Subscript { var: var.to_string(), offset, pattern: false }
+    }
+    pub fn pat(var: &str, offset: i64) -> Self {
+        Subscript { var: var.to_string(), offset, pattern: true }
+    }
+}
+
+impl fmt::Display for Subscript {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}{}", self.var, if self.pattern { "?" } else { "" })?;
+        match self.offset.cmp(&0) {
+            std::cmp::Ordering::Greater => write!(f, "+{}", self.offset),
+            std::cmp::Ordering::Less => write!(f, "{}", self.offset),
+            std::cmp::Ordering::Equal => Ok(()),
+        }
+    }
+}
+
+/// A term: `tag(base[sub]...[sub])` with the tag optional and possibly
+/// nested (`tags` is outermost-first). The base identifier may itself be a
+/// unification variable (`q?`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Term {
+    pub tags: Vec<String>,
+    pub base: String,
+    pub base_pattern: bool,
+    pub subs: Vec<Subscript>,
+}
+
+impl Term {
+    pub fn new(base: &str, subs: Vec<Subscript>) -> Self {
+        Term { tags: vec![], base: base.to_string(), base_pattern: false, subs }
+    }
+
+    pub fn tagged(tag: &str, base: &str, subs: Vec<Subscript>) -> Self {
+        Term { tags: vec![tag.to_string()], base: base.to_string(), base_pattern: false, subs }
+    }
+
+    /// The "identifier" of a term for storage purposes: tags + base joined.
+    /// `laplace(q[j][i])` and `q[j][i]` are distinct variables.
+    pub fn ident(&self) -> String {
+        if self.tags.is_empty() {
+            self.base.clone()
+        } else {
+            format!("{}({})", self.tags.join("("), self.base)
+        }
+    }
+
+    /// True if this term contains any unification variables.
+    pub fn is_pattern(&self) -> bool {
+        self.base_pattern || self.subs.iter().any(|s| s.pattern)
+    }
+
+    /// Dimension variables used, in subscript order.
+    pub fn dims(&self) -> Vec<String> {
+        self.subs.iter().map(|s| s.var.clone()).collect()
+    }
+
+    /// Apply a shift to all subscripts: `shift[var]` is added to the offset
+    /// of every subscript over `var`.
+    pub fn shifted(&self, shift: &BTreeMap<String, i64>) -> Term {
+        let mut t = self.clone();
+        for s in &mut t.subs {
+            if let Some(d) = shift.get(&s.var) {
+                s.offset += d;
+            }
+        }
+        t
+    }
+
+    /// Parse a term from deck source, e.g. `laplace(q?[j?][i?+1])` or
+    /// `cell[j][i-2]`.
+    pub fn parse(src: &str) -> Result<Term, String> {
+        let src = src.trim();
+        // Peel nested tags: ident '(' ... ')'.
+        let mut tags = Vec::new();
+        let mut rest = src;
+        loop {
+            // Find the first of '(' or '['. A '(' before any '[' means a tag.
+            let lparen = rest.find('(');
+            let lbrack = rest.find('[');
+            match (lparen, lbrack) {
+                (Some(p), b) if b.map_or(true, |b| p < b) => {
+                    let tag = rest[..p].trim();
+                    if tag.is_empty() {
+                        return Err(format!("empty tag in term `{src}`"));
+                    }
+                    if !rest.ends_with(')') {
+                        return Err(format!("unbalanced parens in term `{src}`"));
+                    }
+                    tags.push(tag.to_string());
+                    rest = rest[p + 1..rest.len() - 1].trim();
+                }
+                _ => break,
+            }
+        }
+        // Now rest = base[sub][sub]...
+        let (base_raw, subs_raw) = match rest.find('[') {
+            Some(b) => (&rest[..b], &rest[b..]),
+            None => (rest, ""),
+        };
+        let base_raw = base_raw.trim();
+        if base_raw.is_empty() {
+            return Err(format!("empty base in term `{src}`"));
+        }
+        let (base, base_pattern) = strip_pattern(base_raw);
+        if !ident_ok(&base) {
+            return Err(format!("bad identifier `{base_raw}` in term `{src}`"));
+        }
+        let mut subs = Vec::new();
+        let mut s = subs_raw.trim();
+        while !s.is_empty() {
+            if !s.starts_with('[') {
+                return Err(format!("expected `[` in subscripts of `{src}`"));
+            }
+            let close = s.find(']').ok_or_else(|| format!("missing `]` in `{src}`"))?;
+            let inner = s[1..close].trim();
+            subs.push(parse_subscript(inner).map_err(|e| format!("{e} in term `{src}`"))?);
+            s = s[close + 1..].trim_start();
+        }
+        Ok(Term { tags, base, base_pattern, subs })
+    }
+}
+
+impl fmt::Display for Term {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for t in &self.tags {
+            write!(f, "{t}(")?;
+        }
+        write!(f, "{}{}", self.base, if self.base_pattern { "?" } else { "" })?;
+        for s in &self.subs {
+            write!(f, "[{s}]")?;
+        }
+        for _ in &self.tags {
+            write!(f, ")")?;
+        }
+        Ok(())
+    }
+}
+
+fn strip_pattern(s: &str) -> (String, bool) {
+    if let Some(stripped) = s.strip_suffix('?') {
+        (stripped.to_string(), true)
+    } else {
+        (s.to_string(), false)
+    }
+}
+
+fn ident_ok(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().unwrap().is_ascii_alphabetic()
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Parse `i`, `i?`, `i+1`, `i?-2`.
+fn parse_subscript(s: &str) -> Result<Subscript, String> {
+    let s = s.trim();
+    let split = s.find(['+', '-']);
+    let (var_raw, offset) = match split {
+        Some(p) if p > 0 => {
+            let off: i64 = s[p..]
+                .replace(' ', "")
+                .parse()
+                .map_err(|_| format!("bad offset `{}`", &s[p..]))?;
+            (s[..p].trim(), off)
+        }
+        _ => (s, 0),
+    };
+    let (var, pattern) = strip_pattern(var_raw);
+    if !ident_ok(&var) {
+        return Err(format!("bad subscript var `{var_raw}`"));
+    }
+    Ok(Subscript { var, offset, pattern })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_plain() {
+        let t = Term::parse("cell[j][i]").unwrap();
+        assert_eq!(t.base, "cell");
+        assert!(!t.base_pattern);
+        assert_eq!(t.subs, vec![Subscript::new("j", 0), Subscript::new("i", 0)]);
+        assert_eq!(t.to_string(), "cell[j][i]");
+    }
+
+    #[test]
+    fn parse_offsets() {
+        let t = Term::parse("q?[j?-1][i?+2]").unwrap();
+        assert!(t.base_pattern);
+        assert_eq!(t.subs, vec![Subscript::pat("j", -1), Subscript::pat("i", 2)]);
+        assert_eq!(t.to_string(), "q?[j?-1][i?+2]");
+    }
+
+    #[test]
+    fn parse_tagged() {
+        let t = Term::parse("laplace(q?[j?][i?])").unwrap();
+        assert_eq!(t.tags, vec!["laplace"]);
+        assert_eq!(t.ident(), "laplace(q)");
+        assert_eq!(t.to_string(), "laplace(q?[j?][i?])");
+    }
+
+    #[test]
+    fn parse_nested_tags() {
+        let t = Term::parse("sum(sq(f[j][i]))").unwrap();
+        assert_eq!(t.tags, vec!["sum", "sq"]);
+        assert_eq!(t.ident(), "sum(sq(f)");
+    }
+
+    #[test]
+    fn parse_scalar_term() {
+        let t = Term::parse("nsteps").unwrap();
+        assert!(t.subs.is_empty());
+        assert_eq!(t.ident(), "nsteps");
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Term::parse("").is_err());
+        assert!(Term::parse("a[").is_err());
+        assert!(Term::parse("f(x[i]").is_err());
+        assert!(Term::parse("[i]").is_err());
+        assert!(Term::parse("a[1b]").is_err());
+    }
+
+    #[test]
+    fn shift_applies_per_var() {
+        let t = Term::parse("f[j-1][i+1]").unwrap();
+        let mut sh = BTreeMap::new();
+        sh.insert("j".to_string(), 2i64);
+        let s = t.shifted(&sh);
+        assert_eq!(s.subs[0].offset, 1);
+        assert_eq!(s.subs[1].offset, 1);
+    }
+
+    #[test]
+    fn spaces_tolerated() {
+        let t = Term::parse("  f [ j - 1 ][ i ]  ");
+        // spaces inside subscripts are tolerated; base with space is not split
+        assert!(t.is_ok());
+        let t = t.unwrap();
+        assert_eq!(t.subs[0].offset, -1);
+    }
+}

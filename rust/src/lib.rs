@@ -1,0 +1,34 @@
+//! # HFAV-rs
+//!
+//! A production Rust implementation of **High-performance Fusion And
+//! Vectorization** (Sewall & Pennycook, 2017): a code generator that fuses
+//! kernel-based loop nests, contracts intermediate storage into rolling
+//! buffers, and emits vectorizable code — plus an in-process schedule
+//! executor, PJRT runtime for AOT-compiled JAX/Pallas artifacts, and a job
+//! coordinator.
+//!
+//! Pipeline (paper §3.1):
+//! 1. [`frontend`] parses a declarative deck (rules + axioms + goals).
+//! 2. [`inference`] backward-chains goals→axioms into the dataflow graph
+//!    ([`dataflow`]).
+//! 3. [`inest`] builds the iteration-nest DAG; [`fusion`] fuses it.
+//! 4. [`analysis`] computes liveness, reuse, storage contraction,
+//!    alias chaining and vectorization.
+//! 5. [`plan`] assembles the executable schedule; [`codegen`] emits C99 /
+//!    Rust / DOT; [`exec`] runs it in-process.
+
+pub mod ir;
+pub mod yaml;
+pub mod frontend;
+pub mod inference;
+pub mod dataflow;
+pub mod runtime;
+pub mod fusion;
+pub mod analysis;
+pub mod plan;
+pub mod exec;
+pub mod codegen;
+pub mod apps;
+pub mod coordinator;
+pub mod bench;
+pub mod e2e;

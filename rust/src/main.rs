@@ -1,0 +1,208 @@
+//! `hfav` CLI: generate code from decks, inspect schedules and graphs,
+//! run the built-in apps on any engine, serve job traces through the
+//! coordinator, and regenerate the paper's benchmark figures.
+
+use hfav::apps::Variant;
+use hfav::coordinator::{deck_of, parse_trace_line, Coordinator, Engine, Job};
+use hfav::plan::{compile_src, CompileOptions};
+use std::collections::BTreeMap;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: hfav <command> [args]
+  generate <deck.yaml|app> [--backend c99|rust|dot-dataflow|dot-inest|schedule] [--variant hfav|autovec]
+  footprint <deck.yaml|app> --extents Ni=512,Nj=512
+  run --app <laplace|normalize|cosmo|hydro2d> [--engine exec|native|pjrt] [--variant hfav|autovec]
+      [--size N] [--steps S]
+  serve --trace <file> [--workers N] [--artifacts DIR]
+  e2e [--size N] [--steps S]
+  bench <sysinfo|normalization|cosmo|hydro2d|footprint|pjrt|all>
+  smoke [hlo.txt]"
+    );
+    std::process::exit(2)
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().cloned().unwrap_or_default();
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "generate" => generate(rest),
+        "footprint" => footprint(rest),
+        "run" => run(rest),
+        "serve" => serve(rest),
+        "e2e" => e2e(rest),
+        "bench" => bench(rest),
+        "smoke" => {
+            let path = rest.first().cloned().unwrap_or_else(|| "/tmp/fn_hlo.txt".into());
+            let v = hfav::runtime::smoke(&path)?;
+            println!("result={v:?}");
+            Ok(())
+        }
+        _ => usage(),
+    }
+}
+
+fn load_deck_arg(arg: &str) -> Result<String, anyhow::Error> {
+    if let Ok(deck) = deck_of(arg) {
+        return Ok(deck.to_string());
+    }
+    Ok(std::fs::read_to_string(arg)?)
+}
+
+fn variant_of(rest: &[String]) -> Variant {
+    match flag(rest, "--variant").as_deref() {
+        Some("autovec") => Variant::Autovec,
+        _ => Variant::Hfav,
+    }
+}
+
+fn compile_arg(rest: &[String]) -> anyhow::Result<hfav::plan::Program> {
+    let target = rest.first().map(String::as_str).unwrap_or("laplace");
+    let src = load_deck_arg(target)?;
+    let prog = match variant_of(rest) {
+        Variant::Hfav => compile_src(&src, CompileOptions::default()),
+        Variant::Autovec => hfav::apps::compile_variant(&src, Variant::Autovec),
+    }
+    .map_err(anyhow::Error::msg)?;
+    Ok(prog)
+}
+
+fn generate(rest: &[String]) -> anyhow::Result<()> {
+    let prog = compile_arg(rest)?;
+    match flag(rest, "--backend").as_deref().unwrap_or("c99") {
+        "c99" => print!("{}", hfav::codegen::c99::emit(&prog).map_err(anyhow::Error::msg)?),
+        "rust" => print!("{}", hfav::codegen::rs::emit(&prog).map_err(anyhow::Error::msg)?),
+        "dot-dataflow" => print!("{}", hfav::codegen::dot::dataflow(&prog.df)),
+        "dot-inest" => print!("{}", hfav::codegen::dot::inest(&prog.df, &prog.fd)),
+        "schedule" => print!("{}", prog.schedule_text()),
+        other => anyhow::bail!("unknown backend `{other}`"),
+    }
+    Ok(())
+}
+
+fn footprint(rest: &[String]) -> anyhow::Result<()> {
+    let prog = compile_arg(rest)?;
+    let mut extents = BTreeMap::new();
+    if let Some(spec) = flag(rest, "--extents") {
+        for kv in spec.split(',') {
+            let (k, v) = kv.split_once('=').ok_or_else(|| anyhow::anyhow!("bad extents"))?;
+            extents.insert(k.trim().to_string(), v.trim().parse::<i64>()?);
+        }
+    }
+    println!("deck `{}`:", prog.deck.name);
+    for s in &prog.sp.storages {
+        let words = hfav::analysis::storage_words(s, &prog.df, &extents).unwrap_or(-1);
+        println!(
+            "  {:<24} {:<40} {:>12} words{}",
+            s.name,
+            format!("{:?}", s.sizes),
+            words,
+            if s.external.is_some() { "  (external)" } else { "" }
+        );
+    }
+    println!(
+        "total intermediate: {} words",
+        prog.footprint_words(&extents).map_err(anyhow::Error::msg)?
+    );
+    Ok(())
+}
+
+fn run(rest: &[String]) -> anyhow::Result<()> {
+    let app = flag(rest, "--app").unwrap_or_else(|| "laplace".into());
+    let engine: Engine = flag(rest, "--engine")
+        .unwrap_or_else(|| "native".into())
+        .parse()
+        .map_err(anyhow::Error::msg)?;
+    let size: usize = flag(rest, "--size").unwrap_or_else(|| "256".into()).parse()?;
+    let steps: usize = flag(rest, "--steps").unwrap_or_else(|| "10".into()).parse()?;
+    let c = Coordinator::start(1, Some(hfav::runtime::default_artifacts_dir()));
+    let r = c
+        .submit(Job { id: 0, app, variant: variant_of(rest), engine, size, steps })
+        .recv()?;
+    if r.ok {
+        println!(
+            "ok: {:.1} Mcells/s latency={:?} checksum={:.6e}",
+            r.cups / 1e6,
+            r.latency,
+            r.checksum
+        );
+    } else {
+        println!("FAILED: {}", r.detail);
+    }
+    c.shutdown();
+    Ok(())
+}
+
+fn serve(rest: &[String]) -> anyhow::Result<()> {
+    let trace = flag(rest, "--trace").ok_or_else(|| anyhow::anyhow!("--trace required"))?;
+    let workers: usize = flag(rest, "--workers").unwrap_or_else(|| "4".into()).parse()?;
+    let artifacts = flag(rest, "--artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(hfav::runtime::default_artifacts_dir);
+    let text = std::fs::read_to_string(&trace)?;
+    let jobs: Vec<Job> = text
+        .lines()
+        .filter(|l| !l.trim().is_empty() && !l.trim_start().starts_with('#'))
+        .enumerate()
+        .map(|(i, l)| parse_trace_line(i as u64, l).map_err(anyhow::Error::msg))
+        .collect::<Result<_, _>>()?;
+    println!("serving {} jobs on {workers} workers", jobs.len());
+    let c = Coordinator::start(workers, Some(artifacts));
+    let t0 = std::time::Instant::now();
+    let results = c.run_batch(jobs);
+    let wall = t0.elapsed();
+    for r in &results {
+        if !r.ok {
+            println!("job {} FAILED: {}", r.id, r.detail);
+        }
+    }
+    println!("wall={wall:?} {}", c.metrics.summary());
+    c.shutdown();
+    Ok(())
+}
+
+fn e2e(rest: &[String]) -> anyhow::Result<()> {
+    let size: usize = flag(rest, "--size").unwrap_or_else(|| "128".into()).parse()?;
+    let steps: usize = flag(rest, "--steps").unwrap_or_else(|| "200".into()).parse()?;
+    hfav::e2e::sod_demo(size, steps).map_err(anyhow::Error::msg)
+}
+
+fn bench(rest: &[String]) -> anyhow::Result<()> {
+    let which = rest.first().map(String::as_str).unwrap_or("all");
+    println!("{}", hfav::bench::sysinfo());
+    let sizes_small = [64usize, 128, 256, 512];
+    let sizes_big = [128usize, 256, 512, 1024];
+    match which {
+        "sysinfo" => {}
+        "normalization" => {
+            hfav::bench::normalization(&sizes_big);
+        }
+        "cosmo" => {
+            hfav::bench::cosmo(&sizes_small, 8);
+        }
+        "hydro2d" => {
+            hfav::bench::hydro2d(&[64, 128, 256], 5);
+        }
+        "footprint" => {
+            hfav::bench::footprint();
+        }
+        "pjrt" => {
+            hfav::bench::pjrt(&hfav::runtime::default_artifacts_dir())
+                .map_err(anyhow::Error::msg)?;
+        }
+        "all" => {
+            hfav::bench::footprint();
+            hfav::bench::normalization(&sizes_big);
+            hfav::bench::cosmo(&sizes_small, 8);
+            hfav::bench::hydro2d(&[64, 128, 256], 5);
+            let _ = hfav::bench::pjrt(&hfav::runtime::default_artifacts_dir());
+        }
+        other => anyhow::bail!("unknown bench `{other}`"),
+    }
+    Ok(())
+}

@@ -1,0 +1,196 @@
+//! Pipeline driver: deck → inference → fusion → analysis, bundled into a
+//! [`Program`] — the compiled schedule consumed by the executor
+//! ([`crate::exec`]) and the code emitters ([`crate::codegen`]).
+
+use crate::analysis::{self, AnalysisOptions, StoragePlan};
+use crate::dataflow::{Dataflow, Terminal};
+use crate::fusion::{self, FusedDag, FusionOptions, Role};
+use crate::ir::Deck;
+use std::collections::BTreeMap;
+
+/// All options controlling compilation.
+#[derive(Debug, Clone, Default)]
+pub struct CompileOptions {
+    pub fusion: FusionOptions,
+    pub analysis: AnalysisOptions,
+    /// Roll *all* terminal inputs through buffers (the paper's §5.3
+    /// "additional rolling buffer for the input values" in-place variant).
+    /// Inputs named in deck alias pairs are always rolled (in/out
+    /// chaining, §3.5).
+    pub roll_all_inputs: bool,
+}
+
+/// A fully-compiled program.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub deck: Deck,
+    pub df: Dataflow,
+    pub fd: FusedDag,
+    pub sp: StoragePlan,
+    pub opts: CompileOptions,
+}
+
+/// Compile a deck.
+pub fn compile(deck: Deck, opts: CompileOptions) -> Result<Program, String> {
+    let mut opts = opts;
+    // The deck's vector_len applies unless the caller overrode it.
+    if opts.analysis.vector_len == 1 && deck.vector_len > 1 {
+        opts.analysis.vector_len = deck.vector_len;
+    }
+    let mut df = crate::dataflow::build(&deck)?;
+    // In/out chaining before fusion (inserts synthetic roll callsites).
+    analysis::chain_inouts(&deck, &mut df)?;
+    if opts.roll_all_inputs {
+        let inputs: Vec<_> = df
+            .vars
+            .iter()
+            .filter(|v| matches!(v.terminal, Terminal::Input { .. }) && !df.reads_of[v.id].is_empty())
+            .map(|v| v.id)
+            .collect();
+        for v in inputs {
+            // Skip if chain_inouts already buffered it.
+            if df.var_by_ident.contains_key(&format!("__buf({})", df.vars[v].ident)) {
+                continue;
+            }
+            analysis::insert_input_buffer(&mut df, v)?;
+        }
+    }
+    let fd = fusion::fuse(&df, &opts.fusion)?;
+    let sp = analysis::analyze(&deck, &df, &fd, &opts.analysis)?;
+    Ok(Program { deck, df, fd, sp, opts })
+}
+
+/// Convenience: compile from deck source text.
+pub fn compile_src(src: &str, opts: CompileOptions) -> Result<Program, String> {
+    let deck = crate::frontend::parse_deck(src)?;
+    compile(deck, opts)
+}
+
+impl Program {
+    /// Names and spans of required external input arrays:
+    /// (storage name, dims, per-dim half-open bounds).
+    pub fn external_inputs(&self) -> Vec<(String, Vec<String>, Vec<crate::ir::Domain>)> {
+        self.externals(true)
+    }
+
+    /// Names and spans of produced external output arrays.
+    pub fn external_outputs(&self) -> Vec<(String, Vec<String>, Vec<crate::ir::Domain>)> {
+        self.externals(false)
+    }
+
+    fn externals(&self, inputs: bool) -> Vec<(String, Vec<String>, Vec<crate::ir::Domain>)> {
+        let mut out = Vec::new();
+        for v in &self.df.vars {
+            let name = match (&v.terminal, inputs) {
+                (Terminal::Input { storage, .. }, true) => storage.clone(),
+                (Terminal::Output { storage, .. }, false) => storage.clone(),
+                _ => continue,
+            };
+            let doms: Vec<_> = v.dims.iter().map(|d| v.span[d].clone()).collect();
+            out.push((name, v.dims.clone(), doms));
+        }
+        out
+    }
+
+    /// Pretty-print the fused schedule (loop structure with phases) — the
+    /// human-readable view of the paper's Fig. 6.
+    pub fn schedule_text(&self) -> String {
+        let mut s = String::new();
+        for nest in &self.fd.nests {
+            s.push_str(&format!("nest {} over ({}):\n", nest.id, nest.dims.join(",")));
+            self.fmt_level(nest, &nest.members.iter().collect::<Vec<_>>(), 0, 1, &mut s);
+        }
+        s
+    }
+
+    fn fmt_level(
+        &self,
+        nest: &crate::fusion::FusedNest,
+        members: &[&crate::fusion::Member],
+        level: usize,
+        indent: usize,
+        s: &mut String,
+    ) {
+        let pad = "  ".repeat(indent);
+        if level == nest.dims.len() {
+            for m in members {
+                let cs = &self.df.callsites[m.callsite];
+                let shifts: Vec<String> = nest
+                    .dims
+                    .iter()
+                    .zip(m.shifts.iter())
+                    .filter(|(d, _)| cs.dims.contains(d))
+                    .map(|(d, sh)| format!("{d}+{sh}"))
+                    .collect();
+                s.push_str(&format!("{pad}{}({})\n", cs.name, shifts.join(",")));
+            }
+            return;
+        }
+        let pre: Vec<&crate::fusion::Member> =
+            members.iter().filter(|m| m.roles[level] == Role::Pre).copied().collect();
+        let inl: Vec<&crate::fusion::Member> =
+            members.iter().filter(|m| m.roles[level] == Role::Loop).copied().collect();
+        let post: Vec<&crate::fusion::Member> =
+            members.iter().filter(|m| m.roles[level] == Role::Post).copied().collect();
+        if !pre.is_empty() {
+            s.push_str(&format!("{pad}prologue[{}]:\n", nest.dims[level]));
+            self.fmt_level(nest, &pre, level + 1, indent + 1, s);
+        }
+        if !inl.is_empty() {
+            s.push_str(&format!("{pad}for {}:\n", nest.dims[level]));
+            self.fmt_level(nest, &inl, level + 1, indent + 1, s);
+        }
+        if !post.is_empty() {
+            s.push_str(&format!("{pad}epilogue[{}]:\n", nest.dims[level]));
+            self.fmt_level(nest, &post, level + 1, indent + 1, s);
+        }
+    }
+
+    /// Intermediate footprint in words for given extents (paper §5.3/§5.4
+    /// footprint claims).
+    pub fn footprint_words(&self, extents: &BTreeMap<String, i64>) -> Result<i64, String> {
+        self.sp.intermediate_words(&self.df, extents)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::testdecks;
+
+    #[test]
+    fn compile_all_testdecks() {
+        for src in [testdecks::LAPLACE, testdecks::NORMALIZE, testdecks::CHAIN1D] {
+            let prog = compile_src(src, CompileOptions::default()).unwrap();
+            assert!(!prog.fd.nests.is_empty());
+        }
+    }
+
+    #[test]
+    fn schedule_text_shows_phases() {
+        let prog = compile_src(testdecks::NORMALIZE, CompileOptions::default()).unwrap();
+        let txt = prog.schedule_text();
+        assert!(txt.contains("prologue[i]"), "{txt}");
+        assert!(txt.contains("epilogue[i]"), "{txt}");
+        assert!(txt.contains("norm_acc"), "{txt}");
+    }
+
+    #[test]
+    fn externals_reported() {
+        let prog = compile_src(testdecks::LAPLACE, CompileOptions::default()).unwrap();
+        let ins = prog.external_inputs();
+        assert_eq!(ins.len(), 1);
+        assert_eq!(ins[0].0, "g_cell");
+        let outs = prog.external_outputs();
+        assert_eq!(outs[0].0, "g_out");
+    }
+
+    #[test]
+    fn roll_all_inputs_buffers_terminals() {
+        let opts = CompileOptions { roll_all_inputs: true, ..Default::default() };
+        let prog = compile_src(testdecks::LAPLACE, opts).unwrap();
+        assert!(prog.df.var("__buf(cell)").is_some());
+        // Still a single fused nest.
+        assert_eq!(prog.fd.nests.len(), 1);
+    }
+}

@@ -1,0 +1,442 @@
+//! A minimal YAML-subset parser, sufficient for HFAV decks.
+//!
+//! Supported: block mappings (indentation-scoped), block sequences
+//! (`- item`), inline flow sequences (`[a, b, c]`), plain scalars, quoted
+//! scalars, literal block scalars (`|`), comments (`#`). This is a
+//! deliberately small, dependency-free subset — the full YAML spec is not
+//! needed by the deck format (paper §4 uses "a custom YAML format").
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parsed YAML node.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Node {
+    Scalar(String),
+    Seq(Vec<Node>),
+    /// Insertion-ordered mapping.
+    Map(Vec<(String, Node)>),
+}
+
+impl Node {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Node::Scalar(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_map(&self) -> Option<&[(String, Node)]> {
+        match self {
+            Node::Map(m) => Some(m),
+            _ => None,
+        }
+    }
+    pub fn as_seq(&self) -> Option<&[Node]> {
+        match self {
+            Node::Seq(s) => Some(s),
+            _ => None,
+        }
+    }
+    /// Mapping lookup.
+    pub fn get(&self, key: &str) -> Option<&Node> {
+        match self {
+            Node::Map(m) => m.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+    /// Flatten a map into a BTreeMap of scalar values (for small configs).
+    pub fn scalar_map(&self) -> Option<BTreeMap<String, String>> {
+        let m = self.as_map()?;
+        let mut out = BTreeMap::new();
+        for (k, v) in m {
+            out.insert(k.clone(), v.as_str()?.to_string());
+        }
+        Some(out)
+    }
+}
+
+impl fmt::Display for Node {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fn go(n: &Node, indent: usize, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            let pad = "  ".repeat(indent);
+            match n {
+                Node::Scalar(s) => writeln!(f, "{pad}{s}"),
+                Node::Seq(items) => {
+                    for it in items {
+                        match it {
+                            Node::Scalar(s) => writeln!(f, "{pad}- {s}")?,
+                            _ => {
+                                writeln!(f, "{pad}-")?;
+                                go(it, indent + 1, f)?;
+                            }
+                        }
+                    }
+                    Ok(())
+                }
+                Node::Map(m) => {
+                    for (k, v) in m {
+                        match v {
+                            Node::Scalar(s) => writeln!(f, "{pad}{k}: {s}")?,
+                            _ => {
+                                writeln!(f, "{pad}{k}:")?;
+                                go(v, indent + 1, f)?;
+                            }
+                        }
+                    }
+                    Ok(())
+                }
+            }
+        }
+        go(self, 0, f)
+    }
+}
+
+#[derive(Debug)]
+struct Line {
+    indent: usize,
+    /// Content with comments stripped (unless quoted / block scalar).
+    text: String,
+    /// 1-based source line for diagnostics.
+    num: usize,
+}
+
+/// Parse a YAML document into a [`Node`].
+pub fn parse(src: &str) -> Result<Node, String> {
+    let lines = logical_lines(src);
+    if lines.is_empty() {
+        return Ok(Node::Map(vec![]));
+    }
+    let mut pos = 0usize;
+    let node = parse_block(&lines, &mut pos, lines[0].indent, src)?;
+    if pos < lines.len() {
+        return Err(format!("line {}: trailing content", lines[pos].num));
+    }
+    Ok(node)
+}
+
+fn logical_lines(src: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    for (idx, raw) in src.lines().enumerate() {
+        let without_comment = strip_comment(raw);
+        let trimmed = without_comment.trim_end();
+        if trimmed.trim().is_empty() {
+            continue;
+        }
+        let indent = trimmed.len() - trimmed.trim_start().len();
+        out.push(Line { indent, text: trimmed.trim_start().to_string(), num: idx + 1 });
+    }
+    out
+}
+
+/// Strip a `#` comment not inside quotes.
+fn strip_comment(s: &str) -> String {
+    let mut in_s = false;
+    let mut in_d = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '\'' if !in_d => in_s = !in_s,
+            '"' if !in_s => in_d = !in_d,
+            '#' if !in_s && !in_d => {
+                // Only treat as comment if at start or preceded by whitespace.
+                if i == 0 || s[..i].ends_with(' ') || s[..i].ends_with('\t') {
+                    return s[..i].to_string();
+                }
+            }
+            _ => {}
+        }
+    }
+    s.to_string()
+}
+
+fn parse_block(lines: &[Line], pos: &mut usize, indent: usize, src: &str) -> Result<Node, String> {
+    let line = &lines[*pos];
+    if line.text.starts_with("- ") || line.text == "-" {
+        parse_seq(lines, pos, indent, src)
+    } else {
+        parse_map(lines, pos, indent, src)
+    }
+}
+
+fn parse_seq(lines: &[Line], pos: &mut usize, indent: usize, src: &str) -> Result<Node, String> {
+    let mut items = Vec::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent != indent || !(line.text.starts_with("- ") || line.text == "-") {
+            break;
+        }
+        let rest = line.text[1..].trim().to_string();
+        *pos += 1;
+        if rest.is_empty() {
+            // Nested block on following lines.
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let child_indent = lines[*pos].indent;
+                items.push(parse_block(lines, pos, child_indent, src)?);
+            } else {
+                items.push(Node::Scalar(String::new()));
+            }
+        } else {
+            items.push(parse_value_inline(&rest)?);
+        }
+    }
+    Ok(Node::Seq(items))
+}
+
+fn parse_map(lines: &[Line], pos: &mut usize, indent: usize, src: &str) -> Result<Node, String> {
+    let mut entries: Vec<(String, Node)> = Vec::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent != indent {
+            break;
+        }
+        let (key, rest) = split_key(&line.text)
+            .ok_or_else(|| format!("line {}: expected `key:` got `{}`", line.num, line.text))?;
+        if entries.iter().any(|(k, _)| k == &key) {
+            return Err(format!("line {}: duplicate key `{key}`", line.num));
+        }
+        *pos += 1;
+        let value = if rest.is_empty() {
+            // Block value on following (more-indented) lines, or empty.
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                let child_indent = lines[*pos].indent;
+                parse_block(lines, pos, child_indent, src)?
+            } else {
+                Node::Scalar(String::new())
+            }
+        } else if rest == "|" || rest == "|-" {
+            Node::Scalar(block_scalar(lines, pos, indent, src))
+        } else {
+            parse_value_inline(&rest)?
+        };
+        entries.push((key, value));
+    }
+    Ok(Node::Map(entries))
+}
+
+/// Collect a literal block scalar: all following lines indented deeper than
+/// the key line, dedented to their common prefix, newlines preserved. The
+/// block is recovered from the *original* source to keep `#` characters and
+/// blank interior lines intact.
+fn block_scalar(lines: &[Line], pos: &mut usize, key_indent: usize, src: &str) -> String {
+    // We need the raw source lines between this logical line and the next
+    // logical line at indent <= key_indent.
+    let start_num = if *pos < lines.len() { lines[*pos].num } else { usize::MAX };
+    // Find end: first logical line with indent <= key_indent at or after *pos.
+    let mut end_logical = *pos;
+    while end_logical < lines.len() && lines[end_logical].indent > key_indent {
+        end_logical += 1;
+    }
+    let end_num = if end_logical < lines.len() { lines[end_logical].num } else { usize::MAX };
+    *pos = end_logical;
+
+    let raw: Vec<&str> = src
+        .lines()
+        .enumerate()
+        .filter(|(i, _)| i + 1 >= start_num && i + 1 < end_num)
+        .map(|(_, l)| l)
+        .collect();
+    // Common indent of non-empty lines.
+    let common = raw
+        .iter()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| l.len() - l.trim_start().len())
+        .min()
+        .unwrap_or(0);
+    let mut out = String::new();
+    for l in raw {
+        if l.trim().is_empty() {
+            out.push('\n');
+        } else {
+            out.push_str(&l[common.min(l.len())..]);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Split `key: value` / `key:`; keys may be quoted.
+fn split_key(text: &str) -> Option<(String, String)> {
+    let mut in_s = false;
+    let mut in_d = false;
+    for (i, c) in text.char_indices() {
+        match c {
+            '\'' if !in_d => in_s = !in_s,
+            '"' if !in_s => in_d = !in_d,
+            ':' if !in_s && !in_d => {
+                let after = &text[i + 1..];
+                if after.is_empty() || after.starts_with(' ') {
+                    let key = unquote(text[..i].trim());
+                    return Some((key, after.trim().to_string()));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn unquote(s: &str) -> String {
+    let s = s.trim();
+    if (s.starts_with('"') && s.ends_with('"') && s.len() >= 2)
+        || (s.starts_with('\'') && s.ends_with('\'') && s.len() >= 2)
+    {
+        s[1..s.len() - 1].to_string()
+    } else {
+        s.to_string()
+    }
+}
+
+/// Inline value: flow sequence `[a, b]` or scalar.
+fn parse_value_inline(s: &str) -> Result<Node, String> {
+    let s = s.trim();
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err(format!("unterminated flow sequence `{s}`"));
+        }
+        let inner = &s[1..s.len() - 1];
+        let items = split_flow(inner)?;
+        return Ok(Node::Seq(items.into_iter().map(|x| Node::Scalar(unquote(&x))).collect()));
+    }
+    Ok(Node::Scalar(unquote(s)))
+}
+
+/// Split a flow sequence body on commas, honoring brackets and quotes.
+fn split_flow(s: &str) -> Result<Vec<String>, String> {
+    let mut items = Vec::new();
+    let mut depth = 0i32;
+    let mut in_s = false;
+    let mut in_d = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '\'' if !in_d => {
+                in_s = !in_s;
+                cur.push(c);
+            }
+            '"' if !in_s => {
+                in_d = !in_d;
+                cur.push(c);
+            }
+            '[' | '(' if !in_s && !in_d => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' | ')' if !in_s && !in_d => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if depth == 0 && !in_s && !in_d => {
+                items.push(cur.trim().to_string());
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if depth != 0 || in_s || in_d {
+        return Err(format!("unbalanced flow sequence `{s}`"));
+    }
+    if !cur.trim().is_empty() {
+        items.push(cur.trim().to_string());
+    }
+    Ok(items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_map() {
+        let n = parse("a: 1\nb: hello\n").unwrap();
+        assert_eq!(n.get("a").unwrap().as_str(), Some("1"));
+        assert_eq!(n.get("b").unwrap().as_str(), Some("hello"));
+    }
+
+    #[test]
+    fn nested_map() {
+        let n = parse("outer:\n  inner:\n    x: 3\n  y: 4\nz: 5\n").unwrap();
+        let outer = n.get("outer").unwrap();
+        assert_eq!(outer.get("inner").unwrap().get("x").unwrap().as_str(), Some("3"));
+        assert_eq!(outer.get("y").unwrap().as_str(), Some("4"));
+        assert_eq!(n.get("z").unwrap().as_str(), Some("5"));
+    }
+
+    #[test]
+    fn block_scalar_preserves_lines() {
+        let src = "inputs: |\n  n : q?[j?-1][i?]\n  e : q?[j?][i?+1]\nnext: 1\n";
+        let n = parse(src).unwrap();
+        let block = n.get("inputs").unwrap().as_str().unwrap();
+        assert_eq!(block, "n : q?[j?-1][i?]\ne : q?[j?][i?+1]\n");
+        assert_eq!(n.get("next").unwrap().as_str(), Some("1"));
+    }
+
+    #[test]
+    fn flow_seq() {
+        let n = parse("order: [k, j, i]\n").unwrap();
+        let seq = n.get("order").unwrap().as_seq().unwrap();
+        let vals: Vec<_> = seq.iter().map(|x| x.as_str().unwrap()).collect();
+        assert_eq!(vals, vec!["k", "j", "i"]);
+    }
+
+    #[test]
+    fn block_seq() {
+        let n = parse("items:\n  - one\n  - two\n").unwrap();
+        let seq = n.get("items").unwrap().as_seq().unwrap();
+        assert_eq!(seq.len(), 2);
+        assert_eq!(seq[0].as_str(), Some("one"));
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let n = parse("# header\na: 1 # trailing\nb: 2\n").unwrap();
+        assert_eq!(n.get("a").unwrap().as_str(), Some("1"));
+    }
+
+    #[test]
+    fn comment_inside_block_scalar_kept() {
+        let src = "body: |\n  x # not a comment? actually stripped by line pass\nz: 1\n";
+        // Block scalars are recovered from raw source, so `#` survives.
+        let n = parse(src).unwrap();
+        assert!(n.get("body").unwrap().as_str().unwrap().contains('#'));
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a: 1\na: 2\n").is_err());
+    }
+
+    #[test]
+    fn laplace_deck_shape() {
+        let src = r#"
+kernels:
+  laplace:
+    declaration: laplace5(float n, float e, float s, float w, float c, float &o);
+    inputs: |
+      n : q?[j?-1][i?]
+      e : q?[j?][i?+1]
+    outputs: |
+      o : laplace(q?[j?][i?])
+globals:
+  inputs: |
+    float g_cell[j?][i?] => cell[j?][i?]
+  outputs: |
+    laplace(cell[j][i]) => float g_cell[j][i]
+"#;
+        let n = parse(src).unwrap();
+        let k = n.get("kernels").unwrap().get("laplace").unwrap();
+        assert!(k.get("declaration").unwrap().as_str().unwrap().starts_with("laplace5"));
+        assert!(k.get("inputs").unwrap().as_str().unwrap().contains("q?[j?-1][i?]"));
+        assert!(n.get("globals").unwrap().get("outputs").is_some());
+    }
+
+    #[test]
+    fn empty_doc() {
+        assert_eq!(parse("").unwrap(), Node::Map(vec![]));
+        assert_eq!(parse("\n\n# only comments\n").unwrap(), Node::Map(vec![]));
+    }
+
+    #[test]
+    fn quoted_values() {
+        let n = parse("a: \"x: y\"\n").unwrap();
+        assert_eq!(n.get("a").unwrap().as_str(), Some("x: y"));
+    }
+}

@@ -1,0 +1,125 @@
+//! Cross-module integration tests: the coordinator serving a mixed trace
+//! (all engines), generated-code backends on every built-in app, and the
+//! schedule/DOT inspection surfaces the CLI exposes.
+
+use hfav::apps::{compile_variant, Variant};
+use hfav::coordinator::{deck_of, parse_trace_line, Coordinator, Engine, Job};
+
+#[test]
+fn serve_sample_trace_exec_and_native() {
+    // The repo's sample trace, minus PJRT (artifacts may not be built in
+    // every test environment) and shrunk for test time.
+    let trace = "\
+laplace, hfav, native, 96, 2
+laplace, autovec, exec, 48, 1
+normalize, hfav, native, 96, 2
+cosmo, hfav, exec, 24, 1
+hydro2d, hfav, native, 24, 2
+";
+    let jobs: Vec<Job> = trace
+        .lines()
+        .enumerate()
+        .map(|(i, l)| parse_trace_line(i as u64, l).unwrap())
+        .collect();
+    let c = Coordinator::start(3, None);
+    let results = c.run_batch(jobs);
+    for r in &results {
+        assert!(r.ok, "job {}: {}", r.id, r.detail);
+        assert!(r.checksum.is_finite());
+    }
+    let summary = c.metrics.summary();
+    assert!(summary.contains("completed=5"), "{summary}");
+    c.shutdown();
+}
+
+#[test]
+fn pjrt_jobs_through_coordinator() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let c = Coordinator::start(1, Some(dir));
+    let r = c
+        .submit(Job {
+            id: 0,
+            app: "laplace".into(),
+            variant: Variant::Hfav,
+            engine: Engine::Pjrt,
+            size: 512,
+            steps: 1,
+        })
+        .recv()
+        .unwrap();
+    assert!(r.ok, "{}", r.detail);
+    c.shutdown();
+}
+
+#[test]
+fn all_backends_emit_for_all_apps() {
+    for app in ["laplace", "normalize", "cosmo", "hydro2d"] {
+        let deck = deck_of(app).unwrap();
+        for variant in [Variant::Hfav, Variant::Autovec] {
+            let prog = compile_variant(deck, variant).unwrap();
+            let c = hfav::codegen::c99::emit(&prog).unwrap();
+            assert!(c.contains("hfav_run"), "{app} {variant:?}");
+            let r = hfav::codegen::rs::emit(&prog).unwrap();
+            assert!(r.contains("pub fn hfav_run"), "{app} {variant:?}");
+            let d = hfav::codegen::dot::dataflow(&prog.df);
+            assert!(d.starts_with("digraph"), "{app}");
+            let i = hfav::codegen::dot::inest(&prog.df, &prog.fd);
+            assert!(i.contains("cluster_0"), "{app}");
+            assert!(!prog.schedule_text().is_empty());
+        }
+    }
+}
+
+#[test]
+fn generated_c_for_all_apps_compiles() {
+    // Every built-in deck's generated C must compile under cc -O3.
+    for app in ["laplace", "normalize", "cosmo", "hydro2d"] {
+        let deck = deck_of(app).unwrap();
+        let prog = compile_variant(deck, Variant::Hfav).unwrap();
+        let m = hfav::codegen::native::build(&prog, &Default::default())
+            .unwrap_or_else(|e| panic!("{app}: {e}"));
+        assert!(!m.externals.is_empty());
+    }
+}
+
+#[test]
+fn schedule_shows_hydro_pipeline_shift() {
+    // The fused hydro nest must run `trace` one i-iteration ahead of the
+    // interface kernels (software pipelining, paper §3.3).
+    let prog = compile_variant(deck_of("hydro2d").unwrap(), Variant::Hfav).unwrap();
+    assert_eq!(prog.fd.nests.len(), 1);
+    let nest = &prog.fd.nests[0];
+    let shift_of = |name: &str| {
+        let cs = prog.df.callsites.iter().find(|c| c.name == name).unwrap();
+        let m = nest.member(cs.id).unwrap();
+        *m.shifts.last().unwrap()
+    };
+    assert!(shift_of("trace") >= 1, "trace shift {}", shift_of("trace"));
+    assert!(shift_of("slope") >= shift_of("trace"));
+    assert!(shift_of("constoprim") > shift_of("slope") || shift_of("constoprim") >= 2);
+    assert_eq!(shift_of("update_cons_vars"), 0);
+}
+
+#[test]
+fn footprint_accounting_matches_storage_sum() {
+    use std::collections::BTreeMap;
+    let prog = compile_variant(deck_of("cosmo").unwrap(), Variant::Hfav).unwrap();
+    let mut ext = BTreeMap::new();
+    ext.insert("Nk".to_string(), 4i64);
+    ext.insert("Nj".to_string(), 64i64);
+    ext.insert("Ni".to_string(), 64i64);
+    let total = prog.footprint_words(&ext).unwrap();
+    let sum: i64 = prog
+        .sp
+        .storages
+        .iter()
+        .filter(|s| s.external.is_none())
+        .map(|s| hfav::analysis::storage_words(s, &prog.df, &ext).unwrap())
+        .sum();
+    assert_eq!(total, sum);
+    assert!(total > 0);
+}

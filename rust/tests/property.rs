@@ -1,0 +1,301 @@
+//! Property-based tests over randomly generated stencil programs.
+//!
+//! The central invariant of the whole system: for ANY valid deck, the
+//! fully fused + contracted + pipelined schedule computes exactly what
+//! the unfused, fully materialized schedule computes — in both execution
+//! modes, and through the compiled-C backend.
+//!
+//! (No proptest crate in the offline environment: a small deterministic
+//! xorshift generator drives the cases; failures print the generated deck
+//! for replay.)
+
+use hfav::apps::{compile_variant, max_err, Variant};
+use hfav::exec::{self, registry::Registry, ExecOptions, Mode};
+use std::collections::BTreeMap;
+
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15).max(1))
+    }
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 >> 12;
+        self.0 ^= self.0 << 25;
+        self.0 ^= self.0 >> 27;
+        self.0.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+    fn offset(&mut self, max_abs: i64) -> i64 {
+        (self.below((2 * max_abs + 1) as u64) as i64) - max_abs
+    }
+    fn f64s(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| (self.next() >> 11) as f64 / (1u64 << 53) as f64).collect()
+    }
+}
+
+fn off_str(var: &str, off: i64) -> String {
+    match off.cmp(&0) {
+        std::cmp::Ordering::Equal => format!("{var}?"),
+        std::cmp::Ordering::Greater => format!("{var}?+{off}"),
+        std::cmp::Ordering::Less => format!("{var}?{off}"),
+    }
+}
+
+/// Generate a random chain-of-stencils deck over `ndims` dims with
+/// `nstages` kernels, each reading the previous stage at 1–3 random
+/// offsets. Returns (deck text, per-stage offsets) and registers matching
+/// kernels (weighted sums, deterministic from the structure).
+fn gen_chain_deck(rng: &mut Rng, ndims: usize, nstages: usize) -> (String, Registry) {
+    let dims: Vec<&str> = match ndims {
+        1 => vec!["i"],
+        _ => vec!["j", "i"],
+    };
+    let mut deck = String::new();
+    deck.push_str("name: prop\niteration:\n  order: [");
+    deck.push_str(&dims.join(", "));
+    deck.push_str("]\n  domains:\n");
+    for d in &dims {
+        // interior domain with room for offsets
+        deck.push_str(&format!("    {d}: [3, N{d}-3]\n"));
+    }
+    deck.push_str("kernels:\n");
+    let mut reg = Registry::new();
+    for s in 0..nstages {
+        let prev = if s == 0 { "u".to_string() } else { format!("t{}", s - 1) };
+        let prev_term = if s == 0 {
+            |subs: &str| format!("u[{subs}")
+        } else {
+            |subs: &str| format!("{subs}")
+        };
+        let _ = prev_term;
+        let nreads = 1 + rng.below(3) as usize;
+        let mut inputs = String::new();
+        let mut offsets: Vec<Vec<i64>> = Vec::new();
+        for r in 0..nreads {
+            let offs: Vec<i64> = dims.iter().map(|_| rng.offset(1)).collect();
+            let subs: Vec<String> =
+                dims.iter().zip(&offs).map(|(d, o)| format!("[{}]", off_str(d, *o))).collect();
+            let term = if s == 0 {
+                format!("u?{}", subs.join(""))
+            } else {
+                format!("t{}(u{})", s - 1, subs.join(""))
+            };
+            inputs.push_str(&format!("      x{r} : {term}\n"));
+            offsets.push(offs);
+        }
+        let _ = prev;
+        let params: Vec<String> = (0..nreads).map(|r| format!("double x{r}")).collect();
+        let out_subs: Vec<String> = dims.iter().map(|d| format!("[{d}?]")).collect();
+        let out_base = if s == 0 { "u?" } else { "u" };
+        deck.push_str(&format!(
+            "  k{s}:\n    declaration: k{s}({}, double &y);\n    inputs: |\n{inputs}    outputs: |\n      y : t{s}({out_base}{})\n",
+            params.join(", "),
+            out_subs.join(""),
+        ));
+        // body: y = 1 + sum (r+1)*x_r  (also usable by the C backend)
+        let body: Vec<String> =
+            (0..nreads).map(|r| format!("{}.0*x{r}", r + 1)).collect();
+        deck.push_str(&format!("    body: \"y = 1.0 + {};\"\n", body.join(" + ")));
+        let n = nreads;
+        reg.register(&format!("k{s}"), move |i: &[f64], o: &mut [f64]| {
+            let mut acc = 1.0;
+            for r in 0..n {
+                acc += (r + 1) as f64 * i[r];
+            }
+            o[0] = acc;
+        });
+    }
+    deck.push_str("globals:\n  inputs: |\n    double g_u");
+    for d in &dims {
+        deck.push_str(&format!("[{d}?]"));
+    }
+    deck.push_str(" => u");
+    for d in &dims {
+        deck.push_str(&format!("[{d}?]"));
+    }
+    deck.push_str("\n  outputs: |\n    ");
+    deck.push_str(&format!("t{}(u", nstages - 1));
+    for d in &dims {
+        deck.push_str(&format!("[{d}]"));
+    }
+    deck.push_str(") => double g_o");
+    for d in &dims {
+        deck.push_str(&format!("[{d}]"));
+    }
+    deck.push('\n');
+    (deck, reg)
+}
+
+fn extents_for(ndims: usize, n: i64) -> BTreeMap<String, i64> {
+    let mut m = BTreeMap::new();
+    m.insert("Ni".to_string(), n);
+    if ndims > 1 {
+        m.insert("Nj".to_string(), n - 3);
+    }
+    m
+}
+
+/// The invariant, for one generated deck.
+fn check_deck(seed: u64, ndims: usize, nstages: usize) {
+    let mut rng = Rng::new(seed);
+    let (deck, reg) = gen_chain_deck(&mut rng, ndims, nstages);
+    let fused = match compile_variant(&deck, Variant::Hfav) {
+        Ok(p) => p,
+        Err(e) => panic!("seed {seed}: compile failed: {e}\n--- deck ---\n{deck}"),
+    };
+    let naive = compile_variant(&deck, Variant::Autovec).unwrap();
+    let ext = extents_for(ndims, 24);
+    let mut inputs = BTreeMap::new();
+    for (name, _, _) in fused.external_inputs() {
+        let len = exec::external_len(&fused, &name, &ext).unwrap();
+        inputs.insert(name, rng.f64s(len));
+    }
+    let base = exec::run(&naive, &reg, &ext, &inputs, ExecOptions { mode: Mode::Peeled })
+        .unwrap_or_else(|e| panic!("seed {seed}: naive run failed: {e}\n{deck}"));
+    for mode in [Mode::Peeled, Mode::Guarded] {
+        let got = exec::run(&fused, &reg, &ext, &inputs, ExecOptions { mode })
+            .unwrap_or_else(|e| panic!("seed {seed} {mode:?}: fused run failed: {e}\n{deck}"));
+        for (k, v) in &base {
+            let err = max_err(v, &got[k]);
+            assert!(
+                err < 1e-12,
+                "seed {seed} {mode:?}: fused != naive ({err:.2e})\n--- deck ---\n{deck}\nschedule:\n{}",
+                fused.schedule_text()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_fused_equals_naive_1d() {
+    for seed in 0..60 {
+        check_deck(seed, 1, 1 + (seed % 4) as usize);
+    }
+}
+
+#[test]
+fn prop_fused_equals_naive_2d() {
+    for seed in 100..140 {
+        check_deck(seed, 2, 1 + (seed % 3) as usize);
+    }
+}
+
+#[test]
+fn prop_native_c_matches_executor() {
+    // Smaller count: each case invokes the system C compiler.
+    for seed in 300..308 {
+        let mut rng = Rng::new(seed);
+        let ndims = 1 + (seed % 2) as usize;
+        let (deck, reg) = gen_chain_deck(&mut rng, ndims, 2 + (seed % 2) as usize);
+        let prog = compile_variant(&deck, Variant::Hfav).unwrap();
+        let ext = extents_for(ndims, 20);
+        let mut inputs = BTreeMap::new();
+        for (name, _, _) in prog.external_inputs() {
+            let len = exec::external_len(&prog, &name, &ext).unwrap();
+            inputs.insert(name, rng.f64s(len));
+        }
+        let want = exec::run(&prog, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+        let module = hfav::codegen::native::build(&prog, &Default::default())
+            .unwrap_or_else(|e| panic!("seed {seed}: cc failed: {e}"));
+        let mut arrays = inputs.clone();
+        for name in &module.externals {
+            if !arrays.contains_key(name) {
+                let len = exec::external_len(&prog, name, &ext).unwrap();
+                arrays.insert(name.clone(), vec![0.0; len]);
+            }
+        }
+        module.run(&ext, &mut arrays).unwrap();
+        for (name, w) in &want {
+            let err = max_err(w, &arrays[name]);
+            assert!(err < 1e-12, "seed {seed}: C backend diverged ({err:.2e})\n{deck}");
+        }
+    }
+}
+
+#[test]
+fn prop_vector_expansion_preserves_semantics() {
+    // Vector-expanded rolling buffers (Fig. 9c) must not change results.
+    for seed in 400..412 {
+        let mut rng = Rng::new(seed);
+        let (deck, reg) = gen_chain_deck(&mut rng, 1, 3);
+        let deck_vec = format!("{deck}vector_len: 8\n");
+        let a = compile_variant(&deck, Variant::Hfav).unwrap();
+        let b = compile_variant(&deck_vec, Variant::Hfav).unwrap();
+        let ext = extents_for(1, 32);
+        let mut inputs = BTreeMap::new();
+        for (name, _, _) in a.external_inputs() {
+            let len = exec::external_len(&a, &name, &ext).unwrap();
+            inputs.insert(name, rng.f64s(len));
+        }
+        let ra = exec::run(&a, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+        let rb = exec::run(&b, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+        for (k, v) in &ra {
+            assert!(max_err(v, &rb[k]) < 1e-14, "seed {seed}: vector expansion changed results");
+        }
+    }
+}
+
+#[test]
+fn prop_rolled_inputs_preserve_semantics() {
+    // Rolling terminal inputs through buffers (in/out chaining machinery)
+    // must not change results.
+    use hfav::plan::{compile_src, CompileOptions};
+    for seed in 500..512 {
+        let mut rng = Rng::new(seed);
+        let ndims = 1 + (seed % 2) as usize;
+        let (deck, reg) = gen_chain_deck(&mut rng, ndims, 2);
+        let plain = compile_variant(&deck, Variant::Hfav).unwrap();
+        let rolled = compile_src(
+            &deck,
+            CompileOptions { roll_all_inputs: true, ..Default::default() },
+        )
+        .unwrap();
+        let ext = extents_for(ndims, 22);
+        let mut inputs = BTreeMap::new();
+        for (name, _, _) in plain.external_inputs() {
+            let len = exec::external_len(&plain, &name, &ext).unwrap();
+            inputs.insert(name, rng.f64s(len));
+        }
+        let ra = exec::run(&plain, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+        let rb = exec::run(&rolled, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+        for (k, v) in &ra {
+            assert!(max_err(v, &rb[k]) < 1e-14, "seed {seed}: input rolling changed results");
+        }
+    }
+}
+
+#[test]
+fn yaml_parser_never_panics_on_mutations() {
+    // Fuzz-ish robustness: random line mutations of a valid deck must
+    // produce Ok or Err, never a panic.
+    let base = hfav::apps::laplace::DECK;
+    let mut rng = Rng::new(7777);
+    for _ in 0..300 {
+        let lines: Vec<&str> = base.lines().collect();
+        let mut mutated: Vec<String> = lines.iter().map(|s| s.to_string()).collect();
+        match rng.below(4) {
+            0 => {
+                let k = rng.below(mutated.len() as u64) as usize;
+                mutated.remove(k);
+            }
+            1 => {
+                let k = rng.below(mutated.len() as u64) as usize;
+                mutated[k] = format!("  {}", mutated[k]);
+            }
+            2 => {
+                let k = rng.below(mutated.len() as u64) as usize;
+                let len = mutated[k].len();
+                mutated[k].insert(len / 2, ':');
+            }
+            _ => {
+                let k = rng.below(mutated.len() as u64) as usize;
+                mutated[k] = mutated[k].replace('?', "");
+            }
+        }
+        let src = mutated.join("\n");
+        let _ = hfav::plan::compile_src(&src, Default::default());
+    }
+}
