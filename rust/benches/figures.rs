@@ -14,6 +14,8 @@ fn main() {
     println!();
     hfav::bench::hydro2d(&[64, 128, 256], 5);
     println!();
+    hfav::bench::serving(4, 8);
+    println!();
     match hfav::bench::pjrt(&hfav::runtime::default_artifacts_dir()) {
         Ok(_) => {}
         Err(e) => println!("PJRT bench unavailable: {e}"),

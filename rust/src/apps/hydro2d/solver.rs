@@ -13,6 +13,7 @@ use super::{flux_from_gdnv, limited_slope, riemann_solve, trace_cell, GAMMA};
 use crate::exec::{self, registry::Registry, ExecOptions};
 use crate::plan::Program;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Number of ghost cells per side in the sweep dimension.
 pub const NG: usize = 2;
@@ -385,16 +386,24 @@ impl Sweeper for HandvecSweeper {
 // HFAV sweepers: interpreter executor and compiled-C module.
 // ---------------------------------------------------------------------------
 
-/// HFAV schedule run by the interpreter executor.
+/// HFAV schedule run by the interpreter executor. Holds the plan behind
+/// an `Arc` so cached plans (coordinator plan cache) are shared, not
+/// cloned; a reusable [`exec::Workspace`] recycles buffers across sweeps.
 pub struct ExecSweeper {
-    pub prog: Program,
+    pub prog: Arc<Program>,
     pub reg: Registry,
     pub opts: ExecOptions,
+    pub ws: exec::Workspace,
 }
 
 impl ExecSweeper {
-    pub fn new(prog: Program) -> Self {
-        ExecSweeper { prog, reg: super::registry(), opts: ExecOptions::default() }
+    pub fn new(prog: impl Into<Arc<Program>>) -> Self {
+        ExecSweeper {
+            prog: prog.into(),
+            reg: super::registry(),
+            opts: ExecOptions::default(),
+            ws: exec::Workspace::new(),
+        }
     }
 }
 
@@ -434,7 +443,8 @@ impl Sweeper for ExecSweeper {
     ) -> Result<[Vec<f64>; 4], String> {
         let inputs = sweep_inputs(rho, rhou, rhov, e, dtdx);
         let ext = sweep_extents(rows, n);
-        let mut out = exec::run(&self.prog, &self.reg, &ext, &inputs, self.opts)?;
+        let mut out =
+            exec::run_with(&self.prog, &self.reg, &ext, &inputs, self.opts, &mut self.ws)?;
         Ok([
             out.remove("g_nrho").ok_or("missing g_nrho")?,
             out.remove("g_nrhou").ok_or("missing g_nrhou")?,

@@ -15,13 +15,36 @@ use crate::fusion::FusionOptions;
 use crate::plan::{compile_src, CompileOptions, Program};
 
 /// The two program shapes the paper compares everywhere.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Variant {
     /// Fully fused + contracted + pipelined (the HFAV output).
     Hfav,
     /// One loop nest per kernel, all intermediates materialized — the
     /// shape of the original code (paper: "autovec").
     Autovec,
+}
+
+impl Variant {
+    /// Stable label used in traces, CSV output and plan-cache keys.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Variant::Hfav => "hfav",
+            Variant::Autovec => "autovec",
+        }
+    }
+}
+
+/// The [`CompileOptions`] each standard variant compiles under — exposed
+/// so callers (coordinator, plan cache) can fingerprint them.
+pub fn variant_options(v: Variant) -> CompileOptions {
+    match v {
+        Variant::Hfav => CompileOptions::default(),
+        Variant::Autovec => CompileOptions {
+            fusion: FusionOptions { enabled: false },
+            analysis: AnalysisOptions { contraction: false, ..Default::default() },
+            ..Default::default()
+        },
+    }
 }
 
 /// Compile with the "HFAV + Tuning" options (paper §5.3): full fusion,
@@ -39,15 +62,7 @@ pub fn compile_tuned(src: &str) -> Result<Program, String> {
 
 /// Compile a deck source in one of the two standard shapes.
 pub fn compile_variant(src: &str, v: Variant) -> Result<Program, String> {
-    let opts = match v {
-        Variant::Hfav => CompileOptions::default(),
-        Variant::Autovec => CompileOptions {
-            fusion: FusionOptions { enabled: false },
-            analysis: AnalysisOptions { contraction: false, ..Default::default() },
-            ..Default::default()
-        },
-    };
-    compile_src(src, opts)
+    compile_src(src, variant_options(v))
 }
 
 /// Deterministic pseudo-random fill in [0, 1) (xorshift64*).

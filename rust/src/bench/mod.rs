@@ -211,6 +211,56 @@ pub fn footprint() -> Vec<String> {
     lines
 }
 
+/// Serving scenario: a mixed job trace repeated `repeat` times through
+/// the coordinator — the compile-once/run-many amortization claim in
+/// numbers. Reports pipeline-compilation count (== distinct plan keys),
+/// plan-cache hit rate, buffer reuse and end-to-end throughput.
+pub fn serving(workers: usize, repeat: usize) -> Vec<String> {
+    use crate::coordinator::{distinct_plan_keys, repeat_jobs, Coordinator, Engine, Job};
+    let template: Vec<Job> = [
+        ("laplace", Variant::Hfav, Engine::Exec, 64, 1),
+        ("laplace", Variant::Autovec, Engine::Exec, 64, 1),
+        ("normalize", Variant::Hfav, Engine::Exec, 64, 1),
+        ("cosmo", Variant::Hfav, Engine::Exec, 24, 1),
+        ("hydro2d", Variant::Hfav, Engine::Exec, 16, 1),
+    ]
+    .iter()
+    .map(|&(app, variant, engine, size, steps)| Job {
+        id: 0,
+        app: app.to_string(),
+        variant,
+        engine,
+        size,
+        steps,
+    })
+    .collect();
+    let jobs = repeat_jobs(&template, repeat);
+    let n = jobs.len();
+    let distinct = distinct_plan_keys(&jobs);
+    println!("Serving — {n} jobs over {distinct} distinct plan keys, {workers} workers:");
+    let c = Coordinator::start(workers, None);
+    let t0 = Instant::now();
+    let results = c.run_batch(jobs);
+    let wall = t0.elapsed();
+    let failed = results.iter().filter(|r| !r.ok).count();
+    let report = c.report(wall);
+    for line in report.to_string().lines() {
+        println!("  {line}");
+    }
+    if failed > 0 {
+        println!("  WARNING: {failed} jobs failed");
+    }
+    let mut csv = vec!["jobs,distinct_keys,compiles,hit_rate,mcells_per_s".to_string()];
+    csv.push(format!(
+        "{n},{distinct},{},{:.3},{:.3}",
+        report.plans.computes,
+        report.plans.hit_rate(),
+        report.throughput() / 1e6
+    ));
+    c.shutdown();
+    csv
+}
+
 /// P1: PJRT artifacts — fused (Pallas) vs unfused (jnp) on the CPU PJRT
 /// client, loaded and driven from Rust.
 pub fn pjrt(artifacts: &std::path::Path) -> Result<Vec<String>, String> {

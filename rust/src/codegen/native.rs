@@ -5,13 +5,83 @@
 use super::c99;
 use crate::plan::Program;
 use std::collections::BTreeMap;
+use std::ffi::{c_char, c_int, c_void, CString};
 use std::io::Write;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
-/// A compiled, loaded generated-code module.
+// Minimal dlopen binding — no external crates, so the crate builds with
+// a bare toolchain. Linux/glibc only (matches the CI and deploy targets).
+mod dl {
+    use super::{c_char, c_int, c_void};
+
+    pub const RTLD_NOW: c_int = 2;
+
+    #[link(name = "dl")]
+    extern "C" {
+        pub fn dlopen(filename: *const c_char, flag: c_int) -> *mut c_void;
+        pub fn dlsym(handle: *mut c_void, symbol: *const c_char) -> *mut c_void;
+        pub fn dlclose(handle: *mut c_void) -> c_int;
+        pub fn dlerror() -> *mut c_char;
+    }
+}
+
+fn dl_error(context: &str) -> String {
+    let msg = unsafe {
+        let p = dl::dlerror();
+        if p.is_null() {
+            "unknown dl error".to_string()
+        } else {
+            std::ffi::CStr::from_ptr(p).to_string_lossy().into_owned()
+        }
+    };
+    format!("{context}: {msg}")
+}
+
+/// An open shared library. Closed on drop; the raw handle is thread-safe
+/// to use (glibc dlopen handles are), hence the unsafe Send/Sync impls.
+struct Library {
+    handle: *mut c_void,
+}
+
+unsafe impl Send for Library {}
+unsafe impl Sync for Library {}
+
+impl Library {
+    fn open(path: &Path) -> Result<Library, String> {
+        use std::os::unix::ffi::OsStrExt;
+        let c = CString::new(path.as_os_str().as_bytes())
+            .map_err(|e| format!("bad library path: {e}"))?;
+        unsafe { dl::dlerror() }; // clear any stale error
+        let handle = unsafe { dl::dlopen(c.as_ptr(), dl::RTLD_NOW) };
+        if handle.is_null() {
+            return Err(dl_error(&format!("dlopen {}", path.display())));
+        }
+        Ok(Library { handle })
+    }
+
+    fn sym(&self, name: &str) -> Result<*mut c_void, String> {
+        let c = CString::new(name).map_err(|e| format!("bad symbol `{name}`: {e}"))?;
+        unsafe { dl::dlerror() };
+        let p = unsafe { dl::dlsym(self.handle, c.as_ptr()) };
+        if p.is_null() {
+            return Err(dl_error(&format!("dlsym {name}")));
+        }
+        Ok(p)
+    }
+}
+
+impl Drop for Library {
+    fn drop(&mut self) {
+        unsafe { dl::dlclose(self.handle) };
+    }
+}
+
+/// A compiled, loaded generated-code module. `run` is reentrant (the
+/// generated C has no global state), so one module may be shared across
+/// worker threads behind an `Arc`.
 pub struct NativeModule {
     /// Keep the library alive for the lifetime of `run_fn`.
-    _lib: libloading::Library,
+    _lib: Library,
     run_fn: unsafe extern "C" fn(*const i64, *const *mut f64),
     pub extents: Vec<String>,
     pub externals: Vec<String>,
@@ -51,7 +121,11 @@ pub fn build(prog: &Program, opts: &CcOptions) -> Result<NativeModule, String> {
     ));
     std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
     // Unique name per emitted source to avoid stale dlopen caching.
-    let digest = fnv(&c_source);
+    let digest = {
+        let mut h = crate::plan::cache::Fnv64::new();
+        h.write(c_source.as_bytes());
+        h.finish()
+    };
     let c_path = dir.join(format!("gen_{digest:016x}.c"));
     let so_path = dir.join(format!("gen_{digest:016x}.so"));
     {
@@ -74,11 +148,12 @@ pub fn build(prog: &Program, opts: &CcOptions) -> Result<NativeModule, String> {
             c_source
         ));
     }
-    let lib = unsafe { libloading::Library::new(&so_path) }.map_err(|e| e.to_string())?;
+    let lib = Library::open(&so_path)?;
+    let sym = lib.sym("hfav_run")?;
+    // SAFETY: the generated source always defines
+    // `void hfav_run(const int64_t*, double* const*)`.
     let run_fn = unsafe {
-        let sym: libloading::Symbol<unsafe extern "C" fn(*const i64, *const *mut f64)> =
-            lib.get(b"hfav_run").map_err(|e| e.to_string())?;
-        *sym
+        std::mem::transmute::<*mut c_void, unsafe extern "C" fn(*const i64, *const *mut f64)>(sym)
     };
     Ok(NativeModule {
         _lib: lib,
@@ -117,15 +192,6 @@ impl NativeModule {
         unsafe { (self.run_fn)(ext.as_ptr(), ptrs.as_ptr()) };
         Ok(())
     }
-}
-
-fn fnv(s: &str) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for b in s.as_bytes() {
-        h ^= *b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
 }
 
 #[cfg(test)]

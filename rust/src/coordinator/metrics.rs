@@ -1,0 +1,158 @@
+//! Serving metrics: per-job latency/throughput aggregation plus the
+//! cache counters (plan compiles, native builds, executor buffer reuse)
+//! that quantify the compile-once/run-many amortization claim.
+
+use super::JobResult;
+use crate::plan::cache::CacheStatsSnapshot;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Aggregated job metrics, updated by every worker.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub latencies_us: Mutex<Vec<u64>>,
+    pub total_cells: AtomicU64,
+    /// Executor buffers recycled from worker workspaces.
+    pub buffers_reused: AtomicU64,
+    /// Executor buffers freshly allocated by worker workspaces.
+    pub buffers_allocated: AtomicU64,
+}
+
+impl Metrics {
+    pub fn record(&self, r: &JobResult, cells: u64) {
+        if r.ok {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+            self.total_cells.fetch_add(cells, Ordering::Relaxed);
+        } else {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        self.latencies_us.lock().unwrap().push(r.latency.as_micros() as u64);
+    }
+
+    pub fn percentile(&self, p: f64) -> Duration {
+        let mut v = self.latencies_us.lock().unwrap().clone();
+        if v.is_empty() {
+            return Duration::ZERO;
+        }
+        v.sort_unstable();
+        let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
+        Duration::from_micros(v[idx])
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "completed={} failed={} p50={:?} p95={:?} total_cells={}",
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.percentile(0.5),
+            self.percentile(0.95),
+            self.total_cells.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// One coherent view of a serve run: job counts, latency percentiles,
+/// throughput over the measured wall time, and the cache counters.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeReport {
+    pub completed: u64,
+    pub failed: u64,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub total_cells: u64,
+    pub wall: Duration,
+    /// Plan cache: `computes` is the number of pipeline compilations.
+    pub plans: CacheStatsSnapshot,
+    /// Native-module cache: `computes` is the number of cc invocations.
+    pub natives: CacheStatsSnapshot,
+    pub buffers_reused: u64,
+    pub buffers_allocated: u64,
+}
+
+impl ServeReport {
+    /// Cell updates per second over the wall time.
+    pub fn throughput(&self) -> f64 {
+        if self.wall.is_zero() {
+            0.0
+        } else {
+            self.total_cells as f64 / self.wall.as_secs_f64()
+        }
+    }
+}
+
+impl std::fmt::Display for ServeReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "jobs: completed={} failed={} p50={:?} p95={:?}",
+            self.completed, self.failed, self.p50, self.p95
+        )?;
+        writeln!(
+            f,
+            "throughput: {:.1} Mcells/s over wall={:?}",
+            self.throughput() / 1e6,
+            self.wall
+        )?;
+        writeln!(f, "plan cache:   {}", self.plans)?;
+        writeln!(f, "native cache: {}", self.natives)?;
+        write!(
+            f,
+            "exec buffers: reused={} allocated={}",
+            self.buffers_reused, self.buffers_allocated
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(ok: bool, us: u64) -> JobResult {
+        JobResult {
+            id: 0,
+            ok,
+            detail: String::new(),
+            latency: Duration::from_micros(us),
+            cups: 0.0,
+            checksum: 0.0,
+        }
+    }
+
+    #[test]
+    fn record_and_percentiles() {
+        let m = Metrics::default();
+        for us in [100, 200, 300, 400, 1000] {
+            m.record(&result(true, us), 10);
+        }
+        m.record(&result(false, 50), 10);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 5);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.total_cells.load(Ordering::Relaxed), 50);
+        assert!(m.percentile(0.5) >= Duration::from_micros(200));
+        assert!(m.percentile(1.0) == Duration::from_micros(1000));
+        assert!(m.summary().contains("completed=5"));
+    }
+
+    #[test]
+    fn report_throughput() {
+        let r = ServeReport {
+            completed: 2,
+            failed: 0,
+            p50: Duration::from_millis(1),
+            p95: Duration::from_millis(2),
+            total_cells: 1_000_000,
+            wall: Duration::from_secs(1),
+            plans: CacheStatsSnapshot::default(),
+            natives: CacheStatsSnapshot::default(),
+            buffers_reused: 3,
+            buffers_allocated: 4,
+        };
+        assert!((r.throughput() - 1e6).abs() < 1e-6);
+        let text = format!("{r}");
+        assert!(text.contains("plan cache"), "{text}");
+        assert!(text.contains("reused=3"), "{text}");
+    }
+}

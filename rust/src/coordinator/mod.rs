@@ -1,21 +1,34 @@
-//! Job coordinator: a leader/worker runtime that dispatches grid-update
-//! jobs to the available engines (interpreter executor, compiled-C native
-//! modules, PJRT executables) with per-worker executable caches, dynamic
-//! batching of same-kind jobs, and latency/throughput metrics.
+//! Job coordinator: the serving substrate. A leader/worker runtime that
+//! dispatches grid-update jobs to the available engines (interpreter
+//! executor, compiled-C native modules, PJRT executables) on top of a
+//! **shared compiled-plan cache** ([`crate::plan::cache`]): each distinct
+//! `(app, variant, options)` key is compiled exactly once for the whole
+//! pool, and the resulting `Arc<Program>` (and `Arc<NativeModule>`) is
+//! shared across workers. `run_batch` groups same-key jobs so consecutive
+//! runs on a worker reuse its executor buffer workspace, and
+//! [`metrics`] aggregates latency, throughput and cache counters.
 //!
 //! The paper's contribution is the *generator*; the coordinator is the
-//! thin L3 driver that makes the generated artifacts deployable: load
-//! once, serve many requests, never touch Python.
+//! driver that makes the generated artifacts deployable: compile once,
+//! serve many requests, never touch Python.
+
+pub mod metrics;
+
+pub use self::metrics::{Metrics, ServeReport};
 
 use crate::apps::{self, Variant};
+use crate::codegen::native::NativeModule;
+use crate::exec;
+use crate::plan::cache::{OnceMap, PlanCache, PlanKey};
+use crate::plan::Program;
 use crate::runtime::Runtime;
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Which engine executes a job.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Engine {
     /// Interpreter executor over the HFAV schedule.
     Exec,
@@ -51,6 +64,13 @@ pub struct Job {
     pub steps: usize,
 }
 
+impl Job {
+    /// The plan-cache key this job compiles under.
+    pub fn plan_key(&self) -> PlanKey {
+        plan_key(&self.app, self.variant)
+    }
+}
+
 /// Result of one job.
 #[derive(Debug, Clone)]
 pub struct JobResult {
@@ -63,92 +83,98 @@ pub struct JobResult {
     pub checksum: f64,
 }
 
-/// Aggregated metrics.
-#[derive(Debug, Default)]
-pub struct Metrics {
-    pub completed: AtomicU64,
-    pub failed: AtomicU64,
-    pub latencies_us: Mutex<Vec<u64>>,
-    pub total_cells: AtomicU64,
+/// Key for the plan cache: app + variant label + options fingerprint.
+fn plan_key(app: &str, variant: Variant) -> PlanKey {
+    PlanKey::new(app, variant.label(), &apps::variant_options(variant))
 }
 
-impl Metrics {
-    pub fn record(&self, r: &JobResult, cells: u64) {
-        if r.ok {
-            self.completed.fetch_add(1, Ordering::Relaxed);
-            self.total_cells.fetch_add(cells, Ordering::Relaxed);
-        } else {
-            self.failed.fetch_add(1, Ordering::Relaxed);
-        }
-        self.latencies_us.lock().unwrap().push(r.latency.as_micros() as u64);
-    }
+/// Depth of the cosmo 3-D grid served by the coordinator (the `Nk`
+/// extent `Worker::run_stencil` passes and `cells_per_step` accounts).
+const COSMO_NK: i64 = 4;
 
-    pub fn percentile(&self, p: f64) -> Duration {
-        let mut v = self.latencies_us.lock().unwrap().clone();
-        if v.is_empty() {
-            return Duration::ZERO;
-        }
-        v.sort_unstable();
-        let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
-        Duration::from_micros(v[idx])
-    }
+/// Grid cells one application of `job` updates. cosmo runs a 3-D grid
+/// ([`COSMO_NK`] planes); the others are 2-D.
+fn cells_per_step(job: &Job) -> u64 {
+    let planes = if job.app == "cosmo" { COSMO_NK as u64 } else { 1 };
+    planes * (job.size * job.size) as u64
+}
 
-    pub fn summary(&self) -> String {
-        format!(
-            "completed={} failed={} p50={:?} p95={:?} total_cells={}",
-            self.completed.load(Ordering::Relaxed),
-            self.failed.load(Ordering::Relaxed),
-            self.percentile(0.5),
-            self.percentile(0.95),
-            self.total_cells.load(Ordering::Relaxed),
-        )
-    }
+/// Same-key batching: jobs agreeing on this tuple run back-to-back on one
+/// worker, so its plan lookup is hot and its executor workspace buffers
+/// fit without reallocation.
+type BatchKey = (String, Variant, Engine, usize);
+
+fn batch_key(job: &Job) -> BatchKey {
+    (job.app.clone(), job.variant, job.engine, job.size)
 }
 
 enum Msg {
     Run(Job, mpsc::Sender<JobResult>),
+    RunBatch(Vec<(usize, Job)>, mpsc::Sender<(usize, JobResult)>),
     Stop,
 }
 
-/// The coordinator: owns the worker pool.
+/// The coordinator: owns the worker pool and the shared caches.
 pub struct Coordinator {
     tx: mpsc::Sender<Msg>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    nworkers: usize,
     pub metrics: Arc<Metrics>,
+    /// Shared compiled-plan cache: one compile per distinct key, pool-wide.
+    pub plans: Arc<PlanCache>,
+    /// Shared native-module cache (generated C → cc → dlopen, once).
+    pub natives: Arc<OnceMap<PlanKey, NativeModule>>,
 }
 
 impl Coordinator {
-    /// Start `nworkers` workers. `artifacts_dir` may be None (PJRT jobs
-    /// will then fail gracefully).
+    /// Start `nworkers` workers with a fresh plan cache. `artifacts_dir`
+    /// may be None (PJRT jobs will then fail gracefully).
     pub fn start(nworkers: usize, artifacts_dir: Option<std::path::PathBuf>) -> Coordinator {
+        Coordinator::start_with_cache(nworkers, artifacts_dir, Arc::new(PlanCache::new()))
+    }
+
+    /// Start with an externally shared plan cache (e.g. kept warm across
+    /// coordinator restarts or shared with an embedding process).
+    pub fn start_with_cache(
+        nworkers: usize,
+        artifacts_dir: Option<std::path::PathBuf>,
+        plans: Arc<PlanCache>,
+    ) -> Coordinator {
         let (tx, rx) = mpsc::channel::<Msg>();
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::default());
+        let natives: Arc<OnceMap<PlanKey, NativeModule>> = Arc::new(OnceMap::new());
         let mut workers = Vec::new();
-        for wid in 0..nworkers.max(1) {
+        let nworkers = nworkers.max(1);
+        for wid in 0..nworkers {
             let rx = rx.clone();
-            let metrics = metrics.clone();
             // PJRT clients are not Send: each worker owns its own runtime,
-            // created lazily on the first PJRT job.
+            // created lazily (inside its thread) on the first PJRT job.
             let artifacts = artifacts_dir.clone();
+            let plans = plans.clone();
+            let natives = natives.clone();
+            let metrics = metrics.clone();
             workers.push(std::thread::spawn(move || {
-                let mut worker = Worker::new(wid, artifacts);
+                let mut worker = Worker::new(wid, artifacts, plans, natives, metrics);
                 loop {
                     let msg = { rx.lock().unwrap().recv() };
                     match msg {
                         Ok(Msg::Run(job, reply)) => {
-                            let cells =
-                                (job.size * job.size) as u64 * job.steps.max(1) as u64;
-                            let res = worker.run(&job);
-                            metrics.record(&res, cells);
+                            let res = worker.process(&job);
                             let _ = reply.send(res);
+                        }
+                        Ok(Msg::RunBatch(batch, reply)) => {
+                            for (slot, job) in batch {
+                                let res = worker.process(&job);
+                                let _ = reply.send((slot, res));
+                            }
                         }
                         Ok(Msg::Stop) | Err(_) => break,
                     }
                 }
             }));
         }
-        Coordinator { tx, workers, metrics }
+        Coordinator { tx, workers, nworkers, metrics, plans, natives }
     }
 
     /// Submit a job; returns a receiver for its result.
@@ -158,11 +184,58 @@ impl Coordinator {
         rrx
     }
 
-    /// Submit a batch and wait for all results (dynamic batching: jobs of
-    /// the same kind hit warm per-worker caches).
+    /// Submit a batch and wait for all results (in input order).
+    ///
+    /// Dynamic batching: jobs sharing a [`BatchKey`] are grouped so one
+    /// worker runs them consecutively against its warm workspace; groups
+    /// larger than `len/nworkers` are chunked so a single hot key still
+    /// spreads across the pool. Distinct plans are compiled exactly once
+    /// regardless of grouping (the plan cache is pool-wide).
     pub fn run_batch(&self, jobs: Vec<Job>) -> Vec<JobResult> {
-        let rxs: Vec<_> = jobs.into_iter().map(|j| self.submit(j)).collect();
-        rxs.into_iter().map(|rx| rx.recv().expect("worker died")).collect()
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut groups: BTreeMap<BatchKey, Vec<(usize, Job)>> = BTreeMap::new();
+        for (slot, job) in jobs.into_iter().enumerate() {
+            groups.entry(batch_key(&job)).or_default().push((slot, job));
+        }
+        let (rtx, rrx) = mpsc::channel::<(usize, JobResult)>();
+        for mut group in groups.into_values() {
+            let chunk = group.len().div_ceil(self.nworkers).max(1);
+            while !group.is_empty() {
+                let rest = group.split_off(chunk.min(group.len()));
+                let batch = std::mem::replace(&mut group, rest);
+                self.tx.send(Msg::RunBatch(batch, rtx.clone())).expect("coordinator stopped");
+            }
+        }
+        drop(rtx);
+        let mut out: Vec<Option<JobResult>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (slot, res) = rrx.recv().expect("worker died");
+            out[slot] = Some(res);
+        }
+        out.into_iter().map(|r| r.expect("missing result")).collect()
+    }
+
+    /// Snapshot job metrics + cache counters over a measured wall time.
+    ///
+    /// All counters are cumulative over the coordinator's lifetime, so
+    /// `wall` must cover everything served so far (time the coordinator,
+    /// not the last batch) or the throughput figure will be inflated.
+    pub fn report(&self, wall: Duration) -> ServeReport {
+        ServeReport {
+            completed: self.metrics.completed.load(Ordering::Relaxed),
+            failed: self.metrics.failed.load(Ordering::Relaxed),
+            p50: self.metrics.percentile(0.5),
+            p95: self.metrics.percentile(0.95),
+            total_cells: self.metrics.total_cells.load(Ordering::Relaxed),
+            wall,
+            plans: self.plans.stats(),
+            natives: self.natives.stats(),
+            buffers_reused: self.metrics.buffers_reused.load(Ordering::Relaxed),
+            buffers_allocated: self.metrics.buffers_allocated.load(Ordering::Relaxed),
+        }
     }
 
     pub fn shutdown(mut self) {
@@ -175,54 +248,116 @@ impl Coordinator {
     }
 }
 
-/// Per-worker state: compiled program / native-module caches.
+/// Per-worker state. Plans and native modules live in the pool-shared
+/// caches; the worker owns only its (non-Send) PJRT runtime and its
+/// executor buffer workspace.
 struct Worker {
     #[allow(dead_code)]
     id: usize,
     artifacts: Option<std::path::PathBuf>,
     runtime: Option<Runtime>,
-    progs: BTreeMap<(String, bool), Arc<crate::plan::Program>>,
-    natives: BTreeMap<(String, bool), Arc<crate::codegen::native::NativeModule>>,
+    /// First runtime-creation failure, replayed for later PJRT jobs.
+    runtime_err: Option<String>,
+    plans: Arc<PlanCache>,
+    natives: Arc<OnceMap<PlanKey, NativeModule>>,
+    metrics: Arc<Metrics>,
+    ws: exec::Workspace,
+    /// Cached hydro2d interpreter sweepers (plan Arc + warm workspace),
+    /// one per variant, so batched hydro Exec jobs reuse buffers too.
+    exec_sweepers: BTreeMap<PlanKey, crate::apps::hydro2d::solver::ExecSweeper>,
+    flushed_reused: u64,
+    flushed_allocated: u64,
 }
 
 impl Worker {
-    fn new(id: usize, artifacts: Option<std::path::PathBuf>) -> Worker {
-        Worker { id, artifacts, runtime: None, progs: BTreeMap::new(), natives: BTreeMap::new() }
+    fn new(
+        id: usize,
+        artifacts: Option<std::path::PathBuf>,
+        plans: Arc<PlanCache>,
+        natives: Arc<OnceMap<PlanKey, NativeModule>>,
+        metrics: Arc<Metrics>,
+    ) -> Worker {
+        Worker {
+            id,
+            artifacts,
+            runtime: None,
+            runtime_err: None,
+            plans,
+            natives,
+            metrics,
+            ws: exec::Workspace::new(),
+            exec_sweepers: BTreeMap::new(),
+            flushed_reused: 0,
+            flushed_allocated: 0,
+        }
+    }
+
+    /// Monotonic buffer counters across this worker's workspaces (the
+    /// stencil workspace plus every cached hydro sweeper's).
+    fn ws_totals(&self) -> (u64, u64) {
+        let mut reused = self.ws.reused;
+        let mut allocated = self.ws.allocated;
+        for s in self.exec_sweepers.values() {
+            reused += s.ws.reused;
+            allocated += s.ws.allocated;
+        }
+        (reused, allocated)
     }
 
     /// Lazily create this worker's PJRT runtime (clients are not Send).
+    /// Failures are remembered so a trace full of PJRT jobs fails each one
+    /// cheaply instead of re-reading the manifest per job.
     fn runtime(&mut self) -> Result<&Runtime, String> {
+        if let Some(e) = &self.runtime_err {
+            return Err(e.clone());
+        }
         if self.runtime.is_none() {
-            let dir = self.artifacts.clone().ok_or("no artifacts dir — PJRT unavailable")?;
-            self.runtime = Some(Runtime::cpu(dir).map_err(|e| e.to_string())?);
+            let made = self
+                .artifacts
+                .clone()
+                .ok_or_else(|| "no artifacts dir — PJRT unavailable".to_string())
+                .and_then(Runtime::cpu);
+            match made {
+                Ok(rt) => self.runtime = Some(rt),
+                Err(e) => {
+                    self.runtime_err = Some(e.clone());
+                    return Err(e);
+                }
+            }
         }
         Ok(self.runtime.as_ref().unwrap())
     }
 
-    fn prog(&mut self, app: &str, variant: Variant) -> Result<Arc<crate::plan::Program>, String> {
-        let key = (app.to_string(), variant == Variant::Hfav);
-        if let Some(p) = self.progs.get(&key) {
-            return Ok(p.clone());
-        }
+    fn prog(&self, app: &str, variant: Variant) -> Result<Arc<Program>, String> {
         let deck = deck_of(app)?;
-        let p = Arc::new(apps::compile_variant(deck, variant)?);
-        self.progs.insert(key, p.clone());
-        Ok(p)
+        let key = plan_key(app, variant);
+        self.plans.get_or_compile(&key, || apps::compile_variant(deck, variant))
     }
 
-    fn native(
-        &mut self,
-        app: &str,
-        variant: Variant,
-    ) -> Result<Arc<crate::codegen::native::NativeModule>, String> {
-        let key = (app.to_string(), variant == Variant::Hfav);
-        if let Some(m) = self.natives.get(&key) {
-            return Ok(m.clone());
-        }
+    fn native(&self, app: &str, variant: Variant) -> Result<Arc<NativeModule>, String> {
         let prog = self.prog(app, variant)?;
-        let m = Arc::new(crate::codegen::native::build(&prog, &Default::default())?);
-        self.natives.insert(key, m.clone());
-        Ok(m)
+        let key = plan_key(app, variant).tagged("native");
+        // Retrying variant: a cc/dlopen failure may be transient (tmpdir
+        // full, compiler hiccup) and must not poison the key pool-wide.
+        self.natives
+            .get_or_compute_retrying(&key, || {
+                crate::codegen::native::build(&prog, &Default::default())
+            })
+    }
+
+    /// Run one job: execute, record metrics, flush workspace counters.
+    fn process(&mut self, job: &Job) -> JobResult {
+        let cells = cells_per_step(job) * job.steps.max(1) as u64;
+        let res = self.run(job);
+        self.metrics.record(&res, cells);
+        let (reused, allocated) = self.ws_totals();
+        let dr = reused - self.flushed_reused;
+        let da = allocated - self.flushed_allocated;
+        self.flushed_reused = reused;
+        self.flushed_allocated = allocated;
+        self.metrics.buffers_reused.fetch_add(dr, Ordering::Relaxed);
+        self.metrics.buffers_allocated.fetch_add(da, Ordering::Relaxed);
+        res
     }
 
     fn run(&mut self, job: &Job) -> JobResult {
@@ -231,7 +366,7 @@ impl Worker {
         let latency = start.elapsed();
         match out {
             Ok(checksum) => {
-                let cells = (job.size * job.size) as f64 * job.steps.max(1) as f64;
+                let cells = (cells_per_step(job) * job.steps.max(1) as u64) as f64;
                 JobResult {
                     id: job.id,
                     ok: true,
@@ -264,51 +399,54 @@ impl Worker {
         use crate::apps::hydro2d::solver::*;
         let n = job.size;
         let mut state = sod(n, n);
-        let mut sweeper: Box<dyn Sweeper> = match job.engine {
-            Engine::Exec => Box::new(ExecSweeper::new(apps::compile_variant(
-                crate::apps::hydro2d::DECK,
-                job.variant,
-            )?)),
+        let mut native_sweeper;
+        let sweeper: &mut dyn Sweeper = match job.engine {
+            Engine::Exec => {
+                // Per-worker cached sweeper: shared plan Arc + a workspace
+                // that stays warm across batched same-key jobs.
+                let key = plan_key("hydro2d", job.variant)
+                    .with_exec(&crate::exec::ExecOptions::default());
+                if !self.exec_sweepers.contains_key(&key) {
+                    let s = ExecSweeper::new(self.prog("hydro2d", job.variant)?);
+                    self.exec_sweepers.insert(key.clone(), s);
+                }
+                self.exec_sweepers.get_mut(&key).unwrap()
+            }
             Engine::Native => {
                 let m = self.native("hydro2d", job.variant)?;
-                // NativeModule isn't cloneable into the Box; rebuild a thin
-                // wrapper around the shared Arc.
-                Box::new(SharedNativeSweeper { module: m })
+                native_sweeper = SharedNativeSweeper { module: m };
+                &mut native_sweeper
             }
             Engine::Pjrt => {
                 return Err("hydro2d PJRT path requires fixed artifact shape; use bench pjrt".into())
             }
         };
         for _ in 0..job.steps {
-            step(&mut state, 1.0 / n as f64, 0.4, sweeper.as_mut())?;
+            step(&mut state, 1.0 / n as f64, 0.4, sweeper)?;
         }
         Ok(state.rho.iter().sum())
     }
 
     fn run_stencil(&mut self, job: &Job) -> Result<f64, String> {
         let n = job.size;
-        let (_deck, reg, extents, input_name): (&str, _, Vec<(&str, i64)>, &str) =
-            match job.app.as_str() {
-                "laplace" => (
-                    crate::apps::laplace::DECK,
-                    crate::apps::laplace::registry(),
-                    vec![("Nj", n as i64), ("Ni", n as i64)],
-                    "g_cell",
-                ),
-                "normalize" => (
-                    crate::apps::normalization::DECK,
-                    crate::apps::normalization::registry(),
-                    vec![("Nj", n as i64), ("Ni", n as i64)],
-                    "g_q",
-                ),
-                "cosmo" => (
-                    crate::apps::cosmo::DECK,
-                    crate::apps::cosmo::registry(),
-                    vec![("Nk", 4), ("Nj", n as i64), ("Ni", n as i64)],
-                    "g_u",
-                ),
-                _ => unreachable!(),
-            };
+        let (reg, extents, input_name): (_, Vec<(&str, i64)>, &str) = match job.app.as_str() {
+            "laplace" => (
+                crate::apps::laplace::registry(),
+                vec![("Nj", n as i64), ("Ni", n as i64)],
+                "g_cell",
+            ),
+            "normalize" => (
+                crate::apps::normalization::registry(),
+                vec![("Nj", n as i64), ("Ni", n as i64)],
+                "g_q",
+            ),
+            "cosmo" => (
+                crate::apps::cosmo::registry(),
+                vec![("Nk", COSMO_NK), ("Nj", n as i64), ("Ni", n as i64)],
+                "g_u",
+            ),
+            _ => unreachable!(),
+        };
         let prog = self.prog(&job.app, job.variant)?;
         let ext: BTreeMap<String, i64> =
             extents.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
@@ -319,7 +457,14 @@ impl Worker {
         match job.engine {
             Engine::Exec => {
                 for _ in 0..job.steps.max(1) {
-                    let out = crate::exec::run(&prog, &reg, &ext, &inputs, Default::default())?;
+                    let out = crate::exec::run_with(
+                        &prog,
+                        &reg,
+                        &ext,
+                        &inputs,
+                        Default::default(),
+                        &mut self.ws,
+                    )?;
                     checksum = out.values().next().map(|v| v.iter().sum()).unwrap_or(0.0);
                 }
             }
@@ -327,9 +472,9 @@ impl Worker {
                 let m = self.native(&job.app, job.variant)?;
                 let mut arrays = inputs.clone();
                 for name in &m.externals {
-                    arrays
-                        .entry(name.clone())
-                        .or_insert_with(|| vec![0.0; crate::exec::external_len(&prog, name, &ext).unwrap_or(0)]);
+                    arrays.entry(name.clone()).or_insert_with(|| {
+                        vec![0.0; crate::exec::external_len(&prog, name, &ext).unwrap_or(0)]
+                    });
                 }
                 for _ in 0..job.steps.max(1) {
                     m.run(&ext, &mut arrays)?;
@@ -348,7 +493,7 @@ impl Worker {
                     if job.app == "normalize" { "normalize" } else { job.app.as_str() },
                     variant
                 );
-                let exe = rt.load(&name).map_err(|e| e.to_string())?;
+                let exe = rt.load(&name)?;
                 // PJRT artifacts are fixed-shape; synthesize matching input.
                 let shapes = exe.meta.inputs.clone();
                 let bufs: Vec<Vec<f64>> = shapes
@@ -357,7 +502,7 @@ impl Worker {
                     .collect();
                 let refs: Vec<&[f64]> = bufs.iter().map(|b| b.as_slice()).collect();
                 for _ in 0..job.steps.max(1) {
-                    let out = exe.run(&refs).map_err(|e| e.to_string())?;
+                    let out = exe.run(&refs)?;
                     checksum = out[0].iter().sum();
                 }
             }
@@ -368,7 +513,7 @@ impl Worker {
 
 /// Native sweeper over a shared module (coordinator cache).
 struct SharedNativeSweeper {
-    module: Arc<crate::codegen::native::NativeModule>,
+    module: Arc<NativeModule>,
 }
 
 impl crate::apps::hydro2d::solver::Sweeper for SharedNativeSweeper {
@@ -419,6 +564,26 @@ pub fn deck_of(app: &str) -> Result<&'static str, String> {
     }
 }
 
+/// Expand a job template `repeat` times, assigning fresh sequential ids
+/// (the id seeds each job's synthetic input, so repeats stay distinct).
+pub fn repeat_jobs(template: &[Job], repeat: usize) -> Vec<Job> {
+    let mut out = Vec::with_capacity(template.len() * repeat.max(1));
+    for r in 0..repeat.max(1) {
+        for (i, j) in template.iter().enumerate() {
+            let mut job = j.clone();
+            job.id = (r * template.len() + i) as u64;
+            out.push(job);
+        }
+    }
+    out
+}
+
+/// Number of distinct plan-cache keys a job list compiles under — the
+/// expected pipeline-compilation count for a cold cache.
+pub fn distinct_plan_keys(jobs: &[Job]) -> usize {
+    jobs.iter().map(|j| j.plan_key()).collect::<std::collections::BTreeSet<_>>().len()
+}
+
 /// Parse a job-trace line: `app,variant,engine,size,steps`.
 pub fn parse_trace_line(id: u64, line: &str) -> Result<Job, String> {
     let f: Vec<&str> = line.split(',').map(str::trim).collect();
@@ -454,12 +619,18 @@ mod tests {
             Job { id: 4, app: "laplace".into(), variant: Variant::Hfav, engine: Engine::Native, size: 64, steps: 2 },
         ];
         let results = c.run_batch(jobs);
-        for r in &results {
+        assert_eq!(results.len(), 4);
+        for (k, r) in results.iter().enumerate() {
+            assert_eq!(r.id, k as u64 + 1, "results must preserve input order");
             assert!(r.ok, "job {} failed: {}", r.id, r.detail);
             assert!(r.cups > 0.0);
         }
         assert_eq!(c.metrics.completed.load(std::sync::atomic::Ordering::Relaxed), 4);
         assert!(c.metrics.percentile(0.5) > Duration::ZERO);
+        // 3 distinct plan keys: laplace/hfav (shared by exec+native),
+        // normalize/autovec, hydro2d/hfav.
+        assert_eq!(c.plans.stats().computes, 3, "{}", c.plans.stats());
+        assert_eq!(c.natives.stats().computes, 1, "{}", c.natives.stats());
         c.shutdown();
     }
 
@@ -479,6 +650,30 @@ mod tests {
             .unwrap();
         assert!(!r.ok);
         assert!(r.detail.contains("unknown app"));
+        c.shutdown();
+    }
+
+    #[test]
+    fn repeated_jobs_hit_the_plan_cache() {
+        let c = Coordinator::start(4, None);
+        let jobs: Vec<Job> = (0..12)
+            .map(|i| Job {
+                id: i,
+                app: "laplace".into(),
+                variant: Variant::Hfav,
+                engine: Engine::Exec,
+                size: 32,
+                steps: 1,
+            })
+            .collect();
+        let results = c.run_batch(jobs);
+        assert!(results.iter().all(|r| r.ok));
+        let s = c.plans.stats();
+        assert_eq!(s.computes, 1, "one key → one compile: {s}");
+        assert!(s.hits >= 11 - 3, "most lookups must hit: {s}");
+        let rep = c.report(Duration::from_secs(1));
+        assert_eq!(rep.completed, 12);
+        assert!(rep.buffers_reused > 0, "{rep}");
         c.shutdown();
     }
 

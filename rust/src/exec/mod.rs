@@ -125,6 +125,47 @@ pub fn external_len(
         .product())
 }
 
+/// Reusable executor workspace: storage buffers allocated by one run are
+/// recycled by the next instead of being freed and re-malloc'd. Recycled
+/// buffers are zero-filled before reuse, so results are identical to a
+/// fresh run; for batches of same-shape jobs the resize is a pure memset
+/// with no allocator traffic. The coordinator keeps one workspace per
+/// worker and batches same-key jobs so consecutive runs share it.
+#[derive(Default)]
+pub struct Workspace {
+    pool: Vec<Vec<f64>>,
+    /// Buffers recycled from the pool.
+    pub reused: u64,
+    /// Buffers freshly allocated because the pool was empty.
+    pub allocated: u64,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// A zeroed buffer of `len` words, recycled if possible.
+    fn take(&mut self, len: usize) -> Vec<f64> {
+        match self.pool.pop() {
+            Some(mut buf) => {
+                self.reused += 1;
+                buf.clear();
+                buf.resize(len, 0.0);
+                buf
+            }
+            None => {
+                self.allocated += 1;
+                vec![0f64; len]
+            }
+        }
+    }
+
+    fn recycle(&mut self, bufs: Vec<Vec<f64>>) {
+        self.pool.extend(bufs);
+    }
+}
+
 /// Run a program.
 ///
 /// `inputs` maps terminal-input storage names to row-major arrays over
@@ -137,10 +178,41 @@ pub fn run(
     inputs: &BTreeMap<String, Vec<f64>>,
     opts: ExecOptions,
 ) -> Result<Outputs, String> {
+    let mut ws = Workspace::default();
+    run_with(prog, reg, extents, inputs, opts, &mut ws)
+}
+
+/// [`run`] with an explicit [`Workspace`] so buffer allocations are reused
+/// across consecutive runs (the serving hot path).
+pub fn run_with(
+    prog: &Program,
+    reg: &Registry,
+    extents: &BTreeMap<String, i64>,
+    inputs: &BTreeMap<String, Vec<f64>>,
+    opts: ExecOptions,
+    ws: &mut Workspace,
+) -> Result<Outputs, String> {
+    // Buffers live outside the fallible body so every path — success or
+    // error — recycles them into the workspace.
+    let mut buffers: Vec<Vec<f64>> = Vec::new();
+    let result = run_inner(prog, reg, extents, inputs, opts, ws, &mut buffers);
+    ws.recycle(std::mem::take(&mut buffers));
+    result
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_inner(
+    prog: &Program,
+    reg: &Registry,
+    extents: &BTreeMap<String, i64>,
+    inputs: &BTreeMap<String, Vec<f64>>,
+    opts: ExecOptions,
+    ws: &mut Workspace,
+    buffers: &mut Vec<Vec<f64>>,
+) -> Result<Outputs, String> {
     // ---- allocate storage -------------------------------------------------
     // external name -> workspace buffer index (aliases share).
     let mut ext_buf: BTreeMap<String, usize> = BTreeMap::new();
-    let mut buffers: Vec<Vec<f64>> = Vec::new();
     let mut storage_buf: Vec<usize> = vec![usize::MAX; prog.sp.storages.len()];
 
     // Pre-size externals from their var spans.
@@ -152,10 +224,11 @@ pub fn run(
                 Some(&i) => i,
                 None => {
                     let len = external_len_by_storage(prog, s, extents)?;
-                    let mut buf = vec![0f64; len];
+                    let mut buf = ws.take(len);
                     // Fill from inputs if provided under any aliased name.
                     if let Some(src) = inputs.get(name).or_else(|| inputs.get(&canon)) {
                         if src.len() != len {
+                            buffers.push(buf);
                             return Err(format!(
                                 "input `{name}`: expected {len} elements, got {}",
                                 src.len()
@@ -178,7 +251,7 @@ pub fn run(
             storage_buf[s.id] = idx;
         } else {
             let words = crate::analysis::storage_words(s, &prog.df, extents)?;
-            buffers.push(vec![0f64; words.max(0) as usize]);
+            buffers.push(ws.take(words.max(0) as usize));
             storage_buf[s.id] = buffers.len() - 1;
         }
     }
@@ -201,7 +274,7 @@ pub fn run(
             0,
             nest.dims.len(),
             &mut idx,
-            &mut buffers,
+            &mut buffers[..],
             opts.mode,
             &mut scratch_in,
             &mut scratch_out,
@@ -689,6 +762,27 @@ mod tests {
                 assert_close(v, &b[k], 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn workspace_reuse_matches_fresh_runs() {
+        let prog = compile_src(testdecks::LAPLACE, CompileOptions::default()).unwrap();
+        let reg = laplace_registry();
+        let ext = extents(&[("Nj", 11), ("Ni", 9)]);
+        let u = seeded(11 * 9, 4);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("g_cell".to_string(), u);
+        let fresh = run(&prog, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+        let mut ws = Workspace::new();
+        for _ in 0..3 {
+            let got = run_with(&prog, &reg, &ext, &inputs, ExecOptions::default(), &mut ws).unwrap();
+            assert_close(&got["g_out"], &fresh["g_out"], 0.0);
+        }
+        assert!(ws.reused > 0, "expected recycling (allocated={})", ws.allocated);
+        // From the second run on, the pool covers every buffer.
+        let allocated = ws.allocated;
+        let _ = run_with(&prog, &reg, &ext, &inputs, ExecOptions::default(), &mut ws).unwrap();
+        assert_eq!(ws.allocated, allocated);
     }
 
     #[test]

@@ -11,11 +11,19 @@
 //! 1. [`frontend`] parses a declarative deck (rules + axioms + goals).
 //! 2. [`inference`] backward-chains goals→axioms into the dataflow graph
 //!    ([`dataflow`]).
-//! 3. [`inest`] builds the iteration-nest DAG; [`fusion`] fuses it.
+//! 3. [`fusion`] builds and fuses the iteration-nest DAG.
 //! 4. [`analysis`] computes liveness, reuse, storage contraction,
 //!    alias chaining and vectorization.
 //! 5. [`plan`] assembles the executable schedule; [`codegen`] emits C99 /
 //!    Rust / DOT; [`exec`] runs it in-process.
+//!
+//! Serving layer: compilation is expensive but a compiled [`plan::Program`]
+//! is immutable and reusable, so [`plan::cache`] provides a shared
+//! compile-once plan cache (keyed by app/variant/options fingerprint)
+//! with hit/miss/compile counters, and [`coordinator`] serves job traces
+//! over it — a worker pool with pool-wide plan + native-module caches,
+//! same-key job batching, executor buffer reuse ([`exec::Workspace`]) and
+//! latency/throughput/cache metrics ([`coordinator::metrics`]).
 
 pub mod ir;
 pub mod yaml;

@@ -1,11 +1,16 @@
 //! `hfav` CLI: generate code from decks, inspect schedules and graphs,
 //! run the built-in apps on any engine, serve job traces through the
-//! coordinator, and regenerate the paper's benchmark figures.
+//! coordinator (with plan-cache and throughput reporting), and regenerate
+//! the paper's benchmark figures.
 
 use hfav::apps::Variant;
-use hfav::coordinator::{deck_of, parse_trace_line, Coordinator, Engine, Job};
-use hfav::plan::{compile_src, CompileOptions};
+use hfav::coordinator::{
+    deck_of, distinct_plan_keys, parse_trace_line, repeat_jobs, Coordinator, Engine, Job,
+};
 use std::collections::BTreeMap;
+
+type CliError = Box<dyn std::error::Error>;
+type CliResult = Result<(), CliError>;
 
 fn usage() -> ! {
     eprintln!(
@@ -14,9 +19,9 @@ fn usage() -> ! {
   footprint <deck.yaml|app> --extents Ni=512,Nj=512
   run --app <laplace|normalize|cosmo|hydro2d> [--engine exec|native|pjrt] [--variant hfav|autovec]
       [--size N] [--steps S]
-  serve --trace <file> [--workers N] [--artifacts DIR]
+  serve --trace <file> [--workers N] [--repeat R] [--artifacts DIR]
   e2e [--size N] [--steps S]
-  bench <sysinfo|normalization|cosmo|hydro2d|footprint|pjrt|all>
+  bench <sysinfo|normalization|cosmo|hydro2d|footprint|serving|pjrt|all>
   smoke [hlo.txt]"
     );
     std::process::exit(2)
@@ -26,7 +31,7 @@ fn flag(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> CliResult {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().cloned().unwrap_or_default();
     let rest = &args[1..];
@@ -47,7 +52,7 @@ fn main() -> anyhow::Result<()> {
     }
 }
 
-fn load_deck_arg(arg: &str) -> Result<String, anyhow::Error> {
+fn load_deck_arg(arg: &str) -> Result<String, CliError> {
     if let Ok(deck) = deck_of(arg) {
         return Ok(deck.to_string());
     }
@@ -61,36 +66,33 @@ fn variant_of(rest: &[String]) -> Variant {
     }
 }
 
-fn compile_arg(rest: &[String]) -> anyhow::Result<hfav::plan::Program> {
+fn compile_arg(rest: &[String]) -> Result<hfav::plan::Program, CliError> {
     let target = rest.first().map(String::as_str).unwrap_or("laplace");
     let src = load_deck_arg(target)?;
-    let prog = match variant_of(rest) {
-        Variant::Hfav => compile_src(&src, CompileOptions::default()),
-        Variant::Autovec => hfav::apps::compile_variant(&src, Variant::Autovec),
-    }
-    .map_err(anyhow::Error::msg)?;
-    Ok(prog)
+    // Same options path the coordinator's plan cache fingerprints, so the
+    // CLI inspects exactly what serving would run.
+    Ok(hfav::apps::compile_variant(&src, variant_of(rest))?)
 }
 
-fn generate(rest: &[String]) -> anyhow::Result<()> {
+fn generate(rest: &[String]) -> CliResult {
     let prog = compile_arg(rest)?;
     match flag(rest, "--backend").as_deref().unwrap_or("c99") {
-        "c99" => print!("{}", hfav::codegen::c99::emit(&prog).map_err(anyhow::Error::msg)?),
-        "rust" => print!("{}", hfav::codegen::rs::emit(&prog).map_err(anyhow::Error::msg)?),
+        "c99" => print!("{}", hfav::codegen::c99::emit(&prog)?),
+        "rust" => print!("{}", hfav::codegen::rs::emit(&prog)?),
         "dot-dataflow" => print!("{}", hfav::codegen::dot::dataflow(&prog.df)),
         "dot-inest" => print!("{}", hfav::codegen::dot::inest(&prog.df, &prog.fd)),
         "schedule" => print!("{}", prog.schedule_text()),
-        other => anyhow::bail!("unknown backend `{other}`"),
+        other => return Err(format!("unknown backend `{other}`").into()),
     }
     Ok(())
 }
 
-fn footprint(rest: &[String]) -> anyhow::Result<()> {
+fn footprint(rest: &[String]) -> CliResult {
     let prog = compile_arg(rest)?;
     let mut extents = BTreeMap::new();
     if let Some(spec) = flag(rest, "--extents") {
         for kv in spec.split(',') {
-            let (k, v) = kv.split_once('=').ok_or_else(|| anyhow::anyhow!("bad extents"))?;
+            let (k, v) = kv.split_once('=').ok_or("bad extents (want Ni=512,Nj=512)")?;
             extents.insert(k.trim().to_string(), v.trim().parse::<i64>()?);
         }
     }
@@ -105,19 +107,14 @@ fn footprint(rest: &[String]) -> anyhow::Result<()> {
             if s.external.is_some() { "  (external)" } else { "" }
         );
     }
-    println!(
-        "total intermediate: {} words",
-        prog.footprint_words(&extents).map_err(anyhow::Error::msg)?
-    );
+    println!("total intermediate: {} words", prog.footprint_words(&extents)?);
     Ok(())
 }
 
-fn run(rest: &[String]) -> anyhow::Result<()> {
+fn run(rest: &[String]) -> CliResult {
     let app = flag(rest, "--app").unwrap_or_else(|| "laplace".into());
-    let engine: Engine = flag(rest, "--engine")
-        .unwrap_or_else(|| "native".into())
-        .parse()
-        .map_err(anyhow::Error::msg)?;
+    let engine: Engine =
+        flag(rest, "--engine").unwrap_or_else(|| "native".into()).parse()?;
     let size: usize = flag(rest, "--size").unwrap_or_else(|| "256".into()).parse()?;
     let steps: usize = flag(rest, "--steps").unwrap_or_else(|| "10".into()).parse()?;
     let c = Coordinator::start(1, Some(hfav::runtime::default_artifacts_dir()));
@@ -138,41 +135,56 @@ fn run(rest: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn serve(rest: &[String]) -> anyhow::Result<()> {
-    let trace = flag(rest, "--trace").ok_or_else(|| anyhow::anyhow!("--trace required"))?;
+fn serve(rest: &[String]) -> CliResult {
+    let trace = flag(rest, "--trace").ok_or("--trace required")?;
     let workers: usize = flag(rest, "--workers").unwrap_or_else(|| "4".into()).parse()?;
+    let repeat: usize = flag(rest, "--repeat").unwrap_or_else(|| "1".into()).parse()?;
     let artifacts = flag(rest, "--artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(hfav::runtime::default_artifacts_dir);
     let text = std::fs::read_to_string(&trace)?;
-    let jobs: Vec<Job> = text
+    let lines: Vec<&str> = text
         .lines()
         .filter(|l| !l.trim().is_empty() && !l.trim_start().starts_with('#'))
-        .enumerate()
-        .map(|(i, l)| parse_trace_line(i as u64, l).map_err(anyhow::Error::msg))
-        .collect::<Result<_, _>>()?;
-    println!("serving {} jobs on {workers} workers", jobs.len());
+        .collect();
+    let mut template = Vec::new();
+    for (i, l) in lines.iter().enumerate() {
+        template.push(parse_trace_line(i as u64, l)?);
+    }
+    let jobs = repeat_jobs(&template, repeat);
+    println!(
+        "serving {} jobs ({} distinct plan keys) on {workers} workers",
+        jobs.len(),
+        distinct_plan_keys(&jobs)
+    );
     let c = Coordinator::start(workers, Some(artifacts));
     let t0 = std::time::Instant::now();
     let results = c.run_batch(jobs);
     let wall = t0.elapsed();
+    let mut failed = 0usize;
     for r in &results {
         if !r.ok {
             println!("job {} FAILED: {}", r.id, r.detail);
+            failed += 1;
         }
     }
-    println!("wall={wall:?} {}", c.metrics.summary());
+    println!("{}", c.report(wall));
     c.shutdown();
+    if failed > 0 {
+        // Nonzero exit so CI smoke runs catch serving regressions.
+        return Err(format!("{failed} of {} jobs failed", results.len()).into());
+    }
     Ok(())
 }
 
-fn e2e(rest: &[String]) -> anyhow::Result<()> {
+fn e2e(rest: &[String]) -> CliResult {
     let size: usize = flag(rest, "--size").unwrap_or_else(|| "128".into()).parse()?;
     let steps: usize = flag(rest, "--steps").unwrap_or_else(|| "200".into()).parse()?;
-    hfav::e2e::sod_demo(size, steps).map_err(anyhow::Error::msg)
+    hfav::e2e::sod_demo(size, steps)?;
+    Ok(())
 }
 
-fn bench(rest: &[String]) -> anyhow::Result<()> {
+fn bench(rest: &[String]) -> CliResult {
     let which = rest.first().map(String::as_str).unwrap_or("all");
     println!("{}", hfav::bench::sysinfo());
     let sizes_small = [64usize, 128, 256, 512];
@@ -191,18 +203,21 @@ fn bench(rest: &[String]) -> anyhow::Result<()> {
         "footprint" => {
             hfav::bench::footprint();
         }
+        "serving" => {
+            hfav::bench::serving(4, 6);
+        }
         "pjrt" => {
-            hfav::bench::pjrt(&hfav::runtime::default_artifacts_dir())
-                .map_err(anyhow::Error::msg)?;
+            hfav::bench::pjrt(&hfav::runtime::default_artifacts_dir())?;
         }
         "all" => {
             hfav::bench::footprint();
             hfav::bench::normalization(&sizes_big);
             hfav::bench::cosmo(&sizes_small, 8);
             hfav::bench::hydro2d(&[64, 128, 256], 5);
+            hfav::bench::serving(4, 6);
             let _ = hfav::bench::pjrt(&hfav::runtime::default_artifacts_dir());
         }
-        other => anyhow::bail!("unknown bench `{other}`"),
+        other => return Err(format!("unknown bench `{other}`").into()),
     }
     Ok(())
 }

@@ -1,0 +1,540 @@
+//! Shared compiled-plan cache.
+//!
+//! Deck→schedule compilation (inference, fusion, storage contraction,
+//! vectorization analysis) is expensive, but its output — a [`Program`] —
+//! is immutable and reusable. This module provides the compile-once /
+//! run-many substrate the serving layer is built on:
+//!
+//! * [`OnceMap`] — a generic sharded concurrent map whose values are
+//!   computed exactly once per key, even under racing lookups (other
+//!   threads block on the in-flight computation instead of duplicating
+//!   it). Hit/miss/compute counters are threaded through [`CacheStats`].
+//! * [`PlanKey`] — `(app, variant, options fingerprint)`: the identity of
+//!   a compiled plan. The fingerprint folds every semantically relevant
+//!   field of [`CompileOptions`] (fusion + analysis + input rolling) and,
+//!   optionally, [`ExecOptions`], through a deterministic FNV-1a hash.
+//! * [`PlanCache`] — an `OnceMap<PlanKey, Program>` with compile helpers;
+//!   the coordinator shares one instance across its whole worker pool.
+
+use crate::exec::ExecOptions;
+use crate::plan::{compile_src, CompileOptions, Program};
+use std::collections::hash_map::RandomState;
+use std::collections::HashMap;
+use std::hash::{BuildHasher, Hash};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock, RwLock};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Fingerprinting
+// ---------------------------------------------------------------------------
+
+/// Deterministic FNV-1a 64-bit hasher for option fingerprints. Unlike
+/// `DefaultHasher`, the result is stable across processes, so fingerprints
+/// can be logged, compared across runs, and used in artifact file names.
+#[derive(Debug, Clone)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64(0xcbf29ce484222325)
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn write_i64(&mut self, v: i64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn write_bool(&mut self, v: bool) {
+        self.write(&[v as u8]);
+    }
+
+    pub fn write_str(&mut self, s: &str) {
+        self.write_u64(s.len() as u64);
+        self.write(s.as_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64::new()
+    }
+}
+
+/// Fold every semantically relevant compile option into `h`. Any new
+/// option that changes the produced schedule MUST be added here, or two
+/// differently-configured compiles would collide in the cache.
+pub fn feed_compile_options(h: &mut Fnv64, o: &CompileOptions) {
+    h.write_bool(o.fusion.enabled);
+    h.write_bool(o.analysis.contraction);
+    h.write_u64(o.analysis.vector_len as u64);
+    h.write_i64(o.analysis.rotation_slack);
+    h.write_bool(o.analysis.pow2_windows);
+    h.write_bool(o.analysis.contract_innermost);
+    h.write_bool(o.roll_all_inputs);
+}
+
+/// Fingerprint of a [`CompileOptions`].
+pub fn compile_fingerprint(o: &CompileOptions) -> u64 {
+    let mut h = Fnv64::new();
+    feed_compile_options(&mut h, o);
+    h.finish()
+}
+
+// ---------------------------------------------------------------------------
+// Cache key
+// ---------------------------------------------------------------------------
+
+/// Identity of a compiled plan: which deck (`app`), which paper variant
+/// (`hfav` / `autovec` / ...), and the fingerprint of every option that
+/// influences the compile.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PlanKey {
+    pub app: String,
+    pub variant: String,
+    pub fingerprint: u64,
+}
+
+impl PlanKey {
+    /// Key for a compile of `app` under `opts`, labeled with a variant.
+    pub fn new(app: &str, variant: &str, opts: &CompileOptions) -> PlanKey {
+        PlanKey {
+            app: app.to_string(),
+            variant: variant.to_string(),
+            fingerprint: compile_fingerprint(opts),
+        }
+    }
+
+    /// Derive a sibling key with an extra tag folded into the
+    /// fingerprint (e.g. `"native"` for compiled-C modules keyed off the
+    /// same plan).
+    pub fn tagged(&self, tag: &str) -> PlanKey {
+        let mut h = Fnv64(self.fingerprint);
+        h.write_str(tag);
+        PlanKey { app: self.app.clone(), variant: self.variant.clone(), fingerprint: h.finish() }
+    }
+
+    /// Derive a sibling key for caches whose values also depend on the
+    /// execution mode (e.g. per-worker interpreter sweepers).
+    pub fn with_exec(&self, e: &ExecOptions) -> PlanKey {
+        let mut h = Fnv64(self.fingerprint);
+        h.write_str("exec");
+        h.write_u64(e.mode as u64);
+        PlanKey { app: self.app.clone(), variant: self.variant.clone(), fingerprint: h.finish() }
+    }
+}
+
+impl std::fmt::Display for PlanKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}#{:016x}", self.app, self.variant, self.fingerprint)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stats
+// ---------------------------------------------------------------------------
+
+/// Atomic hit/miss/compute counters shared by all users of a cache.
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub computes: AtomicU64,
+    pub compute_ns: AtomicU64,
+}
+
+impl CacheStats {
+    pub fn snapshot(&self) -> CacheStatsSnapshot {
+        CacheStatsSnapshot {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            computes: self.computes.load(Ordering::Relaxed),
+            compute_time: Duration::from_nanos(self.compute_ns.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// Point-in-time view of a cache's counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStatsSnapshot {
+    /// Lookups answered from an already-computed entry.
+    pub hits: u64,
+    /// Lookups that found no computed entry (includes racers that then
+    /// blocked on another thread's in-flight compute).
+    pub misses: u64,
+    /// Times the compute closure actually ran — for a plan cache this is
+    /// the number of pipeline compilations performed.
+    pub computes: u64,
+    /// Total wall time spent inside the compute closure.
+    pub compute_time: Duration,
+}
+
+impl CacheStatsSnapshot {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+impl std::fmt::Display for CacheStatsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "hits={} misses={} computes={} hit_rate={:.1}% compute_time={:?}",
+            self.hits,
+            self.misses,
+            self.computes,
+            100.0 * self.hit_rate(),
+            self.compute_time,
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// OnceMap
+// ---------------------------------------------------------------------------
+
+type Slot<V> = Arc<OnceLock<Result<Arc<V>, String>>>;
+
+/// Sharded concurrent compute-once map.
+///
+/// Each key's value is produced by the first caller's closure; concurrent
+/// callers for the same key block until that computation finishes and then
+/// share the `Arc`'d result. Failed computations are cached too (negative
+/// caching), so a deck that fails to compile does not trigger a recompile
+/// storm under load.
+pub struct OnceMap<K, V> {
+    shards: Vec<RwLock<HashMap<K, Slot<V>>>>,
+    hasher: RandomState,
+    stats: CacheStats,
+}
+
+impl<K: Hash + Eq + Clone, V> OnceMap<K, V> {
+    pub fn new() -> OnceMap<K, V> {
+        OnceMap::with_shards(8)
+    }
+
+    pub fn with_shards(n: usize) -> OnceMap<K, V> {
+        OnceMap {
+            shards: (0..n.max(1)).map(|_| RwLock::new(HashMap::new())).collect(),
+            hasher: RandomState::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    fn shard_of(&self, key: &K) -> usize {
+        (self.hasher.hash_one(key) as usize) % self.shards.len()
+    }
+
+    /// Get the value for `key`, computing it with `f` if absent. `f` runs
+    /// at most once per key across all threads.
+    pub fn get_or_compute<F>(&self, key: &K, f: F) -> Result<Arc<V>, String>
+    where
+        F: FnOnce() -> Result<V, String>,
+    {
+        let shard = &self.shards[self.shard_of(key)];
+        let slot = {
+            let map = shard.read().unwrap();
+            map.get(key).cloned()
+        };
+        let slot = match slot {
+            Some(s) => s,
+            None => {
+                let mut map = shard.write().unwrap();
+                map.entry(key.clone()).or_insert_with(|| Arc::new(OnceLock::new())).clone()
+            }
+        };
+        if let Some(done) = slot.get() {
+            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+            return done.clone();
+        }
+        self.stats.misses.fetch_add(1, Ordering::Relaxed);
+        slot.get_or_init(|| {
+            let t0 = Instant::now();
+            let out = f().map(Arc::new);
+            self.stats.compute_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            self.stats.computes.fetch_add(1, Ordering::Relaxed);
+            out
+        })
+        .clone()
+    }
+
+    /// Like [`get_or_compute`](Self::get_or_compute), but a failed
+    /// computation is evicted instead of negatively cached, so a later
+    /// caller retries. Use for I/O-dependent computations (e.g. invoking
+    /// the system C compiler) where a failure may be transient; plan
+    /// compilation is deterministic and keeps negative caching.
+    pub fn get_or_compute_retrying<F>(&self, key: &K, f: F) -> Result<Arc<V>, String>
+    where
+        F: FnOnce() -> Result<V, String>,
+    {
+        let out = self.get_or_compute(key, f);
+        if out.is_err() {
+            let shard = &self.shards[self.shard_of(key)];
+            let mut map = shard.write().unwrap();
+            if let Some(slot) = map.get(key) {
+                if matches!(slot.get(), Some(Err(_))) {
+                    map.remove(key);
+                }
+            }
+        }
+        out
+    }
+
+    /// Peek without computing.
+    pub fn get(&self, key: &K) -> Option<Result<Arc<V>, String>> {
+        let shard = &self.shards[self.shard_of(key)];
+        let map = shard.read().unwrap();
+        map.get(key).and_then(|s| s.get().cloned())
+    }
+
+    /// Number of cached entries (computed or in flight).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every entry. Counters are preserved.
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.write().unwrap().clear();
+        }
+    }
+
+    pub fn stats(&self) -> CacheStatsSnapshot {
+        self.stats.snapshot()
+    }
+}
+
+impl<K: Hash + Eq + Clone, V> Default for OnceMap<K, V> {
+    fn default() -> Self {
+        OnceMap::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PlanCache
+// ---------------------------------------------------------------------------
+
+/// The shared compiled-plan cache: `PlanKey -> Arc<Program>`.
+#[derive(Default)]
+pub struct PlanCache {
+    map: OnceMap<PlanKey, Program>,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache { map: OnceMap::new() }
+    }
+
+    /// Fetch the plan for `key`, compiling with `f` on first use.
+    pub fn get_or_compile<F>(&self, key: &PlanKey, f: F) -> Result<Arc<Program>, String>
+    where
+        F: FnOnce() -> Result<Program, String>,
+    {
+        self.map.get_or_compute(key, f)
+    }
+
+    /// Convenience: compile `src` under `opts`, keyed by
+    /// `(app, variant, fingerprint(opts))`.
+    pub fn compile_src_cached(
+        &self,
+        app: &str,
+        variant: &str,
+        src: &str,
+        opts: &CompileOptions,
+    ) -> Result<Arc<Program>, String> {
+        let key = PlanKey::new(app, variant, opts);
+        self.map.get_or_compute(&key, || compile_src(src, opts.clone()))
+    }
+
+    pub fn get(&self, key: &PlanKey) -> Option<Result<Arc<Program>, String>> {
+        self.map.get(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn clear(&self) {
+        self.map.clear()
+    }
+
+    pub fn stats(&self) -> CacheStatsSnapshot {
+        self.map.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::testdecks;
+
+    #[test]
+    fn fingerprint_distinguishes_options() {
+        let a = CompileOptions::default();
+        let b = CompileOptions {
+            fusion: crate::fusion::FusionOptions { enabled: false },
+            ..Default::default()
+        };
+        let c = CompileOptions {
+            analysis: crate::analysis::AnalysisOptions {
+                contract_innermost: false,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let d = CompileOptions { roll_all_inputs: true, ..Default::default() };
+        let fps = [
+            compile_fingerprint(&a),
+            compile_fingerprint(&b),
+            compile_fingerprint(&c),
+            compile_fingerprint(&d),
+        ];
+        for i in 0..fps.len() {
+            for j in i + 1..fps.len() {
+                assert_ne!(fps[i], fps[j], "options {i} and {j} collide");
+            }
+        }
+        // Same options → same fingerprint (determinism).
+        assert_eq!(compile_fingerprint(&a), compile_fingerprint(&CompileOptions::default()));
+    }
+
+    #[test]
+    fn exec_keys_distinguish_modes() {
+        use crate::exec::Mode;
+        let k = PlanKey::new("laplace", "hfav", &CompileOptions::default());
+        let a = k.with_exec(&ExecOptions { mode: Mode::Peeled });
+        let b = k.with_exec(&ExecOptions { mode: Mode::Guarded });
+        assert_ne!(a.fingerprint, b.fingerprint);
+        assert_ne!(a.fingerprint, k.fingerprint);
+    }
+
+    #[test]
+    fn plan_cache_compiles_once_per_key() {
+        let cache = PlanCache::new();
+        let opts = CompileOptions::default();
+        for _ in 0..5 {
+            let p = cache
+                .compile_src_cached("laplace", "hfav", testdecks::LAPLACE, &opts)
+                .unwrap();
+            assert!(!p.fd.nests.is_empty());
+        }
+        let s = cache.stats();
+        assert_eq!(s.computes, 1, "{s}");
+        assert_eq!(s.hits, 4, "{s}");
+        assert_eq!(s.misses, 1, "{s}");
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_fusion_options_get_distinct_entries() {
+        let cache = PlanCache::new();
+        let fused = CompileOptions::default();
+        let unfused = CompileOptions {
+            fusion: crate::fusion::FusionOptions { enabled: false },
+            ..Default::default()
+        };
+        let a = cache
+            .compile_src_cached("laplace", "hfav", testdecks::LAPLACE, &fused)
+            .unwrap();
+        let b = cache
+            .compile_src_cached("laplace", "autovec", testdecks::LAPLACE, &unfused)
+            .unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().computes, 2);
+        // The two plans really differ: fusion produces fewer nests.
+        assert!(a.fd.nests.len() <= b.fd.nests.len());
+        assert_ne!(
+            PlanKey::new("laplace", "x", &fused).fingerprint,
+            PlanKey::new("laplace", "x", &unfused).fingerprint,
+        );
+    }
+
+    #[test]
+    fn concurrent_lookups_compute_once() {
+        let cache = Arc::new(OnceMap::<String, u64>::new());
+        let key = "k".to_string();
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let cache = cache.clone();
+            let key = key.clone();
+            handles.push(std::thread::spawn(move || {
+                let v = cache
+                    .get_or_compute(&key, || {
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                        Ok(7)
+                    })
+                    .unwrap();
+                assert_eq!(*v, 7);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(cache.stats().computes, 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn errors_are_cached() {
+        let cache = PlanCache::new();
+        let opts = CompileOptions::default();
+        let e1 = cache.compile_src_cached("bad", "hfav", "not a deck", &opts).unwrap_err();
+        let e2 = cache.compile_src_cached("bad", "hfav", "not a deck", &opts).unwrap_err();
+        assert_eq!(e1, e2);
+        let s = cache.stats();
+        assert_eq!(s.computes, 1, "{s}");
+        assert_eq!(s.hits, 1, "{s}");
+    }
+
+    #[test]
+    fn retrying_evicts_errors() {
+        let cache = OnceMap::<String, u64>::new();
+        let key = "k".to_string();
+        let e = cache.get_or_compute_retrying(&key, || Err("boom".to_string())).unwrap_err();
+        assert_eq!(e, "boom");
+        assert_eq!(cache.len(), 0, "failed entry must be evicted");
+        let v = cache.get_or_compute_retrying(&key, || Ok(5)).unwrap();
+        assert_eq!(*v, 5);
+        assert_eq!(cache.stats().computes, 2);
+    }
+
+    #[test]
+    fn tagged_keys_differ() {
+        let k = PlanKey::new("laplace", "hfav", &CompileOptions::default());
+        let n = k.tagged("native");
+        assert_eq!(k.app, n.app);
+        assert_ne!(k.fingerprint, n.fingerprint);
+        assert_ne!(n.fingerprint, k.tagged("exec").fingerprint);
+        assert!(!format!("{k}").is_empty());
+    }
+}

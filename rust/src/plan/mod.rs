@@ -1,6 +1,13 @@
 //! Pipeline driver: deck → inference → fusion → analysis, bundled into a
 //! [`Program`] — the compiled schedule consumed by the executor
 //! ([`crate::exec`]) and the code emitters ([`crate::codegen`]).
+//!
+//! Compilation is expensive but its output is immutable: [`cache`]
+//! provides the shared compile-once/serve-many plan cache
+//! ([`cache::PlanCache`], keyed by [`cache::PlanKey`]) that the
+//! coordinator's worker pool is built on.
+
+pub mod cache;
 
 use crate::analysis::{self, AnalysisOptions, StoragePlan};
 use crate::dataflow::{Dataflow, Terminal};

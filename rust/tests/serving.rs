@@ -1,0 +1,155 @@
+//! Serving-layer integration tests: the shared compiled-plan cache under
+//! real traces — compile-count == distinct keys, correctness under
+//! concurrent `run_batch` callers, distinct options → distinct entries,
+//! and deterministic results regardless of batching/scheduling.
+
+use hfav::apps::Variant;
+use hfav::coordinator::{
+    distinct_plan_keys, parse_trace_line, repeat_jobs, Coordinator, Engine, Job,
+};
+use hfav::plan::cache::{compile_fingerprint, PlanCache, PlanKey};
+use hfav::plan::CompileOptions;
+use std::sync::Arc;
+
+fn job(id: u64, app: &str, variant: Variant, engine: Engine, size: usize, steps: usize) -> Job {
+    Job { id, app: app.to_string(), variant, engine, size, steps }
+}
+
+/// N jobs over K distinct (app, variant, options) keys → exactly K
+/// pipeline compilations, asserted via the plan-cache metrics counter.
+#[test]
+fn repeated_trace_compiles_once_per_distinct_key() {
+    let trace = "\
+laplace, hfav, exec, 48, 1
+laplace, autovec, exec, 48, 1
+normalize, hfav, exec, 32, 1
+cosmo, hfav, exec, 16, 1
+hydro2d, hfav, exec, 12, 1
+";
+    let template: Vec<Job> = trace
+        .lines()
+        .enumerate()
+        .map(|(i, l)| parse_trace_line(i as u64, l).unwrap())
+        .collect();
+    let jobs = repeat_jobs(&template, 6);
+    let n = jobs.len();
+    assert_eq!(n, 30);
+    let distinct = distinct_plan_keys(&jobs);
+    assert_eq!(distinct, 5);
+
+    let c = Coordinator::start(4, None);
+    let results = c.run_batch(jobs);
+    assert_eq!(results.len(), n);
+    for r in &results {
+        assert!(r.ok, "job {} failed: {}", r.id, r.detail);
+        assert!(r.checksum.is_finite());
+    }
+    let stats = c.plans.stats();
+    assert_eq!(
+        stats.computes,
+        distinct as u64,
+        "expected exactly one compile per distinct key: {stats}"
+    );
+    assert!(stats.hits > 0, "repeats must hit the cache: {stats}");
+    let report = c.report(std::time::Duration::from_millis(1));
+    assert_eq!(report.completed, n as u64);
+    assert_eq!(report.plans.computes, 5);
+    c.shutdown();
+}
+
+/// Concurrent `run_batch` callers on one coordinator: results stay
+/// correct and per-key compilation still happens exactly once.
+#[test]
+fn concurrent_run_batch_shares_one_cache() {
+    let c = Arc::new(Coordinator::start(4, None));
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let c = c.clone();
+        handles.push(std::thread::spawn(move || {
+            let jobs: Vec<Job> = (0..6)
+                .map(|i| {
+                    let (app, size) = if i % 2 == 0 { ("laplace", 40) } else { ("normalize", 24) };
+                    job(t * 100 + i, app, Variant::Hfav, Engine::Exec, size, 1)
+                })
+                .collect();
+            c.run_batch(jobs)
+        }));
+    }
+    let mut checksums: std::collections::BTreeMap<u64, f64> = std::collections::BTreeMap::new();
+    for h in handles {
+        for r in h.join().unwrap() {
+            assert!(r.ok, "job {}: {}", r.id, r.detail);
+            checksums.insert(r.id, r.checksum);
+        }
+    }
+    assert_eq!(checksums.len(), 24);
+    for v in checksums.values() {
+        assert!(v.is_finite());
+    }
+    let stats = c.plans.stats();
+    assert_eq!(stats.computes, 2, "laplace/hfav + normalize/hfav only: {stats}");
+    Arc::try_unwrap(c).ok().expect("all clones joined").shutdown();
+}
+
+/// Differing FusionOptions fingerprints produce distinct cache entries —
+/// the autovec and hfav shapes never collide.
+#[test]
+fn differing_options_get_distinct_entries() {
+    let cache = PlanCache::new();
+    let fused = CompileOptions::default();
+    let unfused = CompileOptions {
+        fusion: hfav::fusion::FusionOptions { enabled: false },
+        ..Default::default()
+    };
+    assert_ne!(compile_fingerprint(&fused), compile_fingerprint(&unfused));
+
+    let deck = hfav::coordinator::deck_of("laplace").unwrap();
+    let a = cache
+        .get_or_compile(&PlanKey::new("laplace", "hfav", &fused), || {
+            hfav::plan::compile_src(deck, fused.clone())
+        })
+        .unwrap();
+    let b = cache
+        .get_or_compile(&PlanKey::new("laplace", "autovec", &unfused), || {
+            hfav::plan::compile_src(deck, unfused.clone())
+        })
+        .unwrap();
+    assert_eq!(cache.len(), 2);
+    assert_eq!(cache.stats().computes, 2);
+    // And the cached plans really are the two different shapes.
+    assert!(a.opts.fusion.enabled);
+    assert!(!b.opts.fusion.enabled);
+}
+
+/// Determinism: serving the same trace twice (fresh coordinator, warm
+/// cache vs cold cache) yields identical checksums — caching and batching
+/// must not change results.
+#[test]
+fn warm_cache_results_match_cold_results() {
+    let mk_jobs = || {
+        vec![
+            job(0, "laplace", Variant::Hfav, Engine::Exec, 32, 1),
+            job(1, "normalize", Variant::Hfav, Engine::Exec, 24, 2),
+            job(2, "cosmo", Variant::Autovec, Engine::Exec, 12, 1),
+            job(3, "hydro2d", Variant::Hfav, Engine::Exec, 8, 2),
+        ]
+    };
+    let cold = Coordinator::start(2, None);
+    let cold_results = cold.run_batch(mk_jobs());
+    let cold_compiles = cold.plans.stats().computes;
+    cold.shutdown();
+
+    let shared = Arc::new(PlanCache::new());
+    let warm = Coordinator::start_with_cache(2, None, shared.clone());
+    let first = warm.run_batch(mk_jobs());
+    let second = warm.run_batch(mk_jobs());
+    for ((a, b), c) in cold_results.iter().zip(first.iter()).zip(second.iter()) {
+        assert!(a.ok && b.ok && c.ok);
+        assert_eq!(a.checksum, b.checksum, "cold vs warm diverged on job {}", a.id);
+        assert_eq!(b.checksum, c.checksum, "repeat diverged on job {}", b.id);
+    }
+    assert_eq!(shared.stats().computes, cold_compiles, "same distinct keys both times");
+    warm.shutdown();
+    // The externally shared cache outlives the coordinator.
+    assert_eq!(shared.len() as u64, cold_compiles);
+}
