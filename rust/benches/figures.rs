@@ -14,7 +14,7 @@ fn main() {
     println!();
     hfav::bench::hydro2d(&[64, 128, 256], 5);
     println!();
-    hfav::bench::serving(4, 8);
+    hfav::bench::serving(4, 8, None);
     println!();
     match hfav::bench::pjrt(&hfav::runtime::default_artifacts_dir()) {
         Ok(_) => {}

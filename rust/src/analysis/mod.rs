@@ -120,8 +120,11 @@ pub struct AnalysisOptions {
     /// "Contraction"). Off = every intermediate gets its full span (the
     /// shape of the unfused/naive code).
     pub contraction: bool,
-    /// Vector length for vector-expanded rotation (Fig. 9c); 1 = scalar.
-    pub vector_len: usize,
+    /// Vector length override for vector-expanded rotation (Fig. 9c).
+    /// `None` defers to the deck's declared `vector_len`; `Some(n)` forces
+    /// `n` lanes — including `Some(1)`, which forces scalar codegen even
+    /// on a deck that declares `vector_len > 1`.
+    pub vector_len: Option<usize>,
     /// Extra slack rows on rolling windows. The paper notes it is
     /// "generally most practical to simply allocate 3 times the storage
     /// needed for a single row" for a 2-row reuse distance — i.e. one
@@ -143,11 +146,48 @@ impl Default for AnalysisOptions {
     fn default() -> Self {
         AnalysisOptions {
             contraction: true,
-            vector_len: 1,
+            vector_len: None,
             rotation_slack: 0,
             pow2_windows: true,
             contract_innermost: true,
         }
+    }
+}
+
+/// Effective vector length of a compile: the caller's override if present,
+/// else the deck's declared `vector_len`, clamped to at least 1.
+pub fn resolve_vector_len(deck: &Deck, opts: &AnalysisOptions) -> usize {
+    opts.vector_len.unwrap_or(deck.vector_len).max(1)
+}
+
+/// Vector length suggested by the host's SIMD features (f64 lanes):
+/// AVX-512 → 8, AVX → 4, SSE2/NEON → 2, else scalar. This is the CLI's
+/// `--vlen auto` default. On x86-64 the width is detected at *runtime*
+/// (CPUID): the native backends compile the emitted code with
+/// `-march=native` / `-C target-cpu=native`, so the host's best width is
+/// the right answer even when this crate itself was built for baseline
+/// x86-64.
+pub fn auto_vector_len() -> usize {
+    auto_vector_len_impl()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn auto_vector_len_impl() -> usize {
+    if std::is_x86_feature_detected!("avx512f") {
+        8
+    } else if std::is_x86_feature_detected!("avx") {
+        4
+    } else {
+        2 // SSE2 is baseline on x86-64
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn auto_vector_len_impl() -> usize {
+    if cfg!(target_feature = "neon") {
+        2
+    } else {
+        1
     }
 }
 
@@ -159,6 +199,7 @@ pub fn analyze(
     opts: &AnalysisOptions,
 ) -> Result<StoragePlan, String> {
     let mut notes = Vec::new();
+    let vlen = resolve_vector_len(deck, opts);
 
     // ---- accumulator chaining -------------------------------------------
     // A reduction callsite that reads X and writes Y with the same base,
@@ -275,7 +316,7 @@ pub fn analyze(
         let sizes = if external.is_some() || !opts.contraction {
             vec![DimSize::Full; v.dims.len()]
         } else {
-            contract_sizes(df, fd, &vars, opts, &mut notes)?
+            contract_sizes(df, fd, &vars, opts, vlen, &mut notes)?
         };
 
         let id = storages.len();
@@ -293,7 +334,6 @@ pub fn analyze(
         });
     }
 
-    let _ = deck;
     Ok(StoragePlan { storages, of_var, reuse, notes })
 }
 
@@ -320,6 +360,7 @@ fn contract_sizes(
     fd: &FusedDag,
     vars: &[VarId],
     opts: &AnalysisOptions,
+    vlen: usize,
     notes: &mut Vec<String>,
 ) -> Result<Vec<DimSize>, String> {
     let rep = &df.vars[vars[0]];
@@ -347,8 +388,12 @@ fn contract_sizes(
         None => return Ok(vec![DimSize::Full; ndims]),
     };
 
-    // Per-dim window across all vars in the class.
+    // Per-dim window across all vars in the class. `iterated[k]` records
+    // whether any producer actually iterates the dim (Role::Loop) — the
+    // condition under which a per-iteration value needs per-lane slots
+    // when the schedule is vector-expanded.
     let mut w = vec![1i64; ndims];
+    let mut iterated = vec![false; ndims];
     for &x in vars {
         let v = &df.vars[x];
         let producer = match v.producer {
@@ -366,6 +411,7 @@ fn contract_sizes(
             if pm.roles[nd] != Role::Loop {
                 continue;
             }
+            iterated[k] = true;
             let head = pm.shifts[nd] + v.write_offset[k];
             let mut oldest = head;
             for r in &df.reads_of[x] {
@@ -380,12 +426,36 @@ fn contract_sizes(
     // Assemble size classes: One* Window Full*.
     let mut sizes = Vec::with_capacity(ndims);
     let mut windowed = false;
+    let pow2 = |logical: i64| -> i64 {
+        if opts.pow2_windows {
+            (logical.max(1) as u64).next_power_of_two() as i64
+        } else {
+            logical
+        }
+    };
     for k in 0..ndims {
+        let innermost = rep.dims[k] == *nest.dims.last().unwrap();
         if windowed {
             sizes.push(DimSize::Full);
         } else if w[k] <= 1 {
-            sizes.push(DimSize::One);
-        } else if !opts.contract_innermost && rep.dims[k] == *nest.dims.last().unwrap() {
+            if innermost && iterated[k] && vlen > 1 {
+                // Vector expansion of a loop-carried scalar (Fig. 9c): a
+                // value produced and consumed within one iteration becomes
+                // a vector of `vlen` lanes, so a lane-fissioned strip can
+                // run each kernel across all lanes before the next kernel
+                // reads any of them.
+                let logical = vlen as i64;
+                let alloc = pow2(logical);
+                sizes.push(DimSize::Window { w: logical, alloc });
+                windowed = true;
+                notes.push(format!(
+                    "vector-expand `{}` dim `{}`: {} lanes (alloc {})",
+                    rep.ident, rep.dims[k], logical, alloc
+                ));
+            } else {
+                sizes.push(DimSize::One);
+            }
+        } else if !opts.contract_innermost && innermost {
             // Tuning variant: keep the innermost dim at full span so the
             // steady state vectorizes (no circular-buffer dependency).
             sizes.push(DimSize::Full);
@@ -398,11 +468,10 @@ fn contract_sizes(
             let mut logical = w[k] + opts.rotation_slack;
             // Vector expansion applies to the innermost loop dim only
             // (Fig. 9c): rotation happens in-register across lanes.
-            let innermost = rep.dims[k] == *nest.dims.last().unwrap();
-            if innermost && opts.vector_len > 1 {
-                logical += opts.vector_len as i64 - 1;
+            if innermost && vlen > 1 {
+                logical += vlen as i64 - 1;
             }
-            let alloc = if opts.pow2_windows { (logical.max(1) as u64).next_power_of_two() as i64 } else { logical };
+            let alloc = pow2(logical);
             sizes.push(DimSize::Window { w: logical, alloc });
             windowed = true;
             notes.push(format!(
@@ -412,6 +481,51 @@ fn contract_sizes(
         }
     }
     Ok(sizes)
+}
+
+/// Is a lane-fissioned strip (run each member over `vlen` consecutive
+/// innermost iterations before the next member — the execution order of
+/// vector-expanded code, Fig. 9c) semantically equivalent to the scalar
+/// interleaving for these members?
+///
+/// The one unsafe shape is a *scan observed mid-loop*: member A writes a
+/// per-iteration value into storage without per-lane slots (its variable
+/// lacks the innermost dim, or keeps `DimSize::One` there), and a
+/// different member B reads that storage inside the same innermost loop —
+/// after fission B would see only A's last-lane value. Accumulator chains
+/// reading their *own* storage (reductions) stay safe: their lanes run
+/// sequentially in iteration order.
+pub fn lane_fission_safe(
+    df: &Dataflow,
+    sp: &StoragePlan,
+    nest: &crate::fusion::FusedNest,
+    members: &[&crate::fusion::Member],
+) -> bool {
+    let inner = match nest.dims.last() {
+        Some(d) => d,
+        None => return true,
+    };
+    let reads_storage = |m: &crate::fusion::Member, sid: usize| {
+        df.callsites[m.callsite].reads.iter().any(|(_, vid, _)| sp.of_var[*vid] == sid)
+    };
+    for m in members {
+        let cs = &df.callsites[m.callsite];
+        for (_, vid, _) in &cs.writes {
+            let var = &df.vars[*vid];
+            let sid = sp.of_var[*vid];
+            let lane_slotted = match var.dims.iter().position(|d| d == inner) {
+                Some(k) => !matches!(sp.storages[sid].sizes[k], DimSize::One),
+                None => false,
+            };
+            if lane_slotted {
+                continue;
+            }
+            if members.iter().any(|o| o.callsite != m.callsite && reads_storage(o, sid)) {
+                return false;
+            }
+        }
+    }
+    true
 }
 
 /// Insert a rolling input buffer for a terminal input variable: a
@@ -498,7 +612,9 @@ pub fn chain_inouts(deck: &Deck, df: &mut Dataflow) -> Result<Vec<VarId>, String
         let vout = df
             .vars
             .iter()
-            .find(|v| matches!(&v.terminal, Terminal::Output { storage, .. } if storage == out_store))
+            .find(|v| {
+                matches!(&v.terminal, Terminal::Output { storage, .. } if storage == out_store)
+            })
             .map(|v| v.id);
         let (vin, _vout) = match (vin, vout) {
             (Some(a), Some(b)) => (a, b),
@@ -630,7 +746,7 @@ mod tests {
             &deck,
             &df,
             &fd,
-            &AnalysisOptions { vector_len: 8, ..Default::default() },
+            &AnalysisOptions { vector_len: Some(8), ..Default::default() },
         )
         .unwrap();
         let dbl = df.var("dbl(u)").unwrap().id;
@@ -640,6 +756,95 @@ mod tests {
                 assert_eq!(*alloc, 16);
             }
             other => panic!("expected window, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn vector_expansion_gives_scalars_lane_slots() {
+        // In a vector-expanded plan, a per-iteration scalar (window 1)
+        // becomes a vector of vlen lanes so lane-fissioned strips can run
+        // kernel-by-kernel (Fig. 9c); scalar plans keep the single slot.
+        let src = r#"
+name: passthru
+iteration:
+  order: [i]
+  domains:
+    i: [0, N]
+kernels:
+  a:
+    declaration: a(double x, double &y);
+    inputs: |
+      x : u?[i?]
+    outputs: |
+      y : mid(u?[i?])
+    body: "y = 2.0*x;"
+  b:
+    declaration: b(double y, double &z);
+    inputs: |
+      y : mid(u?[i?])
+    outputs: |
+      z : fin(u?[i?])
+    body: "z = y + 1.0;"
+globals:
+  inputs: |
+    double g_u[i?] => u[i?]
+  outputs: |
+    fin(u[i]) => double g_o[i]
+"#;
+        let deck = parse_deck(src).unwrap();
+        let df = crate::dataflow::build(&deck).unwrap();
+        let fd = fuse(&df, &FusionOptions::default()).unwrap();
+        let scalar = analyze(&deck, &df, &fd, &AnalysisOptions::default()).unwrap();
+        let mid = df.var("mid(u)").unwrap().id;
+        assert_eq!(scalar.storage_of(mid).sizes, vec![DimSize::One]);
+        let vec8 = analyze(
+            &deck,
+            &df,
+            &fd,
+            &AnalysisOptions { vector_len: Some(8), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(vec8.storage_of(mid).sizes, vec![DimSize::Window { w: 8, alloc: 8 }]);
+    }
+
+    #[test]
+    fn lane_fission_gate_blocks_scan_reads() {
+        // normalize nest 0's innermost loop holds flux + the accumulator
+        // chain: the accumulator reads only its own storage, so fission of
+        // the loop members is safe. (Callers gate over the innermost
+        // Loop-role members — Pre/Post members run outside strips.)
+        let (_, df, fd, sp) = pipeline(testdecks::NORMALIZE);
+        for nest in &fd.nests {
+            let members: Vec<&crate::fusion::Member> = nest
+                .members
+                .iter()
+                .filter(|m| m.roles.last() == Some(&Role::Loop))
+                .collect();
+            assert!(lane_fission_safe(&df, &sp, nest, &members), "nest {}", nest.id);
+        }
+        // Synthetic unsafe shape: pretend a member reads the accumulator
+        // storage mid-loop by checking the gate against a member set where
+        // one callsite writes acc and a different one reads it.
+        let acc_writer = df
+            .callsites
+            .iter()
+            .find(|c| c.name == "norm_acc")
+            .expect("norm_acc callsite");
+        let sum_reader = df
+            .callsites
+            .iter()
+            .find(|c| c.name == "norm_root")
+            .expect("norm_root callsite");
+        let nest = fd
+            .nests
+            .iter()
+            .find(|n| n.member(acc_writer.id).is_some())
+            .expect("nest with norm_acc");
+        // norm_root is Post-phase in reality; force-checking it as if it
+        // were a strip member must trip the gate.
+        if let Some(root_m) = nest.member(sum_reader.id) {
+            let acc_m = nest.member(acc_writer.id).unwrap();
+            assert!(!lane_fission_safe(&df, &sp, nest, &[acc_m, root_m]));
         }
     }
 }

@@ -92,6 +92,23 @@ kernels:
       { double dl = pc - pm, dg = pp - pc, dc = 0.5*(dl+dg), s = dc >= 0.0 ? 1.0 : -1.0;
         double lim = (dl*dg <= 0.0) ? 0.0 : 2.0*fmin(fabs(dl), fabs(dg));
         dp = s * fmin(lim, fabs(dc)); }
+    body_rs: |
+      { let dl = rc - rm; let dg = rp - rc; let dc = 0.5*(dl+dg);
+        let s = if dc >= 0.0 { 1.0 } else { -1.0 };
+        let lim = if dl*dg <= 0.0 { 0.0 } else { 2.0*fmin(fabs(dl), fabs(dg)) };
+        dr = s * fmin(lim, fabs(dc)); }
+      { let dl = uc - um; let dg = up - uc; let dc = 0.5*(dl+dg);
+        let s = if dc >= 0.0 { 1.0 } else { -1.0 };
+        let lim = if dl*dg <= 0.0 { 0.0 } else { 2.0*fmin(fabs(dl), fabs(dg)) };
+        du = s * fmin(lim, fabs(dc)); }
+      { let dl = vc - vm; let dg = vp - vc; let dc = 0.5*(dl+dg);
+        let s = if dc >= 0.0 { 1.0 } else { -1.0 };
+        let lim = if dl*dg <= 0.0 { 0.0 } else { 2.0*fmin(fabs(dl), fabs(dg)) };
+        dv = s * fmin(lim, fabs(dc)); }
+      { let dl = pc - pm; let dg = pp - pc; let dc = 0.5*(dl+dg);
+        let s = if dc >= 0.0 { 1.0 } else { -1.0 };
+        let lim = if dl*dg <= 0.0 { 0.0 } else { 2.0*fmin(fabs(dl), fabs(dg)) };
+        dp = s * fmin(lim, fabs(dc)); }
   trace:
     declaration: trace(double r, double u, double v, double p, double dr, double du, double dv, double dp, double dtdx, double &rm, double &um, double &vm, double &pm, double &rp, double &up, double &vp, double &pp);
     inputs: |
@@ -127,6 +144,20 @@ kernels:
         if (rp < 1e-10) { rp = 1e-10; }
         if (pm < 1e-10) { pm = 1e-10; }
         if (pp < 1e-10) { pp = 1e-10; } }
+    body_rs: |
+      { let h = 0.5 * dtdx;
+        let mut r2 = r - h*(u*dr + r*du);
+        let u2 = u - h*(u*du + dp/r);
+        let v2 = v - h*(u*dv);
+        let mut p2 = p - h*(1.4*p*du + u*dp);
+        if r2 < 1e-10 { r2 = 1e-10; }
+        if p2 < 1e-10 { p2 = 1e-10; }
+        rm = r2 - 0.5*dr; um = u2 - 0.5*du; vm = v2 - 0.5*dv; pm = p2 - 0.5*dp;
+        rp = r2 + 0.5*dr; up = u2 + 0.5*du; vp = v2 + 0.5*dv; pp = p2 + 0.5*dp;
+        if rm < 1e-10 { rm = 1e-10; }
+        if rp < 1e-10 { rp = 1e-10; }
+        if pm < 1e-10 { pm = 1e-10; }
+        if pp < 1e-10 { pp = 1e-10; } }
   qleftright:
     declaration: qleftright(double rl, double ul, double vl, double pl, double rr, double ur, double vr, double pr, double &orl, double &oul, double &ovl, double &opl, double &orr, double &our, double &ovr, double &opr);
     inputs: |
@@ -206,6 +237,47 @@ kernels:
           }
         }
         gr = ro; gu = uo; gv = v0; gp = po; }
+    body_rs: |
+      { let cl = sqrt(1.4*pl/rl); let cr = sqrt(1.4*pr/rr);
+        let mut pst = 0.5*(pl+pr) - 0.125*(ur-ul)*(rl+rr)*(cl+cr);
+        if pst < 1e-10 { pst = 1e-10; }
+        let mut it = 0;
+        while it < 8 {
+          let al = 0.8333333333333333/rl; let bl = 0.16666666666666666*pl;
+          let ar = 0.8333333333333333/rr; let br = 0.16666666666666666*pr;
+          let sl = sqrt(al/(pst+bl)); let sr = sqrt(ar/(pst+br));
+          let fl = (pst-pl)*sl; let fr = (pst-pr)*sr;
+          let dl = sl*(1.0 - (pst-pl)/(2.0*(pst+bl)));
+          let dr_ = sr*(1.0 - (pst-pr)/(2.0*(pst+br)));
+          let f = fl + fr + (ur - ul);
+          pst = pst - f/(dl + dr_);
+          if pst < 1e-10 { pst = 1e-10; }
+          it += 1;
+        }
+        let sl0 = sqrt((0.8333333333333333/rl)/(pst+0.16666666666666666*pl));
+        let sr0 = sqrt((0.8333333333333333/rr)/(pst+0.16666666666666666*pr));
+        let ustar = 0.5*(ul+ur) + 0.5*((pst-pr)*sr0 - (pst-pl)*sl0);
+        let (sgn, r0, u0, p0, v0) = if ustar >= 0.0 { (1.0, rl, ul, pl, vl) }
+          else { (-1.0, rr, ur, pr, vr) };
+        let c0 = sqrt(1.4*p0/r0);
+        let ro; let uo; let po;
+        if pst > p0 {
+          let s = u0 - sgn*c0*sqrt(0.8571428571428571*(pst/p0) + 0.14285714285714285);
+          if sgn*s >= 0.0 { ro = r0; uo = u0; po = p0; }
+          else { let q = pst/p0; ro = r0*((q + 0.16666666666666666)/(0.16666666666666666*q + 1.0)); uo = ustar; po = pst; }
+        } else {
+          let cst = c0*pow(pst/p0, 0.14285714285714285);
+          let sh = u0 - sgn*c0;
+          let st = ustar - sgn*cst;
+          if sgn*sh >= 0.0 { ro = r0; uo = u0; po = p0; }
+          else if sgn*st <= 0.0 { ro = r0*pow(pst/p0, 0.7142857142857143); uo = ustar; po = pst; }
+          else {
+            uo = 0.8333333333333333*(sgn*c0 + 0.2*u0);
+            let mut cf = sgn*uo; if cf < 1e-12 { cf = 1e-12; }
+            ro = r0*pow(cf/c0, 5.0); po = p0*pow(cf/c0, 7.0);
+          }
+        }
+        gr = ro; gu = uo; gv = v0; gp = po; }
   cmpflx:
     declaration: cmpflx(double gr, double gu, double gv, double gp, double &frho, double &frhou, double &frhov, double &fE);
     inputs: |
@@ -220,6 +292,12 @@ kernels:
       fE    : flux_E(grho[j?][i?])
     body: |
       { double e = gp/0.4 + 0.5*gr*(gu*gu + gv*gv);
+        frho = gr*gu;
+        frhou = gr*gu*gu + gp;
+        frhov = gr*gu*gv;
+        fE = gu*(e + gp); }
+    body_rs: |
+      { let e = gp/0.4 + 0.5*gr*(gu*gu + gv*gv);
         frho = gr*gu;
         frhou = gr*gu*gu + gp;
         frhov = gr*gu*gv;

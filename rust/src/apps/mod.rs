@@ -47,6 +47,26 @@ pub fn variant_options(v: Variant) -> CompileOptions {
     }
 }
 
+/// [`variant_options`] with an explicit vector-length override: `None`
+/// keeps the deck default, `Some(n)` forces `n` lanes (including
+/// `Some(1)` for forced-scalar). This is the options path the
+/// coordinator's plan cache fingerprints, so distinct vlens get distinct
+/// compiled-plan entries.
+pub fn variant_options_vlen(v: Variant, vlen: Option<usize>) -> CompileOptions {
+    let mut opts = variant_options(v);
+    opts.analysis.vector_len = vlen;
+    opts
+}
+
+/// Compile a deck source in a standard shape at an explicit vector length.
+pub fn compile_variant_vlen(
+    src: &str,
+    v: Variant,
+    vlen: Option<usize>,
+) -> Result<Program, String> {
+    compile_src(src, variant_options_vlen(v, vlen))
+}
+
 /// Compile with the "HFAV + Tuning" options (paper §5.3): full fusion,
 /// but innermost-dim windows stay full rows so the steady state
 /// auto-vectorizes (the manual-tuning step the paper applied to COSMO).

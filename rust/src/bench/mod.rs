@@ -215,7 +215,13 @@ pub fn footprint() -> Vec<String> {
 /// the coordinator — the compile-once/run-many amortization claim in
 /// numbers. Reports pipeline-compilation count (== distinct plan keys),
 /// plan-cache hit rate, buffer reuse and end-to-end throughput.
-pub fn serving(workers: usize, repeat: usize) -> Vec<String> {
+///
+/// With `vlen` (`bench serving --vlen 8`), a second phase serves a
+/// hydro2d native-engine trace twice — forced scalar (`vlen 1`) and at
+/// the requested vector length — and reports the scalar-vs-vector
+/// throughput ratio; the cache shape (distinct keys, hit rate) is
+/// identical in both runs, isolating the codegen effect.
+pub fn serving(workers: usize, repeat: usize, vlen: Option<usize>) -> Vec<String> {
     use crate::coordinator::{distinct_plan_keys, repeat_jobs, Coordinator, Engine, Job};
     let template: Vec<Job> = [
         ("laplace", Variant::Hfav, Engine::Exec, 64, 1),
@@ -232,6 +238,7 @@ pub fn serving(workers: usize, repeat: usize) -> Vec<String> {
         engine,
         size,
         steps,
+        vlen: None,
     })
     .collect();
     let jobs = repeat_jobs(&template, repeat);
@@ -258,6 +265,55 @@ pub fn serving(workers: usize, repeat: usize) -> Vec<String> {
         report.throughput() / 1e6
     ));
     c.shutdown();
+
+    // Scalar-vs-vector phase (hydro2d, native engine) — only when a
+    // vector length was explicitly requested (`bench serving --vlen N`).
+    let v = vlen.unwrap_or(1);
+    if v > 1 {
+        println!("Serving, scalar vs vector — hydro2d native, vlen 1 vs {v}:");
+        let serve_at = |force: usize| -> (f64, f64, u64) {
+            let template: Vec<Job> = (0..2 * workers.max(1))
+                .map(|i| Job {
+                    id: i as u64,
+                    app: "hydro2d".to_string(),
+                    variant: Variant::Hfav,
+                    engine: Engine::Native,
+                    size: 128,
+                    steps: 2,
+                    vlen: Some(force),
+                })
+                .collect();
+            let jobs = repeat_jobs(&template, repeat.max(2));
+            let c = Coordinator::start(workers, None);
+            let t0 = Instant::now();
+            let results = c.run_batch(jobs);
+            let wall = t0.elapsed();
+            let rep = c.report(wall);
+            let bad = results.iter().filter(|r| !r.ok).count();
+            if bad > 0 {
+                println!("  WARNING: {bad} jobs failed at vlen {force}");
+            }
+            c.shutdown();
+            (rep.throughput(), rep.plans.hit_rate(), rep.plans.computes)
+        };
+        let (t1, h1, c1) = serve_at(1);
+        let (tv, hv, cv) = serve_at(v);
+        let speedup = if t1 > 0.0 { tv / t1 } else { 0.0 };
+        println!(
+            "  vlen 1: {:.1} Mcells/s (hit_rate {:.1}%, compiles {c1})",
+            t1 / 1e6,
+            100.0 * h1
+        );
+        println!(
+            "  vlen {v}: {:.1} Mcells/s (hit_rate {:.1}%, compiles {cv})",
+            tv / 1e6,
+            100.0 * hv
+        );
+        println!("  vector/scalar throughput ratio: {speedup:.2}x");
+        csv.push("vlen,mcells_per_s,hit_rate,speedup_vs_scalar".to_string());
+        csv.push(format!("1,{:.3},{h1:.3},1.00", t1 / 1e6));
+        csv.push(format!("{v},{:.3},{hv:.3},{speedup:.2}", tv / 1e6));
+    }
     csv
 }
 

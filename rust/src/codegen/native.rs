@@ -1,8 +1,9 @@
-//! Native harness: compile the C99 output with the system compiler and
-//! load it via `dlopen` — this is the measured artifact in benchmarks, the
-//! analogue of the paper compiling HFAV's output with `icc -O3 -xHost`.
+//! Native harness: compile the C99 output with the system compiler (or
+//! the Rust output with `rustc`, see [`build_rust`]) and load it via
+//! `dlopen` — this is the measured artifact in benchmarks, the analogue
+//! of the paper compiling HFAV's output with `icc -O3 -xHost`.
 
-use super::c99;
+use super::{c99, rs};
 use crate::plan::Program;
 use std::collections::BTreeMap;
 use std::ffi::{c_char, c_int, c_void, CString};
@@ -85,6 +86,8 @@ pub struct NativeModule {
     run_fn: unsafe extern "C" fn(*const i64, *const *mut f64),
     pub extents: Vec<String>,
     pub externals: Vec<String>,
+    /// The emitted source this module was compiled from (C99 for
+    /// [`build`], Rust for [`build_rust`]).
     pub c_source: String,
     pub so_path: PathBuf,
 }
@@ -104,6 +107,9 @@ impl Default for CcOptions {
                 "-O3".into(),
                 "-march=native".into(),
                 "-fno-math-errno".into(),
+                // Honor `#pragma omp simd` on strip-mined lane loops
+                // without pulling in the OpenMP runtime.
+                "-fopenmp-simd".into(),
                 "-shared".into(),
                 "-fPIC".into(),
             ],
@@ -111,27 +117,47 @@ impl Default for CcOptions {
     }
 }
 
+/// `rustc` configuration for the Rust-backend native harness.
+#[derive(Debug, Clone)]
+pub struct RustcOptions {
+    pub rustc: String,
+    pub flags: Vec<String>,
+}
+
+impl Default for RustcOptions {
+    fn default() -> Self {
+        RustcOptions {
+            rustc: std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string()),
+            flags: vec![
+                "--edition".into(),
+                "2021".into(),
+                "--crate-type".into(),
+                "cdylib".into(),
+                "-O".into(),
+                "-C".into(),
+                "panic=abort".into(),
+                "-C".into(),
+                "target-cpu=native".into(),
+            ],
+        }
+    }
+}
+
+/// Is a working `rustc` reachable (used by tests to skip the generated-
+/// Rust engine in toolchain-less environments)?
+pub fn rustc_available() -> bool {
+    std::process::Command::new(RustcOptions::default().rustc)
+        .arg("--version")
+        .output()
+        .map(|o| o.status.success())
+        .unwrap_or(false)
+}
+
 /// Emit, compile and load a program's generated C.
 pub fn build(prog: &Program, opts: &CcOptions) -> Result<NativeModule, String> {
     let c_source = c99::emit(prog)?;
-    let dir = std::env::temp_dir().join(format!(
-        "hfav-{}-{}",
-        super::mangle(&prog.deck.name),
-        std::process::id()
-    ));
-    std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
-    // Unique name per emitted source to avoid stale dlopen caching.
-    let digest = {
-        let mut h = crate::plan::cache::Fnv64::new();
-        h.write(c_source.as_bytes());
-        h.finish()
-    };
-    let c_path = dir.join(format!("gen_{digest:016x}.c"));
-    let so_path = dir.join(format!("gen_{digest:016x}.so"));
-    {
-        let mut f = std::fs::File::create(&c_path).map_err(|e| e.to_string())?;
-        f.write_all(c_source.as_bytes()).map_err(|e| e.to_string())?;
-    }
+    let (c_path, so_path) = gen_paths(prog, &c_source, "c")?;
+    write_source(&c_path, &c_source)?;
     let output = std::process::Command::new(&opts.cc)
         .args(&opts.flags)
         .arg("-o")
@@ -148,10 +174,73 @@ pub fn build(prog: &Program, opts: &CcOptions) -> Result<NativeModule, String> {
             c_source
         ));
     }
+    load_module(prog, c_source, so_path, "hfav_run")
+}
+
+/// Emit the Rust backend's output (with its C-ABI wrapper), compile it
+/// with `rustc --crate-type cdylib`, and load it through the same dlopen
+/// harness as the C backend. This makes the Rust emitter an *executable*
+/// engine rather than a source-only artifact.
+pub fn build_rust(prog: &Program, opts: &RustcOptions) -> Result<NativeModule, String> {
+    let rs_source = rs::emit_cdylib(prog)?;
+    let (rs_path, so_path) = gen_paths(prog, &rs_source, "rs")?;
+    write_source(&rs_path, &rs_source)?;
+    let output = std::process::Command::new(&opts.rustc)
+        .args(&opts.flags)
+        .arg("-o")
+        .arg(&so_path)
+        .arg(&rs_path)
+        .output()
+        .map_err(|e| format!("failed to spawn {}: {e}", opts.rustc))?;
+    if !output.status.success() {
+        return Err(format!(
+            "{} failed:\n{}\n--- source ---\n{}",
+            opts.rustc,
+            String::from_utf8_lossy(&output.stderr),
+            rs_source
+        ));
+    }
+    load_module(prog, rs_source, so_path, "hfav_run_ffi")
+}
+
+/// Scratch-file paths for one emitted source, unique per content digest
+/// (avoids stale dlopen caching).
+fn gen_paths(
+    prog: &Program,
+    source: &str,
+    ext: &str,
+) -> Result<(PathBuf, PathBuf), String> {
+    let dir = std::env::temp_dir().join(format!(
+        "hfav-{}-{}",
+        super::mangle(&prog.deck.name),
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+    let digest = {
+        let mut h = crate::plan::cache::Fnv64::new();
+        h.write(source.as_bytes());
+        h.finish()
+    };
+    let src_path = dir.join(format!("gen_{digest:016x}.{ext}"));
+    let so_path = dir.join(format!("gen_{digest:016x}_{ext}.so"));
+    Ok((src_path, so_path))
+}
+
+fn write_source(path: &Path, source: &str) -> Result<(), String> {
+    let mut f = std::fs::File::create(path).map_err(|e| e.to_string())?;
+    f.write_all(source.as_bytes()).map_err(|e| e.to_string())
+}
+
+fn load_module(
+    prog: &Program,
+    source: String,
+    so_path: PathBuf,
+    symbol: &str,
+) -> Result<NativeModule, String> {
     let lib = Library::open(&so_path)?;
-    let sym = lib.sym("hfav_run")?;
-    // SAFETY: the generated source always defines
-    // `void hfav_run(const int64_t*, double* const*)`.
+    let sym = lib.sym(symbol)?;
+    // SAFETY: both generated sources define the entry point as
+    // `void <symbol>(const int64_t*, double* const*)`.
     let run_fn = unsafe {
         std::mem::transmute::<*mut c_void, unsafe extern "C" fn(*const i64, *const *mut f64)>(sym)
     };
@@ -160,7 +249,7 @@ pub fn build(prog: &Program, opts: &CcOptions) -> Result<NativeModule, String> {
         run_fn,
         extents: c99::extent_names(prog),
         externals: c99::external_names(prog),
-        c_source,
+        c_source: source,
         so_path,
     })
 }
@@ -277,6 +366,54 @@ mod tests {
                         (a - b).abs() <= 1e-12 * (1.0 + a.abs().max(b.abs())),
                         "deck `{}` out `{name}` elem {k}: {a} vs {b}",
                         prog.deck.name
+                    );
+                }
+            }
+        }
+    }
+
+    /// The Rust backend compiled via rustc + dlopen agrees with the
+    /// interpreter (scalar and vector-expanded plans).
+    #[test]
+    fn rust_native_matches_executor() {
+        if !rustc_available() {
+            eprintln!("skipping rust_native_matches_executor: no rustc on PATH");
+            return;
+        }
+        let ext = extmap(&[("N", 29)]);
+        for vlen in [1usize, 4] {
+            let opts = CompileOptions {
+                analysis: crate::analysis::AnalysisOptions {
+                    vector_len: Some(vlen),
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let prog = compile_src(testdecks::CHAIN1D, opts).unwrap();
+            let mut reg = crate::exec::registry::Registry::new();
+            reg.register("dbl", |i, o| o[0] = 2.0 * i[0]);
+            reg.register("diff", |i, o| o[0] = i[1] - i[0]);
+            let mut inputs = BTreeMap::new();
+            for (name, _, _) in prog.external_inputs() {
+                let len = exec::external_len(&prog, &name, &ext).unwrap();
+                inputs.insert(name, seeded(len, 9));
+            }
+            let want = exec::run(&prog, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+            let module = build_rust(&prog, &RustcOptions::default())
+                .unwrap_or_else(|e| panic!("vlen {vlen}: {e}"));
+            let mut arrays = inputs.clone();
+            for name in &module.externals {
+                if !arrays.contains_key(name) {
+                    let len = exec::external_len(&prog, name, &ext).unwrap();
+                    arrays.insert(name.clone(), vec![0.0; len]);
+                }
+            }
+            module.run(&ext, &mut arrays).unwrap();
+            for (name, w) in &want {
+                for (k, (a, b)) in arrays[name].iter().zip(w.iter()).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-12 * (1.0 + a.abs().max(b.abs())),
+                        "vlen {vlen} out `{name}` elem {k}: {a} vs {b}"
                     );
                 }
             }

@@ -19,6 +19,10 @@ pub struct Metrics {
     pub buffers_reused: AtomicU64,
     /// Executor buffers freshly allocated by worker workspaces.
     pub buffers_allocated: AtomicU64,
+    /// Smallest effective vector length served so far (0 = none yet).
+    pub vlen_min: AtomicU64,
+    /// Largest effective vector length served so far (0 = none yet).
+    pub vlen_max: AtomicU64,
 }
 
 impl Metrics {
@@ -30,6 +34,28 @@ impl Metrics {
             self.failed.fetch_add(1, Ordering::Relaxed);
         }
         self.latencies_us.lock().unwrap().push(r.latency.as_micros() as u64);
+    }
+
+    /// Record the effective vector length of a served job's plan.
+    pub fn record_vlen(&self, vlen: usize) {
+        let v = vlen.max(1) as u64;
+        self.vlen_max.fetch_max(v, Ordering::Relaxed);
+        // min over a 0-initialized atomic: treat 0 as "unset".
+        let mut cur = self.vlen_min.load(Ordering::Relaxed);
+        loop {
+            if cur != 0 && cur <= v {
+                break;
+            }
+            match self.vlen_min.compare_exchange_weak(
+                cur,
+                v,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(now) => cur = now,
+            }
+        }
     }
 
     pub fn percentile(&self, p: f64) -> Duration {
@@ -70,6 +96,10 @@ pub struct ServeReport {
     pub natives: CacheStatsSnapshot,
     pub buffers_reused: u64,
     pub buffers_allocated: u64,
+    /// Smallest effective vector length among served plans (0 = none).
+    pub vlen_min: u64,
+    /// Largest effective vector length among served plans (0 = none).
+    pub vlen_max: u64,
 }
 
 impl ServeReport {
@@ -79,6 +109,15 @@ impl ServeReport {
             0.0
         } else {
             self.total_cells as f64 / self.wall.as_secs_f64()
+        }
+    }
+
+    /// Human-readable effective vector length: `-` (none), `8`, or `1..8`.
+    pub fn vlen_label(&self) -> String {
+        match (self.vlen_min, self.vlen_max) {
+            (0, _) | (_, 0) => "-".to_string(),
+            (a, b) if a == b => a.to_string(),
+            (a, b) => format!("{a}..{b}"),
         }
     }
 }
@@ -92,9 +131,10 @@ impl std::fmt::Display for ServeReport {
         )?;
         writeln!(
             f,
-            "throughput: {:.1} Mcells/s over wall={:?}",
+            "throughput: {:.1} Mcells/s over wall={:?} (effective vlen {})",
             self.throughput() / 1e6,
-            self.wall
+            self.wall,
+            self.vlen_label()
         )?;
         writeln!(f, "plan cache:   {}", self.plans)?;
         writeln!(f, "native cache: {}", self.natives)?;
@@ -149,10 +189,25 @@ mod tests {
             natives: CacheStatsSnapshot::default(),
             buffers_reused: 3,
             buffers_allocated: 4,
+            vlen_min: 1,
+            vlen_max: 8,
         };
         assert!((r.throughput() - 1e6).abs() < 1e-6);
+        assert_eq!(r.vlen_label(), "1..8");
         let text = format!("{r}");
         assert!(text.contains("plan cache"), "{text}");
         assert!(text.contains("reused=3"), "{text}");
+        assert!(text.contains("effective vlen 1..8"), "{text}");
+    }
+
+    #[test]
+    fn vlen_min_max_tracking() {
+        let m = Metrics::default();
+        assert_eq!(m.vlen_min.load(Ordering::Relaxed), 0);
+        m.record_vlen(4);
+        m.record_vlen(1);
+        m.record_vlen(8);
+        assert_eq!(m.vlen_min.load(Ordering::Relaxed), 1);
+        assert_eq!(m.vlen_max.load(Ordering::Relaxed), 8);
     }
 }

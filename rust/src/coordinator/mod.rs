@@ -62,12 +62,16 @@ pub struct Job {
     pub size: usize,
     /// Number of repeated applications (time steps / sweeps).
     pub steps: usize,
+    /// Vector-length override: `None` = deck default, `Some(n)` forces
+    /// `n` lanes (`Some(1)` forces scalar). Folded into the plan-cache
+    /// fingerprint, so distinct vlens compile (and cache) separately.
+    pub vlen: Option<usize>,
 }
 
 impl Job {
     /// The plan-cache key this job compiles under.
     pub fn plan_key(&self) -> PlanKey {
-        plan_key(&self.app, self.variant)
+        plan_key(&self.app, self.variant, self.vlen)
     }
 }
 
@@ -83,9 +87,10 @@ pub struct JobResult {
     pub checksum: f64,
 }
 
-/// Key for the plan cache: app + variant label + options fingerprint.
-fn plan_key(app: &str, variant: Variant) -> PlanKey {
-    PlanKey::new(app, variant.label(), &apps::variant_options(variant))
+/// Key for the plan cache: app + variant label + options fingerprint
+/// (which folds in the vector-length override).
+fn plan_key(app: &str, variant: Variant, vlen: Option<usize>) -> PlanKey {
+    PlanKey::new(app, variant.label(), &apps::variant_options_vlen(variant, vlen))
 }
 
 /// Depth of the cosmo 3-D grid served by the coordinator (the `Nk`
@@ -102,10 +107,10 @@ fn cells_per_step(job: &Job) -> u64 {
 /// Same-key batching: jobs agreeing on this tuple run back-to-back on one
 /// worker, so its plan lookup is hot and its executor workspace buffers
 /// fit without reallocation.
-type BatchKey = (String, Variant, Engine, usize);
+type BatchKey = (String, Variant, Engine, usize, Option<usize>);
 
 fn batch_key(job: &Job) -> BatchKey {
-    (job.app.clone(), job.variant, job.engine, job.size)
+    (job.app.clone(), job.variant, job.engine, job.size, job.vlen)
 }
 
 enum Msg {
@@ -235,6 +240,8 @@ impl Coordinator {
             natives: self.natives.stats(),
             buffers_reused: self.metrics.buffers_reused.load(Ordering::Relaxed),
             buffers_allocated: self.metrics.buffers_allocated.load(Ordering::Relaxed),
+            vlen_min: self.metrics.vlen_min.load(Ordering::Relaxed),
+            vlen_max: self.metrics.vlen_max.load(Ordering::Relaxed),
         }
     }
 
@@ -328,15 +335,25 @@ impl Worker {
         Ok(self.runtime.as_ref().unwrap())
     }
 
-    fn prog(&self, app: &str, variant: Variant) -> Result<Arc<Program>, String> {
+    fn prog(
+        &self,
+        app: &str,
+        variant: Variant,
+        vlen: Option<usize>,
+    ) -> Result<Arc<Program>, String> {
         let deck = deck_of(app)?;
-        let key = plan_key(app, variant);
-        self.plans.get_or_compile(&key, || apps::compile_variant(deck, variant))
+        let key = plan_key(app, variant, vlen);
+        self.plans.get_or_compile(&key, || apps::compile_variant_vlen(deck, variant, vlen))
     }
 
-    fn native(&self, app: &str, variant: Variant) -> Result<Arc<NativeModule>, String> {
-        let prog = self.prog(app, variant)?;
-        let key = plan_key(app, variant).tagged("native");
+    fn native(
+        &self,
+        app: &str,
+        variant: Variant,
+        vlen: Option<usize>,
+    ) -> Result<Arc<NativeModule>, String> {
+        let prog = self.prog(app, variant, vlen)?;
+        let key = plan_key(app, variant, vlen).tagged("native");
         // Retrying variant: a cc/dlopen failure may be transient (tmpdir
         // full, compiler hiccup) and must not poison the key pool-wide.
         self.natives
@@ -399,21 +416,25 @@ impl Worker {
         use crate::apps::hydro2d::solver::*;
         let n = job.size;
         let mut state = sod(n, n);
+        if job.engine != Engine::Pjrt {
+            let vl = self.prog("hydro2d", job.variant, job.vlen)?.vector_len();
+            self.metrics.record_vlen(vl);
+        }
         let mut native_sweeper;
         let sweeper: &mut dyn Sweeper = match job.engine {
             Engine::Exec => {
                 // Per-worker cached sweeper: shared plan Arc + a workspace
                 // that stays warm across batched same-key jobs.
-                let key = plan_key("hydro2d", job.variant)
+                let key = plan_key("hydro2d", job.variant, job.vlen)
                     .with_exec(&crate::exec::ExecOptions::default());
                 if !self.exec_sweepers.contains_key(&key) {
-                    let s = ExecSweeper::new(self.prog("hydro2d", job.variant)?);
+                    let s = ExecSweeper::new(self.prog("hydro2d", job.variant, job.vlen)?);
                     self.exec_sweepers.insert(key.clone(), s);
                 }
                 self.exec_sweepers.get_mut(&key).unwrap()
             }
             Engine::Native => {
-                let m = self.native("hydro2d", job.variant)?;
+                let m = self.native("hydro2d", job.variant, job.vlen)?;
                 native_sweeper = SharedNativeSweeper { module: m };
                 &mut native_sweeper
             }
@@ -447,7 +468,12 @@ impl Worker {
             ),
             _ => unreachable!(),
         };
-        let prog = self.prog(&job.app, job.variant)?;
+        let prog = self.prog(&job.app, job.variant, job.vlen)?;
+        if job.engine != Engine::Pjrt {
+            // PJRT runs fixed pre-built artifacts; the compiled plan's
+            // vector length says nothing about what it executes.
+            self.metrics.record_vlen(prog.vector_len());
+        }
         let ext: BTreeMap<String, i64> =
             extents.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
         let len = crate::exec::external_len(&prog, input_name, &ext)?;
@@ -469,7 +495,7 @@ impl Worker {
                 }
             }
             Engine::Native => {
-                let m = self.native(&job.app, job.variant)?;
+                let m = self.native(&job.app, job.variant, job.vlen)?;
                 let mut arrays = inputs.clone();
                 for name in &m.externals {
                     arrays.entry(name.clone()).or_insert_with(|| {
@@ -584,16 +610,29 @@ pub fn distinct_plan_keys(jobs: &[Job]) -> usize {
     jobs.iter().map(|j| j.plan_key()).collect::<std::collections::BTreeSet<_>>().len()
 }
 
-/// Parse a job-trace line: `app,variant,engine,size,steps`.
+/// Parse a job-trace line: `app,variant,engine,size,steps[,vlen]`. The
+/// optional sixth field forces a vector length for that job (`-` or
+/// `deck` keeps the deck default, like omitting it).
 pub fn parse_trace_line(id: u64, line: &str) -> Result<Job, String> {
     let f: Vec<&str> = line.split(',').map(str::trim).collect();
-    if f.len() != 5 {
-        return Err(format!("bad trace line `{line}` (app,variant,engine,size,steps)"));
+    if f.len() != 5 && f.len() != 6 {
+        return Err(format!("bad trace line `{line}` (app,variant,engine,size,steps[,vlen])"));
     }
     let variant = match f[1] {
         "hfav" => Variant::Hfav,
         "autovec" => Variant::Autovec,
         other => return Err(format!("unknown variant `{other}`")),
+    };
+    let vlen = match f.get(5) {
+        None => None,
+        Some(&"-") | Some(&"deck") => None,
+        Some(v) => {
+            let n: usize = v.parse().map_err(|e| format!("vlen: {e}"))?;
+            if n == 0 {
+                return Err("vlen must be >= 1".to_string());
+            }
+            Some(n)
+        }
     };
     Ok(Job {
         id,
@@ -602,6 +641,7 @@ pub fn parse_trace_line(id: u64, line: &str) -> Result<Job, String> {
         engine: f[2].parse()?,
         size: f[3].parse().map_err(|e| format!("size: {e}"))?,
         steps: f[4].parse().map_err(|e| format!("steps: {e}"))?,
+        vlen,
     })
 }
 
@@ -612,11 +652,20 @@ mod tests {
     #[test]
     fn coordinator_runs_mixed_batch() {
         let c = Coordinator::start(2, None);
+        let mk = |id: u64, app: &str, variant: Variant, engine: Engine, size: usize, steps| Job {
+            id,
+            app: app.to_string(),
+            variant,
+            engine,
+            size,
+            steps,
+            vlen: None,
+        };
         let jobs = vec![
-            Job { id: 1, app: "laplace".into(), variant: Variant::Hfav, engine: Engine::Exec, size: 64, steps: 1 },
-            Job { id: 2, app: "normalize".into(), variant: Variant::Autovec, engine: Engine::Exec, size: 48, steps: 1 },
-            Job { id: 3, app: "hydro2d".into(), variant: Variant::Hfav, engine: Engine::Exec, size: 16, steps: 2 },
-            Job { id: 4, app: "laplace".into(), variant: Variant::Hfav, engine: Engine::Native, size: 64, steps: 2 },
+            mk(1, "laplace", Variant::Hfav, Engine::Exec, 64, 1),
+            mk(2, "normalize", Variant::Autovec, Engine::Exec, 48, 1),
+            mk(3, "hydro2d", Variant::Hfav, Engine::Exec, 16, 2),
+            mk(4, "laplace", Variant::Hfav, Engine::Native, 64, 2),
         ];
         let results = c.run_batch(jobs);
         assert_eq!(results.len(), 4);
@@ -645,6 +694,7 @@ mod tests {
                 engine: Engine::Exec,
                 size: 8,
                 steps: 1,
+                vlen: None,
             })
             .recv()
             .unwrap();
@@ -664,6 +714,7 @@ mod tests {
                 engine: Engine::Exec,
                 size: 32,
                 steps: 1,
+                vlen: None,
             })
             .collect();
         let results = c.run_batch(jobs);
@@ -683,7 +734,41 @@ mod tests {
         assert_eq!(j.app, "hydro2d");
         assert_eq!(j.engine, Engine::Native);
         assert_eq!(j.size, 128);
+        assert_eq!(j.vlen, None);
+        let v = parse_trace_line(6, "hydro2d, hfav, native, 128, 10, 8").unwrap();
+        assert_eq!(v.vlen, Some(8));
+        let d = parse_trace_line(7, "laplace, hfav, exec, 64, 1, -").unwrap();
+        assert_eq!(d.vlen, None);
         assert!(parse_trace_line(0, "bad line").is_err());
         assert!(parse_trace_line(0, "a,b,c,d,e").is_err());
+        assert!(parse_trace_line(0, "laplace, hfav, exec, 64, 1, 0").is_err());
+    }
+
+    #[test]
+    fn distinct_vlens_get_distinct_plan_entries() {
+        // Same id → same seeded input, so checksums are comparable.
+        let mk = |vlen: Option<usize>| Job {
+            id: 7,
+            app: "laplace".into(),
+            variant: Variant::Hfav,
+            engine: Engine::Exec,
+            size: 32,
+            steps: 1,
+            vlen,
+        };
+        let jobs = vec![mk(None), mk(Some(1)), mk(Some(4)), mk(Some(8)), mk(Some(4))];
+        assert_eq!(distinct_plan_keys(&jobs), 4, "None, 1, 4, 8");
+        let c = Coordinator::start(2, None);
+        let results = c.run_batch(jobs);
+        assert!(results.iter().all(|r| r.ok), "{results:?}");
+        // Same inputs, same math → identical checksums across vlens.
+        for r in &results[1..] {
+            assert_eq!(r.checksum, results[0].checksum, "vlen changed results");
+        }
+        assert_eq!(c.plans.stats().computes, 4, "{}", c.plans.stats());
+        let rep = c.report(Duration::from_millis(1));
+        assert_eq!(rep.vlen_min, 1);
+        assert_eq!(rep.vlen_max, 8);
+        c.shutdown();
     }
 }

@@ -229,7 +229,10 @@ pub fn domain_shift(dom: &Domain, min_o: i64, max_o: i64) -> Domain {
 
 /// Allocation extents of a terminal array given its required span and the
 /// deck's declared domain for each dim — used for halo accounting.
-pub fn span_words(span: &BTreeMap<String, Domain>, extents: &BTreeMap<String, i64>) -> Result<i64, String> {
+pub fn span_words(
+    span: &BTreeMap<String, Domain>,
+    extents: &BTreeMap<String, i64>,
+) -> Result<i64, String> {
     let mut words = 1i64;
     for d in span.values() {
         let lo = d.lo.eval(extents)?;

@@ -33,11 +33,19 @@ pub enum Mode {
 #[derive(Debug, Clone, Copy)]
 pub struct ExecOptions {
     pub mode: Mode,
+    /// Innermost strip length for lane-fissioned execution (the order of
+    /// vector-expanded code, Fig. 9c): each steady-state callsite runs
+    /// over `strip` consecutive innermost iterations before the next
+    /// callsite starts. `None` follows the plan's effective vector
+    /// length; explicit values are clamped to it (the plan's window
+    /// allocations are only padded for that many lanes). Peeled mode
+    /// only; nests where fission is unsafe fall back to scalar order.
+    pub strip: Option<usize>,
 }
 
 impl Default for ExecOptions {
     fn default() -> Self {
-        ExecOptions { mode: Mode::Peeled }
+        ExecOptions { mode: Mode::Peeled, strip: None }
     }
 }
 
@@ -260,6 +268,11 @@ fn run_inner(
     let mut scratch_in: Vec<f64> = Vec::with_capacity(32);
     let mut scratch_out: Vec<f64> = Vec::with_capacity(16);
 
+    // Strip length: follow the plan's vector expansion unless the caller
+    // narrows it; wider-than-plan strips would outrun the window padding.
+    let plan_vl = prog.vector_len();
+    let strip_opt = opts.strip.unwrap_or(plan_vl).min(plan_vl).max(1) as i64;
+
     for nest in &prog.fd.nests {
         let compiled: Vec<Compiled> = nest
             .members
@@ -268,6 +281,22 @@ fn run_inner(
             .collect::<Result<_, _>>()?;
         let refs: Vec<usize> = (0..compiled.len()).collect();
         let mut idx = vec![0i64; nest.dims.len()];
+        // Lane fission only where it provably preserves the scalar
+        // semantics (same gate the code generators use). Only members in
+        // the innermost loop take part in strips — Pre/Post-phase members
+        // run outside them.
+        let inner_loop_members: Vec<&crate::fusion::Member> = nest
+            .members
+            .iter()
+            .filter(|m| m.roles.last() == Some(&Role::Loop))
+            .collect();
+        let strip = if strip_opt > 1
+            && crate::analysis::lane_fission_safe(&prog.df, &prog.sp, nest, &inner_loop_members)
+        {
+            strip_opt
+        } else {
+            1
+        };
         exec_level(
             &compiled,
             &refs,
@@ -276,6 +305,7 @@ fn run_inner(
             &mut idx,
             &mut buffers[..],
             opts.mode,
+            strip,
             &mut scratch_in,
             &mut scratch_out,
         )?;
@@ -413,6 +443,7 @@ fn exec_level(
     idx: &mut Vec<i64>,
     buffers: &mut [Vec<f64>],
     mode: Mode,
+    strip: i64,
     scratch_in: &mut Vec<f64>,
     scratch_out: &mut Vec<f64>,
 ) -> Result<(), String> {
@@ -443,7 +474,9 @@ fn exec_level(
     let post: Vec<usize> =
         members.iter().copied().filter(|&m| compiled[m].phase_at(level) == Phase::Post).collect();
 
-    exec_level(compiled, &pre, level + 1, nlevels, idx, buffers, mode, scratch_in, scratch_out)?;
+    exec_level(
+        compiled, &pre, level + 1, nlevels, idx, buffers, mode, strip, scratch_in, scratch_out,
+    )?;
 
     if !inl.is_empty() {
         // Loop range: union of member ranges at this level.
@@ -460,8 +493,8 @@ fn exec_level(
                 for t in lo..hi {
                     idx[level] = t;
                     exec_level(
-                        compiled, &inl, level + 1, nlevels, idx, buffers, mode, scratch_in,
-                        scratch_out,
+                        compiled, &inl, level + 1, nlevels, idx, buffers, mode, strip,
+                        scratch_in, scratch_out,
                     )?;
                 }
             }
@@ -493,11 +526,35 @@ fn exec_level(
                     if active_set.is_empty() {
                         continue;
                     }
+                    if strip > 1 && level + 1 == nlevels {
+                        // Lane-fissioned strips (vector-expansion order):
+                        // each member runs over the whole strip before the
+                        // next member starts — the interpreter analogue of
+                        // the emitted simd lane loops.
+                        let mut t = a;
+                        while t < b {
+                            let e = (t + strip).min(b);
+                            for &mi in &active_set {
+                                for tt in t..e {
+                                    idx[level] = tt;
+                                    invoke(
+                                        &compiled[mi],
+                                        idx,
+                                        buffers,
+                                        scratch_in,
+                                        scratch_out,
+                                    )?;
+                                }
+                            }
+                            t = e;
+                        }
+                        continue;
+                    }
                     for t in a..b {
                         idx[level] = t;
                         exec_level(
                             compiled, &active_set, level + 1, nlevels, idx, buffers, mode,
-                            scratch_in, scratch_out,
+                            strip, scratch_in, scratch_out,
                         )?;
                     }
                 }
@@ -505,7 +562,9 @@ fn exec_level(
         }
     }
 
-    exec_level(compiled, &post, level + 1, nlevels, idx, buffers, mode, scratch_in, scratch_out)
+    exec_level(
+        compiled, &post, level + 1, nlevels, idx, buffers, mode, strip, scratch_in, scratch_out,
+    )
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -653,13 +712,16 @@ mod tests {
         let (nj, ni) = (13usize, 17usize);
         let ext = extents(&[("Nj", nj as i64), ("Ni", ni as i64)]);
         // g_cell span: [0, Nj) x [0, Ni).
-        assert_eq!(external_shape(&prog, "g_cell", &ext).unwrap(), vec![(0, nj as i64), (0, ni as i64)]);
+        assert_eq!(
+            external_shape(&prog, "g_cell", &ext).unwrap(),
+            vec![(0, nj as i64), (0, ni as i64)]
+        );
         let u = seeded(nj * ni, 42);
         let mut inputs = BTreeMap::new();
         inputs.insert("g_cell".to_string(), u.clone());
         let want = laplace_ref(&u, nj, ni);
         for mode in [Mode::Peeled, Mode::Guarded] {
-            let out = run(&prog, &reg, &ext, &inputs, ExecOptions { mode }).unwrap();
+            let out = run(&prog, &reg, &ext, &inputs, ExecOptions { mode, strip: None }).unwrap();
             assert_close(&out["g_out"], &want, 1e-12);
         }
     }
@@ -693,7 +755,7 @@ mod tests {
             want[i - 1] = 2.0 * u[i + 1] - 2.0 * u[i - 1];
         }
         for mode in [Mode::Peeled, Mode::Guarded] {
-            let out = run(&prog, &reg, &ext, &inputs, ExecOptions { mode }).unwrap();
+            let out = run(&prog, &reg, &ext, &inputs, ExecOptions { mode, strip: None }).unwrap();
             assert_close(&out["g_d"], &want, 1e-12);
         }
     }
@@ -726,7 +788,7 @@ mod tests {
             }
         }
         for mode in [Mode::Peeled, Mode::Guarded] {
-            let out = run(&prog, &reg, &ext, &inputs, ExecOptions { mode }).unwrap();
+            let out = run(&prog, &reg, &ext, &inputs, ExecOptions { mode, strip: None }).unwrap();
             assert_close(&out["g_out"], &want, 1e-12);
         }
     }
@@ -765,6 +827,43 @@ mod tests {
     }
 
     #[test]
+    fn strip_execution_matches_scalar() {
+        // A vector-expanded plan run with lane-fissioned strips (the
+        // default: strip follows the plan's vector_len) must agree exactly
+        // with forced-scalar iteration order and the reference.
+        let opts = CompileOptions {
+            analysis: crate::analysis::AnalysisOptions {
+                vector_len: Some(4),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let prog = compile_src(testdecks::CHAIN1D, opts).unwrap();
+        assert_eq!(prog.vector_len(), 4);
+        let reg = chain_registry();
+        let n = 27usize;
+        let ext = extents(&[("N", n as i64)]);
+        let u = seeded(n, 3);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("g_u".to_string(), u.clone());
+        let scalar = run(
+            &prog,
+            &reg,
+            &ext,
+            &inputs,
+            ExecOptions { mode: Mode::Peeled, strip: Some(1) },
+        )
+        .unwrap();
+        let strip = run(&prog, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+        assert_close(&strip["g_d"], &scalar["g_d"], 0.0);
+        let mut want = vec![0.0; n - 2];
+        for i in 1..n - 1 {
+            want[i - 1] = 2.0 * u[i + 1] - 2.0 * u[i - 1];
+        }
+        assert_close(&scalar["g_d"], &want, 1e-12);
+    }
+
+    #[test]
     fn workspace_reuse_matches_fresh_runs() {
         let prog = compile_src(testdecks::LAPLACE, CompileOptions::default()).unwrap();
         let reg = laplace_registry();
@@ -775,7 +874,8 @@ mod tests {
         let fresh = run(&prog, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
         let mut ws = Workspace::new();
         for _ in 0..3 {
-            let got = run_with(&prog, &reg, &ext, &inputs, ExecOptions::default(), &mut ws).unwrap();
+            let got =
+                run_with(&prog, &reg, &ext, &inputs, ExecOptions::default(), &mut ws).unwrap();
             assert_close(&got["g_out"], &fresh["g_out"], 0.0);
         }
         assert!(ws.reused > 0, "expected recycling (allocated={})", ws.allocated);

@@ -19,6 +19,8 @@
 //!     outputs: |
 //!       o : laplace(q?[j?][i?])
 //!     body: "o = 0.25*(n + e + s + w) - c;"   # optional, for inlining emitters
+//!     body_rs: "o = 0.25*(n + e + s + w) - c;" # optional Rust-specific body
+//!                                              # (falls back to `body`)
 //! globals:
 //!   inputs: |
 //!     double g_cell[j?][i?] => cell[j?][i?]
@@ -144,6 +146,7 @@ fn parse_kernel(name: &str, node: &Node) -> Result<Rule, String> {
         }
     }
     let body = node.get("body").and_then(|n| n.as_str()).map(str::to_string);
+    let body_rs = node.get("body_rs").and_then(|n| n.as_str()).map(str::to_string);
 
     // Check coverage: every In param bound in inputs, every Out in outputs.
     for p in &params {
@@ -158,19 +161,27 @@ fn parse_kernel(name: &str, node: &Node) -> Result<Rule, String> {
     for (pname, _) in inputs.iter() {
         match params.iter().find(|p| &p.name == pname) {
             Some(p) if p.dir == ParamDir::In => {}
-            Some(_) => return Err(format!("kernel `{name}`: `{pname}` bound as input but declared output")),
+            Some(_) => {
+                return Err(format!(
+                    "kernel `{name}`: `{pname}` bound as input but declared output"
+                ))
+            }
             None => return Err(format!("kernel `{name}`: unknown input param `{pname}`")),
         }
     }
     for (pname, _) in outputs.iter() {
         match params.iter().find(|p| &p.name == pname) {
             Some(p) if p.dir == ParamDir::Out => {}
-            Some(_) => return Err(format!("kernel `{name}`: `{pname}` bound as output but declared input")),
+            Some(_) => {
+                return Err(format!(
+                    "kernel `{name}`: `{pname}` bound as output but declared input"
+                ))
+            }
             None => return Err(format!("kernel `{name}`: unknown output param `{pname}`")),
         }
     }
 
-    Ok(Rule { name: decl_name, params, inputs, outputs, body })
+    Ok(Rule { name: decl_name, params, inputs, outputs, body, body_rs })
 }
 
 /// `n : q?[j?-1][i?]`

@@ -35,6 +35,12 @@ pub struct Rule {
     /// language) used by code generators to inline the kernel. Purely
     /// substitution-based, as in the paper's front-end.
     pub body: Option<String>,
+    /// Optional Rust-specific body for the Rust backend. When absent the
+    /// Rust emitter falls back to `body`, which works for bodies written
+    /// in the expression-level C-that-is-also-Rust subset; kernels using
+    /// C-only syntax (ternaries, `double` declarations, C `for` loops)
+    /// carry an explicit translation here.
+    pub body_rs: Option<String>,
 }
 
 impl Rule {
@@ -120,9 +126,8 @@ mod tests {
 
     #[test]
     fn decl_basic() {
-        let (name, ps) =
-            Rule::parse_declaration("laplace5(float n, float e, float s, float w, float c, float &o);")
-                .unwrap();
+        let decl = "laplace5(float n, float e, float s, float w, float c, float &o);";
+        let (name, ps) = Rule::parse_declaration(decl).unwrap();
         assert_eq!(name, "laplace5");
         assert_eq!(ps.len(), 6);
         assert_eq!(ps[0].dir, ParamDir::In);

@@ -16,13 +16,18 @@ fn usage() -> ! {
     eprintln!(
         "usage: hfav <command> [args]
   generate <deck.yaml|app> [--backend c99|rust|dot-dataflow|dot-inest|schedule] [--variant hfav|autovec]
+      [--vlen auto|N]
   footprint <deck.yaml|app> --extents Ni=512,Nj=512
   run --app <laplace|normalize|cosmo|hydro2d> [--engine exec|native|pjrt] [--variant hfav|autovec]
-      [--size N] [--steps S]
-  serve --trace <file> [--workers N] [--repeat R] [--artifacts DIR]
+      [--size N] [--steps S] [--vlen auto|N]
+  serve --trace <file> [--workers N] [--repeat R] [--artifacts DIR] [--vlen auto|N]
   e2e [--size N] [--steps S]
-  bench <sysinfo|normalization|cosmo|hydro2d|footprint|serving|pjrt|all>
-  smoke [hlo.txt]"
+  bench <sysinfo|normalization|cosmo|hydro2d|footprint|serving|pjrt|all> [--vlen auto|N]
+  smoke [hlo.txt]
+
+  --vlen: vector length for strip-mined codegen (Fig. 9c); `auto` picks
+          the host's SIMD width (runtime-detected), N forces N lanes
+          (1 = scalar), omitted = each deck's declared default."
     );
     std::process::exit(2)
 }
@@ -66,12 +71,27 @@ fn variant_of(rest: &[String]) -> Variant {
     }
 }
 
+/// Parse `--vlen auto|N` into the Option override the plan layer takes.
+fn vlen_of(rest: &[String]) -> Result<Option<usize>, CliError> {
+    match flag(rest, "--vlen").as_deref() {
+        None => Ok(None),
+        Some("auto") => Ok(Some(hfav::analysis::auto_vector_len())),
+        Some(v) => {
+            let n: usize = v.parse().map_err(|e| format!("--vlen: {e}"))?;
+            if n == 0 {
+                return Err("--vlen must be >= 1 (1 = forced scalar)".into());
+            }
+            Ok(Some(n))
+        }
+    }
+}
+
 fn compile_arg(rest: &[String]) -> Result<hfav::plan::Program, CliError> {
     let target = rest.first().map(String::as_str).unwrap_or("laplace");
     let src = load_deck_arg(target)?;
     // Same options path the coordinator's plan cache fingerprints, so the
     // CLI inspects exactly what serving would run.
-    Ok(hfav::apps::compile_variant(&src, variant_of(rest))?)
+    Ok(hfav::apps::compile_variant_vlen(&src, variant_of(rest), vlen_of(rest)?)?)
 }
 
 fn generate(rest: &[String]) -> CliResult {
@@ -119,7 +139,15 @@ fn run(rest: &[String]) -> CliResult {
     let steps: usize = flag(rest, "--steps").unwrap_or_else(|| "10".into()).parse()?;
     let c = Coordinator::start(1, Some(hfav::runtime::default_artifacts_dir()));
     let r = c
-        .submit(Job { id: 0, app, variant: variant_of(rest), engine, size, steps })
+        .submit(Job {
+            id: 0,
+            app,
+            variant: variant_of(rest),
+            engine,
+            size,
+            steps,
+            vlen: vlen_of(rest)?,
+        })
         .recv()?;
     if r.ok {
         println!(
@@ -150,6 +178,13 @@ fn serve(rest: &[String]) -> CliResult {
     let mut template = Vec::new();
     for (i, l) in lines.iter().enumerate() {
         template.push(parse_trace_line(i as u64, l)?);
+    }
+    // `--vlen` overrides every job in the trace (per-job vlens come from
+    // the optional sixth trace field).
+    if let Some(v) = vlen_of(rest)? {
+        for j in template.iter_mut() {
+            j.vlen = Some(v);
+        }
     }
     let jobs = repeat_jobs(&template, repeat);
     println!(
@@ -204,7 +239,7 @@ fn bench(rest: &[String]) -> CliResult {
             hfav::bench::footprint();
         }
         "serving" => {
-            hfav::bench::serving(4, 6);
+            hfav::bench::serving(4, 6, vlen_of(rest)?);
         }
         "pjrt" => {
             hfav::bench::pjrt(&hfav::runtime::default_artifacts_dir())?;
@@ -214,7 +249,7 @@ fn bench(rest: &[String]) -> CliResult {
             hfav::bench::normalization(&sizes_big);
             hfav::bench::cosmo(&sizes_small, 8);
             hfav::bench::hydro2d(&[64, 128, 256], 5);
-            hfav::bench::serving(4, 6);
+            hfav::bench::serving(4, 6, vlen_of(rest)?);
             let _ = hfav::bench::pjrt(&hfav::runtime::default_artifacts_dir());
         }
         other => return Err(format!("unknown bench `{other}`").into()),

@@ -81,7 +81,11 @@ impl Default for Fnv64 {
 pub fn feed_compile_options(h: &mut Fnv64, o: &CompileOptions) {
     h.write_bool(o.fusion.enabled);
     h.write_bool(o.analysis.contraction);
-    h.write_u64(o.analysis.vector_len as u64);
+    // The vector-length override is an Option: `None` (deck default) must
+    // not collide with any forced value, and distinct forced vlens must
+    // get distinct compiled-plan cache entries.
+    h.write_bool(o.analysis.vector_len.is_some());
+    h.write_u64(o.analysis.vector_len.unwrap_or(0) as u64);
     h.write_i64(o.analysis.rotation_slack);
     h.write_bool(o.analysis.pow2_windows);
     h.write_bool(o.analysis.contract_innermost);
@@ -134,6 +138,8 @@ impl PlanKey {
         let mut h = Fnv64(self.fingerprint);
         h.write_str("exec");
         h.write_u64(e.mode as u64);
+        h.write_bool(e.strip.is_some());
+        h.write_u64(e.strip.unwrap_or(0) as u64);
         PlanKey { app: self.app.clone(), variant: self.variant.clone(), fingerprint: h.finish() }
     }
 }
@@ -432,10 +438,29 @@ mod tests {
     fn exec_keys_distinguish_modes() {
         use crate::exec::Mode;
         let k = PlanKey::new("laplace", "hfav", &CompileOptions::default());
-        let a = k.with_exec(&ExecOptions { mode: Mode::Peeled });
-        let b = k.with_exec(&ExecOptions { mode: Mode::Guarded });
+        let a = k.with_exec(&ExecOptions { mode: Mode::Peeled, strip: None });
+        let b = k.with_exec(&ExecOptions { mode: Mode::Guarded, strip: None });
+        let c = k.with_exec(&ExecOptions { mode: Mode::Peeled, strip: Some(4) });
         assert_ne!(a.fingerprint, b.fingerprint);
         assert_ne!(a.fingerprint, k.fingerprint);
+        assert_ne!(a.fingerprint, c.fingerprint);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_vector_lens() {
+        let mk = |vl: Option<usize>| CompileOptions {
+            analysis: crate::analysis::AnalysisOptions { vector_len: vl, ..Default::default() },
+            ..Default::default()
+        };
+        let fps: Vec<u64> = [None, Some(1), Some(4), Some(8)]
+            .into_iter()
+            .map(|vl| compile_fingerprint(&mk(vl)))
+            .collect();
+        for i in 0..fps.len() {
+            for j in i + 1..fps.len() {
+                assert_ne!(fps[i], fps[j], "vlen options {i} and {j} collide");
+            }
+        }
     }
 
     #[test]

@@ -38,12 +38,12 @@ pub struct Program {
 }
 
 /// Compile a deck.
+///
+/// `opts.analysis.vector_len` is an `Option` override: `None` uses the
+/// deck's declared `vector_len`, `Some(n)` forces `n` lanes (so
+/// `Some(1)` explicitly forces scalar codegen on a vectorized deck). The
+/// resolved value is reported by [`Program::vector_len`].
 pub fn compile(deck: Deck, opts: CompileOptions) -> Result<Program, String> {
-    let mut opts = opts;
-    // The deck's vector_len applies unless the caller overrode it.
-    if opts.analysis.vector_len == 1 && deck.vector_len > 1 {
-        opts.analysis.vector_len = deck.vector_len;
-    }
     let mut df = crate::dataflow::build(&deck)?;
     // In/out chaining before fusion (inserts synthetic roll callsites).
     analysis::chain_inouts(&deck, &mut df)?;
@@ -51,7 +51,9 @@ pub fn compile(deck: Deck, opts: CompileOptions) -> Result<Program, String> {
         let inputs: Vec<_> = df
             .vars
             .iter()
-            .filter(|v| matches!(v.terminal, Terminal::Input { .. }) && !df.reads_of[v.id].is_empty())
+            .filter(|v| {
+                matches!(v.terminal, Terminal::Input { .. }) && !df.reads_of[v.id].is_empty()
+            })
             .map(|v| v.id)
             .collect();
         for v in inputs {
@@ -74,6 +76,15 @@ pub fn compile_src(src: &str, opts: CompileOptions) -> Result<Program, String> {
 }
 
 impl Program {
+    /// Effective vector length this program was analyzed (and must be
+    /// emitted/executed) with: the caller's override if one was given,
+    /// else the deck's declared `vector_len`. Storage windows were padded
+    /// for exactly this many lanes, so the code generators and the strip
+    /// executor must use the same value.
+    pub fn vector_len(&self) -> usize {
+        crate::analysis::resolve_vector_len(&self.deck, &self.opts.analysis)
+    }
+
     /// Names and spans of required external input arrays:
     /// (storage name, dims, per-dim half-open bounds).
     pub fn external_inputs(&self) -> Vec<(String, Vec<String>, Vec<crate::ir::Domain>)> {
@@ -190,6 +201,48 @@ mod tests {
         assert_eq!(ins[0].0, "g_cell");
         let outs = prog.external_outputs();
         assert_eq!(outs[0].0, "g_out");
+    }
+
+    #[test]
+    fn vector_len_override_is_explicit() {
+        // Deck declares vector_len 8; no override → 8 lanes.
+        let src = format!("{}vector_len: 8\n", testdecks::CHAIN1D);
+        let deck_default = compile_src(&src, CompileOptions::default()).unwrap();
+        assert_eq!(deck_default.vector_len(), 8);
+        // Some(1) forces scalar even though the deck asks for 8.
+        let forced_scalar = compile_src(
+            &src,
+            CompileOptions {
+                analysis: crate::analysis::AnalysisOptions {
+                    vector_len: Some(1),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(forced_scalar.vector_len(), 1);
+        // Forced-scalar storage matches a plain scalar compile.
+        let plain = compile_src(testdecks::CHAIN1D, CompileOptions::default()).unwrap();
+        let dbl = |p: &Program| {
+            let v = p.df.var("dbl(u)").unwrap().id;
+            p.sp.storage_of(v).sizes.clone()
+        };
+        assert_eq!(dbl(&forced_scalar), dbl(&plain));
+        assert_ne!(dbl(&deck_default), dbl(&plain));
+        // Some(4) overrides the deck default in the other direction.
+        let forced4 = compile_src(
+            &src,
+            CompileOptions {
+                analysis: crate::analysis::AnalysisOptions {
+                    vector_len: Some(4),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(forced4.vector_len(), 4);
     }
 
     #[test]

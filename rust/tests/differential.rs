@@ -1,0 +1,220 @@
+//! Differential test harness (the vectorization safety net): every app
+//! deck × variant × engine × vector length must agree with the
+//! hand-written scalar reference within 1e-12.
+//!
+//! * apps: hydro2d, cosmo, normalization
+//! * variants: Hfav (fused + contracted + pipelined), Autovec (unfused)
+//! * engines: interpreter executor, generated C (cc + dlopen), generated
+//!   Rust (rustc --crate-type cdylib + dlopen)
+//! * vector lengths: 1 (scalar), 4, 8 — forced through the same
+//!   `Option<usize>` override the coordinator's plan cache fingerprints
+//!
+//! The generated-Rust engine is skipped (with a note) when no `rustc` is
+//! on PATH; under `cargo test` one always is.
+
+use hfav::apps::{self, Variant};
+use hfav::codegen::native::{self, CcOptions, RustcOptions};
+use hfav::exec::{self, ExecOptions};
+use hfav::plan::Program;
+use std::collections::BTreeMap;
+
+const VLENS: [usize; 3] = [1, 4, 8];
+const TOL: f64 = 1e-12;
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Eng {
+    Interp,
+    NativeC,
+    GenRust,
+}
+
+impl Eng {
+    fn label(self) -> &'static str {
+        match self {
+            Eng::Interp => "interpreter",
+            Eng::NativeC => "native-c",
+            Eng::GenRust => "generated-rust",
+        }
+    }
+}
+
+fn engines() -> Vec<Eng> {
+    let mut v = vec![Eng::Interp, Eng::NativeC];
+    if native::rustc_available() {
+        v.push(Eng::GenRust);
+    } else {
+        eprintln!("differential: no rustc on PATH — generated-Rust engine skipped");
+    }
+    v
+}
+
+fn compile(deck: &str, variant: Variant, vlen: usize) -> Program {
+    apps::compile_variant_vlen(deck, variant, Some(vlen))
+        .unwrap_or_else(|e| panic!("compile {variant:?} vlen {vlen}: {e}"))
+}
+
+fn build_module(prog: &Program, eng: Eng) -> native::NativeModule {
+    match eng {
+        Eng::NativeC => native::build(prog, &CcOptions::default())
+            .unwrap_or_else(|e| panic!("cc build failed: {e}")),
+        Eng::GenRust => native::build_rust(prog, &RustcOptions::default())
+            .unwrap_or_else(|e| panic!("rustc build failed: {e}")),
+        Eng::Interp => unreachable!(),
+    }
+}
+
+/// Run a stencil-shaped app on one engine; returns its external outputs.
+fn run_stencil(
+    prog: &Program,
+    reg: &hfav::exec::registry::Registry,
+    eng: Eng,
+    ext: &BTreeMap<String, i64>,
+    inputs: &BTreeMap<String, Vec<f64>>,
+) -> BTreeMap<String, Vec<f64>> {
+    match eng {
+        Eng::Interp => exec::run(prog, reg, ext, inputs, ExecOptions::default()).unwrap(),
+        _ => {
+            let module = build_module(prog, eng);
+            let mut arrays = inputs.clone();
+            for name in &module.externals {
+                if !arrays.contains_key(name) {
+                    let len = exec::external_len(prog, name, ext).unwrap();
+                    arrays.insert(name.clone(), vec![0.0; len]);
+                }
+            }
+            module.run(ext, &mut arrays).unwrap();
+            let out_names: Vec<String> =
+                prog.external_outputs().into_iter().map(|(n, _, _)| n).collect();
+            arrays.into_iter().filter(|(k, _)| out_names.contains(k)).collect()
+        }
+    }
+}
+
+#[test]
+fn differential_normalization() {
+    let (nj, ni) = (7usize, 26usize);
+    let q = apps::seeded(nj * (ni + 1), 11);
+    let mut want = vec![0.0; nj * ni];
+    apps::normalization::reference(&q, nj, ni, &mut want);
+    let mut ext = BTreeMap::new();
+    ext.insert("Nj".to_string(), nj as i64);
+    ext.insert("Ni".to_string(), ni as i64);
+    let mut inputs = BTreeMap::new();
+    inputs.insert("g_q".to_string(), q);
+    let reg = apps::normalization::registry();
+    let engines = engines();
+    for variant in [Variant::Hfav, Variant::Autovec] {
+        for vlen in VLENS {
+            let prog = compile(apps::normalization::DECK, variant, vlen);
+            assert_eq!(prog.vector_len(), vlen);
+            for &eng in &engines {
+                let out = run_stencil(&prog, &reg, eng, &ext, &inputs);
+                let err = apps::max_err(&out["g_out"], &want);
+                assert!(
+                    err < TOL,
+                    "normalize {variant:?} vlen {vlen} {}: err {err:.2e}",
+                    eng.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn differential_cosmo() {
+    let (nk, nj, ni) = (2usize, 11usize, 13usize);
+    let u = apps::seeded(nk * nj * ni, 5);
+    let mut want = vec![0.0; nk * (nj - 4) * (ni - 4)];
+    apps::cosmo::reference(&u, nk, nj, ni, &mut want);
+    let mut ext = BTreeMap::new();
+    ext.insert("Nk".to_string(), nk as i64);
+    ext.insert("Nj".to_string(), nj as i64);
+    ext.insert("Ni".to_string(), ni as i64);
+    let mut inputs = BTreeMap::new();
+    inputs.insert("g_u".to_string(), u);
+    let reg = apps::cosmo::registry();
+    let engines = engines();
+    for variant in [Variant::Hfav, Variant::Autovec] {
+        for vlen in VLENS {
+            let prog = compile(apps::cosmo::DECK, variant, vlen);
+            for &eng in &engines {
+                let out = run_stencil(&prog, &reg, eng, &ext, &inputs);
+                let err = apps::max_err(&out["g_out"], &want);
+                assert!(
+                    err < TOL,
+                    "cosmo {variant:?} vlen {vlen} {}: err {err:.2e}",
+                    eng.label()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn differential_hydro2d() {
+    use hfav::apps::hydro2d::solver::*;
+    use hfav::apps::hydro2d::DECK;
+    let (nx, ny, steps) = (32usize, 6usize, 2usize);
+    // Reference trajectory: the hand-written unfused scalar sweeps.
+    let mut ref_state = sod(nx, ny);
+    let mut reference = RefSweeper;
+    for _ in 0..steps {
+        step(&mut ref_state, 1.0 / nx as f64, 0.4, &mut reference).unwrap();
+    }
+    let engines = engines();
+    for variant in [Variant::Hfav, Variant::Autovec] {
+        for vlen in VLENS {
+            let prog = compile(DECK, variant, vlen);
+            for &eng in &engines {
+                let mut sweeper: Box<dyn Sweeper> = match eng {
+                    Eng::Interp => Box::new(ExecSweeper::new(prog.clone())),
+                    _ => Box::new(NativeSweeper { module: build_module(&prog, eng) }),
+                };
+                let mut state = sod(nx, ny);
+                for _ in 0..steps {
+                    step(&mut state, 1.0 / nx as f64, 0.4, sweeper.as_mut()).unwrap();
+                }
+                let fields: [(&[f64], &[f64], &str); 4] = [
+                    (&state.rho, &ref_state.rho, "rho"),
+                    (&state.rhou, &ref_state.rhou, "rhou"),
+                    (&state.rhov, &ref_state.rhov, "rhov"),
+                    (&state.e, &ref_state.e, "E"),
+                ];
+                for (got, want, name) in fields {
+                    let err = apps::max_err(got, want);
+                    assert!(
+                        err < TOL,
+                        "hydro2d {variant:?} vlen {vlen} {} field {name}: err {err:.2e}",
+                        eng.label()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Strip-mining must not reassociate: the interpreter and the generated
+/// Rust engine (neither contracts FP) agree bit-for-bit on laplace at
+/// every vlen. (The C engine is held to the 1e-12 bound above instead —
+/// `cc -O3` may fuse multiply-adds.)
+#[test]
+fn differential_interp_vs_rust_bitwise_on_laplace() {
+    if !native::rustc_available() {
+        eprintln!("differential: no rustc on PATH — bitwise check skipped");
+        return;
+    }
+    let n = 24usize;
+    let mut ext = BTreeMap::new();
+    ext.insert("Nj".to_string(), n as i64);
+    ext.insert("Ni".to_string(), n as i64);
+    let u = apps::seeded(n * n, 3);
+    let mut inputs = BTreeMap::new();
+    inputs.insert("g_cell".to_string(), u);
+    let reg = apps::laplace::registry();
+    for vlen in VLENS {
+        let prog = compile(apps::laplace::DECK, Variant::Hfav, vlen);
+        let a = run_stencil(&prog, &reg, Eng::Interp, &ext, &inputs);
+        let b = run_stencil(&prog, &reg, Eng::GenRust, &ext, &inputs);
+        assert_eq!(a["g_out"], b["g_out"], "vlen {vlen}: generated Rust diverged bitwise");
+    }
+}

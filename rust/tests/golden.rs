@@ -1,0 +1,120 @@
+//! Golden snapshot tests for generated code: the C99 and Rust emissions
+//! for a small pipelined deck, at vlen 1 (scalar peeled loops) and
+//! vlen 4 (strip-mined + in-register rotation), are pinned under
+//! `tests/golden/` so any emitter change shows up as a reviewable diff.
+//!
+//! Workflow:
+//! * mismatch → the test fails and prints the path; run with
+//!   `UPDATE_GOLDEN=1 cargo test --test golden` to regenerate, then
+//!   review and commit the diff;
+//! * missing file (fresh emitter target in a new checkout) → the file is
+//!   created from the current emission and the test passes with a note —
+//!   commit the generated file to pin it.
+
+use hfav::plan::{compile_src, CompileOptions, Program};
+use std::path::PathBuf;
+
+/// A 1D two-stage pipelined chain: `dbl` runs one iteration ahead of
+/// `diff`, so the emission exercises peeling, rolling windows and (at
+/// vlen 4) strip-mined lane loops with window staging.
+const DECK: &str = r#"
+name: chain1d
+iteration:
+  order: [i]
+  domains:
+    i: [1, N-1]
+kernels:
+  dbl:
+    declaration: dbl(double a, double &b);
+    inputs: |
+      a : u?[i?]
+    outputs: |
+      b : dbl(u?[i?])
+    body: "b = 2.0*a;"
+  diff:
+    declaration: diff(double l, double r, double &d);
+    inputs: |
+      l : dbl(u?[i?-1])
+      r : dbl(u?[i?+1])
+    outputs: |
+      d : diff(u?[i?])
+    body: "d = r - l;"
+globals:
+  inputs: |
+    double g_u[i?] => u[i?]
+  outputs: |
+    diff(u[i]) => double g_d[i]
+"#;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+fn compile(vlen: usize) -> Program {
+    compile_src(
+        DECK,
+        CompileOptions {
+            analysis: hfav::analysis::AnalysisOptions {
+                vector_len: Some(vlen),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+fn check(name: &str, got: &str) {
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    let update = std::env::var("UPDATE_GOLDEN").ok().as_deref() == Some("1");
+    if update || !path.exists() {
+        std::fs::write(&path, got).unwrap_or_else(|e| panic!("write {}: {e}", path.display()));
+        if !update {
+            eprintln!("golden: created {} — commit it to pin the emission", path.display());
+        }
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        want,
+        got,
+        "generated code changed vs {} — review the diff and regenerate \
+         with UPDATE_GOLDEN=1 if intended",
+        path.display()
+    );
+}
+
+#[test]
+fn golden_c99_vlen1() {
+    check("chain1d_vlen1.c", &hfav::codegen::c99::emit(&compile(1)).unwrap());
+}
+
+#[test]
+fn golden_c99_vlen4() {
+    check("chain1d_vlen4.c", &hfav::codegen::c99::emit(&compile(4)).unwrap());
+}
+
+#[test]
+fn golden_rust_vlen1() {
+    check("chain1d_vlen1.rs", &hfav::codegen::rs::emit(&compile(1)).unwrap());
+}
+
+#[test]
+fn golden_rust_vlen4() {
+    check("chain1d_vlen4.rs", &hfav::codegen::rs::emit(&compile(4)).unwrap());
+}
+
+/// Structural assertions that hold regardless of snapshot churn — the
+/// properties reviewers should look for in the goldens.
+#[test]
+fn golden_structure() {
+    let c1 = hfav::codegen::c99::emit(&compile(1)).unwrap();
+    let c4 = hfav::codegen::c99::emit(&compile(4)).unwrap();
+    assert!(!c1.contains("strip-mined"), "scalar emission must stay scalar");
+    assert!(c4.contains("strip-mined by 4 lanes"), "{c4}");
+    assert!(c4.contains("#pragma omp simd"), "{c4}");
+    let r4 = hfav::codegen::rs::emit(&compile(4)).unwrap();
+    assert!(r4.contains("while hfav_l < 4"), "{r4}");
+}

@@ -46,6 +46,7 @@ fn pjrt_jobs_fail_gracefully_without_backend() {
             engine: Engine::Pjrt,
             size: 64,
             steps: 1,
+            vlen: None,
         })
         .recv()
         .unwrap();
@@ -63,6 +64,7 @@ fn pjrt_jobs_fail_gracefully_without_backend() {
             engine: Engine::Exec,
             size: 32,
             steps: 1,
+            vlen: None,
         })
         .recv()
         .unwrap();

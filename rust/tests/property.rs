@@ -153,10 +153,16 @@ fn check_deck(seed: u64, ndims: usize, nstages: usize) {
         let len = exec::external_len(&fused, &name, &ext).unwrap();
         inputs.insert(name, rng.f64s(len));
     }
-    let base = exec::run(&naive, &reg, &ext, &inputs, ExecOptions { mode: Mode::Peeled })
-        .unwrap_or_else(|e| panic!("seed {seed}: naive run failed: {e}\n{deck}"));
+    let base = exec::run(
+        &naive,
+        &reg,
+        &ext,
+        &inputs,
+        ExecOptions { mode: Mode::Peeled, strip: None },
+    )
+    .unwrap_or_else(|e| panic!("seed {seed}: naive run failed: {e}\n{deck}"));
     for mode in [Mode::Peeled, Mode::Guarded] {
-        let got = exec::run(&fused, &reg, &ext, &inputs, ExecOptions { mode })
+        let got = exec::run(&fused, &reg, &ext, &inputs, ExecOptions { mode, strip: None })
             .unwrap_or_else(|e| panic!("seed {seed} {mode:?}: fused run failed: {e}\n{deck}"));
         for (k, v) in &base {
             let err = max_err(v, &got[k]);
@@ -236,6 +242,153 @@ fn prop_vector_expansion_preserves_semantics() {
             assert!(max_err(v, &rb[k]) < 1e-14, "seed {seed}: vector expansion changed results");
         }
     }
+}
+
+#[test]
+fn prop_vector_expanded_windows_are_pow2_and_cover_lanes() {
+    // For random chain decks × slack × vlen: every rolling window's alloc
+    // is a power of two at least the logical window, and vector-expanded
+    // innermost windows leave room for a full strip of lanes.
+    use hfav::analysis::{AnalysisOptions, DimSize};
+    use hfav::plan::{compile_src, CompileOptions};
+    for seed in 700..740 {
+        let mut rng = Rng::new(seed);
+        let (deck, reg) = gen_chain_deck(&mut rng, 1, 1 + (seed % 3) as usize);
+        let vl = [1usize, 2, 4, 8][(seed % 4) as usize];
+        let slack = (seed % 3) as i64;
+        let opts = CompileOptions {
+            analysis: AnalysisOptions {
+                vector_len: Some(vl),
+                rotation_slack: slack,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let prog = compile_src(&deck, opts).unwrap();
+        for s in &prog.sp.storages {
+            for sz in &s.sizes {
+                if let DimSize::Window { w, alloc } = sz {
+                    assert!(*alloc >= *w, "seed {seed}: alloc {alloc} < logical {w}\n{deck}");
+                    assert!(
+                        (*alloc as u64).is_power_of_two(),
+                        "seed {seed}: alloc {alloc} not pow2\n{deck}"
+                    );
+                    if vl > 1 {
+                        assert!(
+                            *w >= vl as i64,
+                            "seed {seed}: window {w} lacks lane room (vl {vl})\n{deck}"
+                        );
+                    }
+                }
+            }
+        }
+        // The expanded plan still computes the scalar answer (strips are
+        // the default execution order for vector plans).
+        let scalar = compile_variant(&deck, Variant::Hfav).unwrap();
+        let ext = extents_for(1, 30);
+        let mut inputs = BTreeMap::new();
+        for (name, _, _) in scalar.external_inputs() {
+            let len = exec::external_len(&scalar, &name, &ext).unwrap();
+            inputs.insert(name, rng.f64s(len));
+        }
+        let a = exec::run(&scalar, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+        let b = exec::run(&prog, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+        for (k, v) in &a {
+            assert!(
+                max_err(v, &b[k]) < 1e-14,
+                "seed {seed} vl {vl}: vector expansion changed results\n{deck}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_rotation_strips_never_read_stale_slots() {
+    // Pure model of the emitted strip schedule: a producer writing
+    // position t+head into slot (t+head) & mask, lane-fissioned by `vl`,
+    // with consumers reading offsets within the reuse window. Under the
+    // vector-expanded allocation (alloc ≥ w + vl − 1, pow2) no slot is
+    // ever overwritten before its last reader — i.e. rotation never reads
+    // a slot before it was written with the expected position.
+    for seed in 600..680u64 {
+        let mut rng = Rng::new(seed);
+        let w = 1 + rng.below(6) as i64;
+        let slack = rng.below(3) as i64;
+        let vl = [1i64, 2, 4, 8, 16][rng.below(5) as usize];
+        let head = rng.offset(2);
+        // Mirrors analysis::contract_sizes.
+        let logical = if w <= 1 {
+            if vl > 1 {
+                vl
+            } else {
+                1
+            }
+        } else {
+            w + slack + vl - 1
+        };
+        if logical <= 1 {
+            continue;
+        }
+        let alloc = (logical as u64).next_power_of_two() as i64;
+        let mask = alloc - 1;
+        let oldest = head - w + 1;
+        let nreads = 1 + rng.below(3);
+        let offsets: Vec<i64> =
+            (0..nreads).map(|_| oldest + rng.below(w as u64) as i64).collect();
+        let n = 48i64;
+        let mut mem = vec![i64::MIN; alloc as usize];
+        let mut t = 0i64;
+        while t < n {
+            let e = (t + vl).min(n);
+            for l in t..e {
+                let p = l + head;
+                mem[(p & mask) as usize] = p;
+            }
+            for l in t..e {
+                for &o in &offsets {
+                    let q = l + o;
+                    if q < head {
+                        continue; // prologue positions never produced
+                    }
+                    assert_eq!(
+                        mem[(q & mask) as usize],
+                        q,
+                        "seed {seed} w={w} slack={slack} vl={vl} head={head} o={o}: \
+                         slot clobbered (or unwritten) before read"
+                    );
+                }
+            }
+            t = e;
+        }
+    }
+}
+
+#[test]
+fn rotation_without_expansion_clobbers() {
+    // Negative control: a window-3 buffer (alloc 4) driven by an 8-lane
+    // strip overwrites slots the consumer still needs — the failure mode
+    // the vector-expanded allocation exists to prevent.
+    let (vl, head) = (8i64, 1i64);
+    let alloc = 4i64;
+    let mask = alloc - 1;
+    let mut clobbered = false;
+    let mut mem = vec![i64::MIN; alloc as usize];
+    let mut t = 0i64;
+    while t < 32 {
+        let e = (t + vl).min(32);
+        for l in t..e {
+            let p = l + head;
+            mem[(p & mask) as usize] = p;
+        }
+        for l in t..e {
+            let q = l - 1; // oldest read of the window-3 pattern
+            if q >= head && mem[(q & mask) as usize] != q {
+                clobbered = true;
+            }
+        }
+        t = e;
+    }
+    assert!(clobbered, "expected clobber without vector-expanded allocation");
 }
 
 #[test]

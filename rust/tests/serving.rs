@@ -12,7 +12,7 @@ use hfav::plan::CompileOptions;
 use std::sync::Arc;
 
 fn job(id: u64, app: &str, variant: Variant, engine: Engine, size: usize, steps: usize) -> Job {
-    Job { id, app: app.to_string(), variant, engine, size, steps }
+    Job { id, app: app.to_string(), variant, engine, size, steps, vlen: None }
 }
 
 /// N jobs over K distinct (app, variant, options) keys → exactly K
@@ -54,6 +54,32 @@ hydro2d, hfav, exec, 12, 1
     let report = c.report(std::time::Duration::from_millis(1));
     assert_eq!(report.completed, n as u64);
     assert_eq!(report.plans.computes, 5);
+    c.shutdown();
+}
+
+/// Per-job vector lengths in a trace: each distinct vlen is its own plan
+/// key (compiled once), and vectorized plans produce identical results.
+#[test]
+fn vlen_trace_jobs_compile_per_vlen() {
+    let trace = "\
+laplace, hfav, exec, 32, 1
+laplace, hfav, exec, 32, 1, 1
+laplace, hfav, exec, 32, 1, 4
+laplace, hfav, exec, 32, 1, 8
+";
+    // Same id everywhere → same seeded inputs → comparable checksums.
+    let jobs: Vec<Job> = trace
+        .lines()
+        .map(|l| parse_trace_line(0, l).unwrap())
+        .collect();
+    assert_eq!(distinct_plan_keys(&jobs), 4);
+    let c = Coordinator::start(2, None);
+    let results = c.run_batch(jobs);
+    for r in &results {
+        assert!(r.ok, "{}", r.detail);
+        assert_eq!(r.checksum, results[0].checksum, "vlen changed results");
+    }
+    assert_eq!(c.plans.stats().computes, 4, "{}", c.plans.stats());
     c.shutdown();
 }
 
