@@ -5,7 +5,8 @@
 //! cargo run --release --example cosmo_diffusion
 //! ```
 
-use hfav::apps::{compile_variant, cosmo, max_err, seeded, Variant};
+use hfav::apps::{cosmo, max_err, seeded, Variant};
+use hfav::plan::PlanSpec;
 use std::collections::BTreeMap;
 
 fn main() -> Result<(), String> {
@@ -19,7 +20,7 @@ fn main() -> Result<(), String> {
     cosmo::stella(&u, nk, nj, ni, &mut out_st);
     println!("STELLA vs autovec: max err {:.2e}", max_err(&out_ref, &out_st));
 
-    let prog = compile_variant(cosmo::DECK, Variant::Hfav)?;
+    let prog = PlanSpec::app("cosmo").compile()?;
     println!("\nHFAV contraction notes:");
     for n in &prog.sp.notes {
         println!("  {n}");
@@ -42,7 +43,8 @@ fn main() -> Result<(), String> {
     big.insert("Nj".to_string(), 512i64);
     big.insert("Ni".to_string(), 512i64);
     let fused = prog.footprint_words(&big)?;
-    let naive = compile_variant(cosmo::DECK, Variant::Autovec)?.footprint_words(&big)?;
+    let naive =
+        PlanSpec::app("cosmo").variant(Variant::Autovec).compile()?.footprint_words(&big)?;
     println!("\nintermediate footprint @ 8x512x512: autovec={naive} words, hfav={fused} words");
     println!("cosmo_diffusion OK");
     Ok(())

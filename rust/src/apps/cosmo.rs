@@ -202,9 +202,14 @@ pub fn stella(u: &[f64], nk: usize, nj: usize, ni: usize, out: &mut [f64]) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::apps::{compile_variant, max_err, seeded, Variant};
+    use crate::apps::{max_err, seeded, Variant};
     use crate::exec::{self, ExecOptions};
+    use crate::plan::{PlanSpec, Program};
     use std::collections::BTreeMap;
+
+    fn compile_variant(deck: &str, v: Variant) -> Result<Program, String> {
+        PlanSpec::deck_src(deck).variant(v).compile()
+    }
 
     fn ext(nk: usize, nj: usize, ni: usize) -> BTreeMap<String, i64> {
         [("Nk", nk), ("Nj", nj), ("Ni", ni)]

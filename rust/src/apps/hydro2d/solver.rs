@@ -101,6 +101,7 @@ pub fn transpose(a: &[f64], rows: usize, cols: usize) -> Vec<f64> {
 /// updated interior (`rows × n`). The "normal" velocity component is
 /// `rhou`; callers swap components for the y-pass.
 pub trait Sweeper {
+    #[allow(clippy::too_many_arguments)]
     fn sweep(
         &mut self,
         rho: &[f64],
@@ -552,7 +553,12 @@ pub fn totals(s: &State) -> (f64, f64) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::apps::{compile_variant, max_err, Variant};
+    use crate::apps::{max_err, Variant};
+    use crate::plan::PlanSpec;
+
+    fn compile_variant(deck: &str, v: Variant) -> Result<Program, String> {
+        PlanSpec::deck_src(deck).variant(v).compile()
+    }
 
     #[test]
     fn sweepers_agree_one_pass() {

@@ -57,8 +57,9 @@ pub fn reference(u: &[f64], nj: usize, ni: usize) -> Vec<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::apps::{compile_variant, max_err, seeded, Variant};
+    use crate::apps::{max_err, seeded, Variant};
     use crate::exec::{self, ExecOptions};
+    use crate::plan::PlanSpec;
     use std::collections::BTreeMap;
 
     #[test]
@@ -72,7 +73,7 @@ mod tests {
         let mut inputs = BTreeMap::new();
         inputs.insert("g_cell".to_string(), u);
         for v in [Variant::Hfav, Variant::Autovec] {
-            let prog = compile_variant(DECK, v).unwrap();
+            let prog = PlanSpec::app("laplace").variant(v).compile().unwrap();
             let out =
                 exec::run(&prog, &registry(), &ext, &inputs, ExecOptions::default()).unwrap();
             assert!(max_err(&out["g_out"], &want) < 1e-13);

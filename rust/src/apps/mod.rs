@@ -4,15 +4,17 @@
 //! kernel registry for the executor, hand-written baselines
 //! (`autovec`-shaped unfused loops, plus the paper's comparison variants),
 //! and workload generators.
+//!
+//! Compilation goes through [`crate::plan::PlanSpec`]: a spec names a
+//! deck (builtin app, file, or inline source), a [`Variant`], and the
+//! tuning knobs, and its canonical fingerprint is the plan-cache key.
 
 pub mod cosmo;
 pub mod hydro2d;
 pub mod laplace;
 pub mod normalization;
 
-use crate::analysis::AnalysisOptions;
-use crate::fusion::FusionOptions;
-use crate::plan::{compile_src, CompileOptions, Program};
+use crate::exec::registry::Registry;
 
 /// The two program shapes the paper compares everywhere.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -34,55 +36,42 @@ impl Variant {
     }
 }
 
-/// The [`CompileOptions`] each standard variant compiles under — exposed
-/// so callers (coordinator, plan cache) can fingerprint them.
-pub fn variant_options(v: Variant) -> CompileOptions {
-    match v {
-        Variant::Hfav => CompileOptions::default(),
-        Variant::Autovec => CompileOptions {
-            fusion: FusionOptions { enabled: false },
-            analysis: AnalysisOptions { contraction: false, ..Default::default() },
-            ..Default::default()
-        },
+impl std::str::FromStr for Variant {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "hfav" => Ok(Variant::Hfav),
+            "autovec" => Ok(Variant::Autovec),
+            other => Err(format!("unknown variant `{other}` (hfav|autovec)")),
+        }
     }
 }
 
-/// [`variant_options`] with an explicit vector-length override: `None`
-/// keeps the deck default, `Some(n)` forces `n` lanes (including
-/// `Some(1)` for forced-scalar). This is the options path the
-/// coordinator's plan cache fingerprints, so distinct vlens get distinct
-/// compiled-plan entries.
-pub fn variant_options_vlen(v: Variant, vlen: Option<usize>) -> CompileOptions {
-    let mut opts = variant_options(v);
-    opts.analysis.vector_len = vlen;
-    opts
+/// Deck lookup for the built-in apps.
+pub fn deck_of(app: &str) -> Result<&'static str, String> {
+    match app {
+        "laplace" => Ok(laplace::DECK),
+        "normalize" => Ok(normalization::DECK),
+        "cosmo" => Ok(cosmo::DECK),
+        "hydro2d" => Ok(hydro2d::DECK),
+        _ => Err(format!("unknown app `{app}` (laplace|normalize|cosmo|hydro2d)")),
+    }
 }
 
-/// Compile a deck source in a standard shape at an explicit vector length.
-pub fn compile_variant_vlen(
-    src: &str,
-    v: Variant,
-    vlen: Option<usize>,
-) -> Result<Program, String> {
-    compile_src(src, variant_options_vlen(v, vlen))
-}
+/// Names of the built-in apps, in `deck_of` order.
+pub const APP_NAMES: [&str; 4] = ["laplace", "normalize", "cosmo", "hydro2d"];
 
-/// Compile with the "HFAV + Tuning" options (paper §5.3): full fusion,
-/// but innermost-dim windows stay full rows so the steady state
-/// auto-vectorizes (the manual-tuning step the paper applied to COSMO).
-pub fn compile_tuned(src: &str) -> Result<Program, String> {
-    compile_src(
-        src,
-        CompileOptions {
-            analysis: AnalysisOptions { contract_innermost: false, ..Default::default() },
-            ..Default::default()
-        },
-    )
-}
-
-/// Compile a deck source in one of the two standard shapes.
-pub fn compile_variant(src: &str, v: Variant) -> Result<Program, String> {
-    compile_src(src, variant_options(v))
+/// One registry holding every built-in app's kernels (the names are
+/// globally unique across apps), so the interpreter backend can execute
+/// any builtin deck — and any external deck file whose kernels reuse
+/// these names. Unknown kernels still fail at execution time with the
+/// kernel's name in the error.
+pub fn builtin_registry() -> Registry {
+    let mut r = laplace::registry();
+    r.extend(normalization::registry());
+    r.extend(cosmo::registry());
+    r.extend(hydro2d::registry());
+    r
 }
 
 /// Deterministic pseudo-random fill in [0, 1) (xorshift64*).
@@ -105,4 +94,34 @@ pub fn max_err(a: &[f64], b: &[f64]) -> f64 {
         .zip(b.iter())
         .map(|(x, y)| (x - y).abs() / (1.0 + x.abs().max(y.abs())))
         .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deck_lookup_and_names() {
+        for app in APP_NAMES {
+            assert!(deck_of(app).is_ok(), "{app}");
+        }
+        let e = deck_of("nope").unwrap_err();
+        assert!(e.contains("unknown app"), "{e}");
+    }
+
+    #[test]
+    fn builtin_registry_covers_all_apps() {
+        let reg = builtin_registry();
+        for name in ["laplace5", "flux", "norm_acc", "ustage", "flux_x", "riemann", "trace"] {
+            assert!(reg.get(name).is_some(), "missing kernel `{name}`");
+        }
+    }
+
+    #[test]
+    fn variant_parse_round_trip() {
+        for v in [Variant::Hfav, Variant::Autovec] {
+            assert_eq!(v.label().parse::<Variant>().unwrap(), v);
+        }
+        assert!("x".parse::<Variant>().unwrap_err().contains("unknown variant"));
+    }
 }

@@ -127,9 +127,14 @@ pub fn fused_by_hand(q: &[f64], nj: usize, ni: usize, out: &mut [f64]) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::apps::{compile_variant, max_err, seeded, Variant};
+    use crate::apps::{max_err, seeded, Variant};
     use crate::exec::{self, ExecOptions};
+    use crate::plan::{PlanSpec, Program};
     use std::collections::BTreeMap;
+
+    fn compile_variant(deck: &str, v: Variant) -> Result<Program, String> {
+        PlanSpec::deck_src(deck).variant(v).compile()
+    }
 
     #[test]
     fn all_variants_agree() {

@@ -4,6 +4,7 @@
 //! CSV block for plotting.
 
 use crate::apps::{self, Variant};
+use crate::plan::PlanSpec;
 use std::collections::BTreeMap;
 use std::time::Instant;
 
@@ -77,7 +78,7 @@ pub fn normalization(sizes: &[usize]) -> Vec<String> {
         row("autovec", n, t_auto, (n * n) as f64);
         csv.push(format!("normalize,{n},autovec,{:.3}", (n * n) as f64 / t_auto / 1e6));
         // HFAV: generated C, cc -O3, dlopen.
-        let prog = apps::compile_variant(apps::normalization::DECK, Variant::Hfav).unwrap();
+        let prog = PlanSpec::app("normalize").compile().unwrap();
         let module = crate::codegen::native::build(&prog, &Default::default()).unwrap();
         let mut ext = BTreeMap::new();
         ext.insert("Nj".to_string(), n as i64);
@@ -108,7 +109,7 @@ pub fn cosmo(sizes: &[usize], nk: usize) -> Vec<String> {
         row("STELLA", n, t_st, cells);
         csv.push(format!("cosmo,{n},stella,{:.3}", cells / t_st / 1e6));
 
-        let prog = apps::compile_variant(apps::cosmo::DECK, Variant::Hfav).unwrap();
+        let prog = PlanSpec::app("cosmo").compile().unwrap();
         let module = crate::codegen::native::build(&prog, &Default::default()).unwrap();
         let mut ext = BTreeMap::new();
         ext.insert("Nk".to_string(), nk as i64);
@@ -123,7 +124,7 @@ pub fn cosmo(sizes: &[usize], nk: usize) -> Vec<String> {
 
         // HFAV + Tuning (paper §5.3): innermost windows kept as full
         // rows so the steady state vectorizes.
-        let tuned = apps::compile_tuned(apps::cosmo::DECK).unwrap();
+        let tuned = PlanSpec::app("cosmo").tuned(true).compile().unwrap();
         let module_t = crate::codegen::native::build(&tuned, &Default::default()).unwrap();
         let mut arrays_t = BTreeMap::new();
         arrays_t.insert("g_u".to_string(), u.clone());
@@ -158,12 +159,11 @@ pub fn hydro2d(sizes: &[usize], steps: usize) -> Vec<String> {
                 0 => Box::new(RefSweeper),
                 1 => Box::new(HandvecSweeper::new()),
                 2 => {
-                    let prog =
-                        apps::compile_variant(crate::apps::hydro2d::DECK, Variant::Hfav).unwrap();
+                    let prog = PlanSpec::app("hydro2d").compile().unwrap();
                     Box::new(NativeSweeper::new(&prog).unwrap())
                 }
                 _ => {
-                    let prog = apps::compile_tuned(crate::apps::hydro2d::DECK).unwrap();
+                    let prog = PlanSpec::app("hydro2d").tuned(true).compile().unwrap();
                     Box::new(NativeSweeper::new(&prog).unwrap())
                 }
             };
@@ -197,8 +197,8 @@ pub fn footprint() -> Vec<String> {
     for (name, deck, ext) in cases {
         let extents: BTreeMap<String, i64> =
             ext.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
-        let fused = apps::compile_variant(deck, Variant::Hfav).unwrap();
-        let naive = apps::compile_variant(deck, Variant::Autovec).unwrap();
+        let fused = PlanSpec::deck_src(deck).compile().unwrap();
+        let naive = PlanSpec::deck_src(deck).variant(Variant::Autovec).compile().unwrap();
         let fw = fused.footprint_words(&extents).unwrap();
         let nw = naive.footprint_words(&extents).unwrap();
         let line = format!(
@@ -222,23 +222,17 @@ pub fn footprint() -> Vec<String> {
 /// throughput ratio; the cache shape (distinct keys, hit rate) is
 /// identical in both runs, isolating the codegen effect.
 pub fn serving(workers: usize, repeat: usize, vlen: Option<usize>) -> Vec<String> {
-    use crate::coordinator::{distinct_plan_keys, repeat_jobs, Coordinator, Engine, Job};
+    use crate::coordinator::{distinct_plan_keys, repeat_jobs, Coordinator, Job};
     let template: Vec<Job> = [
-        ("laplace", Variant::Hfav, Engine::Exec, 64, 1),
-        ("laplace", Variant::Autovec, Engine::Exec, 64, 1),
-        ("normalize", Variant::Hfav, Engine::Exec, 64, 1),
-        ("cosmo", Variant::Hfav, Engine::Exec, 24, 1),
-        ("hydro2d", Variant::Hfav, Engine::Exec, 16, 1),
+        ("laplace", Variant::Hfav, 64, 1),
+        ("laplace", Variant::Autovec, 64, 1),
+        ("normalize", Variant::Hfav, 64, 1),
+        ("cosmo", Variant::Hfav, 24, 1),
+        ("hydro2d", Variant::Hfav, 16, 1),
     ]
     .iter()
-    .map(|&(app, variant, engine, size, steps)| Job {
-        id: 0,
-        app: app.to_string(),
-        variant,
-        engine,
-        size,
-        steps,
-        vlen: None,
+    .map(|&(app, variant, size, steps)| {
+        Job::new(0, PlanSpec::app(app).variant(variant), "exec", size, steps)
     })
     .collect();
     let jobs = repeat_jobs(&template, repeat);
@@ -273,14 +267,14 @@ pub fn serving(workers: usize, repeat: usize, vlen: Option<usize>) -> Vec<String
         println!("Serving, scalar vs vector — hydro2d native, vlen 1 vs {v}:");
         let serve_at = |force: usize| -> (f64, f64, u64) {
             let template: Vec<Job> = (0..2 * workers.max(1))
-                .map(|i| Job {
-                    id: i as u64,
-                    app: "hydro2d".to_string(),
-                    variant: Variant::Hfav,
-                    engine: Engine::Native,
-                    size: 128,
-                    steps: 2,
-                    vlen: Some(force),
+                .map(|i| {
+                    Job::new(
+                        i as u64,
+                        PlanSpec::app("hydro2d").vlen_resolved(Some(force)),
+                        "native",
+                        128,
+                        2,
+                    )
                 })
                 .collect();
             let jobs = repeat_jobs(&template, repeat.max(2));

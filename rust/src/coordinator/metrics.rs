@@ -92,8 +92,10 @@ pub struct ServeReport {
     pub wall: Duration,
     /// Plan cache: `computes` is the number of pipeline compilations.
     pub plans: CacheStatsSnapshot,
-    /// Native-module cache: `computes` is the number of cc invocations.
-    pub natives: CacheStatsSnapshot,
+    /// Prepared-executable cache: `computes` is the number of
+    /// `Backend::prepare` calls (cc/rustc builds, interpreter setups,
+    /// artifact bindings).
+    pub prepared: CacheStatsSnapshot,
     pub buffers_reused: u64,
     pub buffers_allocated: u64,
     /// Smallest effective vector length among served plans (0 = none).
@@ -136,8 +138,8 @@ impl std::fmt::Display for ServeReport {
             self.wall,
             self.vlen_label()
         )?;
-        writeln!(f, "plan cache:   {}", self.plans)?;
-        writeln!(f, "native cache: {}", self.natives)?;
+        writeln!(f, "plan cache:     {}", self.plans)?;
+        writeln!(f, "prepared execs: {}", self.prepared)?;
         write!(
             f,
             "exec buffers: reused={} allocated={}",
@@ -186,7 +188,7 @@ mod tests {
             total_cells: 1_000_000,
             wall: Duration::from_secs(1),
             plans: CacheStatsSnapshot::default(),
-            natives: CacheStatsSnapshot::default(),
+            prepared: CacheStatsSnapshot::default(),
             buffers_reused: 3,
             buffers_allocated: 4,
             vlen_min: 1,

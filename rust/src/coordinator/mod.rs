@@ -1,12 +1,20 @@
 //! Job coordinator: the serving substrate. A leader/worker runtime that
-//! dispatches grid-update jobs to the available engines (interpreter
-//! executor, compiled-C native modules, PJRT executables) on top of a
-//! **shared compiled-plan cache** ([`crate::plan::cache`]): each distinct
-//! `(app, variant, options)` key is compiled exactly once for the whole
-//! pool, and the resulting `Arc<Program>` (and `Arc<NativeModule>`) is
-//! shared across workers. `run_batch` groups same-key jobs so consecutive
-//! runs on a worker reuse its executor buffer workspace, and
-//! [`metrics`] aggregates latency, throughput and cache counters.
+//! dispatches grid-update jobs to the registered execution backends
+//! ([`crate::engine`]) on top of a **shared compiled-plan cache**
+//! ([`crate::plan::cache`]) and a **shared prepared-executable cache**:
+//! each distinct [`PlanSpec`] fingerprint is compiled exactly once for
+//! the whole pool, each `(plan, backend)` pair is prepared (cc/rustc +
+//! dlopen, artifact resolution) exactly once, and the resulting
+//! `Arc`-shared plans/executables serve every worker. `run_batch` groups
+//! same-key jobs so consecutive runs on a worker reuse its executor
+//! buffer workspace, and [`metrics`] aggregates latency, throughput and
+//! cache counters.
+//!
+//! There is no per-engine dispatch here: jobs carry a backend *name*,
+//! the [`engine::registry`] resolves it, and every engine — interpreter,
+//! native C, generated Rust, PJRT — runs through the same
+//! `Backend::prepare` / `Executable::run` path. Jobs may target built-in
+//! apps or external deck files ([`target_spec`]).
 //!
 //! The paper's contribution is the *generator*; the coordinator is the
 //! driver that makes the generated artifacts deployable: compile once,
@@ -16,62 +24,42 @@ pub mod metrics;
 
 pub use self::metrics::{Metrics, ServeReport};
 
-use crate::apps::{self, Variant};
-use crate::codegen::native::NativeModule;
+use crate::apps::Variant;
+use crate::engine::{self, Executable, PrepareCtx};
 use crate::exec;
 use crate::plan::cache::{OnceMap, PlanCache, PlanKey};
-use crate::plan::Program;
-use crate::runtime::Runtime;
-use std::collections::BTreeMap;
+use crate::plan::{PlanSpec, Program, Vlen};
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-/// Which engine executes a job.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
-pub enum Engine {
-    /// Interpreter executor over the HFAV schedule.
-    Exec,
-    /// Generated C compiled with the system compiler, dlopen'd.
-    Native,
-    /// AOT JAX/Pallas artifact on the PJRT CPU client.
-    Pjrt,
-}
-
-impl std::str::FromStr for Engine {
-    type Err = String;
-    fn from_str(s: &str) -> Result<Self, String> {
-        match s {
-            "exec" => Ok(Engine::Exec),
-            "native" => Ok(Engine::Native),
-            "pjrt" => Ok(Engine::Pjrt),
-            _ => Err(format!("unknown engine `{s}` (exec|native|pjrt)")),
-        }
-    }
-}
-
-/// A grid-update job.
+/// A grid-update job: *what* to compile ([`PlanSpec`]) plus *where* to
+/// run it (a backend registry name) and the workload shape. Every
+/// compile-relevant option lives inside the spec — the job cannot
+/// express an option the plan-cache fingerprint does not cover.
 #[derive(Debug, Clone)]
 pub struct Job {
     pub id: u64,
-    /// `laplace` | `normalize` | `cosmo` | `hydro2d`
-    pub app: String,
-    pub variant: Variant,
-    pub engine: Engine,
+    /// What to compile: deck target, variant, vector length, tuning.
+    pub spec: PlanSpec,
+    /// Execution backend, by [`engine::registry`] name
+    /// (`exec` | `native` | `rust` | `pjrt`).
+    pub backend: String,
     /// Problem size (per side).
     pub size: usize,
     /// Number of repeated applications (time steps / sweeps).
     pub steps: usize,
-    /// Vector-length override: `None` = deck default, `Some(n)` forces
-    /// `n` lanes (`Some(1)` forces scalar). Folded into the plan-cache
-    /// fingerprint, so distinct vlens compile (and cache) separately.
-    pub vlen: Option<usize>,
 }
 
 impl Job {
+    pub fn new(id: u64, spec: PlanSpec, backend: &str, size: usize, steps: usize) -> Job {
+        Job { id, spec, backend: backend.to_string(), size, steps }
+    }
+
     /// The plan-cache key this job compiles under.
     pub fn plan_key(&self) -> PlanKey {
-        plan_key(&self.app, self.variant, self.vlen)
+        self.spec.plan_key()
     }
 }
 
@@ -87,30 +75,36 @@ pub struct JobResult {
     pub checksum: f64,
 }
 
-/// Key for the plan cache: app + variant label + options fingerprint
-/// (which folds in the vector-length override).
-fn plan_key(app: &str, variant: Variant, vlen: Option<usize>) -> PlanKey {
-    PlanKey::new(app, variant.label(), &apps::variant_options_vlen(variant, vlen))
+/// Resolve a trace/CLI target string into a [`PlanSpec`]: a built-in
+/// app name, or an external deck file — anything with a path separator
+/// or a `.yaml`/`.yml` suffix (read eagerly, so missing files fail
+/// here), plus any other name that exists as a file on disk.
+pub fn target_spec(target: &str) -> Result<PlanSpec, String> {
+    if crate::apps::deck_of(target).is_ok() {
+        return Ok(PlanSpec::app(target));
+    }
+    if target.contains('/') || target.ends_with(".yaml") || target.ends_with(".yml") {
+        return PlanSpec::deck_file(target);
+    }
+    if std::path::Path::new(target).is_file() {
+        return PlanSpec::deck_file(target);
+    }
+    // Unknown bare name that is not a file: keep it as an app spec so it
+    // fails at compile time with the canonical `unknown app` error.
+    Ok(PlanSpec::app(target))
 }
 
 /// Depth of the cosmo 3-D grid served by the coordinator (the `Nk`
-/// extent `Worker::run_stencil` passes and `cells_per_step` accounts).
+/// extent the grid driver passes for decks named `cosmo`).
 const COSMO_NK: i64 = 4;
-
-/// Grid cells one application of `job` updates. cosmo runs a 3-D grid
-/// ([`COSMO_NK`] planes); the others are 2-D.
-fn cells_per_step(job: &Job) -> u64 {
-    let planes = if job.app == "cosmo" { COSMO_NK as u64 } else { 1 };
-    planes * (job.size * job.size) as u64
-}
 
 /// Same-key batching: jobs agreeing on this tuple run back-to-back on one
 /// worker, so its plan lookup is hot and its executor workspace buffers
 /// fit without reallocation.
-type BatchKey = (String, Variant, Engine, usize, Option<usize>);
+type BatchKey = (PlanKey, String, usize);
 
 fn batch_key(job: &Job) -> BatchKey {
-    (job.app.clone(), job.variant, job.engine, job.size, job.vlen)
+    (job.plan_key(), job.backend.clone(), job.size)
 }
 
 enum Msg {
@@ -127,8 +121,11 @@ pub struct Coordinator {
     pub metrics: Arc<Metrics>,
     /// Shared compiled-plan cache: one compile per distinct key, pool-wide.
     pub plans: Arc<PlanCache>,
-    /// Shared native-module cache (generated C → cc → dlopen, once).
-    pub natives: Arc<OnceMap<PlanKey, NativeModule>>,
+    /// Shared prepared-executable cache: one `Backend::prepare` per
+    /// distinct `(plan key, backend)` pair, pool-wide — interpreter
+    /// setups, compiled C/Rust modules, and PJRT artifact bindings all
+    /// live here.
+    pub prepared: Arc<OnceMap<PlanKey, Box<dyn Executable>>>,
 }
 
 impl Coordinator {
@@ -148,19 +145,17 @@ impl Coordinator {
         let (tx, rx) = mpsc::channel::<Msg>();
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::default());
-        let natives: Arc<OnceMap<PlanKey, NativeModule>> = Arc::new(OnceMap::new());
+        let prepared: Arc<OnceMap<PlanKey, Box<dyn Executable>>> = Arc::new(OnceMap::new());
         let mut workers = Vec::new();
         let nworkers = nworkers.max(1);
         for wid in 0..nworkers {
             let rx = rx.clone();
-            // PJRT clients are not Send: each worker owns its own runtime,
-            // created lazily (inside its thread) on the first PJRT job.
             let artifacts = artifacts_dir.clone();
             let plans = plans.clone();
-            let natives = natives.clone();
+            let prepared = prepared.clone();
             let metrics = metrics.clone();
             workers.push(std::thread::spawn(move || {
-                let mut worker = Worker::new(wid, artifacts, plans, natives, metrics);
+                let mut worker = Worker::new(wid, artifacts, plans, prepared, metrics);
                 loop {
                     let msg = { rx.lock().unwrap().recv() };
                     match msg {
@@ -179,7 +174,7 @@ impl Coordinator {
                 }
             }));
         }
-        Coordinator { tx, workers, nworkers, metrics, plans, natives }
+        Coordinator { tx, workers, nworkers, metrics, plans, prepared }
     }
 
     /// Submit a job; returns a receiver for its result.
@@ -237,7 +232,7 @@ impl Coordinator {
             total_cells: self.metrics.total_cells.load(Ordering::Relaxed),
             wall,
             plans: self.plans.stats(),
-            natives: self.natives.stats(),
+            prepared: self.prepared.stats(),
             buffers_reused: self.metrics.buffers_reused.load(Ordering::Relaxed),
             buffers_allocated: self.metrics.buffers_allocated.load(Ordering::Relaxed),
             vlen_min: self.metrics.vlen_min.load(Ordering::Relaxed),
@@ -255,23 +250,17 @@ impl Coordinator {
     }
 }
 
-/// Per-worker state. Plans and native modules live in the pool-shared
-/// caches; the worker owns only its (non-Send) PJRT runtime and its
-/// executor buffer workspace.
+/// Per-worker state. Plans and prepared executables live in the
+/// pool-shared caches; the worker owns only its executor buffer
+/// workspace (and, transitively, any per-thread backend state).
 struct Worker {
     #[allow(dead_code)]
     id: usize,
     artifacts: Option<std::path::PathBuf>,
-    runtime: Option<Runtime>,
-    /// First runtime-creation failure, replayed for later PJRT jobs.
-    runtime_err: Option<String>,
     plans: Arc<PlanCache>,
-    natives: Arc<OnceMap<PlanKey, NativeModule>>,
+    prepared: Arc<OnceMap<PlanKey, Box<dyn Executable>>>,
     metrics: Arc<Metrics>,
     ws: exec::Workspace,
-    /// Cached hydro2d interpreter sweepers (plan Arc + warm workspace),
-    /// one per variant, so batched hydro Exec jobs reuse buffers too.
-    exec_sweepers: BTreeMap<PlanKey, crate::apps::hydro2d::solver::ExecSweeper>,
     flushed_reused: u64,
     flushed_allocated: u64,
 }
@@ -281,268 +270,173 @@ impl Worker {
         id: usize,
         artifacts: Option<std::path::PathBuf>,
         plans: Arc<PlanCache>,
-        natives: Arc<OnceMap<PlanKey, NativeModule>>,
+        prepared: Arc<OnceMap<PlanKey, Box<dyn Executable>>>,
         metrics: Arc<Metrics>,
     ) -> Worker {
         Worker {
             id,
             artifacts,
-            runtime: None,
-            runtime_err: None,
             plans,
-            natives,
+            prepared,
             metrics,
             ws: exec::Workspace::new(),
-            exec_sweepers: BTreeMap::new(),
             flushed_reused: 0,
             flushed_allocated: 0,
         }
     }
 
-    /// Monotonic buffer counters across this worker's workspaces (the
-    /// stencil workspace plus every cached hydro sweeper's).
-    fn ws_totals(&self) -> (u64, u64) {
-        let mut reused = self.ws.reused;
-        let mut allocated = self.ws.allocated;
-        for s in self.exec_sweepers.values() {
-            reused += s.ws.reused;
-            allocated += s.ws.allocated;
-        }
-        (reused, allocated)
-    }
-
-    /// Lazily create this worker's PJRT runtime (clients are not Send).
-    /// Failures are remembered so a trace full of PJRT jobs fails each one
-    /// cheaply instead of re-reading the manifest per job.
-    fn runtime(&mut self) -> Result<&Runtime, String> {
-        if let Some(e) = &self.runtime_err {
-            return Err(e.clone());
-        }
-        if self.runtime.is_none() {
-            let made = self
-                .artifacts
-                .clone()
-                .ok_or_else(|| "no artifacts dir — PJRT unavailable".to_string())
-                .and_then(Runtime::cpu);
-            match made {
-                Ok(rt) => self.runtime = Some(rt),
-                Err(e) => {
-                    self.runtime_err = Some(e.clone());
-                    return Err(e);
-                }
-            }
-        }
-        Ok(self.runtime.as_ref().unwrap())
-    }
-
-    fn prog(
-        &self,
-        app: &str,
-        variant: Variant,
-        vlen: Option<usize>,
-    ) -> Result<Arc<Program>, String> {
-        let deck = deck_of(app)?;
-        let key = plan_key(app, variant, vlen);
-        self.plans.get_or_compile(&key, || apps::compile_variant_vlen(deck, variant, vlen))
-    }
-
-    fn native(
-        &self,
-        app: &str,
-        variant: Variant,
-        vlen: Option<usize>,
-    ) -> Result<Arc<NativeModule>, String> {
-        let prog = self.prog(app, variant, vlen)?;
-        let key = plan_key(app, variant, vlen).tagged("native");
-        // Retrying variant: a cc/dlopen failure may be transient (tmpdir
-        // full, compiler hiccup) and must not poison the key pool-wide.
-        self.natives
-            .get_or_compute_retrying(&key, || {
-                crate::codegen::native::build(&prog, &Default::default())
-            })
-    }
-
     /// Run one job: execute, record metrics, flush workspace counters.
     fn process(&mut self, job: &Job) -> JobResult {
-        let cells = cells_per_step(job) * job.steps.max(1) as u64;
-        let res = self.run(job);
+        let (res, cells) = self.run(job);
         self.metrics.record(&res, cells);
-        let (reused, allocated) = self.ws_totals();
-        let dr = reused - self.flushed_reused;
-        let da = allocated - self.flushed_allocated;
-        self.flushed_reused = reused;
-        self.flushed_allocated = allocated;
+        let dr = self.ws.reused - self.flushed_reused;
+        let da = self.ws.allocated - self.flushed_allocated;
+        self.flushed_reused = self.ws.reused;
+        self.flushed_allocated = self.ws.allocated;
         self.metrics.buffers_reused.fetch_add(dr, Ordering::Relaxed);
         self.metrics.buffers_allocated.fetch_add(da, Ordering::Relaxed);
         res
     }
 
-    fn run(&mut self, job: &Job) -> JobResult {
+    fn run(&mut self, job: &Job) -> (JobResult, u64) {
         let start = Instant::now();
         let out = self.dispatch(job);
         let latency = start.elapsed();
         match out {
-            Ok(checksum) => {
-                let cells = (cells_per_step(job) * job.steps.max(1) as u64) as f64;
-                JobResult {
+            Ok((checksum, cells_per_step)) => {
+                let cells = cells_per_step * job.steps.max(1) as u64;
+                let res = JobResult {
                     id: job.id,
                     ok: true,
                     detail: String::new(),
                     latency,
-                    cups: cells / latency.as_secs_f64(),
+                    cups: cells as f64 / latency.as_secs_f64(),
                     checksum,
-                }
+                };
+                (res, cells)
             }
-            Err(e) => JobResult {
-                id: job.id,
-                ok: false,
-                detail: e,
-                latency,
-                cups: 0.0,
-                checksum: 0.0,
-            },
+            Err(e) => {
+                let res = JobResult {
+                    id: job.id,
+                    ok: false,
+                    detail: e,
+                    latency,
+                    cups: 0.0,
+                    checksum: 0.0,
+                };
+                // Failed jobs contribute no cells to the throughput
+                // counters ([`Metrics::record`] ignores them).
+                (res, 0)
+            }
         }
     }
 
-    fn dispatch(&mut self, job: &Job) -> Result<f64, String> {
-        match job.app.as_str() {
-            "hydro2d" => self.run_hydro(job),
-            "laplace" | "normalize" | "cosmo" => self.run_stencil(job),
-            other => Err(format!("unknown app `{other}`")),
-        }
-    }
-
-    fn run_hydro(&mut self, job: &Job) -> Result<f64, String> {
-        use crate::apps::hydro2d::solver::*;
-        let n = job.size;
-        let mut state = sod(n, n);
-        if job.engine != Engine::Pjrt {
-            let vl = self.prog("hydro2d", job.variant, job.vlen)?.vector_len();
-            self.metrics.record_vlen(vl);
-        }
-        let mut native_sweeper;
-        let sweeper: &mut dyn Sweeper = match job.engine {
-            Engine::Exec => {
-                // Per-worker cached sweeper: shared plan Arc + a workspace
-                // that stays warm across batched same-key jobs.
-                let key = plan_key("hydro2d", job.variant, job.vlen)
-                    .with_exec(&crate::exec::ExecOptions::default());
-                if !self.exec_sweepers.contains_key(&key) {
-                    let s = ExecSweeper::new(self.prog("hydro2d", job.variant, job.vlen)?);
-                    self.exec_sweepers.insert(key.clone(), s);
-                }
-                self.exec_sweepers.get_mut(&key).unwrap()
-            }
-            Engine::Native => {
-                let m = self.native("hydro2d", job.variant, job.vlen)?;
-                native_sweeper = SharedNativeSweeper { module: m };
-                &mut native_sweeper
-            }
-            Engine::Pjrt => {
-                return Err("hydro2d PJRT path requires fixed artifact shape; use bench pjrt".into())
-            }
-        };
-        for _ in 0..job.steps {
-            step(&mut state, 1.0 / n as f64, 0.4, sweeper)?;
-        }
-        Ok(state.rho.iter().sum())
-    }
-
-    fn run_stencil(&mut self, job: &Job) -> Result<f64, String> {
-        let n = job.size;
-        let (reg, extents, input_name): (_, Vec<(&str, i64)>, &str) = match job.app.as_str() {
-            "laplace" => (
-                crate::apps::laplace::registry(),
-                vec![("Nj", n as i64), ("Ni", n as i64)],
-                "g_cell",
-            ),
-            "normalize" => (
-                crate::apps::normalization::registry(),
-                vec![("Nj", n as i64), ("Ni", n as i64)],
-                "g_q",
-            ),
-            "cosmo" => (
-                crate::apps::cosmo::registry(),
-                vec![("Nk", COSMO_NK), ("Nj", n as i64), ("Ni", n as i64)],
-                "g_u",
-            ),
-            _ => unreachable!(),
-        };
-        let prog = self.prog(&job.app, job.variant, job.vlen)?;
-        if job.engine != Engine::Pjrt {
+    /// The single execution path every engine goes through: resolve the
+    /// backend by name, compile the spec (plan cache), prepare the
+    /// executable (prepared cache), then drive the app loop against the
+    /// uniform [`Executable`] surface. Returns the checksum and the
+    /// cells one application updated (from the grid the driver actually
+    /// ran, so throughput metering is exact for any deck shape).
+    fn dispatch(&mut self, job: &Job) -> Result<(f64, u64), String> {
+        let backend = engine::registry().get(&job.backend)?;
+        let key = job.plan_key();
+        let prog = self.plans.get_or_compile(&key, || job.spec.compile())?;
+        if backend.executes_plan() {
             // PJRT runs fixed pre-built artifacts; the compiled plan's
             // vector length says nothing about what it executes.
             self.metrics.record_vlen(prog.vector_len());
         }
-        let ext: BTreeMap<String, i64> =
-            extents.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
-        let len = crate::exec::external_len(&prog, input_name, &ext)?;
-        let mut inputs = BTreeMap::new();
-        inputs.insert(input_name.to_string(), apps::seeded(len, job.id));
-        let mut checksum = 0.0;
-        match job.engine {
-            Engine::Exec => {
-                for _ in 0..job.steps.max(1) {
-                    let out = crate::exec::run_with(
-                        &prog,
-                        &reg,
-                        &ext,
-                        &inputs,
-                        Default::default(),
-                        &mut self.ws,
-                    )?;
-                    checksum = out.values().next().map(|v| v.iter().sum()).unwrap_or(0.0);
-                }
-            }
-            Engine::Native => {
-                let m = self.native(&job.app, job.variant, job.vlen)?;
-                let mut arrays = inputs.clone();
-                for name in &m.externals {
-                    arrays.entry(name.clone()).or_insert_with(|| {
-                        vec![0.0; crate::exec::external_len(&prog, name, &ext).unwrap_or(0)]
-                    });
-                }
-                for _ in 0..job.steps.max(1) {
-                    m.run(&ext, &mut arrays)?;
-                }
-                checksum = arrays
-                    .iter()
-                    .filter(|(k, _)| !inputs.contains_key(*k))
-                    .map(|(_, v)| v.iter().sum::<f64>())
-                    .sum();
-            }
-            Engine::Pjrt => {
-                let rt = self.runtime()?;
-                let variant = if job.variant == Variant::Hfav { "fused" } else { "unfused" };
-                let name = format!(
-                    "{}_{}",
-                    if job.app == "normalize" { "normalize" } else { job.app.as_str() },
-                    variant
-                );
-                let exe = rt.load(&name)?;
-                // PJRT artifacts are fixed-shape; synthesize matching input.
-                let shapes = exe.meta.inputs.clone();
-                let bufs: Vec<Vec<f64>> = shapes
-                    .iter()
-                    .map(|s| apps::seeded(s.iter().product(), job.id))
-                    .collect();
-                let refs: Vec<&[f64]> = bufs.iter().map(|b| b.as_slice()).collect();
-                for _ in 0..job.steps.max(1) {
-                    let out = exe.run(&refs)?;
-                    checksum = out[0].iter().sum();
-                }
+        let ctx = PrepareCtx { artifacts: self.artifacts.clone() };
+        // Retrying cache: a cc/rustc/dlopen failure may be transient
+        // (tmpdir full, compiler hiccup) and must not poison the key
+        // pool-wide.
+        let exe = self
+            .prepared
+            .get_or_compute_retrying(&key.tagged(backend.name()), || {
+                backend.prepare(&job.spec, &prog, &ctx)
+            })?;
+        // Driver selection keys on the *compiled deck's* name, so an
+        // external deck file with the same content as a builtin serves
+        // through the same driver (and produces the same results and
+        // throughput accounting).
+        if prog.deck.name == "hydro2d_sweep" {
+            let checksum = self.run_hydro(job, &**exe)?;
+            Ok((checksum, (job.size * job.size) as u64))
+        } else {
+            self.run_grid(job, &prog, &**exe)
+        }
+    }
+
+    /// Hydro2D driver: Sod setup + dimensionally-split time loop, with
+    /// the prepared executable as the sweep implementation.
+    fn run_hydro(&mut self, job: &Job, exe: &dyn Executable) -> Result<f64, String> {
+        use crate::apps::hydro2d::solver::{sod, step};
+        let n = job.size;
+        let mut state = sod(n, n);
+        let mut sweeper = ExecutableSweeper { exe, ws: &mut self.ws };
+        for _ in 0..job.steps {
+            step(&mut state, 1.0 / n as f64, 0.4, &mut sweeper)?;
+        }
+        Ok(state.rho.iter().sum())
+    }
+
+    /// Generic grid driver (built-in stencil apps *and* external deck
+    /// files): every extent is set to the job size (cosmo's `Nk` to the
+    /// served plane count), external inputs are seeded from the job id,
+    /// outputs zero-filled, and the checksum sums the pure outputs.
+    /// Returns `(checksum, cells per application)` — the product of the
+    /// extents actually executed, so 3-D decks are metered as 3-D.
+    fn run_grid(
+        &mut self,
+        job: &Job,
+        prog: &Program,
+        exe: &dyn Executable,
+    ) -> Result<(f64, u64), String> {
+        let mut ext: BTreeMap<String, i64> = crate::codegen::c99::extent_names(prog)
+            .into_iter()
+            .map(|name| (name, job.size as i64))
+            .collect();
+        if prog.deck.name == "cosmo" {
+            ext.insert("Nk".to_string(), COSMO_NK);
+        }
+        let cells_per_step: u64 = ext.values().map(|&v| v.max(1) as u64).product();
+        let input_names: BTreeSet<String> =
+            prog.external_inputs().into_iter().map(|(n, _, _)| n).collect();
+        let output_names: BTreeSet<String> =
+            prog.external_outputs().into_iter().map(|(n, _, _)| n).collect();
+        let mut arrays = BTreeMap::new();
+        for name in &input_names {
+            let len = exec::external_len(prog, name, &ext)?;
+            arrays.insert(name.clone(), crate::apps::seeded(len, job.id));
+        }
+        for name in &output_names {
+            if !arrays.contains_key(name) {
+                let len = exec::external_len(prog, name, &ext)?;
+                arrays.insert(name.clone(), vec![0.0; len]);
             }
         }
-        Ok(checksum)
+        for _ in 0..job.steps.max(1) {
+            exe.run(&ext, &mut arrays, &mut self.ws)?;
+        }
+        let mut checksum = 0.0;
+        for name in output_names.difference(&input_names) {
+            checksum += arrays
+                .get(name)
+                .map(|v| v.iter().sum::<f64>())
+                .ok_or_else(|| format!("backend produced no output `{name}`"))?;
+        }
+        Ok((checksum, cells_per_step))
     }
 }
 
-/// Native sweeper over a shared module (coordinator cache).
-struct SharedNativeSweeper {
-    module: Arc<NativeModule>,
+/// Hydro2D sweep over any prepared [`Executable`] — the one adapter
+/// between the solver's `Sweeper` interface and the engine API.
+struct ExecutableSweeper<'a> {
+    exe: &'a dyn Executable,
+    ws: &'a mut exec::Workspace,
 }
 
-impl crate::apps::hydro2d::solver::Sweeper for SharedNativeSweeper {
+impl crate::apps::hydro2d::solver::Sweeper for ExecutableSweeper<'_> {
     fn sweep(
         &mut self,
         rho: &[f64],
@@ -565,28 +459,13 @@ impl crate::apps::hydro2d::solver::Sweeper for SharedNativeSweeper {
         for name in ["g_nrho", "g_nrhou", "g_nrhov", "g_nE"] {
             arrays.insert(name.to_string(), vec![0.0; rows * n]);
         }
-        self.module.run(&ext, &mut arrays)?;
-        Ok([
-            arrays.remove("g_nrho").unwrap(),
-            arrays.remove("g_nrhou").unwrap(),
-            arrays.remove("g_nrhov").unwrap(),
-            arrays.remove("g_nE").unwrap(),
-        ])
+        self.exe.run(&ext, &mut arrays, self.ws)?;
+        let mut take = |name: &str| arrays.remove(name).ok_or_else(|| format!("missing `{name}`"));
+        Ok([take("g_nrho")?, take("g_nrhou")?, take("g_nrhov")?, take("g_nE")?])
     }
 
     fn name(&self) -> &'static str {
-        "hfav-native-shared"
-    }
-}
-
-/// Deck lookup for the built-in apps.
-pub fn deck_of(app: &str) -> Result<&'static str, String> {
-    match app {
-        "laplace" => Ok(crate::apps::laplace::DECK),
-        "normalize" => Ok(crate::apps::normalization::DECK),
-        "cosmo" => Ok(crate::apps::cosmo::DECK),
-        "hydro2d" => Ok(crate::apps::hydro2d::DECK),
-        _ => Err(format!("unknown app `{app}` (laplace|normalize|cosmo|hydro2d)")),
+        "hfav-backend"
     }
 }
 
@@ -610,38 +489,31 @@ pub fn distinct_plan_keys(jobs: &[Job]) -> usize {
     jobs.iter().map(|j| j.plan_key()).collect::<std::collections::BTreeSet<_>>().len()
 }
 
-/// Parse a job-trace line: `app,variant,engine,size,steps[,vlen]`. The
-/// optional sixth field forces a vector length for that job (`-` or
-/// `deck` keeps the deck default, like omitting it).
+/// Parse a job-trace line (format v2):
+/// `app|deck.yaml, variant, engine, size, steps[, vlen]`. The target may
+/// be a built-in app or a deck-file path; the engine is any
+/// [`engine::registry`] name; the optional sixth field forces a vector
+/// length for that job (`-` or `deck` keeps the deck default).
 pub fn parse_trace_line(id: u64, line: &str) -> Result<Job, String> {
     let f: Vec<&str> = line.split(',').map(str::trim).collect();
     if f.len() != 5 && f.len() != 6 {
-        return Err(format!("bad trace line `{line}` (app,variant,engine,size,steps[,vlen])"));
+        return Err(format!(
+            "bad trace line `{line}` (app|deck.yaml, variant, engine, size, steps[, vlen])"
+        ));
     }
-    let variant = match f[1] {
-        "hfav" => Variant::Hfav,
-        "autovec" => Variant::Autovec,
-        other => return Err(format!("unknown variant `{other}`")),
+    let variant: Variant = f[1].parse()?;
+    let vlen: Vlen = match f.get(5) {
+        None => Vlen::Deck,
+        Some(s) => s.parse()?,
     };
-    let vlen = match f.get(5) {
-        None => None,
-        Some(&"-") | Some(&"deck") => None,
-        Some(v) => {
-            let n: usize = v.parse().map_err(|e| format!("vlen: {e}"))?;
-            if n == 0 {
-                return Err("vlen must be >= 1".to_string());
-            }
-            Some(n)
-        }
-    };
+    let backend = engine::registry().get(f[2])?.name().to_string();
+    let spec = target_spec(f[0])?.variant(variant).vlen(vlen);
     Ok(Job {
         id,
-        app: f[0].to_string(),
-        variant,
-        engine: f[2].parse()?,
+        spec,
+        backend,
         size: f[3].parse().map_err(|e| format!("size: {e}"))?,
         steps: f[4].parse().map_err(|e| format!("steps: {e}"))?,
-        vlen,
     })
 }
 
@@ -649,23 +521,18 @@ pub fn parse_trace_line(id: u64, line: &str) -> Result<Job, String> {
 mod tests {
     use super::*;
 
+    fn mk(id: u64, app: &str, variant: Variant, backend: &str, size: usize, steps: usize) -> Job {
+        Job::new(id, PlanSpec::app(app).variant(variant), backend, size, steps)
+    }
+
     #[test]
     fn coordinator_runs_mixed_batch() {
         let c = Coordinator::start(2, None);
-        let mk = |id: u64, app: &str, variant: Variant, engine: Engine, size: usize, steps| Job {
-            id,
-            app: app.to_string(),
-            variant,
-            engine,
-            size,
-            steps,
-            vlen: None,
-        };
         let jobs = vec![
-            mk(1, "laplace", Variant::Hfav, Engine::Exec, 64, 1),
-            mk(2, "normalize", Variant::Autovec, Engine::Exec, 48, 1),
-            mk(3, "hydro2d", Variant::Hfav, Engine::Exec, 16, 2),
-            mk(4, "laplace", Variant::Hfav, Engine::Native, 64, 2),
+            mk(1, "laplace", Variant::Hfav, "exec", 64, 1),
+            mk(2, "normalize", Variant::Autovec, "exec", 48, 1),
+            mk(3, "hydro2d", Variant::Hfav, "exec", 16, 2),
+            mk(4, "laplace", Variant::Hfav, "native", 64, 2),
         ];
         let results = c.run_batch(jobs);
         assert_eq!(results.len(), 4);
@@ -679,25 +546,16 @@ mod tests {
         // 3 distinct plan keys: laplace/hfav (shared by exec+native),
         // normalize/autovec, hydro2d/hfav.
         assert_eq!(c.plans.stats().computes, 3, "{}", c.plans.stats());
-        assert_eq!(c.natives.stats().computes, 1, "{}", c.natives.stats());
+        // 4 prepared executables: the three interpreter setups plus one
+        // compiled-C module (laplace/hfav on `native`).
+        assert_eq!(c.prepared.stats().computes, 4, "{}", c.prepared.stats());
         c.shutdown();
     }
 
     #[test]
     fn coordinator_reports_failures() {
         let c = Coordinator::start(1, None);
-        let r = c
-            .submit(Job {
-                id: 9,
-                app: "nope".into(),
-                variant: Variant::Hfav,
-                engine: Engine::Exec,
-                size: 8,
-                steps: 1,
-                vlen: None,
-            })
-            .recv()
-            .unwrap();
+        let r = c.submit(mk(9, "nope", Variant::Hfav, "exec", 8, 1)).recv().unwrap();
         assert!(!r.ok);
         assert!(r.detail.contains("unknown app"));
         c.shutdown();
@@ -706,22 +564,14 @@ mod tests {
     #[test]
     fn repeated_jobs_hit_the_plan_cache() {
         let c = Coordinator::start(4, None);
-        let jobs: Vec<Job> = (0..12)
-            .map(|i| Job {
-                id: i,
-                app: "laplace".into(),
-                variant: Variant::Hfav,
-                engine: Engine::Exec,
-                size: 32,
-                steps: 1,
-                vlen: None,
-            })
-            .collect();
+        let jobs: Vec<Job> =
+            (0..12).map(|i| mk(i, "laplace", Variant::Hfav, "exec", 32, 1)).collect();
         let results = c.run_batch(jobs);
         assert!(results.iter().all(|r| r.ok));
         let s = c.plans.stats();
         assert_eq!(s.computes, 1, "one key → one compile: {s}");
         assert!(s.hits >= 11 - 3, "most lookups must hit: {s}");
+        assert_eq!(c.prepared.stats().computes, 1, "{}", c.prepared.stats());
         let rep = c.report(Duration::from_secs(1));
         assert_eq!(rep.completed, 12);
         assert!(rep.buffers_reused > 0, "{rep}");
@@ -731,32 +581,30 @@ mod tests {
     #[test]
     fn trace_parsing() {
         let j = parse_trace_line(5, "hydro2d, hfav, native, 128, 10").unwrap();
-        assert_eq!(j.app, "hydro2d");
-        assert_eq!(j.engine, Engine::Native);
+        assert_eq!(j.spec.app_name(), Some("hydro2d"));
+        assert_eq!(j.backend, "native");
         assert_eq!(j.size, 128);
-        assert_eq!(j.vlen, None);
-        let v = parse_trace_line(6, "hydro2d, hfav, native, 128, 10, 8").unwrap();
-        assert_eq!(v.vlen, Some(8));
+        assert_eq!(j.spec.vlen_override(), None);
+        // The generated-Rust engine parses like any registry name.
+        let v = parse_trace_line(6, "hydro2d, hfav, rust, 128, 10, 8").unwrap();
+        assert_eq!(v.backend, "rust");
+        assert_eq!(v.spec.vlen_override(), Some(8));
         let d = parse_trace_line(7, "laplace, hfav, exec, 64, 1, -").unwrap();
-        assert_eq!(d.vlen, None);
+        assert_eq!(d.spec.vlen_override(), None);
         assert!(parse_trace_line(0, "bad line").is_err());
         assert!(parse_trace_line(0, "a,b,c,d,e").is_err());
         assert!(parse_trace_line(0, "laplace, hfav, exec, 64, 1, 0").is_err());
+        let e = parse_trace_line(0, "laplace, hfav, tpu, 64, 1").unwrap_err();
+        assert!(e.contains("unknown engine"), "{e}");
     }
 
     #[test]
     fn distinct_vlens_get_distinct_plan_entries() {
         // Same id → same seeded input, so checksums are comparable.
-        let mk = |vlen: Option<usize>| Job {
-            id: 7,
-            app: "laplace".into(),
-            variant: Variant::Hfav,
-            engine: Engine::Exec,
-            size: 32,
-            steps: 1,
-            vlen,
+        let mk_v = |vlen: Option<usize>| {
+            Job::new(7, PlanSpec::app("laplace").vlen_resolved(vlen), "exec", 32, 1)
         };
-        let jobs = vec![mk(None), mk(Some(1)), mk(Some(4)), mk(Some(8)), mk(Some(4))];
+        let jobs = vec![mk_v(None), mk_v(Some(1)), mk_v(Some(4)), mk_v(Some(8)), mk_v(Some(4))];
         assert_eq!(distinct_plan_keys(&jobs), 4, "None, 1, 4, 8");
         let c = Coordinator::start(2, None);
         let results = c.run_batch(jobs);
@@ -770,5 +618,15 @@ mod tests {
         assert_eq!(rep.vlen_min, 1);
         assert_eq!(rep.vlen_max, 8);
         c.shutdown();
+    }
+
+    #[test]
+    fn target_spec_resolves_apps_and_rejects_missing_decks() {
+        assert_eq!(target_spec("hydro2d").unwrap().app_name(), Some("hydro2d"));
+        // Bare unknown names stay app specs (fail at compile)...
+        assert_eq!(target_spec("nope").unwrap().app_name(), Some("nope"));
+        // ...while path-shaped targets are deck files, read eagerly.
+        let e = target_spec("/no/such/deck.yaml").unwrap_err();
+        assert!(e.contains("reading deck"), "{e}");
     }
 }

@@ -4,20 +4,21 @@
 //! profile. This is the run recorded in EXPERIMENTS.md §E2E.
 
 use crate::apps::hydro2d::solver::*;
-use crate::apps::{compile_variant, Variant};
+use crate::apps::Variant;
+use crate::plan::PlanSpec;
 
 /// Run the Sod demo and print throughput + the final mid-row density
 /// profile (coarse ASCII) for both engines.
 pub fn sod_demo(size: usize, steps: usize) -> Result<(), String> {
     println!("Hydro2D Sod shock tube: {size}x{size}, {steps} split steps");
-    let prog = compile_variant(crate::apps::hydro2d::DECK, Variant::Hfav)?;
+    let prog = PlanSpec::app("hydro2d").compile()?;
     println!(
         "HFAV schedule: {} nest(s); intermediate footprint {} words @1024^2 (autovec: {})",
         prog.fd.nests.len(),
         prog.footprint_words(
             &[("Nj".to_string(), 1024i64), ("Ni".to_string(), 1024i64)].into_iter().collect()
         )?,
-        compile_variant(crate::apps::hydro2d::DECK, Variant::Autovec)?.footprint_words(
+        PlanSpec::app("hydro2d").variant(Variant::Autovec).compile()?.footprint_words(
             &[("Nj".to_string(), 1024i64), ("Ni".to_string(), 1024i64)].into_iter().collect()
         )?,
     );

@@ -1,0 +1,478 @@
+//! Unified execution-backend API: one open trait surface over every way
+//! a compiled plan can run — the interpreter executor, generated C
+//! (`cc` + dlopen), generated Rust (`rustc` + dlopen), and the PJRT
+//! runtime — registered in a name-keyed [`BackendRegistry`].
+//!
+//! The contract mirrors the paper's §3.1 pipeline shape: one compile
+//! path ([`crate::plan::PlanSpec`] → [`Program`]) feeding many execution
+//! targets. A [`Backend`] turns a compiled plan into a prepared
+//! [`Executable`] (compile the emitted C, load a module, resolve an AOT
+//! artifact); an `Executable` runs the plan over named extents and
+//! external arrays. Adding an engine is *additive*: implement the two
+//! traits and register the backend in [`BackendRegistry::builtin`] —
+//! `--engine` parsing, coordinator dispatch, availability probing, and
+//! the prepared-executable cache all go through the registry, so there
+//! is no per-engine dispatch anywhere else in the tree.
+
+use crate::codegen::native::{self, CcOptions, NativeModule, RustcOptions};
+use crate::exec::{self, registry::Registry, ExecOptions, Workspace};
+use crate::plan::{PlanSpec, Program};
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+
+/// Can a backend run on this host right now?
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Availability {
+    Ready,
+    /// Unavailable, with the reason (missing toolchain, unbuilt runtime).
+    Missing(String),
+}
+
+impl Availability {
+    pub fn is_ready(&self) -> bool {
+        matches!(self, Availability::Ready)
+    }
+}
+
+/// Everything a backend may need besides the compiled plan.
+#[derive(Debug, Clone, Default)]
+pub struct PrepareCtx {
+    /// AOT artifacts directory (PJRT); `None` for in-process backends.
+    pub artifacts: Option<PathBuf>,
+}
+
+/// A prepared, runnable form of one compiled plan. Implementations are
+/// shared pool-wide behind the coordinator's prepared-executable cache,
+/// so they must be stateless across runs (per-run scratch lives in the
+/// caller's [`Workspace`]).
+pub trait Executable: Send + Sync {
+    /// Run the plan once over `extents` and the named external `arrays`
+    /// (inputs seeded by the caller, outputs zero-filled; results are
+    /// written back into `arrays`).
+    fn run(
+        &self,
+        extents: &BTreeMap<String, i64>,
+        arrays: &mut BTreeMap<String, Vec<f64>>,
+        ws: &mut Workspace,
+    ) -> Result<(), String>;
+}
+
+/// An execution engine: knows its registry name, whether the host can
+/// run it, and how to turn a compiled plan into an [`Executable`].
+pub trait Backend: Send + Sync {
+    /// Registry name (`exec` | `native` | `rust` | `pjrt`): the spelling
+    /// used by `--engine`, job traces, and prepared-cache key tags.
+    fn name(&self) -> &str;
+
+    /// Probe host support (toolchains, runtimes). Serving degrades
+    /// per-job on unavailable backends; the CLI fails fast with this
+    /// message before spawning a coordinator.
+    fn available(&self) -> Availability;
+
+    /// Does this backend execute the compiled plan itself (true for all
+    /// in-process engines)? PJRT runs fixed pre-built artifacts, so the
+    /// plan's vector length says nothing about what it executes and the
+    /// serving metrics skip it.
+    fn executes_plan(&self) -> bool {
+        true
+    }
+
+    /// Prepare `prog` for execution (emit + compile + load for the
+    /// native backends). Expensive; the coordinator caches the result
+    /// per `(plan key, backend name)` pool-wide.
+    fn prepare(
+        &self,
+        spec: &PlanSpec,
+        prog: &Arc<Program>,
+        ctx: &PrepareCtx,
+    ) -> Result<Box<dyn Executable>, String>;
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// Name-keyed set of the known engines. All engine lookup — `--engine`
+/// parsing, trace parsing, coordinator dispatch, CI smoke — goes through
+/// here, so an engine exists exactly when it is registered.
+pub struct BackendRegistry {
+    backends: Vec<Box<dyn Backend>>,
+}
+
+impl BackendRegistry {
+    /// The built-in engines, in documentation order.
+    pub fn builtin() -> BackendRegistry {
+        BackendRegistry {
+            backends: vec![
+                Box::new(InterpBackend),
+                Box::new(NativeCBackend),
+                Box::new(GenRustBackend),
+                Box::new(PjrtBackend),
+            ],
+        }
+    }
+
+    /// Look up a backend by registry name.
+    pub fn get(&self, name: &str) -> Result<&dyn Backend, String> {
+        self.backends
+            .iter()
+            .map(|b| b.as_ref())
+            .find(|b| b.name() == name)
+            .ok_or_else(|| format!("unknown engine `{name}` ({})", self.names().join("|")))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.backends.iter().map(|b| b.name()).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &dyn Backend> {
+        self.backends.iter().map(|b| b.as_ref())
+    }
+}
+
+/// The process-wide backend registry.
+pub fn registry() -> &'static BackendRegistry {
+    static REG: OnceLock<BackendRegistry> = OnceLock::new();
+    REG.get_or_init(BackendRegistry::builtin)
+}
+
+// ---------------------------------------------------------------------------
+// Interpreter backend (`exec`)
+// ---------------------------------------------------------------------------
+
+/// The in-process schedule interpreter ([`crate::exec`]).
+struct InterpBackend;
+
+struct InterpExecutable {
+    prog: Arc<Program>,
+    reg: Registry,
+    opts: ExecOptions,
+    /// Declared external-input names: the executor is handed exactly
+    /// these (output buffers in `arrays` must not pre-fill externals).
+    input_names: BTreeSet<String>,
+}
+
+impl Executable for InterpExecutable {
+    fn run(
+        &self,
+        extents: &BTreeMap<String, i64>,
+        arrays: &mut BTreeMap<String, Vec<f64>>,
+        ws: &mut Workspace,
+    ) -> Result<(), String> {
+        // Move (not clone) the declared inputs into the executor's input
+        // map; everything is restored afterwards so callers see inputs
+        // and outputs side by side, like the module backends.
+        let mut inputs = BTreeMap::new();
+        for name in &self.input_names {
+            if let Some(v) = arrays.remove(name) {
+                inputs.insert(name.clone(), v);
+            }
+        }
+        let result = exec::run_with(&self.prog, &self.reg, extents, &inputs, self.opts, ws);
+        arrays.append(&mut inputs);
+        for (k, v) in result? {
+            arrays.insert(k, v);
+        }
+        Ok(())
+    }
+}
+
+impl Backend for InterpBackend {
+    fn name(&self) -> &str {
+        "exec"
+    }
+
+    fn available(&self) -> Availability {
+        Availability::Ready
+    }
+
+    fn prepare(
+        &self,
+        _spec: &PlanSpec,
+        prog: &Arc<Program>,
+        _ctx: &PrepareCtx,
+    ) -> Result<Box<dyn Executable>, String> {
+        Ok(Box::new(InterpExecutable {
+            prog: prog.clone(),
+            reg: crate::apps::builtin_registry(),
+            opts: ExecOptions::default(),
+            input_names: prog.external_inputs().into_iter().map(|(n, _, _)| n).collect(),
+        }))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native module backends (`native`, `rust`)
+// ---------------------------------------------------------------------------
+
+impl Executable for NativeModule {
+    fn run(
+        &self,
+        extents: &BTreeMap<String, i64>,
+        arrays: &mut BTreeMap<String, Vec<f64>>,
+        _ws: &mut Workspace,
+    ) -> Result<(), String> {
+        NativeModule::run(self, extents, arrays)
+    }
+}
+
+/// Generated C compiled with the system compiler and dlopen'd.
+struct NativeCBackend;
+
+impl Backend for NativeCBackend {
+    fn name(&self) -> &str {
+        "native"
+    }
+
+    fn available(&self) -> Availability {
+        static PROBE: OnceLock<Availability> = OnceLock::new();
+        PROBE.get_or_init(|| probe_compiler(&CcOptions::default().cc, "C compiler")).clone()
+    }
+
+    fn prepare(
+        &self,
+        _spec: &PlanSpec,
+        prog: &Arc<Program>,
+        _ctx: &PrepareCtx,
+    ) -> Result<Box<dyn Executable>, String> {
+        Ok(Box::new(native::build(prog, &CcOptions::default())?))
+    }
+}
+
+/// The Rust emitter's output compiled with `rustc --crate-type cdylib`
+/// and loaded through the same dlopen harness as the C backend.
+struct GenRustBackend;
+
+impl Backend for GenRustBackend {
+    fn name(&self) -> &str {
+        "rust"
+    }
+
+    fn available(&self) -> Availability {
+        static PROBE: OnceLock<Availability> = OnceLock::new();
+        PROBE
+            .get_or_init(|| probe_compiler(&RustcOptions::default().rustc, "Rust compiler"))
+            .clone()
+    }
+
+    fn prepare(
+        &self,
+        _spec: &PlanSpec,
+        prog: &Arc<Program>,
+        _ctx: &PrepareCtx,
+    ) -> Result<Box<dyn Executable>, String> {
+        Ok(Box::new(native::build_rust(prog, &RustcOptions::default())?))
+    }
+}
+
+/// Shared `<compiler> --version` probe.
+fn probe_compiler(cmd: &str, what: &str) -> Availability {
+    match std::process::Command::new(cmd).arg("--version").output() {
+        Ok(out) if out.status.success() => Availability::Ready,
+        Ok(_) => Availability::Missing(format!("{what} `{cmd}` failed its --version probe")),
+        Err(e) => Availability::Missing(format!("{what} `{cmd}` not found: {e}")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend (`pjrt`)
+// ---------------------------------------------------------------------------
+
+/// AOT JAX/Pallas artifacts on the PJRT CPU client. The native XLA
+/// toolchain is not vendored in this build ([`crate::runtime`]), so runs
+/// degrade to a clear per-job error until it returns.
+struct PjrtBackend;
+
+struct PjrtExecutable {
+    artifacts: PathBuf,
+    artifact: String,
+    /// Plan-declared external input/output names, in declaration order —
+    /// the positional binding to the artifact's buffer signature.
+    inputs: Vec<String>,
+    outputs: Vec<String>,
+    /// Latched "client not linked" failure, replayed so a trace full of
+    /// PJRT jobs fails each one cheaply instead of re-reading the
+    /// manifest per job. Only that build-constant error is latched.
+    runtime_err: OnceLock<String>,
+}
+
+impl Executable for PjrtExecutable {
+    fn run(
+        &self,
+        _extents: &BTreeMap<String, i64>,
+        arrays: &mut BTreeMap<String, Vec<f64>>,
+        _ws: &mut Workspace,
+    ) -> Result<(), String> {
+        // PJRT clients are not Send; when the real client is re-vendored
+        // this must hold a per-thread runtime cache instead.
+        if let Some(e) = self.runtime_err.get() {
+            return Err(e.clone());
+        }
+        let rt = match crate::runtime::Runtime::cpu(&self.artifacts) {
+            Ok(rt) => rt,
+            Err(e) => {
+                // Latch only the build-constant "client not linked"
+                // error; environment errors (missing dir, bad manifest)
+                // stay retryable so a fixed setup is picked up by later
+                // jobs instead of poisoning the pool-wide cache entry.
+                if e == crate::runtime::PJRT_UNAVAILABLE {
+                    let _ = self.runtime_err.set(e.clone());
+                }
+                return Err(e);
+            }
+        };
+        let exe = rt.load(&self.artifact)?;
+        // Artifacts are fixed-shape: the positional binding below is
+        // only sound when both arity and element counts line up, so a
+        // job whose grid does not match the AOT shapes fails closed
+        // instead of feeding out-of-shape buffers to the client.
+        if exe.meta.inputs.len() != self.inputs.len()
+            || exe.meta.outputs.len() != self.outputs.len()
+        {
+            return Err(format!(
+                "artifact `{}` has {} inputs/{} outputs; plan declares {}/{}",
+                self.artifact,
+                exe.meta.inputs.len(),
+                exe.meta.outputs.len(),
+                self.inputs.len(),
+                self.outputs.len()
+            ));
+        }
+        let refs: Vec<&[f64]> = self
+            .inputs
+            .iter()
+            .zip(&exe.meta.inputs)
+            .map(|(n, shape)| {
+                let v = arrays.get(n).ok_or_else(|| format!("missing input `{n}`"))?;
+                let want: usize = shape.iter().product();
+                if v.len() != want {
+                    return Err(format!(
+                        "input `{n}`: artifact `{}` expects {want} elements, job has {}",
+                        self.artifact,
+                        v.len()
+                    ));
+                }
+                Ok(v.as_slice())
+            })
+            .collect::<Result<_, _>>()?;
+        let out = exe.run(&refs)?;
+        for (name, vals) in self.outputs.iter().zip(out) {
+            arrays.insert(name.clone(), vals);
+        }
+        Ok(())
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn available(&self) -> Availability {
+        Availability::Missing(crate::runtime::PJRT_UNAVAILABLE.to_string())
+    }
+
+    fn executes_plan(&self) -> bool {
+        false
+    }
+
+    fn prepare(
+        &self,
+        spec: &PlanSpec,
+        prog: &Arc<Program>,
+        ctx: &PrepareCtx,
+    ) -> Result<Box<dyn Executable>, String> {
+        let artifacts = ctx
+            .artifacts
+            .clone()
+            .ok_or_else(|| "no artifacts dir — PJRT unavailable".to_string())?;
+        let app = spec
+            .app_name()
+            .ok_or_else(|| "PJRT serves only built-in apps (fixed AOT artifacts)".to_string())?;
+        let base = if app == "hydro2d" { "hydro" } else { app };
+        let suffix = match spec.variant_kind() {
+            crate::apps::Variant::Hfav => "fused",
+            crate::apps::Variant::Autovec => "unfused",
+        };
+        Ok(Box::new(PjrtExecutable {
+            artifacts,
+            artifact: format!("{base}_{suffix}"),
+            inputs: prog.external_inputs().into_iter().map(|(n, _, _)| n).collect(),
+            outputs: prog.external_outputs().into_iter().map(|(n, _, _)| n).collect(),
+            runtime_err: OnceLock::new(),
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+
+    #[test]
+    fn registry_names_round_trip() {
+        let reg = registry();
+        let names = reg.names();
+        assert_eq!(names, vec!["exec", "native", "rust", "pjrt"]);
+        for name in names {
+            assert_eq!(reg.get(name).unwrap().name(), name);
+        }
+    }
+
+    #[test]
+    fn unknown_engine_lists_known_names() {
+        let e = registry().get("tpu").unwrap_err();
+        assert!(e.contains("unknown engine `tpu`"), "{e}");
+        for name in registry().names() {
+            assert!(e.contains(name), "`{name}` missing from: {e}");
+        }
+    }
+
+    #[test]
+    fn exec_backend_runs_a_plan() {
+        let spec = crate::plan::PlanSpec::app("laplace");
+        let prog = Arc::new(spec.compile().unwrap());
+        let backend = registry().get("exec").unwrap();
+        assert!(backend.available().is_ready());
+        assert!(backend.executes_plan());
+        let exe = backend.prepare(&spec, &prog, &PrepareCtx::default()).unwrap();
+        let n = 12usize;
+        let ext: BTreeMap<String, i64> =
+            [("Nj".to_string(), n as i64), ("Ni".to_string(), n as i64)].into();
+        let u = apps::seeded(n * n, 3);
+        let mut arrays = BTreeMap::new();
+        arrays.insert("g_cell".to_string(), u.clone());
+        // Pre-filled output must not perturb the executor.
+        arrays.insert("g_out".to_string(), vec![7.0; n * n]);
+        let mut ws = Workspace::new();
+        exe.run(&ext, &mut arrays, &mut ws).unwrap();
+        let want = apps::laplace::reference(&u, n, n);
+        assert!(apps::max_err(&arrays["g_out"], &want) < 1e-12);
+        // Inputs survive the run (module-backend parity).
+        assert_eq!(arrays["g_cell"], u);
+    }
+
+    #[test]
+    fn pjrt_backend_reports_unavailable() {
+        let backend = registry().get("pjrt").unwrap();
+        assert!(!backend.executes_plan());
+        match backend.available() {
+            Availability::Missing(why) => assert!(why.contains("PJRT"), "{why}"),
+            Availability::Ready => panic!("stub build must report PJRT missing"),
+        }
+        let spec = crate::plan::PlanSpec::app("laplace");
+        let prog = Arc::new(spec.compile().unwrap());
+        let e = backend.prepare(&spec, &prog, &PrepareCtx::default()).unwrap_err();
+        assert!(e.contains("artifacts"), "{e}");
+    }
+
+    #[test]
+    fn pjrt_rejects_non_builtin_decks() {
+        let spec = crate::plan::PlanSpec::deck_src(crate::frontend::testdecks::LAPLACE);
+        let prog = Arc::new(spec.compile().unwrap());
+        let ctx = PrepareCtx { artifacts: Some(PathBuf::from("artifacts")) };
+        let e = registry().get("pjrt").unwrap().prepare(&spec, &prog, &ctx).unwrap_err();
+        assert!(e.contains("built-in"), "{e}");
+    }
+}

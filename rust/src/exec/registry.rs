@@ -49,6 +49,12 @@ impl Registry {
         None
     }
 
+    /// Absorb every kernel from `other` (later registrations win). Used to
+    /// merge the per-app registries into one builtin registry.
+    pub fn extend(&mut self, other: Registry) {
+        self.map.extend(other.map);
+    }
+
     pub fn names(&self) -> impl Iterator<Item = &String> {
         self.map.keys()
     }

@@ -17,13 +17,18 @@
 //! 5. [`plan`] assembles the executable schedule; [`codegen`] emits C99 /
 //!    Rust / DOT; [`exec`] runs it in-process.
 //!
-//! Serving layer: compilation is expensive but a compiled [`plan::Program`]
-//! is immutable and reusable, so [`plan::cache`] provides a shared
-//! compile-once plan cache (keyed by app/variant/options fingerprint)
-//! with hit/miss/compile counters, and [`coordinator`] serves job traces
-//! over it — a worker pool with pool-wide plan + native-module caches,
-//! same-key job batching, executor buffer reuse ([`exec::Workspace`]) and
-//! latency/throughput/cache metrics ([`coordinator::metrics`]).
+//! Serving layer: *what* to compile is a [`plan::PlanSpec`] (deck target
+//! + variant + tuning knobs) whose canonical fingerprint is the cache
+//! identity, and *where* to run it is an execution backend looked up by
+//! name in the [`engine`] registry (interpreter, native C, generated
+//! Rust, PJRT — all behind one `Backend`/`Executable` trait pair, so new
+//! engines are additive registrations). Compilation is expensive but a
+//! compiled [`plan::Program`] is immutable and reusable, so
+//! [`plan::cache`] provides a shared compile-once plan cache with
+//! hit/miss/compile counters, and [`coordinator`] serves job traces over
+//! it — a worker pool with pool-wide plan + prepared-executable caches,
+//! same-key job batching, executor buffer reuse ([`exec::Workspace`])
+//! and latency/throughput/cache metrics ([`coordinator::metrics`]).
 
 pub mod ir;
 pub mod yaml;
@@ -37,6 +42,7 @@ pub mod plan;
 pub mod exec;
 pub mod codegen;
 pub mod apps;
+pub mod engine;
 pub mod coordinator;
 pub mod bench;
 pub mod e2e;

@@ -1,13 +1,19 @@
 //! `hfav` CLI: generate code from decks, inspect schedules and graphs,
-//! run the built-in apps on any engine, serve job traces through the
-//! coordinator (with plan-cache and throughput reporting), and regenerate
-//! the paper's benchmark figures.
+//! run built-in apps or external deck files on any registered engine,
+//! serve job traces through the coordinator (with plan-cache and
+//! throughput reporting), and regenerate the paper's benchmark figures.
+//!
+//! Engines are resolved through [`hfav::engine::registry`]; `hfav
+//! engines` lists them with availability, and `run` fails fast (with the
+//! backend's own message) when the requested engine's toolchain is
+//! missing.
 
 use hfav::apps::Variant;
 use hfav::coordinator::{
-    deck_of, distinct_plan_keys, parse_trace_line, repeat_jobs, Coordinator, Engine, Job,
+    distinct_plan_keys, parse_trace_line, repeat_jobs, target_spec, Coordinator, Job,
 };
-use std::collections::BTreeMap;
+use hfav::engine::Availability;
+use hfav::plan::{PlanSpec, Vlen};
 
 type CliError = Box<dyn std::error::Error>;
 type CliResult = Result<(), CliError>;
@@ -16,24 +22,31 @@ fn usage() -> ! {
     eprintln!(
         "usage: hfav <command> [args]
   generate <deck.yaml|app> [--backend c99|rust|dot-dataflow|dot-inest|schedule] [--variant hfav|autovec]
-      [--vlen auto|N]
+      [--vlen auto|N] [--tuned]
   footprint <deck.yaml|app> --extents Ni=512,Nj=512
-  run --app <laplace|normalize|cosmo|hydro2d> [--engine exec|native|pjrt] [--variant hfav|autovec]
-      [--size N] [--steps S] [--vlen auto|N]
+  engines
+  run --app <app|deck.yaml> [--engine exec|native|rust|pjrt] [--variant hfav|autovec]
+      [--size N] [--steps S] [--vlen auto|N] [--tuned]
   serve --trace <file> [--workers N] [--repeat R] [--artifacts DIR] [--vlen auto|N]
   e2e [--size N] [--steps S]
   bench <sysinfo|normalization|cosmo|hydro2d|footprint|serving|pjrt|all> [--vlen auto|N]
   smoke [hlo.txt]
 
-  --vlen: vector length for strip-mined codegen (Fig. 9c); `auto` picks
-          the host's SIMD width (runtime-detected), N forces N lanes
-          (1 = scalar), omitted = each deck's declared default."
+  engines: list the registered execution backends and their availability
+  --vlen:  vector length for strip-mined codegen (Fig. 9c); `auto` picks
+           the host's SIMD width (runtime-detected), N forces N lanes
+           (1 = scalar), omitted = each deck's declared default.
+  --tuned: paper §5.3 'HFAV + Tuning' (innermost windows stay full rows)"
     );
     std::process::exit(2)
 }
 
 fn flag(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
 }
 
 fn main() -> CliResult {
@@ -43,6 +56,7 @@ fn main() -> CliResult {
     match cmd.as_str() {
         "generate" => generate(rest),
         "footprint" => footprint(rest),
+        "engines" => engines(),
         "run" => run(rest),
         "serve" => serve(rest),
         "e2e" => e2e(rest),
@@ -57,41 +71,34 @@ fn main() -> CliResult {
     }
 }
 
-fn load_deck_arg(arg: &str) -> Result<String, CliError> {
-    if let Ok(deck) = deck_of(arg) {
-        return Ok(deck.to_string());
-    }
-    Ok(std::fs::read_to_string(arg)?)
-}
-
-fn variant_of(rest: &[String]) -> Variant {
-    match flag(rest, "--variant").as_deref() {
-        Some("autovec") => Variant::Autovec,
-        _ => Variant::Hfav,
+fn variant_of(rest: &[String]) -> Result<Variant, CliError> {
+    match flag(rest, "--variant") {
+        None => Ok(Variant::Hfav),
+        Some(v) => Ok(v.parse()?),
     }
 }
 
-/// Parse `--vlen auto|N` into the Option override the plan layer takes.
-fn vlen_of(rest: &[String]) -> Result<Option<usize>, CliError> {
-    match flag(rest, "--vlen").as_deref() {
-        None => Ok(None),
-        Some("auto") => Ok(Some(hfav::analysis::auto_vector_len())),
-        Some(v) => {
-            let n: usize = v.parse().map_err(|e| format!("--vlen: {e}"))?;
-            if n == 0 {
-                return Err("--vlen must be >= 1 (1 = forced scalar)".into());
-            }
-            Ok(Some(n))
-        }
+/// Parse `--vlen auto|N` into a [`Vlen`] request (`Deck` when omitted).
+fn vlen_of(rest: &[String]) -> Result<Vlen, CliError> {
+    match flag(rest, "--vlen") {
+        None => Ok(Vlen::Deck),
+        Some(v) => Ok(v.parse().map_err(|e| format!("--vlen: {e}"))?),
     }
+}
+
+/// Build the [`PlanSpec`] a subcommand's flags describe: a built-in app
+/// or deck-file target, variant, vector length and tuning — the exact
+/// spec (and plan-cache identity) serving would use.
+fn spec_of(target: &str, rest: &[String]) -> Result<PlanSpec, CliError> {
+    Ok(target_spec(target)?
+        .variant(variant_of(rest)?)
+        .vlen(vlen_of(rest)?)
+        .tuned(has_flag(rest, "--tuned")))
 }
 
 fn compile_arg(rest: &[String]) -> Result<hfav::plan::Program, CliError> {
     let target = rest.first().map(String::as_str).unwrap_or("laplace");
-    let src = load_deck_arg(target)?;
-    // Same options path the coordinator's plan cache fingerprints, so the
-    // CLI inspects exactly what serving would run.
-    Ok(hfav::apps::compile_variant_vlen(&src, variant_of(rest), vlen_of(rest)?)?)
+    Ok(spec_of(target, rest)?.compile()?)
 }
 
 fn generate(rest: &[String]) -> CliResult {
@@ -109,7 +116,7 @@ fn generate(rest: &[String]) -> CliResult {
 
 fn footprint(rest: &[String]) -> CliResult {
     let prog = compile_arg(rest)?;
-    let mut extents = BTreeMap::new();
+    let mut extents = std::collections::BTreeMap::new();
     if let Some(spec) = flag(rest, "--extents") {
         for kv in spec.split(',') {
             let (k, v) = kv.split_once('=').ok_or("bad extents (want Ni=512,Nj=512)")?;
@@ -131,36 +138,48 @@ fn footprint(rest: &[String]) -> CliResult {
     Ok(())
 }
 
+/// List every registered backend with its availability — one line per
+/// engine, machine-parseable (`name<TAB>available|unavailable<TAB>why`),
+/// so CI can smoke every engine the registry knows about.
+fn engines() -> CliResult {
+    for b in hfav::engine::registry().iter() {
+        match b.available() {
+            Availability::Ready => println!("{}\tavailable\t-", b.name()),
+            Availability::Missing(why) => println!("{}\tunavailable\t{why}", b.name()),
+        }
+    }
+    Ok(())
+}
+
 fn run(rest: &[String]) -> CliResult {
     let app = flag(rest, "--app").unwrap_or_else(|| "laplace".into());
-    let engine: Engine =
-        flag(rest, "--engine").unwrap_or_else(|| "native".into()).parse()?;
+    let engine = flag(rest, "--engine").unwrap_or_else(|| "native".into());
     let size: usize = flag(rest, "--size").unwrap_or_else(|| "256".into()).parse()?;
     let steps: usize = flag(rest, "--steps").unwrap_or_else(|| "10".into()).parse()?;
+    // Fail fast: resolve the backend and probe its toolchain before
+    // spawning a coordinator, so `--engine pjrt` (or a rustc-less
+    // `--engine rust`) reports the backend's own message immediately
+    // instead of a worker-side job failure.
+    let backend = hfav::engine::registry().get(&engine)?;
+    if let Availability::Missing(why) = backend.available() {
+        return Err(format!("engine `{}` unavailable: {why}", backend.name()).into());
+    }
+    let spec = spec_of(&app, rest)?;
     let c = Coordinator::start(1, Some(hfav::runtime::default_artifacts_dir()));
-    let r = c
-        .submit(Job {
-            id: 0,
-            app,
-            variant: variant_of(rest),
-            engine,
-            size,
-            steps,
-            vlen: vlen_of(rest)?,
-        })
-        .recv()?;
-    if r.ok {
+    let r = c.submit(Job::new(0, spec, backend.name(), size, steps)).recv()?;
+    let out = if r.ok {
         println!(
             "ok: {:.1} Mcells/s latency={:?} checksum={:.6e}",
             r.cups / 1e6,
             r.latency,
             r.checksum
         );
+        Ok(())
     } else {
-        println!("FAILED: {}", r.detail);
-    }
+        Err(format!("job failed: {}", r.detail).into())
+    };
     c.shutdown();
-    Ok(())
+    out
 }
 
 fn serve(rest: &[String]) -> CliResult {
@@ -181,9 +200,9 @@ fn serve(rest: &[String]) -> CliResult {
     }
     // `--vlen` overrides every job in the trace (per-job vlens come from
     // the optional sixth trace field).
-    if let Some(v) = vlen_of(rest)? {
+    if let vlen @ (Vlen::Auto | Vlen::Fixed(_)) = vlen_of(rest)? {
         for j in template.iter_mut() {
-            j.vlen = Some(v);
+            j.spec = j.spec.clone().vlen(vlen);
         }
     }
     let jobs = repeat_jobs(&template, repeat);
@@ -239,7 +258,7 @@ fn bench(rest: &[String]) -> CliResult {
             hfav::bench::footprint();
         }
         "serving" => {
-            hfav::bench::serving(4, 6, vlen_of(rest)?);
+            hfav::bench::serving(4, 6, vlen_of(rest)?.resolve());
         }
         "pjrt" => {
             hfav::bench::pjrt(&hfav::runtime::default_artifacts_dir())?;
@@ -249,7 +268,7 @@ fn bench(rest: &[String]) -> CliResult {
             hfav::bench::normalization(&sizes_big);
             hfav::bench::cosmo(&sizes_small, 8);
             hfav::bench::hydro2d(&[64, 128, 256], 5);
-            hfav::bench::serving(4, 6, vlen_of(rest)?);
+            hfav::bench::serving(4, 6, vlen_of(rest)?.resolve());
             let _ = hfav::bench::pjrt(&hfav::runtime::default_artifacts_dir());
         }
         other => return Err(format!("unknown bench `{other}`").into()),

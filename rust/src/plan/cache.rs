@@ -9,15 +9,15 @@
 //!   computed exactly once per key, even under racing lookups (other
 //!   threads block on the in-flight computation instead of duplicating
 //!   it). Hit/miss/compute counters are threaded through [`CacheStats`].
-//! * [`PlanKey`] — `(app, variant, options fingerprint)`: the identity of
-//!   a compiled plan. The fingerprint folds every semantically relevant
-//!   field of [`CompileOptions`] (fusion + analysis + input rolling) and,
-//!   optionally, [`ExecOptions`], through a deterministic FNV-1a hash.
+//! * [`PlanKey`] — `(app, variant, fingerprint)`: the identity of a
+//!   compiled plan. The fingerprint comes from
+//!   [`PlanSpec::fingerprint`](crate::plan::PlanSpec::fingerprint) — the
+//!   spec is the *only* source of compile options, so fingerprinting its
+//!   fields covers every semantically relevant option by construction.
 //! * [`PlanCache`] — an `OnceMap<PlanKey, Program>` with compile helpers;
 //!   the coordinator shares one instance across its whole worker pool.
 
-use crate::exec::ExecOptions;
-use crate::plan::{compile_src, CompileOptions, Program};
+use crate::plan::{PlanSpec, Program};
 use std::collections::hash_map::RandomState;
 use std::collections::HashMap;
 use std::hash::{BuildHasher, Hash};
@@ -75,37 +75,15 @@ impl Default for Fnv64 {
     }
 }
 
-/// Fold every semantically relevant compile option into `h`. Any new
-/// option that changes the produced schedule MUST be added here, or two
-/// differently-configured compiles would collide in the cache.
-pub fn feed_compile_options(h: &mut Fnv64, o: &CompileOptions) {
-    h.write_bool(o.fusion.enabled);
-    h.write_bool(o.analysis.contraction);
-    // The vector-length override is an Option: `None` (deck default) must
-    // not collide with any forced value, and distinct forced vlens must
-    // get distinct compiled-plan cache entries.
-    h.write_bool(o.analysis.vector_len.is_some());
-    h.write_u64(o.analysis.vector_len.unwrap_or(0) as u64);
-    h.write_i64(o.analysis.rotation_slack);
-    h.write_bool(o.analysis.pow2_windows);
-    h.write_bool(o.analysis.contract_innermost);
-    h.write_bool(o.roll_all_inputs);
-}
-
-/// Fingerprint of a [`CompileOptions`].
-pub fn compile_fingerprint(o: &CompileOptions) -> u64 {
-    let mut h = Fnv64::new();
-    feed_compile_options(&mut h, o);
-    h.finish()
-}
-
 // ---------------------------------------------------------------------------
 // Cache key
 // ---------------------------------------------------------------------------
 
-/// Identity of a compiled plan: which deck (`app`), which paper variant
-/// (`hfav` / `autovec` / ...), and the fingerprint of every option that
-/// influences the compile.
+/// Identity of a compiled plan: which deck (`app` — builtin name or deck
+/// file path), which variant label (`hfav` / `autovec` / `hfav+tuned` /
+/// ...), and the canonical [`PlanSpec`] fingerprint covering every
+/// option that influences the compile. Built by
+/// [`PlanSpec::plan_key`](crate::plan::PlanSpec::plan_key).
 #[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct PlanKey {
     pub app: String,
@@ -114,32 +92,12 @@ pub struct PlanKey {
 }
 
 impl PlanKey {
-    /// Key for a compile of `app` under `opts`, labeled with a variant.
-    pub fn new(app: &str, variant: &str, opts: &CompileOptions) -> PlanKey {
-        PlanKey {
-            app: app.to_string(),
-            variant: variant.to_string(),
-            fingerprint: compile_fingerprint(opts),
-        }
-    }
-
     /// Derive a sibling key with an extra tag folded into the
-    /// fingerprint (e.g. `"native"` for compiled-C modules keyed off the
-    /// same plan).
+    /// fingerprint (e.g. a backend name for prepared executables keyed
+    /// off the same plan).
     pub fn tagged(&self, tag: &str) -> PlanKey {
         let mut h = Fnv64(self.fingerprint);
         h.write_str(tag);
-        PlanKey { app: self.app.clone(), variant: self.variant.clone(), fingerprint: h.finish() }
-    }
-
-    /// Derive a sibling key for caches whose values also depend on the
-    /// execution mode (e.g. per-worker interpreter sweepers).
-    pub fn with_exec(&self, e: &ExecOptions) -> PlanKey {
-        let mut h = Fnv64(self.fingerprint);
-        h.write_str("exec");
-        h.write_u64(e.mode as u64);
-        h.write_bool(e.strip.is_some());
-        h.write_u64(e.strip.unwrap_or(0) as u64);
         PlanKey { app: self.app.clone(), variant: self.variant.clone(), fingerprint: h.finish() }
     }
 }
@@ -365,17 +323,10 @@ impl PlanCache {
         self.map.get_or_compute(key, f)
     }
 
-    /// Convenience: compile `src` under `opts`, keyed by
-    /// `(app, variant, fingerprint(opts))`.
-    pub fn compile_src_cached(
-        &self,
-        app: &str,
-        variant: &str,
-        src: &str,
-        opts: &CompileOptions,
-    ) -> Result<Arc<Program>, String> {
-        let key = PlanKey::new(app, variant, opts);
-        self.map.get_or_compute(&key, || compile_src(src, opts.clone()))
+    /// Convenience: compile a [`PlanSpec`], keyed by its canonical
+    /// [`PlanKey`].
+    pub fn compile_spec(&self, spec: &PlanSpec) -> Result<Arc<Program>, String> {
+        self.map.get_or_compute(&spec.plan_key(), || spec.compile())
     }
 
     pub fn get(&self, key: &PlanKey) -> Option<Result<Arc<Program>, String>> {
@@ -402,75 +353,15 @@ impl PlanCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::apps::Variant;
     use crate::frontend::testdecks;
-
-    #[test]
-    fn fingerprint_distinguishes_options() {
-        let a = CompileOptions::default();
-        let b = CompileOptions {
-            fusion: crate::fusion::FusionOptions { enabled: false },
-            ..Default::default()
-        };
-        let c = CompileOptions {
-            analysis: crate::analysis::AnalysisOptions {
-                contract_innermost: false,
-                ..Default::default()
-            },
-            ..Default::default()
-        };
-        let d = CompileOptions { roll_all_inputs: true, ..Default::default() };
-        let fps = [
-            compile_fingerprint(&a),
-            compile_fingerprint(&b),
-            compile_fingerprint(&c),
-            compile_fingerprint(&d),
-        ];
-        for i in 0..fps.len() {
-            for j in i + 1..fps.len() {
-                assert_ne!(fps[i], fps[j], "options {i} and {j} collide");
-            }
-        }
-        // Same options → same fingerprint (determinism).
-        assert_eq!(compile_fingerprint(&a), compile_fingerprint(&CompileOptions::default()));
-    }
-
-    #[test]
-    fn exec_keys_distinguish_modes() {
-        use crate::exec::Mode;
-        let k = PlanKey::new("laplace", "hfav", &CompileOptions::default());
-        let a = k.with_exec(&ExecOptions { mode: Mode::Peeled, strip: None });
-        let b = k.with_exec(&ExecOptions { mode: Mode::Guarded, strip: None });
-        let c = k.with_exec(&ExecOptions { mode: Mode::Peeled, strip: Some(4) });
-        assert_ne!(a.fingerprint, b.fingerprint);
-        assert_ne!(a.fingerprint, k.fingerprint);
-        assert_ne!(a.fingerprint, c.fingerprint);
-    }
-
-    #[test]
-    fn fingerprint_distinguishes_vector_lens() {
-        let mk = |vl: Option<usize>| CompileOptions {
-            analysis: crate::analysis::AnalysisOptions { vector_len: vl, ..Default::default() },
-            ..Default::default()
-        };
-        let fps: Vec<u64> = [None, Some(1), Some(4), Some(8)]
-            .into_iter()
-            .map(|vl| compile_fingerprint(&mk(vl)))
-            .collect();
-        for i in 0..fps.len() {
-            for j in i + 1..fps.len() {
-                assert_ne!(fps[i], fps[j], "vlen options {i} and {j} collide");
-            }
-        }
-    }
 
     #[test]
     fn plan_cache_compiles_once_per_key() {
         let cache = PlanCache::new();
-        let opts = CompileOptions::default();
+        let spec = PlanSpec::deck_src(testdecks::LAPLACE);
         for _ in 0..5 {
-            let p = cache
-                .compile_src_cached("laplace", "hfav", testdecks::LAPLACE, &opts)
-                .unwrap();
+            let p = cache.compile_spec(&spec).unwrap();
             assert!(!p.fd.nests.is_empty());
         }
         let s = cache.stats();
@@ -481,27 +372,28 @@ mod tests {
     }
 
     #[test]
-    fn distinct_fusion_options_get_distinct_entries() {
+    fn distinct_variants_get_distinct_entries() {
         let cache = PlanCache::new();
-        let fused = CompileOptions::default();
-        let unfused = CompileOptions {
-            fusion: crate::fusion::FusionOptions { enabled: false },
-            ..Default::default()
-        };
-        let a = cache
-            .compile_src_cached("laplace", "hfav", testdecks::LAPLACE, &fused)
-            .unwrap();
-        let b = cache
-            .compile_src_cached("laplace", "autovec", testdecks::LAPLACE, &unfused)
-            .unwrap();
+        let fused = PlanSpec::deck_src(testdecks::LAPLACE);
+        let unfused = PlanSpec::deck_src(testdecks::LAPLACE).variant(Variant::Autovec);
+        assert_ne!(fused.fingerprint(), unfused.fingerprint());
+        let a = cache.compile_spec(&fused).unwrap();
+        let b = cache.compile_spec(&unfused).unwrap();
         assert_eq!(cache.len(), 2);
         assert_eq!(cache.stats().computes, 2);
         // The two plans really differ: fusion produces fewer nests.
         assert!(a.fd.nests.len() <= b.fd.nests.len());
-        assert_ne!(
-            PlanKey::new("laplace", "x", &fused).fingerprint,
-            PlanKey::new("laplace", "x", &unfused).fingerprint,
-        );
+    }
+
+    #[test]
+    fn distinct_vlens_get_distinct_entries() {
+        use crate::plan::Vlen;
+        let cache = PlanCache::new();
+        for vlen in [Vlen::Deck, Vlen::Fixed(1), Vlen::Fixed(4), Vlen::Fixed(8)] {
+            cache.compile_spec(&PlanSpec::deck_src(testdecks::LAPLACE).vlen(vlen)).unwrap();
+        }
+        assert_eq!(cache.len(), 4);
+        assert_eq!(cache.stats().computes, 4);
     }
 
     #[test]
@@ -532,9 +424,9 @@ mod tests {
     #[test]
     fn errors_are_cached() {
         let cache = PlanCache::new();
-        let opts = CompileOptions::default();
-        let e1 = cache.compile_src_cached("bad", "hfav", "not a deck", &opts).unwrap_err();
-        let e2 = cache.compile_src_cached("bad", "hfav", "not a deck", &opts).unwrap_err();
+        let bad = PlanSpec::deck_src("not a deck");
+        let e1 = cache.compile_spec(&bad).unwrap_err();
+        let e2 = cache.compile_spec(&bad).unwrap_err();
         assert_eq!(e1, e2);
         let s = cache.stats();
         assert_eq!(s.computes, 1, "{s}");
@@ -555,7 +447,7 @@ mod tests {
 
     #[test]
     fn tagged_keys_differ() {
-        let k = PlanKey::new("laplace", "hfav", &CompileOptions::default());
+        let k = PlanSpec::app("laplace").plan_key();
         let n = k.tagged("native");
         assert_eq!(k.app, n.app);
         assert_ne!(k.fingerprint, n.fingerprint);

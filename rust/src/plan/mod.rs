@@ -2,12 +2,18 @@
 //! [`Program`] — the compiled schedule consumed by the executor
 //! ([`crate::exec`]) and the code emitters ([`crate::codegen`]).
 //!
-//! Compilation is expensive but its output is immutable: [`cache`]
-//! provides the shared compile-once/serve-many plan cache
-//! ([`cache::PlanCache`], keyed by [`cache::PlanKey`]) that the
-//! coordinator's worker pool is built on.
+//! What to compile is described by a [`PlanSpec`] ([`spec`]): deck
+//! target + variant + tuning knobs, with a canonical fingerprint that
+//! doubles as the cache identity. Compilation is expensive but its
+//! output is immutable: [`cache`] provides the shared
+//! compile-once/serve-many plan cache ([`cache::PlanCache`], keyed by
+//! [`cache::PlanKey`] = the spec fingerprint) that the coordinator's
+//! worker pool is built on.
 
 pub mod cache;
+pub mod spec;
+
+pub use self::spec::{PlanSpec, Vlen};
 
 use crate::analysis::{self, AnalysisOptions, StoragePlan};
 use crate::dataflow::{Dataflow, Terminal};

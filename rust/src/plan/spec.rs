@@ -1,0 +1,387 @@
+//! `PlanSpec`: the single source of truth for *what gets compiled*.
+//!
+//! A spec names a deck (builtin app, external deck file, or inline
+//! source), a paper [`Variant`], and the tuning knobs (vector length,
+//! §5.3 tuning, input rolling). Everything downstream is derived from it:
+//!
+//! * [`PlanSpec::compile_options`] — the exact [`CompileOptions`] the
+//!   pipeline runs under; no caller assembles options by hand.
+//! * [`PlanSpec::fingerprint`] / [`PlanSpec::plan_key`] — the canonical
+//!   plan-cache identity. Because the options are *derived from* the
+//!   spec, fingerprinting the spec's fields covers every semantically
+//!   relevant option by construction: there is no way to express a
+//!   compile knob that escapes the fingerprint.
+//! * [`PlanSpec::compile`] — deck resolution + the full pipeline.
+//!
+//! ```no_run
+//! use hfav::apps::Variant;
+//! use hfav::plan::{PlanSpec, Vlen};
+//! let spec = PlanSpec::app("hydro2d").variant(Variant::Hfav).vlen(Vlen::Auto);
+//! let prog = spec.compile().unwrap();
+//! # let _ = prog;
+//! ```
+
+use crate::apps::Variant;
+use crate::fusion::FusionOptions;
+use crate::plan::cache::{Fnv64, PlanKey};
+use crate::plan::{compile_src, CompileOptions, Program};
+use std::borrow::Cow;
+use std::path::Path;
+
+/// Vector-length request for a spec. Parses from the CLI / trace spelling
+/// (`deck` or `-` = deck default, `auto` = host SIMD width, `N` = forced).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Vlen {
+    /// Use the deck's declared `vector_len` (default).
+    Deck,
+    /// Runtime-detect the host's SIMD width ([`crate::analysis::auto_vector_len`]).
+    Auto,
+    /// Force `n` lanes (`Fixed(1)` forces scalar codegen).
+    Fixed(usize),
+}
+
+impl Vlen {
+    /// Resolve to the `Option` override the analysis layer takes. `Auto`
+    /// resolves immediately (host detection is stable within a process),
+    /// so fingerprints are always concrete.
+    pub fn resolve(self) -> Option<usize> {
+        match self {
+            Vlen::Deck => None,
+            Vlen::Auto => Some(crate::analysis::auto_vector_len()),
+            Vlen::Fixed(n) => Some(n),
+        }
+    }
+}
+
+impl std::str::FromStr for Vlen {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Vlen, String> {
+        match s {
+            "auto" => Ok(Vlen::Auto),
+            "-" | "deck" => Ok(Vlen::Deck),
+            v => {
+                let n: usize = v.parse().map_err(|e| format!("vlen: {e}"))?;
+                if n == 0 {
+                    return Err("vlen must be >= 1 (1 = forced scalar)".to_string());
+                }
+                Ok(Vlen::Fixed(n))
+            }
+        }
+    }
+}
+
+/// Where a spec's deck text comes from.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+enum Source {
+    /// Built-in app name (resolved through [`crate::apps::deck_of`] at
+    /// compile time, so unknown names fail at compile, not construction).
+    App(String),
+    /// External deck file; the text is captured eagerly at construction
+    /// so the fingerprint covers the *content*, not just the path.
+    File { path: String, src: String },
+    /// Inline deck source (tests, generated decks).
+    Inline { src: String },
+}
+
+/// A buildable description of one compiled plan. See the module docs.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PlanSpec {
+    source: Source,
+    variant: Variant,
+    /// Resolved vector-length override (`None` = deck default).
+    vlen: Option<usize>,
+    /// Paper §5.3 "HFAV + Tuning": keep innermost windows full rows.
+    tuned: bool,
+    /// Roll *all* terminal inputs through buffers (§5.3 in-place variant).
+    roll_all_inputs: bool,
+}
+
+impl PlanSpec {
+    fn new(source: Source) -> PlanSpec {
+        PlanSpec {
+            source,
+            variant: Variant::Hfav,
+            vlen: None,
+            tuned: false,
+            roll_all_inputs: false,
+        }
+    }
+
+    /// Spec for a built-in app (`laplace` | `normalize` | `cosmo` |
+    /// `hydro2d`). Unknown names are accepted here and fail at
+    /// [`compile`](Self::compile) with the `unknown app` error, so jobs
+    /// for bad app names surface as per-job failures, not panics.
+    pub fn app(name: &str) -> PlanSpec {
+        PlanSpec::new(Source::App(name.to_string()))
+    }
+
+    /// Spec for an external deck file. The file is read eagerly — a
+    /// missing or unreadable deck fails here (fail fast), and the
+    /// fingerprint covers the file *content*, so editing the deck yields
+    /// a fresh plan-cache entry.
+    pub fn deck_file(path: impl AsRef<Path>) -> Result<PlanSpec, String> {
+        let path = path.as_ref();
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading deck `{}`: {e}", path.display()))?;
+        Ok(PlanSpec::new(Source::File { path: path.display().to_string(), src }))
+    }
+
+    /// Spec for inline deck source text.
+    pub fn deck_src(src: impl Into<String>) -> PlanSpec {
+        PlanSpec::new(Source::Inline { src: src.into() })
+    }
+
+    /// Select the program shape (default [`Variant::Hfav`]).
+    pub fn variant(mut self, v: Variant) -> PlanSpec {
+        self.variant = v;
+        self
+    }
+
+    /// Request a vector length (default [`Vlen::Deck`]).
+    pub fn vlen(mut self, v: Vlen) -> PlanSpec {
+        self.vlen = v.resolve();
+        self
+    }
+
+    /// Set the already-resolved vector-length override directly (the
+    /// plumbing form used by trace parsing and CLI overrides).
+    pub fn vlen_resolved(mut self, vlen: Option<usize>) -> PlanSpec {
+        self.vlen = vlen;
+        self
+    }
+
+    /// Paper §5.3 "HFAV + Tuning": full fusion, but innermost-dim windows
+    /// stay full rows so the steady state auto-vectorizes.
+    pub fn tuned(mut self, on: bool) -> PlanSpec {
+        self.tuned = on;
+        self
+    }
+
+    /// Roll all terminal inputs through buffers (§5.3 in-place variant).
+    pub fn roll_all_inputs(mut self, on: bool) -> PlanSpec {
+        self.roll_all_inputs = on;
+        self
+    }
+
+    // -- accessors ----------------------------------------------------------
+
+    /// Built-in app name, if this spec targets one.
+    pub fn app_name(&self) -> Option<&str> {
+        match &self.source {
+            Source::App(n) => Some(n),
+            _ => None,
+        }
+    }
+
+    /// Human-readable target: app name, deck file path, or `<inline>`.
+    pub fn target(&self) -> &str {
+        match &self.source {
+            Source::App(n) => n,
+            Source::File { path, .. } => path,
+            Source::Inline { .. } => "<inline>",
+        }
+    }
+
+    pub fn variant_kind(&self) -> Variant {
+        self.variant
+    }
+
+    /// Resolved vector-length override (`None` = deck default).
+    pub fn vlen_override(&self) -> Option<usize> {
+        self.vlen
+    }
+
+    pub fn is_tuned(&self) -> bool {
+        self.tuned
+    }
+
+    /// Variant label used in plan keys and traces (`hfav`, `autovec`,
+    /// `hfav+tuned`, ...).
+    pub fn variant_label(&self) -> String {
+        if self.tuned {
+            format!("{}+tuned", self.variant.label())
+        } else {
+            self.variant.label().to_string()
+        }
+    }
+
+    // -- derivations --------------------------------------------------------
+
+    /// The deck source this spec compiles.
+    pub fn deck_source(&self) -> Result<Cow<'_, str>, String> {
+        match &self.source {
+            Source::App(n) => crate::apps::deck_of(n).map(Cow::Borrowed),
+            Source::File { src, .. } | Source::Inline { src } => Ok(Cow::Borrowed(src)),
+        }
+    }
+
+    /// The exact [`CompileOptions`] this spec compiles under — the only
+    /// place in the tree that maps spec knobs to pipeline options.
+    pub fn compile_options(&self) -> CompileOptions {
+        let mut opts = match self.variant {
+            Variant::Hfav => CompileOptions::default(),
+            Variant::Autovec => CompileOptions {
+                fusion: FusionOptions { enabled: false },
+                analysis: crate::analysis::AnalysisOptions {
+                    contraction: false,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        };
+        if self.tuned {
+            opts.analysis.contract_innermost = false;
+        }
+        opts.analysis.vector_len = self.vlen;
+        opts.roll_all_inputs = self.roll_all_inputs;
+        opts
+    }
+
+    /// Canonical fingerprint: a deterministic FNV-1a over every field
+    /// that influences compilation (deck identity *and content* for
+    /// file/inline sources, variant, tuning, vector length, rolling).
+    /// [`plan_key`](Self::plan_key) is derived from this, so the cache
+    /// can never conflate two differently-configured compiles.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv64::new();
+        match &self.source {
+            Source::App(n) => {
+                h.write_str("app");
+                h.write_str(n);
+            }
+            Source::File { path, src } => {
+                h.write_str("file");
+                h.write_str(path);
+                h.write_str(src);
+            }
+            Source::Inline { src } => {
+                h.write_str("src");
+                h.write_str(src);
+            }
+        }
+        h.write_str(self.variant.label());
+        h.write_bool(self.tuned);
+        h.write_bool(self.roll_all_inputs);
+        // `None` (deck default) must not collide with any forced value.
+        h.write_bool(self.vlen.is_some());
+        h.write_u64(self.vlen.unwrap_or(0) as u64);
+        h.finish()
+    }
+
+    /// The plan-cache key this spec compiles under.
+    pub fn plan_key(&self) -> PlanKey {
+        PlanKey {
+            app: self.target().to_string(),
+            variant: self.variant_label(),
+            fingerprint: self.fingerprint(),
+        }
+    }
+
+    /// Resolve the deck and run the full pipeline.
+    pub fn compile(&self) -> Result<Program, String> {
+        compile_src(&self.deck_source()?, self.compile_options())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_and_accessors() {
+        let s = PlanSpec::app("laplace");
+        assert_eq!(s.app_name(), Some("laplace"));
+        assert_eq!(s.target(), "laplace");
+        assert_eq!(s.variant_kind(), Variant::Hfav);
+        assert_eq!(s.vlen_override(), None);
+        assert!(!s.is_tuned());
+        assert_eq!(s.variant_label(), "hfav");
+        assert_eq!(s.clone().tuned(true).variant_label(), "hfav+tuned");
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_distinct() {
+        let base = PlanSpec::app("laplace");
+        assert_eq!(base.fingerprint(), PlanSpec::app("laplace").fingerprint());
+        let knobs = [
+            base.clone().variant(Variant::Autovec),
+            base.clone().vlen(Vlen::Fixed(1)),
+            base.clone().vlen(Vlen::Fixed(4)),
+            base.clone().vlen(Vlen::Fixed(8)),
+            base.clone().tuned(true),
+            base.clone().roll_all_inputs(true),
+            PlanSpec::app("normalize"),
+            PlanSpec::deck_src("name: laplace\n"),
+        ];
+        let mut fps = vec![base.fingerprint()];
+        for k in &knobs {
+            fps.push(k.fingerprint());
+        }
+        for i in 0..fps.len() {
+            for j in i + 1..fps.len() {
+                assert_ne!(fps[i], fps[j], "specs {i} and {j} collide");
+            }
+        }
+    }
+
+    #[test]
+    fn options_derived_from_spec() {
+        let hfav = PlanSpec::app("laplace").compile_options();
+        assert!(hfav.fusion.enabled);
+        assert!(hfav.analysis.contraction);
+        let auto = PlanSpec::app("laplace").variant(Variant::Autovec).compile_options();
+        assert!(!auto.fusion.enabled);
+        assert!(!auto.analysis.contraction);
+        let tuned = PlanSpec::app("cosmo").tuned(true).compile_options();
+        assert!(!tuned.analysis.contract_innermost);
+        assert!(tuned.fusion.enabled);
+        let v = PlanSpec::app("laplace").vlen(Vlen::Fixed(4)).compile_options();
+        assert_eq!(v.analysis.vector_len, Some(4));
+        let r = PlanSpec::app("laplace").roll_all_inputs(true).compile_options();
+        assert!(r.roll_all_inputs);
+    }
+
+    #[test]
+    fn unknown_app_fails_at_compile() {
+        let e = PlanSpec::app("nope").compile().unwrap_err();
+        assert!(e.contains("unknown app"), "{e}");
+    }
+
+    #[test]
+    fn missing_deck_file_fails_fast() {
+        let e = PlanSpec::deck_file("/no/such/deck.yaml").unwrap_err();
+        assert!(e.contains("reading deck"), "{e}");
+    }
+
+    #[test]
+    fn vlen_parsing() {
+        assert_eq!("auto".parse::<Vlen>().unwrap(), Vlen::Auto);
+        assert_eq!("deck".parse::<Vlen>().unwrap(), Vlen::Deck);
+        assert_eq!("-".parse::<Vlen>().unwrap(), Vlen::Deck);
+        assert_eq!("4".parse::<Vlen>().unwrap(), Vlen::Fixed(4));
+        assert!("0".parse::<Vlen>().unwrap_err().contains(">= 1"));
+        assert!("x".parse::<Vlen>().is_err());
+        assert_eq!(Vlen::Deck.resolve(), None);
+        assert_eq!(Vlen::Fixed(8).resolve(), Some(8));
+        assert!(Vlen::Auto.resolve().unwrap_or(0) >= 1);
+    }
+
+    #[test]
+    fn plan_key_derivation() {
+        let s = PlanSpec::app("laplace").vlen(Vlen::Fixed(4));
+        let k = s.plan_key();
+        assert_eq!(k.app, "laplace");
+        assert_eq!(k.variant, "hfav");
+        assert_eq!(k.fingerprint, s.fingerprint());
+    }
+
+    #[test]
+    fn compiles_builtin_decks() {
+        for app in crate::apps::APP_NAMES {
+            for v in [Variant::Hfav, Variant::Autovec] {
+                let prog = PlanSpec::app(app).variant(v).compile().unwrap();
+                assert!(!prog.fd.nests.is_empty(), "{app} {v:?}");
+            }
+        }
+    }
+}

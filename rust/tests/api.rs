@@ -1,0 +1,187 @@
+//! Tests for the unified engine/plan API: backend-registry round-trips,
+//! unknown-engine errors, `PlanSpec` fingerprint discipline, deck-file
+//! serving through the coordinator, and the fails-closed property (a
+//! `Job` cannot express a compile option its plan key does not cover).
+
+use hfav::apps::Variant;
+use hfav::coordinator::{Coordinator, Job};
+use hfav::engine::{registry, Availability};
+use hfav::plan::{PlanSpec, Vlen};
+
+#[test]
+fn registry_round_trip_parse_name_parse() {
+    let reg = registry();
+    for name in reg.names() {
+        let backend = reg.get(name).unwrap();
+        assert_eq!(backend.name(), name);
+        // name → get → name is a fixed point.
+        assert_eq!(reg.get(backend.name()).unwrap().name(), name);
+    }
+    assert_eq!(reg.names(), vec!["exec", "native", "rust", "pjrt"]);
+}
+
+#[test]
+fn unknown_engine_error_names_the_alternatives() {
+    let e = registry().get("cuda").unwrap_err();
+    assert!(e.contains("unknown engine `cuda`"), "{e}");
+    assert!(e.contains("exec") && e.contains("native") && e.contains("rust"), "{e}");
+    assert!(e.contains("pjrt"), "{e}");
+}
+
+/// Every knob a spec can express must move the fingerprint, and equal
+/// specs must agree — the fingerprint is the cache identity, so this is
+/// the collision/stability contract.
+#[test]
+fn planspec_fingerprints_are_stable_and_distinct() {
+    let base = PlanSpec::app("hydro2d");
+    assert_eq!(base.fingerprint(), PlanSpec::app("hydro2d").fingerprint());
+    assert_eq!(base.plan_key(), PlanSpec::app("hydro2d").plan_key());
+    let variations = [
+        base.clone().variant(Variant::Autovec),
+        base.clone().vlen(Vlen::Fixed(1)),
+        base.clone().vlen(Vlen::Fixed(4)),
+        base.clone().vlen(Vlen::Fixed(8)),
+        base.clone().tuned(true),
+        base.clone().tuned(true).vlen(Vlen::Fixed(4)),
+        base.clone().roll_all_inputs(true),
+        PlanSpec::app("laplace"),
+        PlanSpec::deck_src("name: hydro2d\n"),
+    ];
+    let mut fps = vec![base.fingerprint()];
+    fps.extend(variations.iter().map(|s| s.fingerprint()));
+    for i in 0..fps.len() {
+        for j in i + 1..fps.len() {
+            assert_ne!(fps[i], fps[j], "spec {i} and spec {j} collide");
+        }
+    }
+}
+
+/// Deck-*file* specs fingerprint the content: same path, edited deck →
+/// new identity; and a missing file fails at spec construction.
+#[test]
+fn deck_file_fingerprints_cover_content() {
+    let dir = std::env::temp_dir().join(format!("hfav-api-test-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("content.yaml");
+    std::fs::write(&path, hfav::apps::deck_of("laplace").unwrap()).unwrap();
+    let a = PlanSpec::deck_file(&path).unwrap();
+    std::fs::write(&path, hfav::apps::deck_of("normalize").unwrap()).unwrap();
+    let b = PlanSpec::deck_file(&path).unwrap();
+    assert_ne!(a.fingerprint(), b.fingerprint(), "content change must change identity");
+    assert_eq!(a.plan_key().app, path.display().to_string());
+    assert!(PlanSpec::deck_file(dir.join("missing.yaml")).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// An external deck file serves through the coordinator exactly like the
+/// builtin app with the same content: same seeded inputs, same checksum
+/// — but under its own plan-cache key.
+#[test]
+fn deck_file_serves_through_coordinator() {
+    let dir = std::env::temp_dir().join(format!("hfav-api-serve-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("laplace_copy.yaml");
+    std::fs::write(&path, hfav::apps::deck_of("laplace").unwrap()).unwrap();
+
+    // cosmo exercises the deck-name-keyed driver specials (the Nk plane
+    // override must apply to the file copy too, not just the builtin).
+    let cosmo_path = dir.join("cosmo_copy.yaml");
+    std::fs::write(&cosmo_path, hfav::apps::deck_of("cosmo").unwrap()).unwrap();
+
+    let c = Coordinator::start(2, None);
+    let jobs = vec![
+        Job::new(5, PlanSpec::app("laplace"), "exec", 32, 1),
+        Job::new(5, PlanSpec::deck_file(&path).unwrap(), "exec", 32, 1),
+        Job::new(6, PlanSpec::app("cosmo"), "exec", 16, 1),
+        Job::new(6, PlanSpec::deck_file(&cosmo_path).unwrap(), "exec", 16, 1),
+    ];
+    assert_eq!(hfav::coordinator::distinct_plan_keys(&jobs), 4, "files get their own keys");
+    let results = c.run_batch(jobs);
+    for r in &results {
+        assert!(r.ok, "job {}: {}", r.id, r.detail);
+    }
+    assert_eq!(
+        results[0].checksum, results[1].checksum,
+        "same deck content must serve identical results"
+    );
+    assert_eq!(
+        results[2].checksum, results[3].checksum,
+        "cosmo deck file must serve identically to the builtin (same Nk planes)"
+    );
+    assert_eq!(c.plans.stats().computes, 4);
+    c.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The generated-Rust backend is a first-class engine: when a `rustc` is
+/// on PATH (always true under `cargo test`), serving on `rust` matches
+/// the interpreter bit-for-bit on laplace (neither contracts FP).
+#[test]
+fn rust_backend_serves_through_coordinator() {
+    if let Availability::Missing(why) = registry().get("rust").unwrap().available() {
+        eprintln!("skipping rust_backend_serves_through_coordinator: {why}");
+        return;
+    }
+    let c = Coordinator::start(1, None);
+    let jobs = vec![
+        Job::new(3, PlanSpec::app("laplace"), "exec", 24, 1),
+        Job::new(3, PlanSpec::app("laplace"), "rust", 24, 1),
+    ];
+    let results = c.run_batch(jobs);
+    for r in &results {
+        assert!(r.ok, "job {}: {}", r.id, r.detail);
+    }
+    assert_eq!(results[0].checksum, results[1].checksum, "generated Rust diverged");
+    // One plan, two prepared executables (interpreter + rustc module).
+    assert_eq!(c.plans.stats().computes, 1);
+    assert_eq!(c.prepared.stats().computes, 2);
+    c.shutdown();
+}
+
+/// Unavailable backends surface their availability message as a per-job
+/// failure (serving degrades; the CLI `run` path fails fast instead).
+#[test]
+fn unavailable_backend_degrades_per_job() {
+    let c = Coordinator::start(1, None);
+    let r = c.submit(Job::new(0, PlanSpec::app("laplace"), "pjrt", 16, 1)).recv().unwrap();
+    assert!(!r.ok);
+    assert!(r.detail.contains("PJRT") || r.detail.contains("artifacts"), "{}", r.detail);
+    c.shutdown();
+}
+
+/// Fails closed: a `Job` carries only a `PlanSpec` + backend name, its
+/// plan key is derived solely from the spec, and every spec knob is
+/// covered by the fingerprint — so there is no way to build two jobs
+/// that compile differently but share a cache entry. (The parallel
+/// `app`/`variant`/`vlen` job fields this replaced are gone; this test
+/// pins the derivation so they cannot quietly come back.)
+#[test]
+fn job_plan_identity_is_spec_fingerprint() {
+    let spec = PlanSpec::app("cosmo").variant(Variant::Autovec).vlen(Vlen::Fixed(4)).tuned(true);
+    let job = Job::new(1, spec.clone(), "native", 64, 2);
+    assert_eq!(job.plan_key(), spec.plan_key());
+    assert_eq!(job.plan_key().fingerprint, spec.fingerprint());
+    // Specs that differ in any knob produce jobs with distinct keys —
+    // and identical option sets produce identical keys.
+    let same = Job::new(9, spec.clone(), "exec", 8, 1);
+    assert_eq!(same.plan_key(), job.plan_key(), "backend/size/steps must not affect identity");
+    let knobs = [
+        spec.clone().variant(Variant::Hfav),
+        spec.clone().vlen(Vlen::Fixed(8)),
+        spec.clone().vlen(Vlen::Deck),
+        spec.clone().tuned(false),
+        spec.clone().roll_all_inputs(true),
+    ];
+    for (i, k) in knobs.iter().enumerate() {
+        assert_ne!(
+            Job::new(1, k.clone(), "native", 64, 2).plan_key(),
+            job.plan_key(),
+            "knob {i} escaped the fingerprint"
+        );
+        assert_ne!(
+            format!("{:?}", k.compile_options()),
+            format!("{:?}", spec.compile_options()),
+            "knob {i} does not change the compile options it claims to"
+        );
+    }
+}

@@ -15,7 +15,7 @@
 use hfav::apps::{self, Variant};
 use hfav::codegen::native::{self, CcOptions, RustcOptions};
 use hfav::exec::{self, ExecOptions};
-use hfav::plan::Program;
+use hfav::plan::{PlanSpec, Program, Vlen};
 use std::collections::BTreeMap;
 
 const VLENS: [usize; 3] = [1, 4, 8];
@@ -49,7 +49,10 @@ fn engines() -> Vec<Eng> {
 }
 
 fn compile(deck: &str, variant: Variant, vlen: usize) -> Program {
-    apps::compile_variant_vlen(deck, variant, Some(vlen))
+    PlanSpec::deck_src(deck)
+        .variant(variant)
+        .vlen(Vlen::Fixed(vlen))
+        .compile()
         .unwrap_or_else(|e| panic!("compile {variant:?} vlen {vlen}: {e}"))
 }
 

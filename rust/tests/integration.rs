@@ -2,8 +2,13 @@
 //! (all engines), generated-code backends on every built-in app, and the
 //! schedule/DOT inspection surfaces the CLI exposes.
 
-use hfav::apps::{compile_variant, Variant};
-use hfav::coordinator::{deck_of, parse_trace_line, Coordinator, Engine, Job};
+use hfav::apps::{deck_of, Variant};
+use hfav::coordinator::{parse_trace_line, Coordinator, Job};
+use hfav::plan::{PlanSpec, Program};
+
+fn compile_variant(deck: &str, v: Variant) -> Result<Program, String> {
+    PlanSpec::deck_src(deck).variant(v).compile()
+}
 
 #[test]
 fn serve_sample_trace_exec_and_native() {
@@ -38,36 +43,14 @@ fn pjrt_jobs_fail_gracefully_without_backend() {
     // come back as a clean per-job failure, never a worker panic, and must
     // not poison subsequent jobs on the same worker.
     let c = Coordinator::start(1, None);
-    let r = c
-        .submit(Job {
-            id: 0,
-            app: "laplace".into(),
-            variant: Variant::Hfav,
-            engine: Engine::Pjrt,
-            size: 64,
-            steps: 1,
-            vlen: None,
-        })
-        .recv()
-        .unwrap();
+    let r = c.submit(Job::new(0, PlanSpec::app("laplace"), "pjrt", 64, 1)).recv().unwrap();
     assert!(!r.ok);
     assert!(
         r.detail.contains("PJRT") || r.detail.contains("artifacts"),
         "unexpected detail: {}",
         r.detail
     );
-    let r2 = c
-        .submit(Job {
-            id: 1,
-            app: "laplace".into(),
-            variant: Variant::Hfav,
-            engine: Engine::Exec,
-            size: 32,
-            steps: 1,
-            vlen: None,
-        })
-        .recv()
-        .unwrap();
+    let r2 = c.submit(Job::new(1, PlanSpec::app("laplace"), "exec", 32, 1)).recv().unwrap();
     assert!(r2.ok, "worker poisoned by failed PJRT job: {}", r2.detail);
     c.shutdown();
 }

@@ -9,9 +9,14 @@
 //! xorshift generator drives the cases; failures print the generated deck
 //! for replay.)
 
-use hfav::apps::{compile_variant, max_err, Variant};
+use hfav::apps::{max_err, Variant};
 use hfav::exec::{self, registry::Registry, ExecOptions, Mode};
+use hfav::plan::{PlanSpec, Program};
 use std::collections::BTreeMap;
+
+fn compile_variant(deck: &str, v: Variant) -> Result<Program, String> {
+    PlanSpec::deck_src(deck).variant(v).compile()
+}
 
 struct Rng(u64);
 

@@ -4,15 +4,13 @@
 //! and deterministic results regardless of batching/scheduling.
 
 use hfav::apps::Variant;
-use hfav::coordinator::{
-    distinct_plan_keys, parse_trace_line, repeat_jobs, Coordinator, Engine, Job,
-};
-use hfav::plan::cache::{compile_fingerprint, PlanCache, PlanKey};
-use hfav::plan::CompileOptions;
+use hfav::coordinator::{distinct_plan_keys, parse_trace_line, repeat_jobs, Coordinator, Job};
+use hfav::plan::cache::PlanCache;
+use hfav::plan::PlanSpec;
 use std::sync::Arc;
 
-fn job(id: u64, app: &str, variant: Variant, engine: Engine, size: usize, steps: usize) -> Job {
-    Job { id, app: app.to_string(), variant, engine, size, steps, vlen: None }
+fn job(id: u64, app: &str, variant: Variant, backend: &str, size: usize, steps: usize) -> Job {
+    Job::new(id, PlanSpec::app(app).variant(variant), backend, size, steps)
 }
 
 /// N jobs over K distinct (app, variant, options) keys → exactly K
@@ -95,7 +93,7 @@ fn concurrent_run_batch_shares_one_cache() {
             let jobs: Vec<Job> = (0..6)
                 .map(|i| {
                     let (app, size) = if i % 2 == 0 { ("laplace", 40) } else { ("normalize", 24) };
-                    job(t * 100 + i, app, Variant::Hfav, Engine::Exec, size, 1)
+                    job(t * 100 + i, app, Variant::Hfav, "exec", size, 1)
                 })
                 .collect();
             c.run_batch(jobs)
@@ -117,29 +115,17 @@ fn concurrent_run_batch_shares_one_cache() {
     Arc::try_unwrap(c).ok().expect("all clones joined").shutdown();
 }
 
-/// Differing FusionOptions fingerprints produce distinct cache entries —
-/// the autovec and hfav shapes never collide.
+/// Differing spec fingerprints produce distinct cache entries — the
+/// autovec and hfav shapes never collide.
 #[test]
 fn differing_options_get_distinct_entries() {
     let cache = PlanCache::new();
-    let fused = CompileOptions::default();
-    let unfused = CompileOptions {
-        fusion: hfav::fusion::FusionOptions { enabled: false },
-        ..Default::default()
-    };
-    assert_ne!(compile_fingerprint(&fused), compile_fingerprint(&unfused));
+    let fused = PlanSpec::app("laplace").variant(Variant::Hfav);
+    let unfused = PlanSpec::app("laplace").variant(Variant::Autovec);
+    assert_ne!(fused.fingerprint(), unfused.fingerprint());
 
-    let deck = hfav::coordinator::deck_of("laplace").unwrap();
-    let a = cache
-        .get_or_compile(&PlanKey::new("laplace", "hfav", &fused), || {
-            hfav::plan::compile_src(deck, fused.clone())
-        })
-        .unwrap();
-    let b = cache
-        .get_or_compile(&PlanKey::new("laplace", "autovec", &unfused), || {
-            hfav::plan::compile_src(deck, unfused.clone())
-        })
-        .unwrap();
+    let a = cache.compile_spec(&fused).unwrap();
+    let b = cache.compile_spec(&unfused).unwrap();
     assert_eq!(cache.len(), 2);
     assert_eq!(cache.stats().computes, 2);
     // And the cached plans really are the two different shapes.
@@ -154,10 +140,10 @@ fn differing_options_get_distinct_entries() {
 fn warm_cache_results_match_cold_results() {
     let mk_jobs = || {
         vec![
-            job(0, "laplace", Variant::Hfav, Engine::Exec, 32, 1),
-            job(1, "normalize", Variant::Hfav, Engine::Exec, 24, 2),
-            job(2, "cosmo", Variant::Autovec, Engine::Exec, 12, 1),
-            job(3, "hydro2d", Variant::Hfav, Engine::Exec, 8, 2),
+            job(0, "laplace", Variant::Hfav, "exec", 32, 1),
+            job(1, "normalize", Variant::Hfav, "exec", 24, 2),
+            job(2, "cosmo", Variant::Autovec, "exec", 12, 1),
+            job(3, "hydro2d", Variant::Hfav, "exec", 8, 2),
         ]
     };
     let cold = Coordinator::start(2, None);
