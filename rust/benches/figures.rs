@@ -16,6 +16,8 @@ fn main() {
     println!();
     hfav::bench::serving(4, 8, None);
     println!();
+    hfav::bench::vectorization(hfav::analysis::auto_vector_len());
+    println!();
     match hfav::bench::pjrt(&hfav::runtime::default_artifacts_dir()) {
         Ok(_) => {}
         Err(e) => println!("PJRT bench unavailable: {e}"),

@@ -1,9 +1,41 @@
 //! Variable & storage analysis (paper §3.5): enclosing regions, reuse
 //! patterns, storage contraction, accumulator chaining, in/out alias
 //! chaining and vector expansion.
+//!
+//! # Vectorization legality gates
+//!
+//! The code generators and the interpreter executor never vectorize on
+//! their own judgement — every strip shape is justified by one of two
+//! legality checks owned by this module:
+//!
+//! * [`lane_fission_safe`] gates **innermost-dimension** strips
+//!   (`VecDim::Inner`, the paper's Fig. 9c vector expansion): running
+//!   each steady-state kernel over `vlen` consecutive innermost
+//!   iterations before the next kernel starts is legal only when no
+//!   kernel reads another kernel's per-iteration value out of storage
+//!   without per-lane slots (a *scan observed mid-loop*). The matching
+//!   storage invariant is established here: innermost windows are padded
+//!   to `w + vlen − 1` and loop-carried scalars get `vlen` lane slots,
+//!   so a whole strip fits in the buffer without wraparound.
+//! * [`outer_vectorizable`] gates **outer-dimension** strips
+//!   (`VecDim::Outer(dim)`): a nest may run `vlen` lanes of an outer
+//!   loop concurrently only when the loop is *k-independent* — every
+//!   member iterates the dim with offset-0 accesses and zero pipeline
+//!   shift, nothing reduces over it, and every written variable is
+//!   indexed by it (so lanes write disjoint slots). The storage
+//!   invariant is the *outer-lane expansion* applied by [`analyze`]:
+//!   single-slot (`DimSize::One`) intermediates gain `vlen` slots along
+//!   the lane dim, and [`layout_order`] moves that dim innermost in the
+//!   intermediate layouts so lane loops touch contiguous memory. Inner
+//!   windows keep their scalar sizes — in-register window rotation
+//!   disappears entirely under this strategy.
+//!
+//! [`resolve_vec_dim`] turns the requested [`VecDim`] (including `Auto`)
+//! into a concrete strategy against the fused schedule, failing fast
+//! when an explicitly requested outer dim is illegal.
 
 use crate::dataflow::{CallsiteId, Dataflow, Terminal, VarId};
-use crate::fusion::{FusedDag, Role};
+use crate::fusion::{FusedDag, FusedNest, Role};
 use crate::ir::Deck;
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -113,6 +145,53 @@ pub fn storage_words(
     Ok(words)
 }
 
+/// Which loop dimension vector lanes run along.
+///
+/// `Inner` is the paper's Fig. 9c scheme: strip-mine the innermost loop
+/// and rotate windows in-register. `Outer(dim)` strip-mines a
+/// k-independent outer loop instead (legal per [`outer_vectorizable`]):
+/// every kernel invocation is expanded across `vlen` lanes of that dim,
+/// window rotation machinery disappears, and intermediates store the
+/// lane dim contiguously ([`layout_order`]). `Auto` resolves at compile
+/// time ([`resolve_vec_dim`]) to the outermost legal outer dim, else
+/// `Inner`.
+#[derive(Debug, Clone, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum VecDim {
+    /// Strip-mine the innermost loop (vector expansion + in-register
+    /// rotation, Fig. 9c). The default.
+    #[default]
+    Inner,
+    /// Pick automatically: the outermost legal outer dim, else `Inner`.
+    Auto,
+    /// Strip-mine the named outer loop dim (must be k-independent in at
+    /// least one fused nest, or compilation fails).
+    Outer(String),
+}
+
+impl std::fmt::Display for VecDim {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            VecDim::Inner => write!(f, "inner"),
+            VecDim::Auto => write!(f, "auto"),
+            VecDim::Outer(d) => write!(f, "outer:{d}"),
+        }
+    }
+}
+
+impl std::str::FromStr for VecDim {
+    type Err = String;
+    fn from_str(s: &str) -> Result<VecDim, String> {
+        match s {
+            "inner" => Ok(VecDim::Inner),
+            "auto" => Ok(VecDim::Auto),
+            _ => match s.strip_prefix("outer:") {
+                Some(d) if !d.is_empty() => Ok(VecDim::Outer(d.to_string())),
+                _ => Err(format!("vec-dim `{s}` (want inner|auto|outer:<dim>)")),
+            },
+        }
+    }
+}
+
 /// Options for the analysis stage.
 #[derive(Debug, Clone)]
 pub struct AnalysisOptions {
@@ -140,6 +219,11 @@ pub struct AnalysisOptions {
     /// "HFAV + Tuning" trade of a cache-resident row for a vectorizable
     /// steady state (§5.3).
     pub contract_innermost: bool,
+    /// Which loop dim vector lanes run along ([`VecDim`]). `Auto` must be
+    /// resolved against the fused schedule ([`resolve_vec_dim`]) before
+    /// [`analyze`] runs; [`crate::plan::compile`] does this, so a
+    /// compiled program always carries a concrete `Inner`/`Outer` here.
+    pub vec_dim: VecDim,
 }
 
 impl Default for AnalysisOptions {
@@ -150,6 +234,7 @@ impl Default for AnalysisOptions {
             rotation_slack: 0,
             pow2_windows: true,
             contract_innermost: true,
+            vec_dim: VecDim::Inner,
         }
     }
 }
@@ -191,6 +276,130 @@ fn auto_vector_len_impl() -> usize {
     }
 }
 
+/// Is `dim` a legal *outer* vectorization dim for this nest — i.e. is
+/// the loop k-independent, so `vlen` consecutive iterations of it can
+/// run as concurrent lanes?
+///
+/// Required for every member of the nest:
+/// * the member iterates `dim` in the loop body ([`Role::Loop`]) with
+///   zero pipeline shift;
+/// * no reduction over `dim`;
+/// * no read of an *in-nest-produced* value at a nonzero `dim` offset
+///   (that would be cross-lane dataflow; offset reads of values
+///   materialized before the nest — terminal inputs, upstream nests —
+///   are read-only and safe);
+/// * every *written* variable is indexed by `dim` at offset 0 (lanes
+///   must land in disjoint slots; the outer-lane expansion in
+///   [`analyze`] gives single-slot intermediates `vlen` slots along
+///   `dim`).
+///
+/// Read-only variables that lack `dim` (broadcast inputs such as a
+/// scalar `dtdx`) are fine: their loads are lane-invariant.
+pub fn outer_vectorizable(df: &Dataflow, nest: &FusedNest, dim: &str) -> bool {
+    let level = match nest.dim_index(dim) {
+        Some(l) => l,
+        None => return false,
+    };
+    if level + 1 == nest.dims.len() {
+        return false; // innermost: use VecDim::Inner instead
+    }
+    for m in &nest.members {
+        if m.roles[level] != Role::Loop || m.shifts[level] != 0 {
+            return false;
+        }
+        let cs = &df.callsites[m.callsite];
+        if cs.reduce_dims.contains(dim) {
+            return false;
+        }
+        for (_, vid, offsets) in &cs.reads {
+            let var = &df.vars[*vid];
+            if let Some(k) = var.dims.iter().position(|d| d == dim) {
+                let produced_here =
+                    var.producer.is_some_and(|p| nest.member(p).is_some());
+                if offsets[k] != 0 && produced_here {
+                    return false;
+                }
+            }
+        }
+        for (_, vid, offsets) in &cs.writes {
+            let var = &df.vars[*vid];
+            match var.dims.iter().position(|d| d == dim) {
+                Some(k) => {
+                    if offsets[k] != 0 {
+                        return false;
+                    }
+                }
+                None => return false,
+            }
+        }
+    }
+    true
+}
+
+/// Resolve the requested [`VecDim`] against the fused schedule into the
+/// concrete strategy a program compiles (and is fingerprinted) with:
+///
+/// * vector length 1 → `Inner` (nothing to vectorize);
+/// * `Outer(dim)` → itself when some nest passes [`outer_vectorizable`],
+///   else a hard error (an explicitly requested illegal dim must fail
+///   the compile, not silently degrade);
+/// * `Auto` → the outermost legal outer dim of any nest, else `Inner`.
+pub fn resolve_vec_dim(
+    deck: &Deck,
+    df: &Dataflow,
+    fd: &FusedDag,
+    opts: &AnalysisOptions,
+) -> Result<VecDim, String> {
+    if resolve_vector_len(deck, opts) <= 1 {
+        return Ok(VecDim::Inner);
+    }
+    match &opts.vec_dim {
+        VecDim::Inner => Ok(VecDim::Inner),
+        VecDim::Outer(d) => {
+            if fd.nests.iter().any(|n| outer_vectorizable(df, n, d)) {
+                Ok(VecDim::Outer(d.clone()))
+            } else {
+                Err(format!(
+                    "vec-dim outer:{d} is not legal for deck `{}`: no fused nest has `{d}` as \
+                     a k-independent outer loop (every member must iterate it with offset-0 \
+                     accesses and no pipeline shift, nothing may reduce over it, and every \
+                     written variable must be indexed by it)",
+                    deck.name
+                ))
+            }
+        }
+        VecDim::Auto => {
+            for n in &fd.nests {
+                for d in n.dims.iter().take(n.dims.len().saturating_sub(1)) {
+                    if outer_vectorizable(df, n, d) {
+                        return Ok(VecDim::Outer(d.clone()));
+                    }
+                }
+            }
+            Ok(VecDim::Inner)
+        }
+    }
+}
+
+/// Layout order of a storage's dims (indices into `Storage::dims`,
+/// outermost-first). For intermediates of an outer-vectorized program
+/// the lane dim moves innermost (stride 1), so per-member lane loops
+/// touch contiguous slots; externals keep their declared row-major ABI
+/// layout. All consumers of a storage plan — both code emitters and the
+/// interpreter — derive strides through this one helper.
+pub fn layout_order(s: &Storage, lane_dim: Option<&str>) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..s.dims.len()).collect();
+    if s.external.is_none() {
+        if let Some(d) = lane_dim {
+            if let Some(k) = s.dims.iter().position(|x| x == d) {
+                order.retain(|&x| x != k);
+                order.push(k);
+            }
+        }
+    }
+    order
+}
+
 /// Run the full variable/storage analysis.
 pub fn analyze(
     deck: &Deck,
@@ -200,6 +409,13 @@ pub fn analyze(
 ) -> Result<StoragePlan, String> {
     let mut notes = Vec::new();
     let vlen = resolve_vector_len(deck, opts);
+    // Outer-dim vectorization moves the lane expansion to the chosen
+    // outer dim: the innermost dim keeps its scalar window sizes.
+    let outer_lane: Option<&str> = match &opts.vec_dim {
+        VecDim::Outer(d) if vlen > 1 => Some(d.as_str()),
+        _ => None,
+    };
+    let inner_vlen = if outer_lane.is_some() { 1 } else { vlen };
 
     // ---- accumulator chaining -------------------------------------------
     // A reduction callsite that reads X and writes Y with the same base,
@@ -316,7 +532,7 @@ pub fn analyze(
         let sizes = if external.is_some() || !opts.contraction {
             vec![DimSize::Full; v.dims.len()]
         } else {
-            contract_sizes(df, fd, &vars, opts, vlen, &mut notes)?
+            contract_sizes(df, fd, &vars, opts, inner_vlen, &mut notes)?
         };
 
         let id = storages.len();
@@ -332,6 +548,38 @@ pub fn analyze(
             sizes,
             enclosing: (first, last),
         });
+    }
+
+    // Outer-lane expansion: under `VecDim::Outer(d)` every single-slot
+    // intermediate indexed by `d` gains `vlen` slots, so `vlen` lanes of
+    // the outer loop can be in flight without clobbering each other.
+    // (Windows wider than 1 along `d` mean cross-lane dataflow; such
+    // nests fail `outer_vectorizable` and run scalar, so their sizes
+    // stay untouched.)
+    if let Some(d) = outer_lane {
+        for s in storages.iter_mut() {
+            if s.external.is_some() {
+                continue;
+            }
+            let k = match s.dims.iter().position(|x| x == d) {
+                Some(k) => k,
+                None => continue,
+            };
+            if s.sizes[k] != DimSize::One {
+                continue;
+            }
+            let logical = vlen as i64;
+            let alloc = if opts.pow2_windows {
+                (logical as u64).next_power_of_two() as i64
+            } else {
+                logical
+            };
+            s.sizes[k] = DimSize::Window { w: logical, alloc };
+            notes.push(format!(
+                "outer-lane expand `{}` dim `{d}`: {logical} lanes (alloc {alloc})",
+                s.name
+            ));
+        }
     }
 
     Ok(StoragePlan { storages, of_var, reuse, notes })
@@ -805,6 +1053,101 @@ globals:
         )
         .unwrap();
         assert_eq!(vec8.storage_of(mid).sizes, vec![DimSize::Window { w: 8, alloc: 8 }]);
+    }
+
+    #[test]
+    fn outer_vectorizable_gates() {
+        // cosmo: k carries no offsets, shifts or reductions → legal; j
+        // carries the ±1 stencil offsets → illegal; i is innermost.
+        let deck = parse_deck(crate::apps::cosmo::DECK).unwrap();
+        let df = crate::dataflow::build(&deck).unwrap();
+        let fd = fuse(&df, &FusionOptions::default()).unwrap();
+        let nest = &fd.nests[0];
+        assert!(outer_vectorizable(&df, nest, "k"));
+        assert!(!outer_vectorizable(&df, nest, "j"), "j carries stencil offsets");
+        assert!(!outer_vectorizable(&df, nest, "i"), "i is the innermost dim");
+        assert!(!outer_vectorizable(&df, nest, "nope"));
+        // normalize: rows are independent, so j is legal in both nests —
+        // even around the i-reduction (per-lane accumulator slots).
+        let deck = parse_deck(testdecks::NORMALIZE).unwrap();
+        let df = crate::dataflow::build(&deck).unwrap();
+        let fd = fuse(&df, &FusionOptions::default()).unwrap();
+        for nest in &fd.nests {
+            assert!(outer_vectorizable(&df, nest, "j"), "nest {}", nest.id);
+        }
+        // laplace reads `cell` at j±1, but `cell` is a terminal input
+        // (read-only), so j lanes are still independent → legal.
+        let deck = parse_deck(testdecks::LAPLACE).unwrap();
+        let df = crate::dataflow::build(&deck).unwrap();
+        let fd = fuse(&df, &FusionOptions::default()).unwrap();
+        assert!(outer_vectorizable(&df, &fd.nests[0], "j"));
+    }
+
+    #[test]
+    fn outer_expansion_gives_lane_slots_and_skips_inner_padding() {
+        let deck = parse_deck(crate::apps::cosmo::DECK).unwrap();
+        let df = crate::dataflow::build(&deck).unwrap();
+        let fd = fuse(&df, &FusionOptions::default()).unwrap();
+        let opts = AnalysisOptions {
+            vector_len: Some(4),
+            vec_dim: VecDim::Outer("k".to_string()),
+            ..Default::default()
+        };
+        let sp = analyze(&deck, &df, &fd, &opts).unwrap();
+        let lap = df.var("lap(u)").unwrap().id;
+        let s = sp.storage_of(lap);
+        // k: 4 lane slots; j: scalar-sized window (no vlen padding —
+        // outer lanes replace in-register rotation); i: full row.
+        assert_eq!(s.sizes[0], DimSize::Window { w: 4, alloc: 4 });
+        assert!(matches!(s.sizes[1], DimSize::Window { w: 2, .. }), "{:?}", s.sizes);
+        assert_eq!(s.sizes[2], DimSize::Full);
+        // The lane dim moves innermost in intermediate layouts only.
+        assert_eq!(layout_order(s, Some("k")), vec![1, 2, 0]);
+        let su = sp.storage_of(df.var("u").unwrap().id);
+        assert!(su.external.is_some());
+        assert_eq!(layout_order(su, Some("k")), vec![0, 1, 2]);
+        assert_eq!(layout_order(s, None), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn resolve_vec_dim_auto_explicit_and_errors() {
+        let deck = parse_deck(crate::apps::cosmo::DECK).unwrap();
+        let df = crate::dataflow::build(&deck).unwrap();
+        let fd = fuse(&df, &FusionOptions::default()).unwrap();
+        let opts = |vlen: usize, vd: VecDim| AnalysisOptions {
+            vector_len: Some(vlen),
+            vec_dim: vd,
+            ..Default::default()
+        };
+        assert_eq!(
+            resolve_vec_dim(&deck, &df, &fd, &opts(4, VecDim::Auto)).unwrap(),
+            VecDim::Outer("k".to_string())
+        );
+        // vlen 1 degrades any request to Inner (nothing to vectorize).
+        assert_eq!(
+            resolve_vec_dim(&deck, &df, &fd, &opts(1, VecDim::Outer("k".into()))).unwrap(),
+            VecDim::Inner
+        );
+        // An explicitly requested illegal dim is a hard error.
+        let e = resolve_vec_dim(&deck, &df, &fd, &opts(4, VecDim::Outer("j".into()))).unwrap_err();
+        assert!(e.contains("not legal"), "{e}");
+        // 1-D decks have no outer dim: Auto falls back to Inner.
+        let deck = parse_deck(testdecks::CHAIN1D).unwrap();
+        let df = crate::dataflow::build(&deck).unwrap();
+        let fd = fuse(&df, &FusionOptions::default()).unwrap();
+        let r = resolve_vec_dim(&deck, &df, &fd, &opts(8, VecDim::Auto)).unwrap();
+        assert_eq!(r, VecDim::Inner);
+    }
+
+    #[test]
+    fn vec_dim_parse_round_trip() {
+        assert_eq!("inner".parse::<VecDim>().unwrap(), VecDim::Inner);
+        assert_eq!("auto".parse::<VecDim>().unwrap(), VecDim::Auto);
+        assert_eq!("outer:k".parse::<VecDim>().unwrap(), VecDim::Outer("k".to_string()));
+        assert!("outer:".parse::<VecDim>().is_err());
+        assert!("sideways".parse::<VecDim>().is_err());
+        assert_eq!(VecDim::Outer("k".to_string()).to_string(), "outer:k");
+        assert_eq!(VecDim::default(), VecDim::Inner);
     }
 
     #[test]

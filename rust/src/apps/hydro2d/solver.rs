@@ -2,9 +2,9 @@
 //! boundaries, dimensional splitting (x-pass, then y-pass on transposed
 //! data) — plus the paper's comparison sweep implementations:
 //!
-//! * [`sweep_reference`] — the original unfused code: one full-grid pass
+//! * [`RefSweeper`] — the original unfused code: one full-grid pass
 //!   per kernel, every intermediate materialized (`autovec`);
-//! * [`sweep_handvec`] — the hand-fused expert version (row-buffered
+//! * [`HandvecSweeper`] — the hand-fused expert version (row-buffered
 //!   single pass, the role of the paper's intrinsics `handvec`);
 //! * [`ExecSweeper`] / [`NativeSweeper`] — the HFAV-generated schedule run
 //!   by the interpreter executor or as compiled C via dlopen.

@@ -3,8 +3,9 @@
 //! reports (throughput vs problem size per implementation variant) and a
 //! CSV block for plotting.
 
+use crate::analysis::VecDim;
 use crate::apps::{self, Variant};
-use crate::plan::PlanSpec;
+use crate::plan::{PlanSpec, Vlen};
 use std::collections::BTreeMap;
 use std::time::Instant;
 
@@ -309,6 +310,116 @@ pub fn serving(workers: usize, repeat: usize, vlen: Option<usize>) -> Vec<String
         csv.push(format!("{v},{:.3},{hv:.3},{speedup:.2}", tv / 1e6));
     }
     csv
+}
+
+/// Vectorization-strategy comparison (the outer-dim/aligned tentpole):
+/// scalar vs inner-dim strips vs outer-dim lanes vs the aligned
+/// specialization, measured on the native-C engine for cosmo (outer dim
+/// `k`, 32×128×128) and hydro2d (outer dim `j`, 64 rows × 256 cells).
+/// All five variants are distinct `PlanSpec` fingerprints, so a serving
+/// pool would cache and dispatch them as distinct plans.
+pub fn vectorization(vlen: usize) -> Vec<String> {
+    let v = vlen.max(2);
+    let mut csv = vec!["app,strategy,mcells_per_s,speedup_vs_scalar".to_string()];
+    println!("Vectorization strategies (native C, vlen {v}):");
+
+    // cosmo: 3-D fourth-order diffusion, outer dim k.
+    {
+        let (nk, n) = (32usize, 128usize);
+        let ext: BTreeMap<String, i64> = [("Nk", nk), ("Nj", n), ("Ni", n)]
+            .into_iter()
+            .map(|(k, x)| (k.to_string(), x as i64))
+            .collect();
+        let cells = (nk * (n - 4) * (n - 4)) as f64;
+        let mut inputs = BTreeMap::new();
+        inputs.insert("g_u".to_string(), apps::seeded(nk * n * n, 7));
+        let mut outputs = BTreeMap::new();
+        outputs.insert("g_out".to_string(), vec![0.0; nk * (n - 4) * (n - 4)]);
+        vectorization_case(&mut csv, v, "cosmo", "k", n, &ext, cells, &inputs, &outputs);
+    }
+
+    // hydro2d sweep: independent rows, outer dim j; physically sane
+    // seeded state (positive density/energy, small momenta).
+    {
+        let (nj, ni) = (64usize, 256usize);
+        let ext: BTreeMap<String, i64> = [("Nj", nj), ("Ni", ni)]
+            .into_iter()
+            .map(|(k, x)| (k.to_string(), x as i64))
+            .collect();
+        let cells = (nj * ni) as f64;
+        let prog = PlanSpec::app("hydro2d").compile().unwrap();
+        let mut inputs = BTreeMap::new();
+        for (name, _, _) in prog.external_inputs() {
+            let len = crate::exec::external_len(&prog, &name, &ext).unwrap();
+            let vals: Vec<f64> = match name.as_str() {
+                "g_rho" => apps::seeded(len, 1).iter().map(|x| 0.5 + x).collect(),
+                "g_E" => apps::seeded(len, 2).iter().map(|x| 2.0 + x).collect(),
+                "g_dtdx" => vec![0.05],
+                _ => apps::seeded(len, 3).iter().map(|x| 0.1 * x).collect(),
+            };
+            inputs.insert(name, vals);
+        }
+        let mut outputs = BTreeMap::new();
+        for (name, _, _) in prog.external_outputs() {
+            let len = crate::exec::external_len(&prog, &name, &ext).unwrap();
+            outputs.insert(name, vec![0.0; len]);
+        }
+        vectorization_case(&mut csv, v, "hydro2d", "j", ni, &ext, cells, &inputs, &outputs);
+    }
+
+    csv
+}
+
+/// The five strategy specs compared by [`vectorization`] for one app.
+fn vectorization_strategies(app: &str, outer: &str, v: usize) -> Vec<(String, PlanSpec)> {
+    vec![
+        ("scalar".to_string(), PlanSpec::app(app).vlen(Vlen::Fixed(1))),
+        ("inner-vec".to_string(), PlanSpec::app(app).vlen(Vlen::Fixed(v))),
+        ("inner+aligned".to_string(), PlanSpec::app(app).vlen(Vlen::Fixed(v)).aligned(true)),
+        (
+            format!("outer:{outer}"),
+            PlanSpec::app(app).vlen(Vlen::Fixed(v)).vec_dim(VecDim::Outer(outer.to_string())),
+        ),
+        (
+            format!("outer:{outer}+aligned"),
+            PlanSpec::app(app)
+                .vlen(Vlen::Fixed(v))
+                .vec_dim(VecDim::Outer(outer.to_string()))
+                .aligned(true),
+        ),
+    ]
+}
+
+/// Time every strategy of one app on the native-C engine and report
+/// rows + CSV (first strategy is the scalar baseline).
+#[allow(clippy::too_many_arguments)]
+fn vectorization_case(
+    csv: &mut Vec<String>,
+    v: usize,
+    app: &str,
+    outer: &str,
+    n: usize,
+    ext: &BTreeMap<String, i64>,
+    cells: f64,
+    inputs: &BTreeMap<String, Vec<f64>>,
+    outputs: &BTreeMap<String, Vec<f64>>,
+) {
+    let mut t_scalar = 0.0;
+    for (k, (label, spec)) in vectorization_strategies(app, outer, v).into_iter().enumerate() {
+        let prog = spec.compile().unwrap();
+        let module = crate::codegen::native::build(&prog, &Default::default()).unwrap();
+        let mut arrays = inputs.clone();
+        for (name, zeros) in outputs {
+            arrays.insert(name.clone(), zeros.clone());
+        }
+        let t = time_it(|| module.run(ext, &mut arrays).unwrap(), 3, 0.2);
+        if k == 0 {
+            t_scalar = t;
+        }
+        row(&format!("{app}/{label}"), n, t, cells);
+        println!("      {:.2}x vs scalar", t_scalar / t);
+        csv.push(format!("{app},{label},{:.3},{:.2}", cells / t / 1e6, t_scalar / t));
+    }
 }
 
 /// P1: PJRT artifacts — fused (Pallas) vs unfused (jnp) on the CPU PJRT

@@ -3,6 +3,22 @@
 //! output with the system compiler and loads it via `dlopen` — the
 //! benchmark vehicle (stands in for the paper's "icc -O3 -xHost" on the
 //! generated code).
+//!
+//! Both source emitters consume the same compiled [`crate::plan::Program`]
+//! and emit the same loop structure: statically peeled
+//! prologue/steady-state/epilogue segments from the fusion shifts, and
+//! one of three vectorized shapes — inner strips with in-register window
+//! rotation, outer-dim lane loops, or the aligned specialization's
+//! alignment heads (see [`c99`] for the strategy overview; [`rs`]
+//! mirrors it with iterator-free `while` strips). Strip-mining
+//! invariants the emitters rely on are established by
+//! [`crate::analysis`]: inner windows padded to `w + vlen − 1` slots
+//! (so a whole strip fits without wraparound), lane slots for
+//! loop-carried scalars, outer-lane slot expansion, and the shared
+//! [`crate::analysis::layout_order`] stride layout that the interpreter
+//! uses too. The emitters never decide legality themselves — they only
+//! act on [`crate::analysis::lane_fission_safe`] /
+//! [`crate::analysis::outer_vectorizable`] verdicts.
 
 pub mod c99;
 pub mod dot;

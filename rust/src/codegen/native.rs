@@ -258,7 +258,7 @@ impl NativeModule {
     /// Run with named extents and external arrays. Externals must include
     /// every array (inputs and outputs); alias pairs may map two names to
     /// the same buffer by passing the same Vec under one name and declaring
-    /// the pair in the deck (use [`run_aliased`](Self::run_aliased)).
+    /// the pair in the deck.
     pub fn run(
         &self,
         extents: &BTreeMap<String, i64>,

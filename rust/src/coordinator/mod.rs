@@ -50,17 +50,51 @@ pub struct Job {
     pub size: usize,
     /// Number of repeated applications (time steps / sweeps).
     pub steps: usize,
+    /// Per-job extents override (trace v3 `extents=NxM[xK]` / CLI
+    /// `--extents`): concrete values for the deck's extent parameters in
+    /// sorted-name order (the generated code's `hfav_extents` order),
+    /// replacing the square `size`-per-extent default. Compiled plans
+    /// are shape-generic, so this affects *execution* (and the batch
+    /// identity), never the plan-cache key.
+    pub extents: Option<Vec<i64>>,
 }
 
 impl Job {
     pub fn new(id: u64, spec: PlanSpec, backend: &str, size: usize, steps: usize) -> Job {
-        Job { id, spec, backend: backend.to_string(), size, steps }
+        Job { id, spec, backend: backend.to_string(), size, steps, extents: None }
+    }
+
+    /// Attach a per-job extents override (see [`Job::extents`]).
+    pub fn with_extents(mut self, extents: Vec<i64>) -> Job {
+        self.extents = Some(extents);
+        self
     }
 
     /// The plan-cache key this job compiles under.
     pub fn plan_key(&self) -> PlanKey {
         self.spec.plan_key()
     }
+}
+
+/// Parse a trace/CLI extents override: `128x64x4` → `[128, 64, 4]`. The
+/// values bind to the deck's extent parameters in sorted-name order —
+/// e.g. cosmo's `Ni x Nj x Nk` — matching the `hfav_extents` string of
+/// the generated code.
+pub fn parse_extents(s: &str) -> Result<Vec<i64>, String> {
+    let vals = s
+        .split('x')
+        .map(|p| {
+            let v: i64 = p.trim().parse().map_err(|e| format!("extents `{s}`: {e}"))?;
+            if v < 1 {
+                return Err(format!("extents `{s}`: values must be >= 1"));
+            }
+            Ok(v)
+        })
+        .collect::<Result<Vec<i64>, String>>()?;
+    if vals.is_empty() {
+        return Err("empty extents override".to_string());
+    }
+    Ok(vals)
 }
 
 /// Result of one job.
@@ -100,11 +134,17 @@ const COSMO_NK: i64 = 4;
 
 /// Same-key batching: jobs agreeing on this tuple run back-to-back on one
 /// worker, so its plan lookup is hot and its executor workspace buffers
-/// fit without reallocation.
-type BatchKey = (PlanKey, String, usize);
+/// fit without reallocation. Extents are part of the identity — a
+/// non-square job runs a different grid than a square job of the same
+/// `size`, so grouping them would defeat the buffer-fit heuristic (the
+/// *plan* key, by contrast, is shape-generic and shared).
+pub type BatchKey = (PlanKey, String, usize, Vec<i64>);
 
-fn batch_key(job: &Job) -> BatchKey {
-    (job.plan_key(), job.backend.clone(), job.size)
+/// The batching identity of a job (public so tests can pin the
+/// fails-closed property: distinct extents → distinct batch identity,
+/// same plan key).
+pub fn batch_key(job: &Job) -> BatchKey {
+    (job.plan_key(), job.backend.clone(), job.size, job.extents.clone().unwrap_or_default())
 }
 
 enum Msg {
@@ -360,44 +400,76 @@ impl Worker {
         // through the same driver (and produces the same results and
         // throughput accounting).
         if prog.deck.name == "hydro2d_sweep" {
-            let checksum = self.run_hydro(job, &**exe)?;
-            Ok((checksum, (job.size * job.size) as u64))
+            self.run_hydro(job, &**exe)
         } else {
             self.run_grid(job, &prog, &**exe)
         }
     }
 
     /// Hydro2D driver: Sod setup + dimensionally-split time loop, with
-    /// the prepared executable as the sweep implementation.
-    fn run_hydro(&mut self, job: &Job, exe: &dyn Executable) -> Result<f64, String> {
+    /// the prepared executable as the sweep implementation. A trace-v3
+    /// extents override (`Ni x Nj` in sorted-name order) makes the tube
+    /// rectangular; cells are metered from the grid actually run.
+    fn run_hydro(&mut self, job: &Job, exe: &dyn Executable) -> Result<(f64, u64), String> {
         use crate::apps::hydro2d::solver::{sod, step};
-        let n = job.size;
-        let mut state = sod(n, n);
+        let (nx, ny) = match &job.extents {
+            None => (job.size, job.size),
+            Some(v) if v.len() == 2 => (v[0] as usize, v[1] as usize),
+            Some(v) => {
+                return Err(format!(
+                    "hydro2d extents override takes 2 values (NixNj), got {}",
+                    v.len()
+                ))
+            }
+        };
+        let mut state = sod(nx, ny);
         let mut sweeper = ExecutableSweeper { exe, ws: &mut self.ws };
         for _ in 0..job.steps {
-            step(&mut state, 1.0 / n as f64, 0.4, &mut sweeper)?;
+            step(&mut state, 1.0 / nx as f64, 0.4, &mut sweeper)?;
         }
-        Ok(state.rho.iter().sum())
+        Ok((state.rho.iter().sum(), (nx * ny) as u64))
     }
 
     /// Generic grid driver (built-in stencil apps *and* external deck
     /// files): every extent is set to the job size (cosmo's `Nk` to the
-    /// served plane count), external inputs are seeded from the job id,
-    /// outputs zero-filled, and the checksum sums the pure outputs.
-    /// Returns `(checksum, cells per application)` — the product of the
-    /// extents actually executed, so 3-D decks are metered as 3-D.
+    /// served plane count) unless the job carries a trace-v3 extents
+    /// override, which binds its values to the extent names in sorted
+    /// order — non-square external workloads. External inputs are seeded
+    /// from the job id, outputs zero-filled, and the checksum sums the
+    /// pure outputs. Returns `(checksum, cells per application)` — the
+    /// product of the extents actually executed, so 3-D and non-square
+    /// grids are metered exactly.
     fn run_grid(
         &mut self,
         job: &Job,
         prog: &Program,
         exe: &dyn Executable,
     ) -> Result<(f64, u64), String> {
-        let mut ext: BTreeMap<String, i64> = crate::codegen::c99::extent_names(prog)
-            .into_iter()
-            .map(|name| (name, job.size as i64))
-            .collect();
-        if prog.deck.name == "cosmo" {
-            ext.insert("Nk".to_string(), COSMO_NK);
+        let names = crate::codegen::c99::extent_names(prog);
+        let mut ext: BTreeMap<String, i64> = BTreeMap::new();
+        match &job.extents {
+            Some(vals) => {
+                if vals.len() != names.len() {
+                    return Err(format!(
+                        "extents override has {} values but deck `{}` takes {} ({})",
+                        vals.len(),
+                        prog.deck.name,
+                        names.len(),
+                        names.join("x")
+                    ));
+                }
+                for (name, v) in names.iter().zip(vals) {
+                    ext.insert(name.clone(), *v);
+                }
+            }
+            None => {
+                for name in &names {
+                    ext.insert(name.clone(), job.size as i64);
+                }
+                if prog.deck.name == "cosmo" {
+                    ext.insert("Nk".to_string(), COSMO_NK);
+                }
+            }
         }
         let cells_per_step: u64 = ext.values().map(|&v| v.max(1) as u64).product();
         let input_names: BTreeSet<String> =
@@ -489,23 +561,44 @@ pub fn distinct_plan_keys(jobs: &[Job]) -> usize {
     jobs.iter().map(|j| j.plan_key()).collect::<std::collections::BTreeSet<_>>().len()
 }
 
-/// Parse a job-trace line (format v2):
-/// `app|deck.yaml, variant, engine, size, steps[, vlen]`. The target may
-/// be a built-in app or a deck-file path; the engine is any
-/// [`engine::registry`] name; the optional sixth field forces a vector
-/// length for that job (`-` or `deck` keeps the deck default).
+/// Parse a job-trace line (format v3):
+/// `app|deck.yaml, variant, engine, size, steps[, vlen][, extents=NxM[xK]]`.
+///
+/// The target may be a built-in app or a deck-file path; the engine is
+/// any [`engine::registry`] name; the optional `vlen` field forces a
+/// vector length for that job (`-` or `deck` keeps the deck default);
+/// the optional `extents=` field overrides the grid shape per job
+/// (values bind to the deck's extents in sorted-name order — see
+/// [`parse_extents`]), opening non-square workloads through the generic
+/// grid driver. v2 lines (without `extents=`) parse unchanged.
 pub fn parse_trace_line(id: u64, line: &str) -> Result<Job, String> {
     let f: Vec<&str> = line.split(',').map(str::trim).collect();
-    if f.len() != 5 && f.len() != 6 {
+    if !(5..=7).contains(&f.len()) {
         return Err(format!(
-            "bad trace line `{line}` (app|deck.yaml, variant, engine, size, steps[, vlen])"
+            "bad trace line `{line}` \
+             (app|deck.yaml, variant, engine, size, steps[, vlen][, extents=NxM])"
         ));
     }
     let variant: Variant = f[1].parse()?;
-    let vlen: Vlen = match f.get(5) {
-        None => Vlen::Deck,
-        Some(s) => s.parse()?,
-    };
+    let mut vlen: Option<Vlen> = None;
+    let mut extents: Option<Vec<i64>> = None;
+    for field in &f[5..] {
+        match field.strip_prefix("extents=") {
+            Some(spec) => {
+                if extents.is_some() {
+                    return Err(format!("bad trace line `{line}`: duplicate extents field"));
+                }
+                extents = Some(parse_extents(spec)?);
+            }
+            None => {
+                if vlen.is_some() {
+                    return Err(format!("bad trace line `{line}`: duplicate vlen field"));
+                }
+                vlen = Some(field.parse()?);
+            }
+        }
+    }
+    let vlen = vlen.unwrap_or(Vlen::Deck);
     let backend = engine::registry().get(f[2])?.name().to_string();
     let spec = target_spec(f[0])?.variant(variant).vlen(vlen);
     Ok(Job {
@@ -514,6 +607,7 @@ pub fn parse_trace_line(id: u64, line: &str) -> Result<Job, String> {
         backend,
         size: f[3].parse().map_err(|e| format!("size: {e}"))?,
         steps: f[4].parse().map_err(|e| format!("steps: {e}"))?,
+        extents,
     })
 }
 
@@ -596,6 +690,65 @@ mod tests {
         assert!(parse_trace_line(0, "laplace, hfav, exec, 64, 1, 0").is_err());
         let e = parse_trace_line(0, "laplace, hfav, tpu, 64, 1").unwrap_err();
         assert!(e.contains("unknown engine"), "{e}");
+    }
+
+    #[test]
+    fn trace_v3_extents_parsing() {
+        // v3: extents override with and without a per-job vlen.
+        let j = parse_trace_line(1, "cosmo, hfav, exec, 32, 2, -, extents=13x11x3").unwrap();
+        assert_eq!(j.extents, Some(vec![13, 11, 3]));
+        assert_eq!(j.spec.vlen_override(), None);
+        let j = parse_trace_line(2, "cosmo, hfav, exec, 32, 2, 8, extents=13x11x3").unwrap();
+        assert_eq!(j.extents, Some(vec![13, 11, 3]));
+        assert_eq!(j.spec.vlen_override(), Some(8));
+        // extents directly in the sixth position (no vlen field).
+        let j = parse_trace_line(3, "hydro2d, hfav, exec, 24, 1, extents=48x12").unwrap();
+        assert_eq!(j.extents, Some(vec![48, 12]));
+        // v2 lines parse unchanged.
+        let j = parse_trace_line(4, "laplace, hfav, exec, 64, 1").unwrap();
+        assert_eq!(j.extents, None);
+        // Malformed overrides fail.
+        assert!(parse_trace_line(0, "laplace, hfav, exec, 64, 1, extents=").is_err());
+        assert!(parse_trace_line(0, "laplace, hfav, exec, 64, 1, extents=0x4").is_err());
+        assert!(parse_trace_line(0, "laplace, hfav, exec, 64, 1, extents=axb").is_err());
+        // Duplicate optional fields are rejected, not last-one-wins.
+        let e = parse_trace_line(0, "laplace, hfav, exec, 64, 1, 8, 4").unwrap_err();
+        assert!(e.contains("duplicate vlen"), "{e}");
+        let e = parse_trace_line(0, "cosmo, hfav, exec, 32, 1, extents=4x4x4, extents=8x8x8")
+            .unwrap_err();
+        assert!(e.contains("duplicate extents"), "{e}");
+        assert_eq!(parse_extents("128x64x4").unwrap(), vec![128, 64, 4]);
+    }
+
+    #[test]
+    fn extents_move_batch_identity_not_plan_key() {
+        let square = mk(1, "laplace", Variant::Hfav, "exec", 32, 1);
+        let wide = mk(2, "laplace", Variant::Hfav, "exec", 32, 1).with_extents(vec![64, 16]);
+        let tall = mk(3, "laplace", Variant::Hfav, "exec", 32, 1).with_extents(vec![16, 64]);
+        // Plans are shape-generic: one compile serves every shape...
+        assert_eq!(square.plan_key(), wide.plan_key());
+        assert_eq!(distinct_plan_keys(&[square.clone(), wide.clone(), tall.clone()]), 1);
+        // ...but the batch identity separates shapes (warm-buffer fit).
+        assert_ne!(batch_key(&square), batch_key(&wide));
+        assert_ne!(batch_key(&wide), batch_key(&tall));
+    }
+
+    #[test]
+    fn non_square_extents_serve_with_exact_cell_metering() {
+        // laplace on a 24x10 grid (extent names sorted: Ni=24, Nj=10),
+        // 3 steps: total cells must be 24*10*3, not size^2 * steps.
+        let c = Coordinator::start(1, None);
+        let job = mk(5, "laplace", Variant::Hfav, "exec", 32, 3).with_extents(vec![24, 10]);
+        let r = c.submit(job).recv().unwrap();
+        assert!(r.ok, "{}", r.detail);
+        let rep = c.report(Duration::from_millis(1));
+        assert_eq!(rep.total_cells, 24 * 10 * 3);
+        // A mismatched override fails the job with a clear error.
+        let bad = mk(6, "laplace", Variant::Hfav, "exec", 32, 1).with_extents(vec![24, 10, 4]);
+        let r = c.submit(bad).recv().unwrap();
+        assert!(!r.ok);
+        assert!(r.detail.contains("extents override"), "{}", r.detail);
+        c.shutdown();
     }
 
     #[test]

@@ -5,6 +5,21 @@
 //! spatial displacement — the paper's "Grouping" step falls out of this
 //! canonicalization), and edges are variables (term families) annotated
 //! with the read offsets of each consumer.
+//!
+//! Everything downstream is a query over this graph: fusion feasibility
+//! is cycle/concavity analysis over [`Dataflow::edges`] (with
+//! [`Dataflow::reduced_dims_upstream`] marking where a reduction's
+//! result is re-broadcast), pipeline shifts are longest paths over the
+//! same edges, storage reuse distances come from the per-consumer
+//! [`Read::offsets`], and the vectorization legality gates in
+//! [`crate::analysis`] are offset checks: inner lane fission looks for
+//! per-iteration values observed by *other* callsites, and outer-dim
+//! vectorization ([`crate::analysis::outer_vectorizable`]) demands that
+//! no in-nest-produced variable is read at a nonzero offset along the
+//! candidate dim and that every written variable is indexed by it.
+//! Domain propagation (the symbolic [`crate::ir::Domain`] spans carried
+//! on [`VarInfo::span`]) is what lets the emitters peel loops
+//! statically and the executor bind concrete extents at run time.
 
 use crate::ir::{Bound, Deck, Domain, Scalar};
 use std::collections::{BTreeMap, BTreeSet};

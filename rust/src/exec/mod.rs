@@ -12,6 +12,17 @@
 //!   prologue/steady-state/epilogue phases). No per-iteration guards.
 //! * [`Mode::Guarded`] — one uniform loop with per-callsite masking (the
 //!   shape of the paper's "HFAV + Tuning" fold-into-steady-state variant).
+//!
+//! Peeled mode additionally mirrors every emitted vectorized loop shape
+//! so the interpreter stays the differential oracle: innermost
+//! lane-fissioned strips (`VecDim::Inner`, gated by
+//! [`crate::analysis::lane_fission_safe`]), outer-dim strips with the
+//! lane loop at the kernel invocation (`VecDim::Outer`, gated by
+//! [`crate::analysis::outer_vectorizable`]; inner fission is forced off
+//! because the inner windows carry no vector padding then), and the
+//! aligned specialization's scalar alignment heads. Outer lanes are
+//! fully independent by construction, so every strip shape produces
+//! bit-identical results to the scalar order.
 
 pub mod registry;
 
@@ -290,12 +301,38 @@ fn run_inner(
             .iter()
             .filter(|m| m.roles.last() == Some(&Role::Loop))
             .collect();
-        let strip = if strip_opt > 1
+        // Outer-dim strips (Peeled only): same legality gate as the code
+        // generators; the lane loop sits at the kernel invocation.
+        let outer = if opts.mode == Mode::Peeled {
+            prog.outer_lane_dim().and_then(|d| {
+                let lvl = nest.dim_index(d)?;
+                let legal = lvl + 1 < nest.dims.len()
+                    && crate::analysis::outer_vectorizable(&prog.df, nest, d);
+                if legal {
+                    Some((lvl, plan_vl as i64))
+                } else {
+                    None
+                }
+            })
+        } else {
+            None
+        };
+        let strip = if prog.outer_lane_dim().is_some() {
+            // Outer lanes replace inner fission: the inner windows carry
+            // no vector padding under `VecDim::Outer`.
+            1
+        } else if strip_opt > 1
             && crate::analysis::lane_fission_safe(&prog.df, &prog.sp, nest, &inner_loop_members)
         {
             strip_opt
         } else {
             1
+        };
+        let cfg = StripCfg {
+            inner: strip,
+            aligned: prog.opts.aligned,
+            outer,
+            outer_lanes: 0,
         };
         exec_level(
             &compiled,
@@ -305,7 +342,7 @@ fn run_inner(
             &mut idx,
             &mut buffers[..],
             opts.mode,
-            strip,
+            cfg,
             &mut scratch_in,
             &mut scratch_out,
         )?;
@@ -389,10 +426,14 @@ fn compile_member(
             rules.push(rule);
             sizes.push(size);
         }
-        // Row-major strides.
+        // Strides per the storage's layout order (shared with both code
+        // emitters): row-major, except the outer lane dim of an
+        // outer-vectorized program moves innermost for intermediates.
+        let order = crate::analysis::layout_order(st, prog.outer_lane_dim());
         let mut strides = vec![1i64; sizes.len()];
-        for k in (0..sizes.len().saturating_sub(1)).rev() {
-            strides[k] = strides[k + 1] * sizes[k + 1];
+        for k in 0..sizes.len() {
+            let pos = order.iter().position(|&x| x == k).unwrap();
+            strides[k] = order[pos + 1..].iter().map(|&x| sizes[x]).product();
         }
         Ok(Access { storage: storage_buf[sid], dims, rules, strides })
     };
@@ -433,6 +474,23 @@ fn compile_member(
     })
 }
 
+/// Per-nest strip configuration: mirrors the emitted vectorized loop
+/// structure (see the module docs) so the interpreter executes the same
+/// shapes the code generators emit.
+#[derive(Clone, Copy)]
+struct StripCfg {
+    /// Innermost lane-fission width (1 = plain scalar order).
+    inner: i64,
+    /// Peel scalar heads so strips start at multiples of their width
+    /// (the aligned-load specialization's "aligned strip heads").
+    aligned: bool,
+    /// Outer-dim strips: (nest level of the lane dim, lane count).
+    outer: Option<(usize, i64)>,
+    /// While > 1: currently inside an outer strip with this many lanes —
+    /// the leaf runs each kernel across the lanes before the next.
+    outer_lanes: i64,
+}
+
 /// Recursive phase/loop execution (paper §3.6 code generation, interpreted).
 #[allow(clippy::too_many_arguments)]
 fn exec_level(
@@ -443,7 +501,7 @@ fn exec_level(
     idx: &mut Vec<i64>,
     buffers: &mut [Vec<f64>],
     mode: Mode,
-    strip: i64,
+    cfg: StripCfg,
     scratch_in: &mut Vec<f64>,
     scratch_out: &mut Vec<f64>,
 ) -> Result<(), String> {
@@ -456,7 +514,20 @@ fn exec_level(
             if mode == Mode::Guarded && !active(c, idx, nlevels) {
                 continue;
             }
-            invoke(c, idx, buffers, scratch_in, scratch_out)?;
+            if cfg.outer_lanes > 1 {
+                // Outer-dim lanes: run this kernel across the whole lane
+                // strip before the next kernel starts (the emitted simd
+                // lane-loop order; lanes are independent by legality).
+                let olvl = cfg.outer.map(|(l, _)| l).unwrap_or(0);
+                let base = idx[olvl];
+                for l in 0..cfg.outer_lanes {
+                    idx[olvl] = base + l;
+                    invoke(c, idx, buffers, scratch_in, scratch_out)?;
+                }
+                idx[olvl] = base;
+            } else {
+                invoke(c, idx, buffers, scratch_in, scratch_out)?;
+            }
         }
         return Ok(());
     }
@@ -475,7 +546,7 @@ fn exec_level(
         members.iter().copied().filter(|&m| compiled[m].phase_at(level) == Phase::Post).collect();
 
     exec_level(
-        compiled, &pre, level + 1, nlevels, idx, buffers, mode, strip, scratch_in, scratch_out,
+        compiled, &pre, level + 1, nlevels, idx, buffers, mode, cfg, scratch_in, scratch_out,
     )?;
 
     if !inl.is_empty() {
@@ -493,7 +564,7 @@ fn exec_level(
                 for t in lo..hi {
                     idx[level] = t;
                     exec_level(
-                        compiled, &inl, level + 1, nlevels, idx, buffers, mode, strip,
+                        compiled, &inl, level + 1, nlevels, idx, buffers, mode, cfg,
                         scratch_in, scratch_out,
                     )?;
                 }
@@ -526,12 +597,72 @@ fn exec_level(
                     if active_set.is_empty() {
                         continue;
                     }
-                    if strip > 1 && level + 1 == nlevels {
+                    if let Some((olvl, ov)) = cfg.outer {
+                        if olvl == level && cfg.outer_lanes == 0 {
+                            // Outer-dim strips: chunk the lane level; the
+                            // lane loop itself sits at the kernel
+                            // invocation (leaf). Scalar alignment head and
+                            // remainder run with lane count 1.
+                            let mut t = a;
+                            if cfg.aligned {
+                                let head = (t + ((ov - t.rem_euclid(ov)) % ov)).min(b);
+                                while t < head {
+                                    idx[level] = t;
+                                    exec_level(
+                                        compiled, &active_set, level + 1, nlevels, idx,
+                                        buffers, mode, cfg, scratch_in, scratch_out,
+                                    )?;
+                                    t += 1;
+                                }
+                            }
+                            let steady = t + ((b - t) / ov) * ov;
+                            while t < steady {
+                                idx[level] = t;
+                                let run = StripCfg { outer_lanes: ov, ..cfg };
+                                exec_level(
+                                    compiled, &active_set, level + 1, nlevels, idx, buffers,
+                                    mode, run, scratch_in, scratch_out,
+                                )?;
+                                t += ov;
+                            }
+                            while t < b {
+                                idx[level] = t;
+                                exec_level(
+                                    compiled, &active_set, level + 1, nlevels, idx, buffers,
+                                    mode, cfg, scratch_in, scratch_out,
+                                )?;
+                                t += 1;
+                            }
+                            continue;
+                        }
+                    }
+                    if cfg.inner > 1 && level + 1 == nlevels {
                         // Lane-fissioned strips (vector-expansion order):
                         // each member runs over the whole strip before the
                         // next member starts — the interpreter analogue of
                         // the emitted simd lane loops.
+                        let strip = cfg.inner;
                         let mut t = a;
+                        if cfg.aligned {
+                            // Aligned strip heads: scalar until the first
+                            // multiple of the strip width.
+                            let head = (t + ((strip - t.rem_euclid(strip)) % strip)).min(b);
+                            if head > t {
+                                for &mi in &active_set {
+                                    for tt in t..head {
+                                        idx[level] = tt;
+                                        invoke(
+                                            &compiled[mi],
+                                            idx,
+                                            buffers,
+                                            scratch_in,
+                                            scratch_out,
+                                        )?;
+                                    }
+                                }
+                                t = head;
+                            }
+                        }
                         while t < b {
                             let e = (t + strip).min(b);
                             for &mi in &active_set {
@@ -554,7 +685,7 @@ fn exec_level(
                         idx[level] = t;
                         exec_level(
                             compiled, &active_set, level + 1, nlevels, idx, buffers, mode,
-                            strip, scratch_in, scratch_out,
+                            cfg, scratch_in, scratch_out,
                         )?;
                     }
                 }
@@ -563,7 +694,7 @@ fn exec_level(
     }
 
     exec_level(
-        compiled, &post, level + 1, nlevels, idx, buffers, mode, strip, scratch_in, scratch_out,
+        compiled, &post, level + 1, nlevels, idx, buffers, mode, cfg, scratch_in, scratch_out,
     )
 }
 
@@ -861,6 +992,66 @@ mod tests {
             want[i - 1] = 2.0 * u[i + 1] - 2.0 * u[i - 1];
         }
         assert_close(&scalar["g_d"], &want, 1e-12);
+    }
+
+    #[test]
+    fn outer_strip_execution_matches_scalar_bitwise() {
+        // cosmo with outer-k lanes at vlen 4 on Nk=6 (strip + remainder):
+        // outer lanes are independent, so the strip order must reproduce
+        // the plain scalar compile bit-for-bit — and the reference.
+        let outer_opts = CompileOptions {
+            analysis: crate::analysis::AnalysisOptions {
+                vector_len: Some(4),
+                vec_dim: crate::analysis::VecDim::Outer("k".to_string()),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let prog = compile_src(crate::apps::cosmo::DECK, outer_opts).unwrap();
+        assert_eq!(prog.outer_lane_dim(), Some("k"));
+        let scalar = compile_src(crate::apps::cosmo::DECK, CompileOptions::default()).unwrap();
+        let (nk, nj, ni) = (6usize, 9usize, 11usize);
+        let ext = extents(&[("Nk", nk as i64), ("Nj", nj as i64), ("Ni", ni as i64)]);
+        let reg = crate::apps::cosmo::registry();
+        let u = seeded(nk * nj * ni, 8);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("g_u".to_string(), u.clone());
+        let a = run(&prog, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+        let b = run(&scalar, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+        assert_close(&a["g_out"], &b["g_out"], 0.0);
+        let mut want = vec![0.0; nk * (nj - 4) * (ni - 4)];
+        crate::apps::cosmo::reference(&u, nk, nj, ni, &mut want);
+        assert_close(&a["g_out"], &want, 1e-12);
+    }
+
+    #[test]
+    fn aligned_strip_execution_matches_unaligned_bitwise() {
+        // chain1d at vlen 4 with aligned strip heads: the head peel
+        // shifts strip boundaries, which must not change any value.
+        let mk = |aligned: bool| CompileOptions {
+            analysis: crate::analysis::AnalysisOptions {
+                vector_len: Some(4),
+                ..Default::default()
+            },
+            aligned,
+            ..Default::default()
+        };
+        let plain = compile_src(testdecks::CHAIN1D, mk(false)).unwrap();
+        let aligned = compile_src(testdecks::CHAIN1D, mk(true)).unwrap();
+        let reg = chain_registry();
+        let n = 27usize;
+        let ext = extents(&[("N", n as i64)]);
+        let u = seeded(n, 3);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("g_u".to_string(), u.clone());
+        let a = run(&plain, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+        let b = run(&aligned, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+        assert_close(&a["g_d"], &b["g_d"], 0.0);
+        let mut want = vec![0.0; n - 2];
+        for i in 1..n - 1 {
+            want[i - 1] = 2.0 * u[i + 1] - 2.0 * u[i - 1];
+        }
+        assert_close(&b["g_d"], &want, 1e-12);
     }
 
     #[test]

@@ -17,6 +17,24 @@
 //! longest-path over the group's dataflow edges, so every producer runs
 //! just far enough ahead of its consumers (this realizes the paper's
 //! prologue/steady-state/epilogue phases; see [`crate::plan`]).
+//!
+//! # What downstream stages read off a [`FusedNest`]
+//!
+//! * **Storage contraction** ([`crate::analysis`]) requires every
+//!   producer and consumer of a variable to sit in *one* nest — a split
+//!   (recorded in [`FusedDag::splits`]) forces full-span storage, which
+//!   is the measurable cost of a fusion barrier (paper §5.2).
+//! * **Vectorization legality** is judged against the nest's
+//!   [`Member`] roles and shifts: inner-strip lane fission
+//!   ([`crate::analysis::lane_fission_safe`]) inspects the innermost
+//!   [`Role::Loop`] members, and outer-dim vectorization
+//!   ([`crate::analysis::outer_vectorizable`]) demands `Role::Loop`
+//!   with zero shift for every member at the candidate level —
+//!   prologue/epilogue placement or a nonzero pipeline shift along a
+//!   dim is exactly what makes lanes along it unsafe.
+//! * **Code emission** walks `dims` outermost-first, partitioning
+//!   members by role at each level; `shifts` become the static peeling
+//!   offsets of the emitted prologue/steady-state/epilogue segments.
 
 use crate::dataflow::{CallsiteId, Dataflow, VarId};
 use std::collections::{BTreeMap, BTreeSet};

@@ -22,21 +22,38 @@ fn usage() -> ! {
     eprintln!(
         "usage: hfav <command> [args]
   generate <deck.yaml|app> [--backend c99|rust|dot-dataflow|dot-inest|schedule] [--variant hfav|autovec]
-      [--vlen auto|N] [--tuned]
+      [--vlen auto|N] [--vec-dim inner|auto|outer:<dim>] [--aligned] [--tuned]
   footprint <deck.yaml|app> --extents Ni=512,Nj=512
   engines
   run --app <app|deck.yaml> [--engine exec|native|rust|pjrt] [--variant hfav|autovec]
-      [--size N] [--steps S] [--vlen auto|N] [--tuned]
+      [--size N] [--steps S] [--extents NxM[xK]] [--vlen auto|N]
+      [--vec-dim inner|auto|outer:<dim>] [--aligned] [--tuned]
   serve --trace <file> [--workers N] [--repeat R] [--artifacts DIR] [--vlen auto|N]
+      [--vec-dim inner|auto|outer:<dim>] [--aligned]
   e2e [--size N] [--steps S]
-  bench <sysinfo|normalization|cosmo|hydro2d|footprint|serving|pjrt|all> [--vlen auto|N]
+  bench <sysinfo|normalization|cosmo|hydro2d|footprint|serving|vectorization|pjrt|all>
+      [--vlen auto|N]
   smoke [hlo.txt]
 
   engines: list the registered execution backends and their availability
-  --vlen:  vector length for strip-mined codegen (Fig. 9c); `auto` picks
-           the host's SIMD width (runtime-detected), N forces N lanes
-           (1 = scalar), omitted = each deck's declared default.
-  --tuned: paper §5.3 'HFAV + Tuning' (innermost windows stay full rows)"
+  --vlen:    vector length for strip-mined codegen (Fig. 9c); `auto` picks
+             the host's SIMD width (runtime-detected), N forces N lanes
+             (1 = scalar), omitted = each deck's declared default.
+  --vec-dim: which loop dim the lanes run along. `inner` (default)
+             strip-mines the innermost loop with in-register window
+             rotation; `outer:<dim>` strip-mines a k-independent outer
+             loop instead — legal only when every kernel iterates <dim>
+             with offset-0 accesses, nothing reduces over it, and every
+             written variable is indexed by it (compile fails otherwise);
+             `auto` picks the outermost legal outer dim, else inner.
+  --aligned: aligned-load specialization — 64-byte-aligned intermediates
+             plus scalar alignment heads so steady-state strips start at
+             multiples of the vector length (no effect at vlen 1).
+  --extents: (run) per-job grid override, positional values bound to the
+             deck's extents in sorted-name order (e.g. cosmo: Ni x Nj x
+             Nk) — also the trace v3 `extents=` field. NOTE: `footprint
+             --extents` takes the *named* form Ni=512,Nj=512 instead.
+  --tuned:   paper §5.3 'HFAV + Tuning' (innermost windows stay full rows)"
     );
     std::process::exit(2)
 }
@@ -86,13 +103,23 @@ fn vlen_of(rest: &[String]) -> Result<Vlen, CliError> {
     }
 }
 
+/// Parse `--vec-dim inner|auto|outer:<dim>` (`Inner` when omitted).
+fn vec_dim_of(rest: &[String]) -> Result<hfav::analysis::VecDim, CliError> {
+    match flag(rest, "--vec-dim") {
+        None => Ok(hfav::analysis::VecDim::Inner),
+        Some(v) => Ok(v.parse().map_err(|e| format!("--vec-dim: {e}"))?),
+    }
+}
+
 /// Build the [`PlanSpec`] a subcommand's flags describe: a built-in app
-/// or deck-file target, variant, vector length and tuning — the exact
-/// spec (and plan-cache identity) serving would use.
+/// or deck-file target, variant, vectorization knobs and tuning — the
+/// exact spec (and plan-cache identity) serving would use.
 fn spec_of(target: &str, rest: &[String]) -> Result<PlanSpec, CliError> {
     Ok(target_spec(target)?
         .variant(variant_of(rest)?)
         .vlen(vlen_of(rest)?)
+        .vec_dim(vec_dim_of(rest)?)
+        .aligned(has_flag(rest, "--aligned"))
         .tuned(has_flag(rest, "--tuned")))
 }
 
@@ -148,6 +175,12 @@ fn engines() -> CliResult {
             Availability::Missing(why) => println!("{}\tunavailable\t{why}", b.name()),
         }
     }
+    // Knob summary (comment lines — the tab-separated listing above stays
+    // machine-parseable for the CI engine smoke).
+    println!("# knobs: --vlen auto|N (strip width; 1 = scalar)");
+    println!("#        --vec-dim inner|auto|outer:<dim> (outer needs a k-independent loop:");
+    println!("#          offset-0 accesses, no reduction over it, all writes indexed by it)");
+    println!("#        --aligned (aligned intermediates + aligned strip heads; vlen > 1)");
     Ok(())
 }
 
@@ -165,8 +198,12 @@ fn run(rest: &[String]) -> CliResult {
         return Err(format!("engine `{}` unavailable: {why}", backend.name()).into());
     }
     let spec = spec_of(&app, rest)?;
+    let mut job = Job::new(0, spec, backend.name(), size, steps);
+    if let Some(s) = flag(rest, "--extents") {
+        job = job.with_extents(hfav::coordinator::parse_extents(&s)?);
+    }
     let c = Coordinator::start(1, Some(hfav::runtime::default_artifacts_dir()));
-    let r = c.submit(Job::new(0, spec, backend.name(), size, steps)).recv()?;
+    let r = c.submit(job).recv()?;
     let out = if r.ok {
         println!(
             "ok: {:.1} Mcells/s latency={:?} checksum={:.6e}",
@@ -199,10 +236,21 @@ fn serve(rest: &[String]) -> CliResult {
         template.push(parse_trace_line(i as u64, l)?);
     }
     // `--vlen` overrides every job in the trace (per-job vlens come from
-    // the optional sixth trace field).
+    // the optional sixth trace field), as do `--vec-dim` and `--aligned`.
     if let vlen @ (Vlen::Auto | Vlen::Fixed(_)) = vlen_of(rest)? {
         for j in template.iter_mut() {
             j.spec = j.spec.clone().vlen(vlen);
+        }
+    }
+    if let Some(vd) = flag(rest, "--vec-dim") {
+        let vd: hfav::analysis::VecDim = vd.parse().map_err(|e| format!("--vec-dim: {e}"))?;
+        for j in template.iter_mut() {
+            j.spec = j.spec.clone().vec_dim(vd.clone());
+        }
+    }
+    if has_flag(rest, "--aligned") {
+        for j in template.iter_mut() {
+            j.spec = j.spec.clone().aligned(true);
         }
     }
     let jobs = repeat_jobs(&template, repeat);
@@ -260,6 +308,10 @@ fn bench(rest: &[String]) -> CliResult {
         "serving" => {
             hfav::bench::serving(4, 6, vlen_of(rest)?.resolve());
         }
+        "vectorization" => {
+            let v = vlen_of(rest)?.resolve().unwrap_or_else(hfav::analysis::auto_vector_len);
+            hfav::bench::vectorization(v);
+        }
         "pjrt" => {
             hfav::bench::pjrt(&hfav::runtime::default_artifacts_dir())?;
         }
@@ -269,6 +321,8 @@ fn bench(rest: &[String]) -> CliResult {
             hfav::bench::cosmo(&sizes_small, 8);
             hfav::bench::hydro2d(&[64, 128, 256], 5);
             hfav::bench::serving(4, 6, vlen_of(rest)?.resolve());
+            let v = vlen_of(rest)?.resolve().unwrap_or_else(hfav::analysis::auto_vector_len);
+            hfav::bench::vectorization(v);
             let _ = hfav::bench::pjrt(&hfav::runtime::default_artifacts_dir());
         }
         other => return Err(format!("unknown bench `{other}`").into()),

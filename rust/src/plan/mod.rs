@@ -31,6 +31,15 @@ pub struct CompileOptions {
     /// Inputs named in deck alias pairs are always rolled (in/out
     /// chaining, §3.5).
     pub roll_all_inputs: bool,
+    /// Aligned-load specialization: intermediates get 64-byte-aligned
+    /// allocations with `assume_aligned` hints (C backend), and every
+    /// strip loop peels a scalar head so the steady-state strips start
+    /// at indices that are multiples of the vector length ("aligned
+    /// strip heads"). The unaligned shape remains the general case —
+    /// peel analysis cannot prove most segment bounds are multiples of
+    /// the vector length, so the head peel establishes alignment at run
+    /// time. No effect at vector length 1.
+    pub aligned: bool,
 }
 
 /// A fully-compiled program.
@@ -50,6 +59,7 @@ pub struct Program {
 /// `Some(1)` explicitly forces scalar codegen on a vectorized deck). The
 /// resolved value is reported by [`Program::vector_len`].
 pub fn compile(deck: Deck, opts: CompileOptions) -> Result<Program, String> {
+    let mut opts = opts;
     let mut df = crate::dataflow::build(&deck)?;
     // In/out chaining before fusion (inserts synthetic roll callsites).
     analysis::chain_inouts(&deck, &mut df)?;
@@ -71,6 +81,11 @@ pub fn compile(deck: Deck, opts: CompileOptions) -> Result<Program, String> {
         }
     }
     let fd = fusion::fuse(&df, &opts.fusion)?;
+    // Resolve the vectorization dimension against the fused schedule, so
+    // the program carries a concrete `Inner`/`Outer(dim)` that storage
+    // analysis, both code emitters and the executor all read. An
+    // explicitly requested illegal outer dim fails here.
+    opts.analysis.vec_dim = analysis::resolve_vec_dim(&deck, &df, &fd, &opts.analysis)?;
     let sp = analysis::analyze(&deck, &df, &fd, &opts.analysis)?;
     Ok(Program { deck, df, fd, sp, opts })
 }
@@ -89,6 +104,25 @@ impl Program {
     /// executor must use the same value.
     pub fn vector_len(&self) -> usize {
         crate::analysis::resolve_vector_len(&self.deck, &self.opts.analysis)
+    }
+
+    /// The resolved vectorization dimension: always a concrete
+    /// `Inner` / `Outer(dim)` after [`compile`] (never `Auto`).
+    pub fn vec_dim(&self) -> &crate::analysis::VecDim {
+        &self.opts.analysis.vec_dim
+    }
+
+    /// The outer lane dim, when this program vectorizes an outer loop:
+    /// `Some(dim)` iff the resolved strategy is `Outer(dim)` and the
+    /// effective vector length is > 1. Storage was lane-expanded along
+    /// this dim, so the emitters and the executor strip-mine it (and
+    /// must not strip-mine the innermost dim — its windows carry no
+    /// vector padding under this strategy).
+    pub fn outer_lane_dim(&self) -> Option<&str> {
+        match &self.opts.analysis.vec_dim {
+            crate::analysis::VecDim::Outer(d) if self.vector_len() > 1 => Some(d.as_str()),
+            _ => None,
+        }
     }
 
     /// Names and spans of required external input arrays:
@@ -249,6 +283,46 @@ mod tests {
         )
         .unwrap();
         assert_eq!(forced4.vector_len(), 4);
+    }
+
+    #[test]
+    fn vec_dim_resolves_at_compile() {
+        use crate::analysis::VecDim;
+        // Default: Inner, no outer lane dim.
+        let plain = compile_src(testdecks::CHAIN1D, CompileOptions::default()).unwrap();
+        assert_eq!(plain.vec_dim(), &VecDim::Inner);
+        assert_eq!(plain.outer_lane_dim(), None);
+        // cosmo + Auto at vlen 4 resolves to the k-independent outer dim.
+        let opts = |vd: VecDim| CompileOptions {
+            analysis: crate::analysis::AnalysisOptions {
+                vector_len: Some(4),
+                vec_dim: vd,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let auto = compile_src(crate::apps::cosmo::DECK, opts(VecDim::Auto)).unwrap();
+        assert_eq!(auto.vec_dim(), &VecDim::Outer("k".to_string()));
+        assert_eq!(auto.outer_lane_dim(), Some("k"));
+        // An explicitly requested illegal dim fails the compile.
+        let e = compile_src(crate::apps::cosmo::DECK, opts(VecDim::Outer("j".into())))
+            .unwrap_err();
+        assert!(e.contains("not legal"), "{e}");
+        // Outer resolution at vlen 1 degrades to Inner (scalar).
+        let scalar = compile_src(
+            crate::apps::cosmo::DECK,
+            CompileOptions {
+                analysis: crate::analysis::AnalysisOptions {
+                    vector_len: Some(1),
+                    vec_dim: VecDim::Outer("k".into()),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(scalar.vec_dim(), &VecDim::Inner);
+        assert_eq!(scalar.outer_lane_dim(), None);
     }
 
     #[test]

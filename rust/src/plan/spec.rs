@@ -21,6 +21,7 @@
 //! # let _ = prog;
 //! ```
 
+use crate::analysis::VecDim;
 use crate::apps::Variant;
 use crate::fusion::FusionOptions;
 use crate::plan::cache::{Fnv64, PlanKey};
@@ -94,6 +95,12 @@ pub struct PlanSpec {
     tuned: bool,
     /// Roll *all* terminal inputs through buffers (§5.3 in-place variant).
     roll_all_inputs: bool,
+    /// Which loop dim vector lanes run along (`Inner` default;
+    /// `Outer(dim)` requires a k-independent outer loop; `Auto` picks).
+    vec_dim: VecDim,
+    /// Aligned-load specialization: aligned intermediate allocations +
+    /// aligned strip heads (scalar head peel), unaligned general case.
+    aligned: bool,
 }
 
 impl PlanSpec {
@@ -104,6 +111,8 @@ impl PlanSpec {
             vlen: None,
             tuned: false,
             roll_all_inputs: false,
+            vec_dim: VecDim::Inner,
+            aligned: false,
         }
     }
 
@@ -163,6 +172,25 @@ impl PlanSpec {
         self
     }
 
+    /// Which loop dim vector lanes run along (default [`VecDim::Inner`]).
+    /// `Outer(dim)` fails at [`compile`](Self::compile) when no fused
+    /// nest has `dim` as a k-independent outer loop
+    /// ([`crate::analysis::outer_vectorizable`]); `Auto` resolves to the
+    /// outermost legal outer dim, else `Inner`.
+    pub fn vec_dim(mut self, v: VecDim) -> PlanSpec {
+        self.vec_dim = v;
+        self
+    }
+
+    /// Aligned-load specialization (no effect at vector length 1): the
+    /// C backend allocates intermediates 64-byte aligned and both
+    /// backends peel a scalar head so strips start at multiples of the
+    /// vector length; the unaligned shape stays the general case.
+    pub fn aligned(mut self, on: bool) -> PlanSpec {
+        self.aligned = on;
+        self
+    }
+
     // -- accessors ----------------------------------------------------------
 
     /// Built-in app name, if this spec targets one.
@@ -193,6 +221,16 @@ impl PlanSpec {
 
     pub fn is_tuned(&self) -> bool {
         self.tuned
+    }
+
+    /// The requested vectorization dim (as built — `Auto` not yet
+    /// resolved; resolution happens at compile).
+    pub fn vec_dim_kind(&self) -> &VecDim {
+        &self.vec_dim
+    }
+
+    pub fn is_aligned(&self) -> bool {
+        self.aligned
     }
 
     /// Variant label used in plan keys and traces (`hfav`, `autovec`,
@@ -233,7 +271,9 @@ impl PlanSpec {
             opts.analysis.contract_innermost = false;
         }
         opts.analysis.vector_len = self.vlen;
+        opts.analysis.vec_dim = self.vec_dim.clone();
         opts.roll_all_inputs = self.roll_all_inputs;
+        opts.aligned = self.aligned;
         opts
     }
 
@@ -265,6 +305,11 @@ impl PlanSpec {
         // `None` (deck default) must not collide with any forced value.
         h.write_bool(self.vlen.is_some());
         h.write_u64(self.vlen.unwrap_or(0) as u64);
+        // Vectorization strategy knobs. `Auto` is fingerprinted as-is:
+        // its resolution depends only on the deck, which the fingerprint
+        // already covers, so equal fingerprints resolve identically.
+        h.write_str(&self.vec_dim.to_string());
+        h.write_bool(self.aligned);
         h.finish()
     }
 
@@ -310,6 +355,9 @@ mod tests {
             base.clone().vlen(Vlen::Fixed(8)),
             base.clone().tuned(true),
             base.clone().roll_all_inputs(true),
+            base.clone().vec_dim(VecDim::Auto),
+            base.clone().vec_dim(VecDim::Outer("j".to_string())),
+            base.clone().aligned(true),
             PlanSpec::app("normalize"),
             PlanSpec::deck_src("name: laplace\n"),
         ];
@@ -339,6 +387,13 @@ mod tests {
         assert_eq!(v.analysis.vector_len, Some(4));
         let r = PlanSpec::app("laplace").roll_all_inputs(true).compile_options();
         assert!(r.roll_all_inputs);
+        let o = PlanSpec::app("cosmo")
+            .vec_dim(VecDim::Outer("k".to_string()))
+            .aligned(true)
+            .compile_options();
+        assert_eq!(o.analysis.vec_dim, VecDim::Outer("k".to_string()));
+        assert!(o.aligned);
+        assert_eq!(PlanSpec::app("cosmo").compile_options().analysis.vec_dim, VecDim::Inner);
     }
 
     #[test]

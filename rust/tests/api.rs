@@ -3,8 +3,9 @@
 //! serving through the coordinator, and the fails-closed property (a
 //! `Job` cannot express a compile option its plan key does not cover).
 
+use hfav::analysis::VecDim;
 use hfav::apps::Variant;
-use hfav::coordinator::{Coordinator, Job};
+use hfav::coordinator::{batch_key, parse_trace_line, Coordinator, Job};
 use hfav::engine::{registry, Availability};
 use hfav::plan::{PlanSpec, Vlen};
 
@@ -44,6 +45,11 @@ fn planspec_fingerprints_are_stable_and_distinct() {
         base.clone().tuned(true),
         base.clone().tuned(true).vlen(Vlen::Fixed(4)),
         base.clone().roll_all_inputs(true),
+        base.clone().vec_dim(VecDim::Auto),
+        base.clone().vec_dim(VecDim::Outer("j".to_string())),
+        base.clone().vec_dim(VecDim::Outer("j".to_string())).vlen(Vlen::Fixed(4)),
+        base.clone().aligned(true),
+        base.clone().aligned(true).vlen(Vlen::Fixed(4)),
         PlanSpec::app("laplace"),
         PlanSpec::deck_src("name: hydro2d\n"),
     ];
@@ -146,6 +152,75 @@ fn unavailable_backend_degrades_per_job() {
     let r = c.submit(Job::new(0, PlanSpec::app("laplace"), "pjrt", 16, 1)).recv().unwrap();
     assert!(!r.ok);
     assert!(r.detail.contains("PJRT") || r.detail.contains("artifacts"), "{}", r.detail);
+    c.shutdown();
+}
+
+/// Vectorization knobs move the plan identity; extents overrides move
+/// the *batch* identity but not the plan key — compiled plans are
+/// shape-generic, so one compile serves every grid shape, while
+/// differently-shaped jobs never share a warm-buffer batch group.
+#[test]
+fn vectorization_knobs_and_extents_identity() {
+    let base = PlanSpec::app("cosmo").vlen(Vlen::Fixed(4));
+    let knobs = [
+        base.clone().vec_dim(VecDim::Outer("k".to_string())),
+        base.clone().vec_dim(VecDim::Auto),
+        base.clone().aligned(true),
+        base.clone().vec_dim(VecDim::Outer("k".to_string())).aligned(true),
+    ];
+    for (i, k) in knobs.iter().enumerate() {
+        assert_ne!(k.fingerprint(), base.fingerprint(), "knob {i} escaped the fingerprint");
+        assert_ne!(
+            format!("{:?}", k.compile_options()),
+            format!("{:?}", base.compile_options()),
+            "knob {i} does not change the compile options it claims to"
+        );
+    }
+    let square = Job::new(1, base.clone(), "exec", 32, 1);
+    let a = Job::new(2, base.clone(), "exec", 32, 1).with_extents(vec![13, 11, 3]);
+    let b = Job::new(3, base.clone(), "exec", 32, 1).with_extents(vec![13, 11, 4]);
+    assert_eq!(square.plan_key(), a.plan_key(), "plans are shape-generic");
+    assert_eq!(a.plan_key(), b.plan_key());
+    assert_ne!(batch_key(&square), batch_key(&a));
+    assert_ne!(batch_key(&a), batch_key(&b));
+}
+
+/// A trace-v3 job with non-square `extents=` serves end-to-end through
+/// the coordinator, on the interpreter *and* the native-C engine (same
+/// seeded inputs → matching checksums), with cells metered from the
+/// extents actually run.
+#[test]
+fn trace_v3_non_square_extents_serve_end_to_end() {
+    let line = "cosmo, hfav, exec, 32, 2, 4, extents=13x11x6";
+    let job = parse_trace_line(9, line).unwrap();
+    assert_eq!(job.extents, Some(vec![13, 11, 6]));
+    assert_eq!(job.spec.vlen_override(), Some(4));
+    // Same id → same seeded inputs; outer-k + aligned native-C job must
+    // produce the interpreter's checksum on the same non-square grid.
+    let native = Job::new(
+        9,
+        PlanSpec::app("cosmo")
+            .vlen(Vlen::Fixed(4))
+            .vec_dim(VecDim::Outer("k".to_string()))
+            .aligned(true),
+        "native",
+        32,
+        2,
+    )
+    .with_extents(vec![13, 11, 6]);
+    let c = Coordinator::start(2, None);
+    let results = c.run_batch(vec![job, native]);
+    for r in &results {
+        assert!(r.ok, "job {}: {}", r.id, r.detail);
+    }
+    let (a, b) = (results[0].checksum, results[1].checksum);
+    assert!(
+        (a - b).abs() <= 1e-9 * (1.0 + a.abs().max(b.abs())),
+        "exec vs native checksum: {a} vs {b}"
+    );
+    let rep = c.report(std::time::Duration::from_millis(1));
+    // Ni=13, Nj=11, Nk=6 (sorted-name binding), 2 steps, 2 jobs.
+    assert_eq!(rep.total_cells, 13 * 11 * 6 * 2 * 2);
     c.shutdown();
 }
 

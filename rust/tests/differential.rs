@@ -8,10 +8,15 @@
 //!   Rust (rustc --crate-type cdylib + dlopen)
 //! * vector lengths: 1 (scalar), 4, 8 — forced through the same
 //!   `Option<usize>` override the coordinator's plan cache fingerprints
+//! * strategies: inner strips (default), outer-dim lanes
+//!   (`vec_dim outer:<dim>` on cosmo's `k` and normalization's `j`) and
+//!   the aligned specialization — on non-square extents, so strips,
+//!   remainders and alignment heads are all exercised
 //!
 //! The generated-Rust engine is skipped (with a note) when no `rustc` is
 //! on PATH; under `cargo test` one always is.
 
+use hfav::analysis::VecDim;
 use hfav::apps::{self, Variant};
 use hfav::codegen::native::{self, CcOptions, RustcOptions};
 use hfav::exec::{self, ExecOptions};
@@ -193,6 +198,128 @@ fn differential_hydro2d() {
                 }
             }
         }
+    }
+}
+
+/// Outer-dimension vectorization and the aligned specialization on
+/// non-square extents: every engine must match the hand-written scalar
+/// reference within 1e-12. Nk=9 / Nj=11 / Ni=13 exercises outer strips
+/// *and* their scalar remainders (and, aligned, the alignment heads) at
+/// both vector lengths.
+#[test]
+fn differential_outer_dim_and_aligned_cosmo() {
+    let (nk, nj, ni) = (9usize, 11usize, 13usize);
+    let u = apps::seeded(nk * nj * ni, 17);
+    let mut want = vec![0.0; nk * (nj - 4) * (ni - 4)];
+    apps::cosmo::reference(&u, nk, nj, ni, &mut want);
+    let mut ext = BTreeMap::new();
+    ext.insert("Nk".to_string(), nk as i64);
+    ext.insert("Nj".to_string(), nj as i64);
+    ext.insert("Ni".to_string(), ni as i64);
+    let mut inputs = BTreeMap::new();
+    inputs.insert("g_u".to_string(), u);
+    let reg = apps::cosmo::registry();
+    let engines = engines();
+    let specs: Vec<(&str, PlanSpec)> = vec![
+        (
+            "outer:k vlen4",
+            PlanSpec::deck_src(apps::cosmo::DECK)
+                .vlen(Vlen::Fixed(4))
+                .vec_dim(VecDim::Outer("k".to_string())),
+        ),
+        (
+            "outer:k vlen8 aligned",
+            PlanSpec::deck_src(apps::cosmo::DECK)
+                .vlen(Vlen::Fixed(8))
+                .vec_dim(VecDim::Outer("k".to_string()))
+                .aligned(true),
+        ),
+        (
+            "auto(->outer:k) vlen4",
+            PlanSpec::deck_src(apps::cosmo::DECK).vlen(Vlen::Fixed(4)).vec_dim(VecDim::Auto),
+        ),
+        (
+            "inner vlen4 aligned",
+            PlanSpec::deck_src(apps::cosmo::DECK).vlen(Vlen::Fixed(4)).aligned(true),
+        ),
+        (
+            "inner vlen8 aligned",
+            PlanSpec::deck_src(apps::cosmo::DECK).vlen(Vlen::Fixed(8)).aligned(true),
+        ),
+    ];
+    for (label, spec) in specs {
+        let prog = spec.compile().unwrap_or_else(|e| panic!("{label}: {e}"));
+        for &eng in &engines {
+            let out = run_stencil(&prog, &reg, eng, &ext, &inputs);
+            let err = apps::max_err(&out["g_out"], &want);
+            assert!(err < TOL, "cosmo {label} {}: err {err:.2e}", eng.label());
+        }
+    }
+}
+
+/// Outer-dim lanes across an inner reduction: normalization's rows are
+/// independent, so `outer:j` gives every lane its own accumulator slot.
+/// Non-square (7 x 26), vlen 4 → strip + 3-row remainder.
+#[test]
+fn differential_outer_dim_normalization() {
+    let (nj, ni) = (7usize, 26usize);
+    let q = apps::seeded(nj * (ni + 1), 11);
+    let mut want = vec![0.0; nj * ni];
+    apps::normalization::reference(&q, nj, ni, &mut want);
+    let mut ext = BTreeMap::new();
+    ext.insert("Nj".to_string(), nj as i64);
+    ext.insert("Ni".to_string(), ni as i64);
+    let mut inputs = BTreeMap::new();
+    inputs.insert("g_q".to_string(), q);
+    let reg = apps::normalization::registry();
+    let engines = engines();
+    for vlen in [4usize, 8] {
+        for aligned in [false, true] {
+            let prog = PlanSpec::deck_src(apps::normalization::DECK)
+                .vlen(Vlen::Fixed(vlen))
+                .vec_dim(VecDim::Outer("j".to_string()))
+                .aligned(aligned)
+                .compile()
+                .unwrap();
+            for &eng in &engines {
+                let out = run_stencil(&prog, &reg, eng, &ext, &inputs);
+                let err = apps::max_err(&out["g_out"], &want);
+                assert!(
+                    err < TOL,
+                    "normalize outer:j vlen {vlen} aligned {aligned} {}: err {err:.2e}",
+                    eng.label()
+                );
+            }
+        }
+    }
+}
+
+/// Outer lanes are fully independent, so the interpreter and the
+/// generated Rust engine must agree bit-for-bit (no FP contraction on
+/// either side) on cosmo under `outer:k`.
+#[test]
+fn differential_outer_interp_vs_rust_bitwise() {
+    if !native::rustc_available() {
+        eprintln!("differential: no rustc on PATH — outer bitwise check skipped");
+        return;
+    }
+    let (nk, nj, ni) = (6usize, 9usize, 11usize);
+    let mut ext = BTreeMap::new();
+    ext.insert("Nk".to_string(), nk as i64);
+    ext.insert("Nj".to_string(), nj as i64);
+    ext.insert("Ni".to_string(), ni as i64);
+    let mut inputs = BTreeMap::new();
+    inputs.insert("g_u".to_string(), apps::seeded(nk * nj * ni, 23));
+    let reg = apps::cosmo::registry();
+    for vlen in [4usize, 8] {
+        let prog = PlanSpec::deck_src(apps::cosmo::DECK)
+            .vlen(Vlen::Fixed(vlen))
+            .vec_dim(VecDim::Outer("k".to_string()))
+            .compile()
+            .unwrap();
+        let a = run_stencil(&prog, &reg, Eng::Interp, &ext, &inputs);
+        let b = run_stencil(&prog, &reg, Eng::GenRust, &ext, &inputs);
+        assert_eq!(a["g_out"], b["g_out"], "vlen {vlen}: generated Rust diverged bitwise");
     }
 }
 

@@ -1,7 +1,9 @@
 //! Golden snapshot tests for generated code: the C99 and Rust emissions
-//! for a small pipelined deck, at vlen 1 (scalar peeled loops) and
-//! vlen 4 (strip-mined + in-register rotation), are pinned under
-//! `tests/golden/` so any emitter change shows up as a reviewable diff.
+//! for small pipelined decks — scalar peeled loops (vlen 1), inner
+//! strips with in-register rotation (vlen 4), outer-dim lane loops
+//! (`rows2d` at `vec_dim outer:j`) and the aligned specialization — are
+//! pinned under `tests/golden/` so any emitter change shows up as a
+//! reviewable diff.
 //!
 //! Workflow:
 //! * mismatch → the test fails and prints the path; run with
@@ -46,6 +48,40 @@ globals:
     diff(u[i]) => double g_d[i]
 "#;
 
+/// A 2-D variant of the chain with independent rows: `j` carries no
+/// offsets, so it is a legal outer lane dim — the emission target for
+/// the `outer:j` goldens (per-invocation lane loops, no window staging,
+/// lane dim innermost in intermediate layouts).
+const ROWS2D: &str = r#"
+name: rows2d
+iteration:
+  order: [j, i]
+  domains:
+    j: [0, M]
+    i: [1, N-1]
+kernels:
+  dbl:
+    declaration: dbl(double a, double &b);
+    inputs: |
+      a : u?[j?][i?]
+    outputs: |
+      b : dbl(u?[j?][i?])
+    body: "b = 2.0*a;"
+  diff:
+    declaration: diff(double l, double r, double &d);
+    inputs: |
+      l : dbl(u?[j?][i?-1])
+      r : dbl(u?[j?][i?+1])
+    outputs: |
+      d : diff(u?[j?][i?])
+    body: "d = r - l;"
+globals:
+  inputs: |
+    double g_u[j?][i?] => u[j?][i?]
+  outputs: |
+    diff(u[j][i]) => double g_d[j][i]
+"#;
+
 fn golden_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
 }
@@ -56,6 +92,36 @@ fn compile(vlen: usize) -> Program {
         CompileOptions {
             analysis: hfav::analysis::AnalysisOptions {
                 vector_len: Some(vlen),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+fn compile_aligned(vlen: usize) -> Program {
+    compile_src(
+        DECK,
+        CompileOptions {
+            analysis: hfav::analysis::AnalysisOptions {
+                vector_len: Some(vlen),
+                ..Default::default()
+            },
+            aligned: true,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+fn compile_outer(vlen: usize) -> Program {
+    compile_src(
+        ROWS2D,
+        CompileOptions {
+            analysis: hfav::analysis::AnalysisOptions {
+                vector_len: Some(vlen),
+                vec_dim: hfav::analysis::VecDim::Outer("j".to_string()),
                 ..Default::default()
             },
             ..Default::default()
@@ -106,6 +172,26 @@ fn golden_rust_vlen4() {
     check("chain1d_vlen4.rs", &hfav::codegen::rs::emit(&compile(4)).unwrap());
 }
 
+#[test]
+fn golden_c99_outer_vlen4() {
+    check("rows2d_outer_vlen4.c", &hfav::codegen::c99::emit(&compile_outer(4)).unwrap());
+}
+
+#[test]
+fn golden_rust_outer_vlen4() {
+    check("rows2d_outer_vlen4.rs", &hfav::codegen::rs::emit(&compile_outer(4)).unwrap());
+}
+
+#[test]
+fn golden_c99_aligned_vlen4() {
+    check("chain1d_vlen4_aligned.c", &hfav::codegen::c99::emit(&compile_aligned(4)).unwrap());
+}
+
+#[test]
+fn golden_rust_aligned_vlen4() {
+    check("chain1d_vlen4_aligned.rs", &hfav::codegen::rs::emit(&compile_aligned(4)).unwrap());
+}
+
 /// Structural assertions that hold regardless of snapshot churn — the
 /// properties reviewers should look for in the goldens.
 #[test]
@@ -117,4 +203,23 @@ fn golden_structure() {
     assert!(c4.contains("#pragma omp simd"), "{c4}");
     let r4 = hfav::codegen::rs::emit(&compile(4)).unwrap();
     assert!(r4.contains("while hfav_l < 4"), "{r4}");
+}
+
+/// Structural assertions for the outer-dim and aligned emissions.
+#[test]
+fn golden_structure_outer_and_aligned() {
+    let co = hfav::codegen::c99::emit(&compile_outer(4)).unwrap();
+    assert!(co.contains("outer-dim strip: 4 lanes along j"), "{co}");
+    assert!(co.contains("#pragma omp simd"), "{co}");
+    assert!(!co.contains("hfav_in_"), "outer strips need no window staging: {co}");
+    assert!(!co.contains("strip-mined by"), "no inner strips under outer:j: {co}");
+    let ro = hfav::codegen::rs::emit(&compile_outer(4)).unwrap();
+    assert!(ro.contains("outer-dim strip: 4 lanes along j"), "{ro}");
+    assert!(ro.contains("while hfav_ol < 4"), "{ro}");
+    let ca = hfav::codegen::c99::emit(&compile_aligned(4)).unwrap();
+    assert!(ca.contains("alignment head"), "{ca}");
+    assert!(ca.contains("aligned_alloc(64"), "{ca}");
+    assert!(ca.contains("__builtin_assume_aligned"), "{ca}");
+    let ra = hfav::codegen::rs::emit(&compile_aligned(4)).unwrap();
+    assert!(ra.contains("alignment head"), "{ra}");
 }

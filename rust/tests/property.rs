@@ -250,6 +250,50 @@ fn prop_vector_expansion_preserves_semantics() {
 }
 
 #[test]
+fn prop_outer_auto_and_aligned_preserve_semantics() {
+    // For random chain decks: `vec_dim auto` (which resolves to an outer
+    // lane dim exactly when one is k-independent) and the aligned
+    // specialization must both reproduce the scalar compile within
+    // 1e-12. Failures print the resolved strategy and the deck.
+    use hfav::analysis::VecDim;
+    use hfav::plan::Vlen;
+    for seed in 800..824 {
+        let mut rng = Rng::new(seed);
+        let ndims = 1 + (seed % 2) as usize;
+        let (deck, reg) = gen_chain_deck(&mut rng, ndims, 2 + (seed % 3) as usize);
+        let scalar = compile_variant(&deck, Variant::Hfav).unwrap();
+        let auto = PlanSpec::deck_src(deck.as_str())
+            .vlen(Vlen::Fixed(4))
+            .vec_dim(VecDim::Auto)
+            .compile()
+            .unwrap_or_else(|e| panic!("seed {seed}: auto compile failed: {e}\n{deck}"));
+        let aligned = PlanSpec::deck_src(deck.as_str())
+            .vlen(Vlen::Fixed(4))
+            .aligned(true)
+            .compile()
+            .unwrap_or_else(|e| panic!("seed {seed}: aligned compile failed: {e}\n{deck}"));
+        let ext = extents_for(ndims, 26);
+        let mut inputs = BTreeMap::new();
+        for (name, _, _) in scalar.external_inputs() {
+            let len = exec::external_len(&scalar, &name, &ext).unwrap();
+            inputs.insert(name, rng.f64s(len));
+        }
+        let base = exec::run(&scalar, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+        for (label, prog) in [("auto", &auto), ("aligned", &aligned)] {
+            let got = exec::run(prog, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+            for (k, v) in &base {
+                let err = max_err(v, &got[k]);
+                assert!(
+                    err < 1e-12,
+                    "seed {seed} {label} (resolved {:?}): diverged ({err:.2e})\n{deck}",
+                    prog.vec_dim()
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_vector_expanded_windows_are_pow2_and_cover_lanes() {
     // For random chain decks × slack × vlen: every rolling window's alloc
     // is a power of two at least the logical window, and vector-expanded
