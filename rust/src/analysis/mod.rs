@@ -224,6 +224,13 @@ pub struct AnalysisOptions {
     /// [`analyze`] runs; [`crate::plan::compile`] does this, so a
     /// compiled program always carries a concrete `Inner`/`Outer` here.
     pub vec_dim: VecDim,
+    /// Multi-dim lane tiling: combine outer-dim lanes with innermost
+    /// lane-fission strips (`vlen × vlen` tiles). Requires a resolved
+    /// outer lane dim ([`resolve_vec_dim`] upgrades `Inner` to `Auto`
+    /// resolution and fails when no dim is k-independent). Storage gets
+    /// *both* expansions: innermost windows padded by `vlen − 1` (inner
+    /// strips stay legal) and outer lane slots along the lane dim.
+    pub tile: bool,
 }
 
 impl Default for AnalysisOptions {
@@ -235,6 +242,7 @@ impl Default for AnalysisOptions {
             pow2_windows: true,
             contract_innermost: true,
             vec_dim: VecDim::Inner,
+            tile: false,
         }
     }
 }
@@ -339,11 +347,16 @@ pub fn outer_vectorizable(df: &Dataflow, nest: &FusedNest, dim: &str) -> bool {
 /// Resolve the requested [`VecDim`] against the fused schedule into the
 /// concrete strategy a program compiles (and is fingerprinted) with:
 ///
-/// * vector length 1 → `Inner` (nothing to vectorize);
+/// * vector length 1 → `Inner` (nothing to vectorize — a `tile` request
+///   degrades to scalar the same way an explicit `Outer` does);
 /// * `Outer(dim)` → itself when some nest passes [`outer_vectorizable`],
 ///   else a hard error (an explicitly requested illegal dim must fail
 ///   the compile, not silently degrade);
-/// * `Auto` → the outermost legal outer dim of any nest, else `Inner`.
+/// * `Auto` → the outermost legal outer dim of any nest, else `Inner`;
+/// * with `tile` set, an unrequested `Inner` is upgraded to `Auto`
+///   resolution (tiling needs an outer lane dim), and failure to find
+///   one is a hard error — a tile request must not silently become
+///   plain inner strips.
 pub fn resolve_vec_dim(
     deck: &Deck,
     df: &Dataflow,
@@ -353,7 +366,12 @@ pub fn resolve_vec_dim(
     if resolve_vector_len(deck, opts) <= 1 {
         return Ok(VecDim::Inner);
     }
-    match &opts.vec_dim {
+    let requested = if opts.tile && opts.vec_dim == VecDim::Inner {
+        VecDim::Auto
+    } else {
+        opts.vec_dim.clone()
+    };
+    match &requested {
         VecDim::Inner => Ok(VecDim::Inner),
         VecDim::Outer(d) => {
             if fd.nests.iter().any(|n| outer_vectorizable(df, n, d)) {
@@ -375,6 +393,13 @@ pub fn resolve_vec_dim(
                         return Ok(VecDim::Outer(d.clone()));
                     }
                 }
+            }
+            if opts.tile {
+                return Err(format!(
+                    "tile requested but deck `{}` has no k-independent outer loop dim to \
+                     lane-tile (multi-dim tiling = outer lanes x inner strips)",
+                    deck.name
+                ));
             }
             Ok(VecDim::Inner)
         }
@@ -410,12 +435,15 @@ pub fn analyze(
     let mut notes = Vec::new();
     let vlen = resolve_vector_len(deck, opts);
     // Outer-dim vectorization moves the lane expansion to the chosen
-    // outer dim: the innermost dim keeps its scalar window sizes.
+    // outer dim: the innermost dim keeps its scalar window sizes —
+    // unless multi-dim tiling is on, which needs *both* expansions
+    // (outer lane slots and inner window padding) so outer lanes and
+    // inner lane-fission strips can run together.
     let outer_lane: Option<&str> = match &opts.vec_dim {
         VecDim::Outer(d) if vlen > 1 => Some(d.as_str()),
         _ => None,
     };
-    let inner_vlen = if outer_lane.is_some() { 1 } else { vlen };
+    let inner_vlen = if outer_lane.is_some() && !opts.tile { 1 } else { vlen };
 
     // ---- accumulator chaining -------------------------------------------
     // A reduction callsite that reads X and writes Y with the same base,
@@ -1107,6 +1135,90 @@ globals:
         assert!(su.external.is_some());
         assert_eq!(layout_order(su, Some("k")), vec![0, 1, 2]);
         assert_eq!(layout_order(s, None), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn tiled_expansion_gives_both_lane_slots_and_inner_padding() {
+        let deck = parse_deck(crate::apps::cosmo::DECK).unwrap();
+        let df = crate::dataflow::build(&deck).unwrap();
+        let fd = fuse(&df, &FusionOptions::default()).unwrap();
+        let opts = AnalysisOptions {
+            vector_len: Some(4),
+            vec_dim: VecDim::Outer("k".to_string()),
+            tile: true,
+            ..Default::default()
+        };
+        let sp = analyze(&deck, &df, &fd, &opts).unwrap();
+        let lap = df.var("lap(u)").unwrap().id;
+        let s = sp.storage_of(lap);
+        // k: 4 outer-lane slots (as under plain outer vectorization)...
+        assert_eq!(s.sizes[0], DimSize::Window { w: 4, alloc: 4 });
+        // ...AND the j window keeps its scalar size (j is not innermost)
+        // while innermost-dim storage carries inner-strip padding: lap's
+        // i dim is Full (a row), so check a per-iteration scalar instead.
+        assert!(matches!(s.sizes[1], DimSize::Window { w: 2, .. }), "{:?}", s.sizes);
+        assert_eq!(s.sizes[2], DimSize::Full);
+        // fx(u) is read at i−1 and i (reuse window 2): under tiling its
+        // i window gains inner-strip padding (w + vlen − 1) — the
+        // invariant that makes inner fission legal inside outer strips.
+        let flx = df.var("fx(u)").unwrap().id;
+        let fs = sp.storage_of(flx);
+        let ki = fs.dims.iter().position(|d| d == "i").unwrap();
+        assert!(
+            matches!(fs.sizes[ki], DimSize::Window { w, .. } if w >= 4),
+            "fx i-dim must carry strip padding under tile: {:?}",
+            fs.sizes
+        );
+        // Plain outer (no tile) keeps flx's i dim unexpanded.
+        let plain = analyze(
+            &deck,
+            &df,
+            &fd,
+            &AnalysisOptions { tile: false, ..opts.clone() },
+        )
+        .unwrap();
+        let ps = plain.storage_of(flx);
+        assert!(
+            !matches!(ps.sizes[ki], DimSize::Window { w, .. } if w >= 4),
+            "no inner padding without tile: {:?}",
+            ps.sizes
+        );
+    }
+
+    #[test]
+    fn resolve_vec_dim_tile_upgrades_and_errors() {
+        // tile + Inner upgrades to Auto resolution (cosmo → outer:k)...
+        let deck = parse_deck(crate::apps::cosmo::DECK).unwrap();
+        let df = crate::dataflow::build(&deck).unwrap();
+        let fd = fuse(&df, &FusionOptions::default()).unwrap();
+        let opts = |tile: bool, vd: VecDim| AnalysisOptions {
+            vector_len: Some(4),
+            vec_dim: vd,
+            tile,
+            ..Default::default()
+        };
+        assert_eq!(
+            resolve_vec_dim(&deck, &df, &fd, &opts(true, VecDim::Inner)).unwrap(),
+            VecDim::Outer("k".to_string())
+        );
+        // ...an explicit legal outer dim is kept...
+        assert_eq!(
+            resolve_vec_dim(&deck, &df, &fd, &opts(true, VecDim::Outer("k".into()))).unwrap(),
+            VecDim::Outer("k".to_string())
+        );
+        // ...a 1-D deck has no outer dim: tile is a hard error...
+        let deck1 = parse_deck(testdecks::CHAIN1D).unwrap();
+        let df1 = crate::dataflow::build(&deck1).unwrap();
+        let fd1 = fuse(&df1, &FusionOptions::default()).unwrap();
+        let e = resolve_vec_dim(&deck1, &df1, &fd1, &opts(true, VecDim::Inner)).unwrap_err();
+        assert!(e.contains("tile"), "{e}");
+        // ...and at vlen 1 tile degrades to scalar like everything else.
+        let scalar = AnalysisOptions {
+            vector_len: Some(1),
+            tile: true,
+            ..Default::default()
+        };
+        assert_eq!(resolve_vec_dim(&deck1, &df1, &fd1, &scalar).unwrap(), VecDim::Inner);
     }
 
     #[test]

@@ -312,12 +312,13 @@ pub fn serving(workers: usize, repeat: usize, vlen: Option<usize>) -> Vec<String
     csv
 }
 
-/// Vectorization-strategy comparison (the outer-dim/aligned tentpole):
-/// scalar vs inner-dim strips vs outer-dim lanes vs the aligned
-/// specialization, measured on the native-C engine for cosmo (outer dim
-/// `k`, 32×128×128) and hydro2d (outer dim `j`, 64 rows × 256 cells).
-/// All five variants are distinct `PlanSpec` fingerprints, so a serving
-/// pool would cache and dispatch them as distinct plans.
+/// Vectorization-strategy comparison: scalar vs inner-dim strips vs
+/// outer-dim lanes vs the aligned specialization vs multi-dim lane
+/// tiling (outer lanes × inner strips), measured on the native-C engine
+/// for cosmo (outer dim `k`, 32×128×128) and hydro2d (outer dim `j`,
+/// 64 rows × 256 cells). All six variants are distinct `PlanSpec`
+/// fingerprints, so a serving pool would cache and dispatch them as
+/// distinct plans.
 pub fn vectorization(vlen: usize) -> Vec<String> {
     let v = vlen.max(2);
     let mut csv = vec!["app,strategy,mcells_per_s,speedup_vs_scalar".to_string()];
@@ -370,7 +371,9 @@ pub fn vectorization(vlen: usize) -> Vec<String> {
     csv
 }
 
-/// The five strategy specs compared by [`vectorization`] for one app.
+/// The strategy specs compared by [`vectorization`] for one app
+/// (scalar baseline first; `tiled` = outer lanes × inner strips, the
+/// schedule-IR multi-dim tiling).
 fn vectorization_strategies(app: &str, outer: &str, v: usize) -> Vec<(String, PlanSpec)> {
     vec![
         ("scalar".to_string(), PlanSpec::app(app).vlen(Vlen::Fixed(1))),
@@ -386,6 +389,13 @@ fn vectorization_strategies(app: &str, outer: &str, v: usize) -> Vec<(String, Pl
                 .vlen(Vlen::Fixed(v))
                 .vec_dim(VecDim::Outer(outer.to_string()))
                 .aligned(true),
+        ),
+        (
+            format!("tiled:{outer}"),
+            PlanSpec::app(app)
+                .vlen(Vlen::Fixed(v))
+                .vec_dim(VecDim::Outer(outer.to_string()))
+                .tiled(true),
         ),
     ]
 }

@@ -4,21 +4,17 @@
 //! benchmark vehicle (stands in for the paper's "icc -O3 -xHost" on the
 //! generated code).
 //!
-//! Both source emitters consume the same compiled [`crate::plan::Program`]
-//! and emit the same loop structure: statically peeled
-//! prologue/steady-state/epilogue segments from the fusion shifts, and
-//! one of three vectorized shapes — inner strips with in-register window
-//! rotation, outer-dim lane loops, or the aligned specialization's
-//! alignment heads (see [`c99`] for the strategy overview; [`rs`]
-//! mirrors it with iterator-free `while` strips). Strip-mining
-//! invariants the emitters rely on are established by
-//! [`crate::analysis`]: inner windows padded to `w + vlen − 1` slots
-//! (so a whole strip fits without wraparound), lane slots for
-//! loop-carried scalars, outer-lane slot expansion, and the shared
-//! [`crate::analysis::layout_order`] stride layout that the interpreter
-//! uses too. The emitters never decide legality themselves — they only
-//! act on [`crate::analysis::lane_fission_safe`] /
-//! [`crate::analysis::outer_vectorizable`] verdicts.
+//! Both source emitters are **syntax printers** over the lowered
+//! schedule IR ([`crate::schedule`]): they walk the same loop tree the
+//! interpreter executes and print it — peeled segments, inner strips
+//! with in-register window rotation, outer-dim lane loops, alignment
+//! heads, multi-dim tiles — without deciding a single shape themselves
+//! (see [`c99`]; [`rs`] mirrors it with iterator-free `while` strips,
+//! and both stamp [`crate::plan::Program::schedule_digest`] into the
+//! output header). Storage invariants the printed code relies on are
+//! established by [`crate::analysis`]: window padding, lane slots, and
+//! the shared [`crate::analysis::layout_order`] stride layout that the
+//! interpreter uses too.
 
 pub mod c99;
 pub mod dot;
@@ -28,29 +24,12 @@ pub mod rs;
 use crate::ir::Bound;
 
 /// Render a symbolic bound as a C/Rust expression over `int64_t` extent
-/// variables (extent `Ni` is in scope as `Ni`).
+/// variables (extent `Ni` is in scope as `Ni`). Delegates to the one
+/// spelling in [`crate::schedule::bound_text`], which the schedule IR's
+/// access decomposition also uses — loop-variable declarations and the
+/// index strings referencing them can never drift apart.
 pub(crate) fn bound_expr(b: &Bound) -> String {
-    match &b.base {
-        None => format!("{}", b.offset),
-        Some(base) => match b.offset.cmp(&0) {
-            std::cmp::Ordering::Equal => base.clone(),
-            std::cmp::Ordering::Greater => format!("({base} + {})", b.offset),
-            std::cmp::Ordering::Less => format!("({base} - {})", -b.offset),
-        },
-    }
-}
-
-/// Partial order on symbolic bounds under the "extents are large"
-/// assumption: constants sort below any extent-based bound; same-base
-/// bounds compare by offset; distinct extent bases are incomparable.
-pub(crate) fn cmp_bound(a: &Bound, b: &Bound) -> Option<std::cmp::Ordering> {
-    match (&a.base, &b.base) {
-        (None, None) => Some(a.offset.cmp(&b.offset)),
-        (None, Some(_)) => Some(std::cmp::Ordering::Less),
-        (Some(_), None) => Some(std::cmp::Ordering::Greater),
-        (Some(x), Some(y)) if x == y => Some(a.offset.cmp(&b.offset)),
-        _ => None,
-    }
+    crate::schedule::bound_text(b)
 }
 
 /// Sanitize an identifier for use in generated code.
@@ -63,7 +42,6 @@ pub(crate) fn mangle(s: &str) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::cmp::Ordering;
 
     #[test]
     fn bound_exprs() {
@@ -71,16 +49,6 @@ mod tests {
         assert_eq!(bound_expr(&Bound::of("Ni", 0)), "Ni");
         assert_eq!(bound_expr(&Bound::of("Ni", -1)), "(Ni - 1)");
         assert_eq!(bound_expr(&Bound::of("Ni", 2)), "(Ni + 2)");
-    }
-
-    #[test]
-    fn bound_ordering() {
-        assert_eq!(cmp_bound(&Bound::constant(0), &Bound::of("N", -1)), Some(Ordering::Less));
-        assert_eq!(
-            cmp_bound(&Bound::of("N", -1), &Bound::of("N", 0)),
-            Some(Ordering::Less)
-        );
-        assert_eq!(cmp_bound(&Bound::of("N", 0), &Bound::of("M", 0)), None);
     }
 
     #[test]

@@ -2,27 +2,21 @@
 //!
 //! Runs a compiled [`Program`] over concrete grids with kernels registered
 //! as Rust functions. This substitutes for "compile the emitted C and run
-//! it": the executor walks exactly the fused/contracted/pipelined schedule
-//! the generator produced, so fused-vs-unfused comparisons measure the same
-//! locality effects the paper measures.
+//! it": in [`Mode::Peeled`] the executor *interprets the same lowered
+//! schedule tree* ([`crate::schedule`]) that both code emitters print —
+//! peeled segments, inner lane-fission strips, outer-dim lane loops,
+//! alignment heads, multi-dim tiles — so it visits kernel invocations in
+//! exactly the order the emitted code executes them and stays the
+//! differential oracle. No loop shape is decided here; the executor only
+//! walks nodes (the old hand-mirrored strip selection is gone).
 //!
-//! Two modes:
-//! * [`Mode::Peeled`] — loop ranges are segmented so each segment has a
-//!   fixed set of active callsites (the paper's explicit
-//!   prologue/steady-state/epilogue phases). No per-iteration guards.
-//! * [`Mode::Guarded`] — one uniform loop with per-callsite masking (the
-//!   shape of the paper's "HFAV + Tuning" fold-into-steady-state variant).
+//! [`Mode::Guarded`] is the other execution shape: one uniform loop per
+//! level with per-callsite masking (the paper's "HFAV + Tuning"
+//! fold-into-steady-state variant). It is strip-free by construction.
 //!
-//! Peeled mode additionally mirrors every emitted vectorized loop shape
-//! so the interpreter stays the differential oracle: innermost
-//! lane-fissioned strips (`VecDim::Inner`, gated by
-//! [`crate::analysis::lane_fission_safe`]), outer-dim strips with the
-//! lane loop at the kernel invocation (`VecDim::Outer`, gated by
-//! [`crate::analysis::outer_vectorizable`]; inner fission is forced off
-//! because the inner windows carry no vector padding then), and the
-//! aligned specialization's scalar alignment heads. Outer lanes are
-//! fully independent by construction, so every strip shape produces
-//! bit-identical results to the scalar order.
+//! [`run_traced`] records the `(kernel, index)` sequence of a peeled run
+//! — the instrumented trace the property suite compares against
+//! [`crate::schedule::Schedule::visit`].
 
 pub mod registry;
 
@@ -30,6 +24,7 @@ use crate::analysis::DimSize;
 use crate::dataflow::Terminal;
 use crate::fusion::{FusedNest, Member, Role};
 use crate::plan::Program;
+use crate::schedule::Node;
 use registry::Registry;
 use std::collections::BTreeMap;
 
@@ -40,23 +35,17 @@ pub enum Mode {
     Guarded,
 }
 
-/// Executor options.
+/// Executor options. The loop shapes themselves (strips, lanes, peels)
+/// are carried by the compiled plan's schedule tree — there is nothing
+/// shape-related to configure here.
 #[derive(Debug, Clone, Copy)]
 pub struct ExecOptions {
     pub mode: Mode,
-    /// Innermost strip length for lane-fissioned execution (the order of
-    /// vector-expanded code, Fig. 9c): each steady-state callsite runs
-    /// over `strip` consecutive innermost iterations before the next
-    /// callsite starts. `None` follows the plan's effective vector
-    /// length; explicit values are clamped to it (the plan's window
-    /// allocations are only padded for that many lanes). Peeled mode
-    /// only; nests where fission is unsafe fall back to scalar order.
-    pub strip: Option<usize>,
 }
 
 impl Default for ExecOptions {
     fn default() -> Self {
-        ExecOptions { mode: Mode::Peeled, strip: None }
+        ExecOptions { mode: Mode::Peeled }
     }
 }
 
@@ -106,6 +95,10 @@ struct Compiled {
 
 /// The result of a run: named external outputs (row-major over their span).
 pub type Outputs = BTreeMap<String, Vec<f64>>;
+
+/// The invocation sequence of a traced run: (kernel name, loop indices
+/// by nest level) per kernel call, in execution order.
+pub type InvocationTrace = Vec<(String, Vec<i64>)>;
 
 /// Shape of an external array: per-dim concrete half-open bounds.
 pub fn external_shape(
@@ -214,9 +207,35 @@ pub fn run_with(
     // Buffers live outside the fallible body so every path — success or
     // error — recycles them into the workspace.
     let mut buffers: Vec<Vec<f64>> = Vec::new();
-    let result = run_inner(prog, reg, extents, inputs, opts, ws, &mut buffers);
+    let result = run_inner(prog, reg, extents, inputs, opts, ws, &mut buffers, None);
     ws.recycle(std::mem::take(&mut buffers));
     result
+}
+
+/// [`run`] (peeled mode) that additionally records the kernel-invocation
+/// sequence — the executor's side of the "schedule walk order equals
+/// emitted order" property.
+pub fn run_traced(
+    prog: &Program,
+    reg: &Registry,
+    extents: &BTreeMap<String, i64>,
+    inputs: &BTreeMap<String, Vec<f64>>,
+) -> Result<(Outputs, InvocationTrace), String> {
+    let mut ws = Workspace::default();
+    let mut buffers: Vec<Vec<f64>> = Vec::new();
+    let mut trace = InvocationTrace::new();
+    let result = run_inner(
+        prog,
+        reg,
+        extents,
+        inputs,
+        ExecOptions { mode: Mode::Peeled },
+        &mut ws,
+        &mut buffers,
+        Some(&mut trace),
+    );
+    ws.recycle(std::mem::take(&mut buffers));
+    result.map(|out| (out, trace))
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -228,6 +247,7 @@ fn run_inner(
     opts: ExecOptions,
     ws: &mut Workspace,
     buffers: &mut Vec<Vec<f64>>,
+    mut trace: Option<&mut InvocationTrace>,
 ) -> Result<Outputs, String> {
     // ---- allocate storage -------------------------------------------------
     // external name -> workspace buffer index (aliases share).
@@ -275,77 +295,47 @@ fn run_inner(
         }
     }
 
-    // ---- compile callsites per nest ---------------------------------------
+    // ---- execute the schedule ---------------------------------------------
     let mut scratch_in: Vec<f64> = Vec::with_capacity(32);
     let mut scratch_out: Vec<f64> = Vec::with_capacity(16);
 
-    // Strip length: follow the plan's vector expansion unless the caller
-    // narrows it; wider-than-plan strips would outrun the window padding.
-    let plan_vl = prog.vector_len();
-    let strip_opt = opts.strip.unwrap_or(plan_vl).min(plan_vl).max(1) as i64;
-
-    for nest in &prog.fd.nests {
+    for (nest, np) in prog.fd.nests.iter().zip(&prog.sched.nests) {
         let compiled: Vec<Compiled> = nest
             .members
             .iter()
             .map(|m| compile_member(prog, reg, nest, m, extents, &storage_buf))
             .collect::<Result<_, _>>()?;
-        let refs: Vec<usize> = (0..compiled.len()).collect();
         let mut idx = vec![0i64; nest.dims.len()];
-        // Lane fission only where it provably preserves the scalar
-        // semantics (same gate the code generators use). Only members in
-        // the innermost loop take part in strips — Pre/Post-phase members
-        // run outside them.
-        let inner_loop_members: Vec<&crate::fusion::Member> = nest
-            .members
-            .iter()
-            .filter(|m| m.roles.last() == Some(&Role::Loop))
-            .collect();
-        // Outer-dim strips (Peeled only): same legality gate as the code
-        // generators; the lane loop sits at the kernel invocation.
-        let outer = if opts.mode == Mode::Peeled {
-            prog.outer_lane_dim().and_then(|d| {
-                let lvl = nest.dim_index(d)?;
-                let legal = lvl + 1 < nest.dims.len()
-                    && crate::analysis::outer_vectorizable(&prog.df, nest, d);
-                if legal {
-                    Some((lvl, plan_vl as i64))
-                } else {
-                    None
-                }
-            })
-        } else {
-            None
-        };
-        let strip = if prog.outer_lane_dim().is_some() {
-            // Outer lanes replace inner fission: the inner windows carry
-            // no vector padding under `VecDim::Outer`.
-            1
-        } else if strip_opt > 1
-            && crate::analysis::lane_fission_safe(&prog.df, &prog.sp, nest, &inner_loop_members)
-        {
-            strip_opt
-        } else {
-            1
-        };
-        let cfg = StripCfg {
-            inner: strip,
-            aligned: prog.opts.aligned,
-            outer,
-            outer_lanes: 0,
-        };
-        exec_level(
-            &compiled,
-            &refs,
-            0,
-            nest.dims.len(),
-            &mut idx,
-            &mut buffers[..],
-            opts.mode,
-            cfg,
-            &mut scratch_in,
-            &mut scratch_out,
-        )?;
+        match opts.mode {
+            Mode::Peeled => {
+                // Interpret the lowered schedule tree — the same nodes
+                // the code emitters print.
+                let mut tr = trace.as_mut().map(|t| &mut **t);
+                exec_nodes(
+                    &compiled,
+                    &np.body,
+                    extents,
+                    &mut idx,
+                    &mut buffers[..],
+                    &mut scratch_in,
+                    &mut scratch_out,
+                    &mut tr,
+                )?;
+            }
+            Mode::Guarded => {
+                let all: Vec<usize> = (0..compiled.len()).collect();
+                exec_guarded(
+                    &compiled,
+                    &all,
+                    0,
+                    nest.dims.len(),
+                    &mut idx,
+                    &mut buffers[..],
+                    &mut scratch_in,
+                    &mut scratch_out,
+                )?;
+            }
+        }
     }
 
     // ---- collect outputs ----------------------------------------------------
@@ -474,34 +464,158 @@ fn compile_member(
     })
 }
 
-/// Per-nest strip configuration: mirrors the emitted vectorized loop
-/// structure (see the module docs) so the interpreter executes the same
-/// shapes the code generators emit.
-#[derive(Clone, Copy)]
-struct StripCfg {
-    /// Innermost lane-fission width (1 = plain scalar order).
-    inner: i64,
-    /// Peel scalar heads so strips start at multiples of their width
-    /// (the aligned-load specialization's "aligned strip heads").
-    aligned: bool,
-    /// Outer-dim strips: (nest level of the lane dim, lane count).
-    outer: Option<(usize, i64)>,
-    /// While > 1: currently inside an outer strip with this many lanes —
-    /// the leaf runs each kernel across the lanes before the next.
-    outer_lanes: i64,
+/// One kernel call: record it in the trace (if any), then invoke.
+fn call(
+    c: &Compiled,
+    idx: &[i64],
+    buffers: &mut [Vec<f64>],
+    scratch_in: &mut Vec<f64>,
+    scratch_out: &mut Vec<f64>,
+    trace: &mut Option<&mut InvocationTrace>,
+) -> Result<(), String> {
+    if let Some(tr) = trace {
+        tr.push((c.name.clone(), idx.to_vec()));
+    }
+    invoke(c, idx, buffers, scratch_in, scratch_out)
 }
 
-/// Recursive phase/loop execution (paper §3.6 code generation, interpreted).
+/// Interpret a sequence of schedule nodes ([`Mode::Peeled`]): the
+/// executor's walk is node-for-node the structure both emitters print,
+/// evaluated over concrete extents.
 #[allow(clippy::too_many_arguments)]
-fn exec_level(
+fn exec_nodes(
+    compiled: &[Compiled],
+    nodes: &[Node],
+    extents: &BTreeMap<String, i64>,
+    idx: &mut Vec<i64>,
+    buffers: &mut [Vec<f64>],
+    scratch_in: &mut Vec<f64>,
+    scratch_out: &mut Vec<f64>,
+    trace: &mut Option<&mut InvocationTrace>,
+) -> Result<(), String> {
+    for node in nodes {
+        match node {
+            Node::Loop(l) => {
+                let (lo, hi) = (l.lo.eval(extents)?, l.hi.eval(extents)?);
+                let mut t = lo;
+                while t < hi {
+                    idx[l.level] = t;
+                    exec_nodes(
+                        compiled, &l.body, extents, idx, buffers, scratch_in, scratch_out,
+                        trace,
+                    )?;
+                    t += 1;
+                }
+            }
+            Node::Strip(s) => {
+                let (lo, hi) = (s.lo.eval(extents)?, s.hi.eval(extents)?);
+                let lanes = s.lanes as i64;
+                let mut t = lo;
+                if let Some(head) = &s.head {
+                    // Scalar alignment head: advance to a multiple of the
+                    // lane count (clamped), exactly like the emitted code.
+                    let he = (t + ((lanes - t.rem_euclid(lanes)) % lanes)).min(hi);
+                    while t < he {
+                        idx[s.level] = t;
+                        exec_nodes(
+                            compiled, head, extents, idx, buffers, scratch_in, scratch_out,
+                            trace,
+                        )?;
+                        t += 1;
+                    }
+                }
+                let steady = t + ((hi - t) / lanes) * lanes;
+                while t < steady {
+                    idx[s.level] = t;
+                    exec_nodes(
+                        compiled, &s.steady, extents, idx, buffers, scratch_in, scratch_out,
+                        trace,
+                    )?;
+                    t += lanes;
+                }
+                while t < hi {
+                    idx[s.level] = t;
+                    exec_nodes(
+                        compiled,
+                        &s.remainder,
+                        extents,
+                        idx,
+                        buffers,
+                        scratch_in,
+                        scratch_out,
+                        trace,
+                    )?;
+                    t += 1;
+                }
+            }
+            Node::Guarded(g) => {
+                let (lo, hi) = (g.lo.eval(extents)?, g.hi.eval(extents)?);
+                let mut arms = Vec::with_capacity(g.arms.len());
+                for a in &g.arms {
+                    arms.push((a.lo.eval(extents)?, a.hi.eval(extents)?));
+                }
+                let mut t = lo;
+                while t < hi {
+                    idx[g.level] = t;
+                    for (a, &(alo, ahi)) in g.arms.iter().zip(&arms) {
+                        if t >= alo && t < ahi {
+                            exec_nodes(
+                                compiled, &a.body, extents, idx, buffers, scratch_in,
+                                scratch_out, trace,
+                            )?;
+                        }
+                    }
+                    t += 1;
+                }
+            }
+            Node::Invoke(inv) => {
+                let c = &compiled[inv.member];
+                match &inv.lanes {
+                    None => call(c, idx, buffers, scratch_in, scratch_out, trace)?,
+                    Some(l) => {
+                        let base = idx[l.level];
+                        for k in 0..l.lanes as i64 {
+                            idx[l.level] = base + k;
+                            call(c, idx, buffers, scratch_in, scratch_out, trace)?;
+                        }
+                        idx[l.level] = base;
+                    }
+                }
+            }
+            Node::MemberStrip(ms) => {
+                let c = &compiled[ms.member];
+                let base = idx[ms.level];
+                for il in 0..ms.lanes as i64 {
+                    idx[ms.level] = base + il;
+                    match &ms.outer {
+                        None => call(c, idx, buffers, scratch_in, scratch_out, trace)?,
+                        Some(l) => {
+                            let ob = idx[l.level];
+                            for ol in 0..l.lanes as i64 {
+                                idx[l.level] = ob + ol;
+                                call(c, idx, buffers, scratch_in, scratch_out, trace)?;
+                            }
+                            idx[l.level] = ob;
+                        }
+                    }
+                }
+                idx[ms.level] = base;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// [`Mode::Guarded`]: one uniform loop per level with per-callsite
+/// masking at the leaf (strip-free by construction).
+#[allow(clippy::too_many_arguments)]
+fn exec_guarded(
     compiled: &[Compiled],
     members: &[usize],
     level: usize,
     nlevels: usize,
     idx: &mut Vec<i64>,
     buffers: &mut [Vec<f64>],
-    mode: Mode,
-    cfg: StripCfg,
     scratch_in: &mut Vec<f64>,
     scratch_out: &mut Vec<f64>,
 ) -> Result<(), String> {
@@ -511,33 +625,13 @@ fn exec_level(
     if level == nlevels {
         for &mi in members {
             let c = &compiled[mi];
-            if mode == Mode::Guarded && !active(c, idx, nlevels) {
+            if !active(c, idx, nlevels) {
                 continue;
             }
-            if cfg.outer_lanes > 1 {
-                // Outer-dim lanes: run this kernel across the whole lane
-                // strip before the next kernel starts (the emitted simd
-                // lane-loop order; lanes are independent by legality).
-                let olvl = cfg.outer.map(|(l, _)| l).unwrap_or(0);
-                let base = idx[olvl];
-                for l in 0..cfg.outer_lanes {
-                    idx[olvl] = base + l;
-                    invoke(c, idx, buffers, scratch_in, scratch_out)?;
-                }
-                idx[olvl] = base;
-            } else {
-                invoke(c, idx, buffers, scratch_in, scratch_out)?;
-            }
+            invoke(c, idx, buffers, scratch_in, scratch_out)?;
         }
         return Ok(());
     }
-
-    // Partition by role at this level. Role is encoded via domain/shift on
-    // the compiled member: domain None = dim absent. We kept roles implicit:
-    // recompute partition from the original member data stored in `compiled`
-    // ordering — pre/post were resolved at compile time into `phase` info.
-    // Simpler: we stored domains only; rely on the phase tags captured at
-    // compile time.
     let pre: Vec<usize> =
         members.iter().copied().filter(|&m| compiled[m].phase_at(level) == Phase::Pre).collect();
     let inl: Vec<usize> =
@@ -545,9 +639,7 @@ fn exec_level(
     let post: Vec<usize> =
         members.iter().copied().filter(|&m| compiled[m].phase_at(level) == Phase::Post).collect();
 
-    exec_level(
-        compiled, &pre, level + 1, nlevels, idx, buffers, mode, cfg, scratch_in, scratch_out,
-    )?;
+    exec_guarded(compiled, &pre, level + 1, nlevels, idx, buffers, scratch_in, scratch_out)?;
 
     if !inl.is_empty() {
         // Loop range: union of member ranges at this level.
@@ -559,143 +651,15 @@ fn exec_level(
                 hi = hi.max(r.hi - compiled[mi].shifts[level]);
             }
         }
-        match mode {
-            Mode::Guarded => {
-                for t in lo..hi {
-                    idx[level] = t;
-                    exec_level(
-                        compiled, &inl, level + 1, nlevels, idx, buffers, mode, cfg,
-                        scratch_in, scratch_out,
-                    )?;
-                }
-            }
-            Mode::Peeled => {
-                // Segment boundaries: each member active on [r.lo-s, r.hi-s).
-                let mut cuts: Vec<i64> = vec![lo, hi];
-                for &mi in &inl {
-                    if let Some(r) = compiled[mi].domain[level] {
-                        cuts.push(r.lo - compiled[mi].shifts[level]);
-                        cuts.push(r.hi - compiled[mi].shifts[level]);
-                    }
-                }
-                cuts.sort_unstable();
-                cuts.dedup();
-                for w in cuts.windows(2) {
-                    let (a, b) = (w[0].max(lo), w[1].min(hi));
-                    if a >= b {
-                        continue;
-                    }
-                    let active_set: Vec<usize> = inl
-                        .iter()
-                        .copied()
-                        .filter(|&mi| {
-                            let r = compiled[mi].domain[level].unwrap();
-                            let s = compiled[mi].shifts[level];
-                            a >= r.lo - s && b <= r.hi - s
-                        })
-                        .collect();
-                    if active_set.is_empty() {
-                        continue;
-                    }
-                    if let Some((olvl, ov)) = cfg.outer {
-                        if olvl == level && cfg.outer_lanes == 0 {
-                            // Outer-dim strips: chunk the lane level; the
-                            // lane loop itself sits at the kernel
-                            // invocation (leaf). Scalar alignment head and
-                            // remainder run with lane count 1.
-                            let mut t = a;
-                            if cfg.aligned {
-                                let head = (t + ((ov - t.rem_euclid(ov)) % ov)).min(b);
-                                while t < head {
-                                    idx[level] = t;
-                                    exec_level(
-                                        compiled, &active_set, level + 1, nlevels, idx,
-                                        buffers, mode, cfg, scratch_in, scratch_out,
-                                    )?;
-                                    t += 1;
-                                }
-                            }
-                            let steady = t + ((b - t) / ov) * ov;
-                            while t < steady {
-                                idx[level] = t;
-                                let run = StripCfg { outer_lanes: ov, ..cfg };
-                                exec_level(
-                                    compiled, &active_set, level + 1, nlevels, idx, buffers,
-                                    mode, run, scratch_in, scratch_out,
-                                )?;
-                                t += ov;
-                            }
-                            while t < b {
-                                idx[level] = t;
-                                exec_level(
-                                    compiled, &active_set, level + 1, nlevels, idx, buffers,
-                                    mode, cfg, scratch_in, scratch_out,
-                                )?;
-                                t += 1;
-                            }
-                            continue;
-                        }
-                    }
-                    if cfg.inner > 1 && level + 1 == nlevels {
-                        // Lane-fissioned strips (vector-expansion order):
-                        // each member runs over the whole strip before the
-                        // next member starts — the interpreter analogue of
-                        // the emitted simd lane loops.
-                        let strip = cfg.inner;
-                        let mut t = a;
-                        if cfg.aligned {
-                            // Aligned strip heads: scalar until the first
-                            // multiple of the strip width.
-                            let head = (t + ((strip - t.rem_euclid(strip)) % strip)).min(b);
-                            if head > t {
-                                for &mi in &active_set {
-                                    for tt in t..head {
-                                        idx[level] = tt;
-                                        invoke(
-                                            &compiled[mi],
-                                            idx,
-                                            buffers,
-                                            scratch_in,
-                                            scratch_out,
-                                        )?;
-                                    }
-                                }
-                                t = head;
-                            }
-                        }
-                        while t < b {
-                            let e = (t + strip).min(b);
-                            for &mi in &active_set {
-                                for tt in t..e {
-                                    idx[level] = tt;
-                                    invoke(
-                                        &compiled[mi],
-                                        idx,
-                                        buffers,
-                                        scratch_in,
-                                        scratch_out,
-                                    )?;
-                                }
-                            }
-                            t = e;
-                        }
-                        continue;
-                    }
-                    for t in a..b {
-                        idx[level] = t;
-                        exec_level(
-                            compiled, &active_set, level + 1, nlevels, idx, buffers, mode,
-                            cfg, scratch_in, scratch_out,
-                        )?;
-                    }
-                }
-            }
+        for t in lo..hi {
+            idx[level] = t;
+            exec_guarded(
+                compiled, &inl, level + 1, nlevels, idx, buffers, scratch_in, scratch_out,
+            )?;
         }
     }
 
-    exec_level(
-        compiled, &post, level + 1, nlevels, idx, buffers, mode, cfg, scratch_in, scratch_out,
-    )
+    exec_guarded(compiled, &post, level + 1, nlevels, idx, buffers, scratch_in, scratch_out)
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -747,7 +711,6 @@ fn invoke(
         let off = resolve(a, idx);
         buffers[a.storage][off] = scratch_out[k];
     }
-    let _ = &c.name;
     Ok(())
 }
 
@@ -852,7 +815,7 @@ mod tests {
         inputs.insert("g_cell".to_string(), u.clone());
         let want = laplace_ref(&u, nj, ni);
         for mode in [Mode::Peeled, Mode::Guarded] {
-            let out = run(&prog, &reg, &ext, &inputs, ExecOptions { mode, strip: None }).unwrap();
+            let out = run(&prog, &reg, &ext, &inputs, ExecOptions { mode }).unwrap();
             assert_close(&out["g_out"], &want, 1e-12);
         }
     }
@@ -886,7 +849,7 @@ mod tests {
             want[i - 1] = 2.0 * u[i + 1] - 2.0 * u[i - 1];
         }
         for mode in [Mode::Peeled, Mode::Guarded] {
-            let out = run(&prog, &reg, &ext, &inputs, ExecOptions { mode, strip: None }).unwrap();
+            let out = run(&prog, &reg, &ext, &inputs, ExecOptions { mode }).unwrap();
             assert_close(&out["g_d"], &want, 1e-12);
         }
     }
@@ -919,7 +882,7 @@ mod tests {
             }
         }
         for mode in [Mode::Peeled, Mode::Guarded] {
-            let out = run(&prog, &reg, &ext, &inputs, ExecOptions { mode, strip: None }).unwrap();
+            let out = run(&prog, &reg, &ext, &inputs, ExecOptions { mode }).unwrap();
             assert_close(&out["g_out"], &want, 1e-12);
         }
     }
@@ -958,40 +921,40 @@ mod tests {
     }
 
     #[test]
-    fn strip_execution_matches_scalar() {
-        // A vector-expanded plan run with lane-fissioned strips (the
-        // default: strip follows the plan's vector_len) must agree exactly
-        // with forced-scalar iteration order and the reference.
-        let opts = CompileOptions {
-            analysis: crate::analysis::AnalysisOptions {
-                vector_len: Some(4),
-                ..Default::default()
-            },
-            ..Default::default()
+    fn strip_execution_matches_scalar_plan_bitwise() {
+        // A vector-expanded plan runs lane-fissioned strips (from its
+        // schedule tree); per-element math is unchanged, so it must agree
+        // bit-for-bit with a forced-scalar plan — and the reference.
+        let mk = |vlen: usize| {
+            compile_src(
+                testdecks::CHAIN1D,
+                CompileOptions {
+                    analysis: crate::analysis::AnalysisOptions {
+                        vector_len: Some(vlen),
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                },
+            )
+            .unwrap()
         };
-        let prog = compile_src(testdecks::CHAIN1D, opts).unwrap();
-        assert_eq!(prog.vector_len(), 4);
+        let vec4 = mk(4);
+        assert_eq!(vec4.vector_len(), 4);
+        let scalar = mk(1);
         let reg = chain_registry();
         let n = 27usize;
         let ext = extents(&[("N", n as i64)]);
         let u = seeded(n, 3);
         let mut inputs = BTreeMap::new();
         inputs.insert("g_u".to_string(), u.clone());
-        let scalar = run(
-            &prog,
-            &reg,
-            &ext,
-            &inputs,
-            ExecOptions { mode: Mode::Peeled, strip: Some(1) },
-        )
-        .unwrap();
-        let strip = run(&prog, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
-        assert_close(&strip["g_d"], &scalar["g_d"], 0.0);
+        let a = run(&scalar, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+        let b = run(&vec4, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+        assert_close(&b["g_d"], &a["g_d"], 0.0);
         let mut want = vec![0.0; n - 2];
         for i in 1..n - 1 {
             want[i - 1] = 2.0 * u[i + 1] - 2.0 * u[i - 1];
         }
-        assert_close(&scalar["g_d"], &want, 1e-12);
+        assert_close(&a["g_d"], &want, 1e-12);
     }
 
     #[test]
@@ -1014,6 +977,37 @@ mod tests {
         let ext = extents(&[("Nk", nk as i64), ("Nj", nj as i64), ("Ni", ni as i64)]);
         let reg = crate::apps::cosmo::registry();
         let u = seeded(nk * nj * ni, 8);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("g_u".to_string(), u.clone());
+        let a = run(&prog, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+        let b = run(&scalar, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+        assert_close(&a["g_out"], &b["g_out"], 0.0);
+        let mut want = vec![0.0; nk * (nj - 4) * (ni - 4)];
+        crate::apps::cosmo::reference(&u, nk, nj, ni, &mut want);
+        assert_close(&a["g_out"], &want, 1e-12);
+    }
+
+    #[test]
+    fn tiled_execution_matches_scalar_bitwise() {
+        // Multi-dim lane tiling (outer k lanes × inner i strips) on a
+        // non-square grid: pure per-element kernels in a new order, so
+        // the tile walk must agree bit-for-bit with the scalar plan.
+        let tiled_opts = CompileOptions {
+            analysis: crate::analysis::AnalysisOptions {
+                vector_len: Some(4),
+                vec_dim: crate::analysis::VecDim::Outer("k".to_string()),
+                tile: true,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let prog = compile_src(crate::apps::cosmo::DECK, tiled_opts).unwrap();
+        assert!(prog.tiled());
+        let scalar = compile_src(crate::apps::cosmo::DECK, CompileOptions::default()).unwrap();
+        let (nk, nj, ni) = (6usize, 9usize, 11usize);
+        let ext = extents(&[("Nk", nk as i64), ("Nj", nj as i64), ("Ni", ni as i64)]);
+        let reg = crate::apps::cosmo::registry();
+        let u = seeded(nk * nj * ni, 21);
         let mut inputs = BTreeMap::new();
         inputs.insert("g_u".to_string(), u.clone());
         let a = run(&prog, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
@@ -1052,6 +1046,26 @@ mod tests {
             want[i - 1] = 2.0 * u[i + 1] - 2.0 * u[i - 1];
         }
         assert_close(&b["g_d"], &want, 1e-12);
+    }
+
+    #[test]
+    fn traced_run_reports_invocations_in_schedule_order() {
+        let prog = compile_src(testdecks::CHAIN1D, CompileOptions::default()).unwrap();
+        let reg = chain_registry();
+        let n = 8usize;
+        let ext = extents(&[("N", n as i64)]);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("g_u".to_string(), seeded(n, 5));
+        let (out, trace) = run_traced(&prog, &reg, &ext, &inputs).unwrap();
+        assert!(out.contains_key("g_d"));
+        // dbl over [0, 6), diff over [1, 7): 12 invocations total, and
+        // the first is dbl@0 (pipeline prologue).
+        assert_eq!(trace.len(), 12, "{trace:?}");
+        assert_eq!(trace[0].0, "dbl");
+        assert_eq!(trace[0].1, vec![0]);
+        // The traced outputs are the normal outputs.
+        let plain = run(&prog, &reg, &ext, &inputs, ExecOptions::default()).unwrap();
+        assert_close(&out["g_d"], &plain["g_d"], 0.0);
     }
 
     #[test]

@@ -13,9 +13,12 @@
 //!    ([`dataflow`]).
 //! 3. [`fusion`] builds and fuses the iteration-nest DAG.
 //! 4. [`analysis`] computes liveness, reuse, storage contraction,
-//!    alias chaining and vectorization.
-//! 5. [`plan`] assembles the executable schedule; [`codegen`] emits C99 /
-//!    Rust / DOT; [`exec`] runs it in-process.
+//!    alias chaining and vectorization legality.
+//! 5. [`schedule`] lowers one explicit loop-schedule tree per fused
+//!    nest (strips, lanes, peels, alignment heads, multi-dim tiles) —
+//!    the single place loop shapes are decided.
+//! 6. [`plan`] assembles the executable schedule; [`codegen`] prints it
+//!    as C99 / Rust / DOT; [`exec`] interprets the same tree in-process.
 //!
 //! Serving layer: *what* to compile is a [`plan::PlanSpec`] (deck target
 //! + variant + tuning knobs) whose canonical fingerprint is the cache
@@ -38,6 +41,7 @@ pub mod dataflow;
 pub mod runtime;
 pub mod fusion;
 pub mod analysis;
+pub mod schedule;
 pub mod plan;
 pub mod exec;
 pub mod codegen;

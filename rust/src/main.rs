@@ -21,15 +21,16 @@ type CliResult = Result<(), CliError>;
 fn usage() -> ! {
     eprintln!(
         "usage: hfav <command> [args]
-  generate <deck.yaml|app> [--backend c99|rust|dot-dataflow|dot-inest|schedule] [--variant hfav|autovec]
-      [--vlen auto|N] [--vec-dim inner|auto|outer:<dim>] [--aligned] [--tuned]
+  generate <deck.yaml|app> [--backend c99|rust|dot-dataflow|dot-inest|schedule|schedule-ir]
+      [--variant hfav|autovec] [--vlen auto|N] [--vec-dim inner|auto|outer:<dim>]
+      [--aligned] [--tile] [--tuned]
   footprint <deck.yaml|app> --extents Ni=512,Nj=512
   engines
   run --app <app|deck.yaml> [--engine exec|native|rust|pjrt] [--variant hfav|autovec]
       [--size N] [--steps S] [--extents NxM[xK]] [--vlen auto|N]
-      [--vec-dim inner|auto|outer:<dim>] [--aligned] [--tuned]
+      [--vec-dim inner|auto|outer:<dim>] [--aligned] [--tile] [--tuned]
   serve --trace <file> [--workers N] [--repeat R] [--artifacts DIR] [--vlen auto|N]
-      [--vec-dim inner|auto|outer:<dim>] [--aligned]
+      [--vec-dim inner|auto|outer:<dim>] [--aligned] [--tile]
   e2e [--size N] [--steps S]
   bench <sysinfo|normalization|cosmo|hydro2d|footprint|serving|vectorization|pjrt|all>
       [--vlen auto|N]
@@ -48,7 +49,14 @@ fn usage() -> ! {
              `auto` picks the outermost legal outer dim, else inner.
   --aligned: aligned-load specialization — 64-byte-aligned intermediates
              plus scalar alignment heads so steady-state strips start at
-             multiples of the vector length (no effect at vlen 1).
+             multiples of the vector length (no effect at vlen 1). Heads
+             are elided at compile time when a strip's lower bound is
+             statically a multiple of the vector length.
+  --tile:    multi-dim lane tiling — outer-dim lanes x inner strips
+             together (vlen x vlen iteration tiles per kernel). Needs a
+             k-independent outer dim: combine with --vec-dim outer:<dim>
+             or let it auto-resolve; compilation fails when no dim
+             qualifies (no effect at vlen 1).
   --extents: (run) per-job grid override, positional values bound to the
              deck's extents in sorted-name order (e.g. cosmo: Ni x Nj x
              Nk) — also the trace v3 `extents=` field. NOTE: `footprint
@@ -120,6 +128,7 @@ fn spec_of(target: &str, rest: &[String]) -> Result<PlanSpec, CliError> {
         .vlen(vlen_of(rest)?)
         .vec_dim(vec_dim_of(rest)?)
         .aligned(has_flag(rest, "--aligned"))
+        .tiled(has_flag(rest, "--tile"))
         .tuned(has_flag(rest, "--tuned")))
 }
 
@@ -136,6 +145,7 @@ fn generate(rest: &[String]) -> CliResult {
         "dot-dataflow" => print!("{}", hfav::codegen::dot::dataflow(&prog.df)),
         "dot-inest" => print!("{}", hfav::codegen::dot::inest(&prog.df, &prog.fd)),
         "schedule" => print!("{}", prog.schedule_text()),
+        "schedule-ir" => print!("{}", prog.sched.render()),
         other => return Err(format!("unknown backend `{other}`").into()),
     }
     Ok(())
@@ -181,6 +191,7 @@ fn engines() -> CliResult {
     println!("#        --vec-dim inner|auto|outer:<dim> (outer needs a k-independent loop:");
     println!("#          offset-0 accesses, no reduction over it, all writes indexed by it)");
     println!("#        --aligned (aligned intermediates + aligned strip heads; vlen > 1)");
+    println!("#        --tile (outer lanes x inner strips; needs a k-independent outer dim)");
     Ok(())
 }
 
@@ -236,7 +247,8 @@ fn serve(rest: &[String]) -> CliResult {
         template.push(parse_trace_line(i as u64, l)?);
     }
     // `--vlen` overrides every job in the trace (per-job vlens come from
-    // the optional sixth trace field), as do `--vec-dim` and `--aligned`.
+    // the optional sixth trace field), as do `--vec-dim`, `--aligned`
+    // and `--tile`.
     if let vlen @ (Vlen::Auto | Vlen::Fixed(_)) = vlen_of(rest)? {
         for j in template.iter_mut() {
             j.spec = j.spec.clone().vlen(vlen);
@@ -251,6 +263,11 @@ fn serve(rest: &[String]) -> CliResult {
     if has_flag(rest, "--aligned") {
         for j in template.iter_mut() {
             j.spec = j.spec.clone().aligned(true);
+        }
+    }
+    if has_flag(rest, "--tile") {
+        for j in template.iter_mut() {
+            j.spec = j.spec.clone().tiled(true);
         }
     }
     let jobs = repeat_jobs(&template, repeat);

@@ -49,6 +49,11 @@ pub struct Program {
     pub df: Dataflow,
     pub fd: FusedDag,
     pub sp: StoragePlan,
+    /// The lowered schedule IR ([`crate::schedule`]): one loop tree per
+    /// fused nest, computed exactly once here. Both code emitters print
+    /// it and the interpreter executes it — no consumer re-derives loop
+    /// shapes.
+    pub sched: crate::schedule::Schedule,
     pub opts: CompileOptions,
 }
 
@@ -87,7 +92,11 @@ pub fn compile(deck: Deck, opts: CompileOptions) -> Result<Program, String> {
     // explicitly requested illegal outer dim fails here.
     opts.analysis.vec_dim = analysis::resolve_vec_dim(&deck, &df, &fd, &opts.analysis)?;
     let sp = analysis::analyze(&deck, &df, &fd, &opts.analysis)?;
-    Ok(Program { deck, df, fd, sp, opts })
+    // Lower the loop-schedule tree exactly once, now that the strategy
+    // (vec dim, vector length, tiling, alignment) and the storage plan
+    // are final. Everything downstream walks this tree.
+    let sched = crate::schedule::lower(&deck, &df, &fd, &sp, &opts)?;
+    Ok(Program { deck, df, fd, sp, sched, opts })
 }
 
 /// Convenience: compile from deck source text.
@@ -123,6 +132,22 @@ impl Program {
             crate::analysis::VecDim::Outer(d) if self.vector_len() > 1 => Some(d.as_str()),
             _ => None,
         }
+    }
+
+    /// Whether this program runs multi-dim lane tiles (outer lanes ×
+    /// inner strips): the `tile` knob was set and an outer lane dim
+    /// resolved at an effective vector length > 1.
+    pub fn tiled(&self) -> bool {
+        self.opts.analysis.tile && self.outer_lane_dim().is_some()
+    }
+
+    /// Stable fingerprint of the lowered schedule tree
+    /// ([`crate::schedule::Schedule::digest`]): two programs with equal
+    /// digests run exactly the same loops. Both code emitters print it
+    /// into their output header, so backend agreement is checkable by
+    /// string comparison.
+    pub fn schedule_digest(&self) -> u64 {
+        self.sched.digest
     }
 
     /// Names and spans of required external input arrays:

@@ -101,6 +101,9 @@ pub struct PlanSpec {
     /// Aligned-load specialization: aligned intermediate allocations +
     /// aligned strip heads (scalar head peel), unaligned general case.
     aligned: bool,
+    /// Multi-dim lane tiling: outer-dim lanes × inner strips together
+    /// (`vlen × vlen` tiles). Needs a k-independent outer dim.
+    tiled: bool,
 }
 
 impl PlanSpec {
@@ -113,6 +116,7 @@ impl PlanSpec {
             roll_all_inputs: false,
             vec_dim: VecDim::Inner,
             aligned: false,
+            tiled: false,
         }
     }
 
@@ -191,6 +195,17 @@ impl PlanSpec {
         self
     }
 
+    /// Multi-dim lane tiling (no effect at vector length 1): strip-mine
+    /// a k-independent outer dim *and* lane-fission the innermost loop,
+    /// so the steady state runs `vlen × vlen` iteration tiles per
+    /// kernel. With the default `vec_dim` the outer dim is auto-resolved
+    /// (like [`VecDim::Auto`]); compilation fails when the deck has no
+    /// legal outer dim — a tile request never silently degrades.
+    pub fn tiled(mut self, on: bool) -> PlanSpec {
+        self.tiled = on;
+        self
+    }
+
     // -- accessors ----------------------------------------------------------
 
     /// Built-in app name, if this spec targets one.
@@ -233,6 +248,10 @@ impl PlanSpec {
         self.aligned
     }
 
+    pub fn is_tiled(&self) -> bool {
+        self.tiled
+    }
+
     /// Variant label used in plan keys and traces (`hfav`, `autovec`,
     /// `hfav+tuned`, ...).
     pub fn variant_label(&self) -> String {
@@ -272,6 +291,7 @@ impl PlanSpec {
         }
         opts.analysis.vector_len = self.vlen;
         opts.analysis.vec_dim = self.vec_dim.clone();
+        opts.analysis.tile = self.tiled;
         opts.roll_all_inputs = self.roll_all_inputs;
         opts.aligned = self.aligned;
         opts
@@ -310,6 +330,7 @@ impl PlanSpec {
         // already covers, so equal fingerprints resolve identically.
         h.write_str(&self.vec_dim.to_string());
         h.write_bool(self.aligned);
+        h.write_bool(self.tiled);
         h.finish()
     }
 
@@ -358,6 +379,8 @@ mod tests {
             base.clone().vec_dim(VecDim::Auto),
             base.clone().vec_dim(VecDim::Outer("j".to_string())),
             base.clone().aligned(true),
+            base.clone().tiled(true),
+            base.clone().tiled(true).vlen(Vlen::Fixed(4)),
             PlanSpec::app("normalize"),
             PlanSpec::deck_src("name: laplace\n"),
         ];
@@ -394,6 +417,30 @@ mod tests {
         assert_eq!(o.analysis.vec_dim, VecDim::Outer("k".to_string()));
         assert!(o.aligned);
         assert_eq!(PlanSpec::app("cosmo").compile_options().analysis.vec_dim, VecDim::Inner);
+        let t = PlanSpec::app("cosmo").vlen(Vlen::Fixed(4)).tiled(true).compile_options();
+        assert!(t.analysis.tile);
+        assert!(!PlanSpec::app("cosmo").compile_options().analysis.tile);
+    }
+
+    #[test]
+    fn tiled_resolves_or_fails_at_compile() {
+        // cosmo: tile auto-resolves the outer dim (k) and the compiled
+        // program reports itself tiled.
+        let prog = PlanSpec::app("cosmo").vlen(Vlen::Fixed(4)).tiled(true).compile().unwrap();
+        assert!(prog.tiled());
+        assert_eq!(prog.outer_lane_dim(), Some("k"));
+        // A 1-D deck has no outer dim: the tile request is a hard error.
+        let e = PlanSpec::deck_src(crate::frontend::testdecks::CHAIN1D)
+            .vlen(Vlen::Fixed(4))
+            .tiled(true)
+            .compile()
+            .unwrap_err();
+        assert!(e.contains("tile"), "{e}");
+        // At vector length 1 tiling degrades to scalar, like every other
+        // vectorization knob.
+        let scalar =
+            PlanSpec::app("cosmo").vlen(Vlen::Fixed(1)).tiled(true).compile().unwrap();
+        assert!(!scalar.tiled());
     }
 
     #[test]

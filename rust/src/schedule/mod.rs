@@ -1,0 +1,1080 @@
+//! The **schedule IR**: one explicit loop-schedule tree per fused nest,
+//! lowered exactly once by [`crate::plan::compile`] after analysis has
+//! resolved the vectorization strategy — and *walked*, never re-derived,
+//! by every consumer (the C99 and Rust emitters print it, the
+//! interpreter executor runs it).
+//!
+//! Before this module existed, the strip/lane/peel/remainder/alignment
+//! shapes were re-decided three times — once per code emitter and once
+//! in the executor, which had to hand-mirror the emitted loop structure.
+//! Now every shape decision happens in [`lower`]:
+//!
+//! * **static peeling** — loop levels split into segments with fixed
+//!   active member sets where the symbolic bounds are orderable
+//!   ([`Node::Loop`]), with a guarded fallback ([`Node::Guarded`]);
+//! * **inner lane-fission strips** ([`Node::Strip`] with
+//!   `outer == false`, the paper's Fig. 9c vector expansion) where
+//!   [`crate::analysis::lane_fission_safe`] allows, each steady member a
+//!   [`Node::MemberStrip`];
+//! * **outer-dim lane strips** (`outer == true`) on the resolved
+//!   k-independent lane dim ([`crate::analysis::outer_vectorizable`]),
+//!   every leaf invocation an [`Invoke`] expanded across a [`LaneLoop`];
+//! * **alignment heads** — the aligned specialization's scalar head
+//!   peel, *elided at compile time* when a strip's lower bound is
+//!   statically a multiple of the lane count (`StripNode::head` is
+//!   `None`, `static_aligned` records why);
+//! * **multi-dim lane tiling** — outer lanes × inner strips together
+//!   (`PlanSpec::tiled` / `--tile`): the steady×steady region runs each
+//!   kernel over a `vlen × vlen` tile ([`MemberStrip::outer`]), with no
+//!   new shape logic in any backend.
+//!
+//! The tree is symbolic (bounds are [`Bound`]s over extent names), so
+//! one lowering serves every grid shape. [`Schedule::digest`] is a
+//! stable fingerprint of the lowered structure — both emitters print it
+//! into their output header, so "do all executors agree on the loops
+//! that run" is checkable by string equality — and [`Schedule::visit`]
+//! is the reference walker that enumerates kernel invocations in
+//! exactly the order the emitted code executes them (the property suite
+//! compares the executor's instrumented trace against it).
+
+use crate::analysis::{self, DimSize, StoragePlan};
+use crate::dataflow::Dataflow;
+use crate::fusion::{FusedDag, FusedNest, Member, Role};
+use crate::ir::{Bound, Deck};
+use crate::plan::cache::Fnv64;
+use crate::plan::CompileOptions;
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write;
+
+// ---------------------------------------------------------------------------
+// Tree types
+// ---------------------------------------------------------------------------
+
+/// The fully lowered schedule of a compiled program: one loop tree per
+/// fused nest, in nest execution order.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub nests: Vec<NestPlan>,
+    /// Stable FNV-1a fingerprint of [`Schedule::render`] — the identity
+    /// of "which loops actually run".
+    pub digest: u64,
+}
+
+/// The lowered tree of one fused nest.
+#[derive(Debug, Clone)]
+pub struct NestPlan {
+    /// Index into [`crate::fusion::FusedDag::nests`].
+    pub nest: usize,
+    /// Nest dims, outermost-first (copied from the fused nest).
+    pub dims: Vec<String>,
+    /// Top-level (level-0) schedule nodes.
+    pub body: Vec<Node>,
+}
+
+/// One node of the loop-schedule tree.
+#[derive(Debug, Clone)]
+pub enum Node {
+    /// A plain counting loop (step 1) over one nest level.
+    Loop(LoopNode),
+    /// A strip-mined loop: optional scalar alignment head, steady-state
+    /// strips advancing `lanes` per iteration, scalar remainder.
+    Strip(StripNode),
+    /// Guarded fallback (bounds not statically orderable): one uniform
+    /// loop with per-member activity guards.
+    Guarded(GuardedNode),
+    /// One kernel invocation, optionally expanded across outer lanes.
+    Invoke(Invoke),
+    /// One member of an innermost lane-fission strip: the kernel runs
+    /// over all `lanes` consecutive innermost iterations before the next
+    /// node starts (vector expansion, Fig. 9c).
+    MemberStrip(MemberStrip),
+}
+
+/// See [`Node::Loop`].
+#[derive(Debug, Clone)]
+pub struct LoopNode {
+    pub dim: String,
+    pub level: usize,
+    pub lo: Bound,
+    pub hi: Bound,
+    pub body: Vec<Node>,
+}
+
+/// See [`Node::Strip`]. The three phases share the strip variable: the
+/// head (if any) runs scalar iterations up to the first multiple of
+/// `lanes`, the steady loop advances `lanes` at a time, the remainder
+/// finishes scalar.
+#[derive(Debug, Clone)]
+pub struct StripNode {
+    pub dim: String,
+    pub level: usize,
+    pub lo: Bound,
+    pub hi: Bound,
+    pub lanes: usize,
+    /// `true` = outer-dim strip (whole inner nest per strip, lane loops
+    /// at each kernel invocation); `false` = innermost lane-fission
+    /// strip (steady body is [`Node::MemberStrip`]s).
+    pub outer: bool,
+    /// Scalar alignment-head body (aligned specialization). `None` when
+    /// the plan is unaligned — or when `static_aligned` proves the peel
+    /// unnecessary.
+    pub head: Option<Vec<Node>>,
+    /// The aligned specialization was requested and `lo` is statically a
+    /// multiple of `lanes` (constant bound, offset divisible), so the
+    /// head peel was elided at compile time.
+    pub static_aligned: bool,
+    pub steady: Vec<Node>,
+    pub remainder: Vec<Node>,
+}
+
+/// See [`Node::Guarded`].
+#[derive(Debug, Clone)]
+pub struct GuardedNode {
+    pub dim: String,
+    pub level: usize,
+    pub lo: Bound,
+    pub hi: Bound,
+    pub arms: Vec<GuardedArm>,
+}
+
+/// One member's activity interval and sub-schedule inside a guarded loop.
+#[derive(Debug, Clone)]
+pub struct GuardedArm {
+    pub lo: Bound,
+    pub hi: Bound,
+    pub body: Vec<Node>,
+}
+
+/// A lane loop along one nest dim: `lanes` consecutive values of the
+/// strip variable run as concurrent vector lanes.
+#[derive(Debug, Clone)]
+pub struct LaneLoop {
+    pub dim: String,
+    pub level: usize,
+    pub lanes: usize,
+}
+
+/// See [`Node::Invoke`].
+#[derive(Debug, Clone)]
+pub struct Invoke {
+    /// Index into the fused nest's members.
+    pub member: usize,
+    /// The member's callsite id (into [`Dataflow::callsites`]).
+    pub callsite: usize,
+    /// Callsite name (for rendering and emitted comments).
+    pub name: String,
+    /// Outer-lane expansion: the invocation becomes a simd lane loop
+    /// along this dim (legal per the outer k-independence gate).
+    pub lanes: Option<LaneLoop>,
+}
+
+/// See [`Node::MemberStrip`].
+#[derive(Debug, Clone)]
+pub struct MemberStrip {
+    /// Index into the fused nest's members.
+    pub member: usize,
+    /// The member's callsite id.
+    pub callsite: usize,
+    /// Callsite name.
+    pub name: String,
+    /// The innermost (strip) dim and its nest level.
+    pub dim: String,
+    pub level: usize,
+    pub lanes: usize,
+    /// Lane loop may carry a simd pragma with window accesses staged
+    /// through lane-local arrays (in-register rotation); `false` =
+    /// loop-carried member, lanes stay sequential.
+    pub simd: bool,
+    /// Multi-dim tiling: each inner lane additionally expands across
+    /// these outer lanes (a `lanes × outer.lanes` tile per invocation).
+    pub outer: Option<LaneLoop>,
+}
+
+// ---------------------------------------------------------------------------
+// Shared symbolic-bound helpers
+// ---------------------------------------------------------------------------
+
+/// Partial order on symbolic bounds under the "extents are large"
+/// assumption: constants sort below any extent-based bound; same-base
+/// bounds compare by offset; distinct extent bases are incomparable.
+pub fn cmp_bound(a: &Bound, b: &Bound) -> Option<std::cmp::Ordering> {
+    match (&a.base, &b.base) {
+        (None, None) => Some(a.offset.cmp(&b.offset)),
+        (None, Some(_)) => Some(std::cmp::Ordering::Less),
+        (Some(_), None) => Some(std::cmp::Ordering::Greater),
+        (Some(x), Some(y)) if x == y => Some(a.offset.cmp(&b.offset)),
+        _ => None,
+    }
+}
+
+/// Is `b` statically a multiple of `lanes` (constant bound)? When true
+/// under the aligned specialization, the scalar alignment head is a
+/// compile-time no-op and the lowering elides it.
+pub fn statically_aligned(b: &Bound, lanes: usize) -> bool {
+    lanes > 0 && b.base.is_none() && b.offset.rem_euclid(lanes as i64) == 0
+}
+
+// ---------------------------------------------------------------------------
+// Strip access decomposition (shared by both source emitters)
+// ---------------------------------------------------------------------------
+
+/// Innermost-dim contribution of one access inside a lane-fission strip.
+pub enum StripInner {
+    /// Rolling window (vector-expanded): wrap base+lane through the pow2
+    /// mask. Staged into lane-local arrays by the emitters.
+    Window {
+        add: i64,
+        mask: i64,
+        stride: String,
+    },
+    /// Full span: linear in the lane index.
+    Full {
+        add: i64,
+        lo: String,
+        stride: String,
+    },
+}
+
+/// One access split into a lane-invariant part and the innermost-dim
+/// contribution.
+pub struct StripAccess {
+    pub sid: usize,
+    /// Lane-invariant index terms (outer dims), `"0"` if none.
+    pub outer: String,
+    /// Innermost-dim contribution; `None` = the whole access is
+    /// lane-invariant (variable lacks the dim, or single slot).
+    pub inner: Option<StripInner>,
+}
+
+/// Decompose an access for strip emission. Index sub-expressions are
+/// rendered in the C-compatible spelling both source emitters share
+/// (stride names `st<sid>_<k>`, positions over the loop variables), so
+/// the decomposition — like every other shape fact — exists once.
+pub fn strip_access(
+    df: &Dataflow,
+    sp: &StoragePlan,
+    nest: &FusedNest,
+    m: &Member,
+    vid: usize,
+    offsets: &[i64],
+) -> Result<StripAccess, String> {
+    let var = &df.vars[vid];
+    let sid = sp.of_var[vid];
+    let st = &sp.storages[sid];
+    let innermost = nest.dims.last().cloned().unwrap_or_default();
+    let mut outer_terms = Vec::new();
+    let mut inner = None;
+    for (k, d) in var.dims.iter().enumerate() {
+        let level = nest.dim_index(d).ok_or("dim not in nest")?;
+        let shift = if m.roles[level] == Role::Loop { m.shifts[level] } else { 0 };
+        let add = shift + offsets[k];
+        let stride = format!("st{sid}_{k}");
+        if *d == innermost {
+            match &st.sizes[k] {
+                DimSize::One => {}
+                DimSize::Window { alloc, .. } => {
+                    inner = Some(StripInner::Window { add, mask: alloc - 1, stride });
+                }
+                DimSize::Full => {
+                    let lo = &var.span[d].lo;
+                    let lo_expr = if lo.base.is_none() && lo.offset == 0 {
+                        String::new()
+                    } else {
+                        bound_text(lo)
+                    };
+                    inner = Some(StripInner::Full { add, lo: lo_expr, stride });
+                }
+            }
+        } else {
+            let pos = pos_text(d, add);
+            match &st.sizes[k] {
+                DimSize::One => continue,
+                DimSize::Window { alloc, .. } => {
+                    outer_terms.push(format!("({pos} & {}) * {stride}", alloc - 1))
+                }
+                DimSize::Full => {
+                    let lo = &var.span[d].lo;
+                    let idx = if lo.base.is_none() && lo.offset == 0 {
+                        pos
+                    } else {
+                        format!("({pos} - {})", bound_text(lo))
+                    };
+                    outer_terms.push(format!("{idx} * {stride}"));
+                }
+            }
+        }
+    }
+    let outer = if outer_terms.is_empty() { "0".to_string() } else { outer_terms.join(" + ") };
+    Ok(StripAccess { sid, outer, inner })
+}
+
+/// Render a symbolic bound as a C/Rust expression over extent variables
+/// — the single spelling shared by [`strip_access`] and both source
+/// emitters (which delegate here), so index strings and the loop
+/// variables they reference can never desynchronize.
+pub fn bound_text(b: &Bound) -> String {
+    match &b.base {
+        None => format!("{}", b.offset),
+        Some(base) => match b.offset.cmp(&0) {
+            std::cmp::Ordering::Equal => base.clone(),
+            std::cmp::Ordering::Greater => format!("({base} + {})", b.offset),
+            std::cmp::Ordering::Less => format!("({base} - {})", -b.offset),
+        },
+    }
+}
+
+/// Position expression `base + add` over a loop-variable expression —
+/// shared with both emitters like [`bound_text`].
+pub fn pos_text(base: &str, add: i64) -> String {
+    match add.cmp(&0) {
+        std::cmp::Ordering::Equal => base.to_string(),
+        std::cmp::Ordering::Greater => format!("({base} + {add})"),
+        std::cmp::Ordering::Less => format!("({base} - {})", -add),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lowering
+// ---------------------------------------------------------------------------
+
+/// Lower a compiled pipeline (fused DAG + storage plan + resolved
+/// options) into the schedule tree. Called exactly once, by
+/// [`crate::plan::compile`]; every shape decision the backends used to
+/// make lives here.
+pub fn lower(
+    deck: &Deck,
+    df: &Dataflow,
+    fd: &FusedDag,
+    sp: &StoragePlan,
+    opts: &CompileOptions,
+) -> Result<Schedule, String> {
+    let vl = analysis::resolve_vector_len(deck, &opts.analysis);
+    let outer: Option<String> = match &opts.analysis.vec_dim {
+        analysis::VecDim::Outer(d) if vl > 1 => Some(d.clone()),
+        _ => None,
+    };
+    let tiled = opts.analysis.tile && outer.is_some() && vl > 1;
+    let mut nests = Vec::new();
+    for (ni, nest) in fd.nests.iter().enumerate() {
+        let cx = Lower {
+            df,
+            sp,
+            nest,
+            vl,
+            outer: outer.as_deref(),
+            tiled,
+            aligned: opts.aligned,
+        };
+        let all: Vec<usize> = (0..nest.members.len()).collect();
+        let body = cx.level(&all, 0, None)?;
+        nests.push(NestPlan { nest: ni, dims: nest.dims.clone(), body });
+    }
+    let mut sched = Schedule { nests, digest: 0 };
+    let mut h = Fnv64::new();
+    h.write_str(&sched.render());
+    sched.digest = h.finish();
+    Ok(sched)
+}
+
+/// Per-nest lowering context.
+struct Lower<'a> {
+    df: &'a Dataflow,
+    sp: &'a StoragePlan,
+    nest: &'a FusedNest,
+    /// Effective vector length (>= 1).
+    vl: usize,
+    /// Resolved outer lane dim (only when `vl > 1`).
+    outer: Option<&'a str>,
+    tiled: bool,
+    aligned: bool,
+}
+
+impl Lower<'_> {
+    /// Inner lane-fission strips are shaped only when the storage plan
+    /// carries the matching window padding: always under `VecDim::Inner`,
+    /// and under an outer lane dim only when tiling re-enables it.
+    fn inner_lanes(&self) -> bool {
+        self.vl > 1 && (self.outer.is_none() || self.tiled)
+    }
+
+    fn invoke(&self, mi: usize, octx: Option<&LaneLoop>) -> Node {
+        let cs = self.nest.members[mi].callsite;
+        Node::Invoke(Invoke {
+            member: mi,
+            callsite: cs,
+            name: self.df.callsites[cs].name.clone(),
+            lanes: octx.cloned(),
+        })
+    }
+
+    /// Activity interval of a member at a nest level, in loop coordinates.
+    fn interval(&self, mi: usize, level: usize) -> (Bound, Bound) {
+        let m = &self.nest.members[mi];
+        let cs = &self.df.callsites[m.callsite];
+        let dom = &cs.domain[&self.nest.dims[level]];
+        (dom.lo.plus(-m.shifts[level]), dom.hi.plus(-m.shifts[level]))
+    }
+
+    /// Static peeling: split the level's range into segments with fixed
+    /// active sets, if all interval endpoints are mutually orderable.
+    #[allow(clippy::type_complexity)]
+    fn segments(&self, inl: &[usize], level: usize) -> Option<Vec<(Bound, Bound, Vec<usize>)>> {
+        let ivals: Vec<(Bound, Bound)> =
+            inl.iter().map(|&mi| self.interval(mi, level)).collect();
+        let mut cuts: Vec<Bound> = Vec::new();
+        for (a, b) in &ivals {
+            cuts.push(a.clone());
+            cuts.push(b.clone());
+        }
+        let mut ok = true;
+        cuts.sort_by(|a, b| match cmp_bound(a, b) {
+            Some(o) => o,
+            None => {
+                ok = false;
+                std::cmp::Ordering::Equal
+            }
+        });
+        if !ok {
+            return None;
+        }
+        cuts.dedup();
+        let mut segs = Vec::new();
+        for w in cuts.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            let mut active = Vec::new();
+            for (k, (lo, hi)) in ivals.iter().enumerate() {
+                let c1 = cmp_bound(lo, a)?;
+                let c2 = cmp_bound(b, hi)?;
+                if c1 != std::cmp::Ordering::Greater && c2 != std::cmp::Ordering::Greater {
+                    active.push(inl[k]);
+                }
+            }
+            if !active.is_empty() {
+                segs.push((a.clone(), b.clone(), active));
+            }
+        }
+        Some(segs)
+    }
+
+    /// Can this member's lane loop carry a simd hint (no loop-carried
+    /// dependence across lanes)? Reductions, accumulator chains (read
+    /// and write the same storage) and lane-invariant writes must stay
+    /// sequential.
+    fn member_simd_safe(&self, mi: usize) -> bool {
+        let m = &self.nest.members[mi];
+        let cs = &self.df.callsites[m.callsite];
+        if !cs.reduce_dims.is_empty() {
+            return false;
+        }
+        let wsids: BTreeSet<usize> =
+            cs.writes.iter().map(|(_, vid, _)| self.sp.of_var[*vid]).collect();
+        if cs.reads.iter().any(|(_, vid, _)| wsids.contains(&self.sp.of_var[*vid])) {
+            return false;
+        }
+        let innermost = match self.nest.dims.last() {
+            Some(d) => d,
+            None => return false,
+        };
+        for (_, vid, _) in &cs.writes {
+            let var = &self.df.vars[*vid];
+            match var.dims.iter().position(|d| d == innermost) {
+                Some(k) => {
+                    if matches!(self.sp.storage_of(*vid).sizes[k], DimSize::One) {
+                        return false;
+                    }
+                }
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Lower one nest level for a member subset. `octx` carries an
+    /// active outer lane loop (set inside an outer strip's steady body).
+    fn level(
+        &self,
+        members: &[usize],
+        level: usize,
+        octx: Option<&LaneLoop>,
+    ) -> Result<Vec<Node>, String> {
+        let nest = self.nest;
+        if level == nest.dims.len() {
+            return Ok(members.iter().map(|&mi| self.invoke(mi, octx)).collect());
+        }
+        let role = |mi: usize| nest.members[mi].roles[level];
+        let pre: Vec<usize> = members.iter().copied().filter(|&m| role(m) == Role::Pre).collect();
+        let inl: Vec<usize> = members.iter().copied().filter(|&m| role(m) == Role::Loop).collect();
+        let post: Vec<usize> =
+            members.iter().copied().filter(|&m| role(m) == Role::Post).collect();
+
+        let mut out = self.level(&pre, level + 1, octx)?;
+        if !inl.is_empty() {
+            let dim = nest.dims[level].clone();
+            let innermost = level + 1 == nest.dims.len();
+            let outer_here = octx.is_none()
+                && !innermost
+                && self.outer == Some(dim.as_str())
+                && analysis::outer_vectorizable(self.df, nest, &dim);
+            match self.segments(&inl, level) {
+                Some(segs) => {
+                    for (lo, hi, act) in segs {
+                        if outer_here {
+                            out.push(self.outer_strip(&act, level, lo, hi)?);
+                        } else if innermost && self.inner_lanes() && self.fission_safe(&act) {
+                            out.push(self.inner_strip(&act, level, lo, hi, octx)?);
+                        } else {
+                            out.push(Node::Loop(LoopNode {
+                                dim: dim.clone(),
+                                level,
+                                lo,
+                                hi,
+                                body: self.level(&act, level + 1, octx)?,
+                            }));
+                        }
+                    }
+                }
+                None => {
+                    // Guarded fallback: one uniform loop, per-member guards.
+                    let mut lo: Option<Bound> = None;
+                    let mut hi: Option<Bound> = None;
+                    for &mi in &inl {
+                        let (a, b) = self.interval(mi, level);
+                        lo = Some(match lo {
+                            None => a,
+                            Some(x) => crate::dataflow::bound_min(&x, &a)?,
+                        });
+                        hi = Some(match hi {
+                            None => b,
+                            Some(x) => crate::dataflow::bound_max(&x, &b)?,
+                        });
+                    }
+                    let mut arms = Vec::with_capacity(inl.len());
+                    for &mi in &inl {
+                        let (a, b) = self.interval(mi, level);
+                        arms.push(GuardedArm {
+                            lo: a,
+                            hi: b,
+                            body: self.level(&[mi], level + 1, octx)?,
+                        });
+                    }
+                    out.push(Node::Guarded(GuardedNode {
+                        dim,
+                        level,
+                        lo: lo.unwrap(),
+                        hi: hi.unwrap(),
+                        arms,
+                    }));
+                }
+            }
+        }
+        out.extend(self.level(&post, level + 1, octx)?);
+        Ok(out)
+    }
+
+    fn fission_safe(&self, act: &[usize]) -> bool {
+        let ms: Vec<&Member> = act.iter().map(|&mi| &self.nest.members[mi]).collect();
+        analysis::lane_fission_safe(self.df, self.sp, self.nest, &ms)
+    }
+
+    /// One peeled segment of the outer lane dim, strip-mined by `vl`:
+    /// the whole inner nest runs per strip with every kernel invocation
+    /// expanded across the lanes; head (when not statically aligned
+    /// under `--aligned`) and remainder reuse the scalar sub-schedule.
+    fn outer_strip(
+        &self,
+        act: &[usize],
+        level: usize,
+        lo: Bound,
+        hi: Bound,
+    ) -> Result<Node, String> {
+        let dim = self.nest.dims[level].clone();
+        let lane = LaneLoop { dim: dim.clone(), level, lanes: self.vl };
+        let provable = statically_aligned(&lo, self.vl);
+        let head = if self.aligned && !provable {
+            Some(self.level(act, level + 1, None)?)
+        } else {
+            None
+        };
+        let steady = self.level(act, level + 1, Some(&lane))?;
+        let remainder = self.level(act, level + 1, None)?;
+        Ok(Node::Strip(StripNode {
+            dim,
+            level,
+            lo,
+            hi,
+            lanes: self.vl,
+            outer: true,
+            head,
+            static_aligned: self.aligned && provable,
+            steady,
+            remainder,
+        }))
+    }
+
+    /// One peeled innermost segment, lane-fissioned by `vl`: the steady
+    /// body runs each member across the whole strip before the next
+    /// ([`MemberStrip`]); head and remainder run the plain scalar
+    /// invocations. Under tiling (`octx` set) every lane additionally
+    /// expands across the outer lanes.
+    fn inner_strip(
+        &self,
+        act: &[usize],
+        level: usize,
+        lo: Bound,
+        hi: Bound,
+        octx: Option<&LaneLoop>,
+    ) -> Result<Node, String> {
+        let dim = self.nest.dims[level].clone();
+        let provable = statically_aligned(&lo, self.vl);
+        let scalar: Vec<Node> = act.iter().map(|&mi| self.invoke(mi, octx)).collect();
+        let head = if self.aligned && !provable { Some(scalar.clone()) } else { None };
+        let steady = act
+            .iter()
+            .map(|&mi| {
+                let cs = self.nest.members[mi].callsite;
+                Node::MemberStrip(MemberStrip {
+                    member: mi,
+                    callsite: cs,
+                    name: self.df.callsites[cs].name.clone(),
+                    dim: dim.clone(),
+                    level,
+                    lanes: self.vl,
+                    simd: self.member_simd_safe(mi),
+                    outer: octx.cloned(),
+                })
+            })
+            .collect();
+        Ok(Node::Strip(StripNode {
+            dim,
+            level,
+            lo,
+            hi,
+            lanes: self.vl,
+            outer: false,
+            head,
+            static_aligned: self.aligned && provable,
+            steady,
+            remainder: scalar,
+        }))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rendering (digest + human-readable dump)
+// ---------------------------------------------------------------------------
+
+impl Schedule {
+    /// Human-readable dump of the lowered tree — the one place "which
+    /// loops actually run" can be read off (CLI: `generate --backend
+    /// schedule-ir`). [`Schedule::digest`] fingerprints this text.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for np in &self.nests {
+            let _ = writeln!(s, "nest {} over ({}):", np.nest, np.dims.join(","));
+            render_nodes(&np.body, 1, &mut s);
+        }
+        s
+    }
+}
+
+fn render_nodes(nodes: &[Node], indent: usize, s: &mut String) {
+    let pad = "  ".repeat(indent);
+    for n in nodes {
+        match n {
+            Node::Loop(l) => {
+                let _ = writeln!(s, "{pad}for {} in [{}, {}):", l.dim, l.lo, l.hi);
+                render_nodes(&l.body, indent + 1, s);
+            }
+            Node::Strip(t) => {
+                let kind = if t.outer { "outer-strip" } else { "strip" };
+                let mut flags = String::new();
+                if t.head.is_some() {
+                    flags.push_str(" +aligned-head");
+                }
+                if t.static_aligned {
+                    flags.push_str(" +static-aligned");
+                }
+                let _ = writeln!(
+                    s,
+                    "{pad}{kind} {} in [{}, {}) x{}{}:",
+                    t.dim, t.lo, t.hi, t.lanes, flags
+                );
+                if let Some(h) = &t.head {
+                    let _ = writeln!(s, "{pad}  head:");
+                    render_nodes(h, indent + 2, s);
+                }
+                let _ = writeln!(s, "{pad}  steady:");
+                render_nodes(&t.steady, indent + 2, s);
+                let _ = writeln!(s, "{pad}  remainder:");
+                render_nodes(&t.remainder, indent + 2, s);
+            }
+            Node::Guarded(g) => {
+                let _ = writeln!(s, "{pad}guarded {} in [{}, {}):", g.dim, g.lo, g.hi);
+                for a in &g.arms {
+                    let _ = writeln!(s, "{pad}  when [{}, {}):", a.lo, a.hi);
+                    render_nodes(&a.body, indent + 2, s);
+                }
+            }
+            Node::Invoke(i) => match &i.lanes {
+                Some(l) => {
+                    let _ = writeln!(s, "{pad}{} x{} along {}", i.name, l.lanes, l.dim);
+                }
+                None => {
+                    let _ = writeln!(s, "{pad}{}", i.name);
+                }
+            },
+            Node::MemberStrip(m) => {
+                let how = if m.simd { "simd" } else { "sequential" };
+                match &m.outer {
+                    Some(o) => {
+                        let _ = writeln!(
+                            s,
+                            "{pad}{} tile {}x{} along {},{} ({how})",
+                            m.name, m.lanes, o.lanes, m.dim, o.dim
+                        );
+                    }
+                    None => {
+                        let _ = writeln!(
+                            s,
+                            "{pad}{} strip x{} along {} ({how})",
+                            m.name, m.lanes, m.dim
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference walker
+// ---------------------------------------------------------------------------
+
+impl Schedule {
+    /// Enumerate kernel invocations in exactly the order the emitted
+    /// code executes them, calling `f(nest_plan_index, member_index,
+    /// idx)` for each (idx holds the loop variables by nest level). This
+    /// is the reference semantics of the tree: the interpreter executor
+    /// must visit the same sequence (pinned by the property suite).
+    pub fn visit<F>(&self, extents: &BTreeMap<String, i64>, f: &mut F) -> Result<(), String>
+    where
+        F: FnMut(usize, usize, &[i64]),
+    {
+        for (k, np) in self.nests.iter().enumerate() {
+            let mut idx = vec![0i64; np.dims.len()];
+            visit_nodes(k, &np.body, extents, &mut idx, f)?;
+        }
+        Ok(())
+    }
+}
+
+fn visit_nodes<F>(
+    nest: usize,
+    nodes: &[Node],
+    extents: &BTreeMap<String, i64>,
+    idx: &mut Vec<i64>,
+    f: &mut F,
+) -> Result<(), String>
+where
+    F: FnMut(usize, usize, &[i64]),
+{
+    for n in nodes {
+        match n {
+            Node::Loop(l) => {
+                let (lo, hi) = (l.lo.eval(extents)?, l.hi.eval(extents)?);
+                let mut t = lo;
+                while t < hi {
+                    idx[l.level] = t;
+                    visit_nodes(nest, &l.body, extents, idx, f)?;
+                    t += 1;
+                }
+            }
+            Node::Strip(s) => {
+                let (lo, hi) = (s.lo.eval(extents)?, s.hi.eval(extents)?);
+                let lanes = s.lanes as i64;
+                let mut t = lo;
+                if let Some(head) = &s.head {
+                    let he = (t + ((lanes - t.rem_euclid(lanes)) % lanes)).min(hi);
+                    while t < he {
+                        idx[s.level] = t;
+                        visit_nodes(nest, head, extents, idx, f)?;
+                        t += 1;
+                    }
+                }
+                let steady = t + ((hi - t) / lanes) * lanes;
+                while t < steady {
+                    idx[s.level] = t;
+                    visit_nodes(nest, &s.steady, extents, idx, f)?;
+                    t += lanes;
+                }
+                while t < hi {
+                    idx[s.level] = t;
+                    visit_nodes(nest, &s.remainder, extents, idx, f)?;
+                    t += 1;
+                }
+            }
+            Node::Guarded(g) => {
+                let (lo, hi) = (g.lo.eval(extents)?, g.hi.eval(extents)?);
+                let mut arms = Vec::with_capacity(g.arms.len());
+                for a in &g.arms {
+                    arms.push((a.lo.eval(extents)?, a.hi.eval(extents)?));
+                }
+                let mut t = lo;
+                while t < hi {
+                    idx[g.level] = t;
+                    for (a, &(alo, ahi)) in g.arms.iter().zip(&arms) {
+                        if t >= alo && t < ahi {
+                            visit_nodes(nest, &a.body, extents, idx, f)?;
+                        }
+                    }
+                    t += 1;
+                }
+            }
+            Node::Invoke(inv) => match &inv.lanes {
+                None => f(nest, inv.member, idx),
+                Some(l) => {
+                    let base = idx[l.level];
+                    for k in 0..l.lanes as i64 {
+                        idx[l.level] = base + k;
+                        f(nest, inv.member, idx);
+                    }
+                    idx[l.level] = base;
+                }
+            },
+            Node::MemberStrip(ms) => {
+                let base = idx[ms.level];
+                for il in 0..ms.lanes as i64 {
+                    idx[ms.level] = base + il;
+                    match &ms.outer {
+                        None => f(nest, ms.member, idx),
+                        Some(l) => {
+                            let ob = idx[l.level];
+                            for ol in 0..l.lanes as i64 {
+                                idx[l.level] = ob + ol;
+                                f(nest, ms.member, idx);
+                            }
+                            idx[l.level] = ob;
+                        }
+                    }
+                }
+                idx[ms.level] = base;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::testdecks;
+    use crate::plan::{compile_src, CompileOptions, Program};
+
+    fn compile(src: &str, vlen: usize) -> Program {
+        compile_src(
+            src,
+            CompileOptions {
+                analysis: crate::analysis::AnalysisOptions {
+                    vector_len: Some(vlen),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    fn count_nodes(nodes: &[Node], pred: &dyn Fn(&Node) -> bool) -> usize {
+        let mut n = 0;
+        for node in nodes {
+            if pred(node) {
+                n += 1;
+            }
+            match node {
+                Node::Loop(l) => n += count_nodes(&l.body, pred),
+                Node::Strip(s) => {
+                    if let Some(h) = &s.head {
+                        n += count_nodes(h, pred);
+                    }
+                    n += count_nodes(&s.steady, pred) + count_nodes(&s.remainder, pred);
+                }
+                Node::Guarded(g) => {
+                    for a in &g.arms {
+                        n += count_nodes(&a.body, pred);
+                    }
+                }
+                _ => {}
+            }
+        }
+        n
+    }
+
+    fn count(prog: &Program, pred: &dyn Fn(&Node) -> bool) -> usize {
+        prog.sched.nests.iter().map(|np| count_nodes(&np.body, pred)).sum()
+    }
+
+    #[test]
+    fn bound_ordering_and_static_alignment() {
+        use std::cmp::Ordering;
+        assert_eq!(cmp_bound(&Bound::constant(0), &Bound::of("N", -1)), Some(Ordering::Less));
+        assert_eq!(cmp_bound(&Bound::of("N", -1), &Bound::of("N", 0)), Some(Ordering::Less));
+        assert_eq!(cmp_bound(&Bound::of("N", 0), &Bound::of("M", 0)), None);
+        assert!(statically_aligned(&Bound::constant(0), 4));
+        assert!(statically_aligned(&Bound::constant(8), 4));
+        assert!(!statically_aligned(&Bound::constant(1), 4));
+        assert!(!statically_aligned(&Bound::of("N", 0), 4), "symbolic lo is never provable");
+    }
+
+    #[test]
+    fn scalar_plan_has_no_strips() {
+        let prog = compile(testdecks::CHAIN1D, 1);
+        assert_eq!(count(&prog, &|n| matches!(n, Node::Strip(_))), 0);
+        assert!(count(&prog, &|n| matches!(n, Node::Loop(_))) >= 2, "peeled segments");
+        let txt = prog.sched.render();
+        assert!(txt.contains("for i in"), "{txt}");
+        assert!(txt.contains("dbl"), "{txt}");
+    }
+
+    #[test]
+    fn vector_plan_lowers_member_strips() {
+        let prog = compile(testdecks::CHAIN1D, 4);
+        let strips = count(&prog, &|n| matches!(n, Node::Strip(s) if !s.outer && s.lanes == 4));
+        assert!(strips >= 1, "{}", prog.sched.render());
+        let members = count(&prog, &|n| matches!(n, Node::MemberStrip(m) if m.outer.is_none()));
+        assert!(members >= 2, "{}", prog.sched.render());
+        // No alignment heads without the aligned specialization.
+        assert_eq!(count(&prog, &|n| matches!(n, Node::Strip(s) if s.head.is_some())), 0);
+    }
+
+    #[test]
+    fn outer_plan_lowers_outer_strips_and_lane_invokes() {
+        let prog = compile_src(
+            crate::apps::cosmo::DECK,
+            CompileOptions {
+                analysis: crate::analysis::AnalysisOptions {
+                    vector_len: Some(4),
+                    vec_dim: crate::analysis::VecDim::Outer("k".to_string()),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(count(&prog, &|n| matches!(n, Node::Strip(s) if s.outer)) >= 1);
+        // Steady invocations expand across the k lanes; no inner strips
+        // without tiling (inner windows carry no padding).
+        assert!(count(&prog, &|n| matches!(n, Node::Invoke(i) if i.lanes.is_some())) >= 1);
+        assert_eq!(count(&prog, &|n| matches!(n, Node::MemberStrip(_))), 0);
+    }
+
+    #[test]
+    fn tiled_plan_lowers_tiles() {
+        let prog = compile_src(
+            crate::apps::cosmo::DECK,
+            CompileOptions {
+                analysis: crate::analysis::AnalysisOptions {
+                    vector_len: Some(4),
+                    vec_dim: crate::analysis::VecDim::Outer("k".to_string()),
+                    tile: true,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(prog.tiled());
+        // The steady×steady region holds member tiles: inner strips whose
+        // members also expand across the outer lanes.
+        let tiles = count(&prog, &|n| matches!(n, Node::MemberStrip(m) if m.outer.is_some()));
+        assert!(tiles >= 1, "{}", prog.sched.render());
+        assert!(count(&prog, &|n| matches!(n, Node::Strip(s) if s.outer)) >= 1);
+        let txt = prog.sched.render();
+        assert!(txt.contains("tile 4x4"), "{txt}");
+    }
+
+    #[test]
+    fn aligned_heads_present_only_when_not_provable() {
+        // chain1d's steady segment starts at 1 (not a multiple of 4):
+        // runtime head. Its prologue segment starts at 0: head elided.
+        let prog = compile_src(
+            testdecks::CHAIN1D,
+            CompileOptions {
+                analysis: crate::analysis::AnalysisOptions {
+                    vector_len: Some(4),
+                    ..Default::default()
+                },
+                aligned: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(count(&prog, &|n| matches!(n, Node::Strip(s) if s.head.is_some())) >= 1);
+        assert!(count(&prog, &|n| matches!(n, Node::Strip(s) if s.static_aligned)) >= 1);
+    }
+
+    #[test]
+    fn digest_is_stable_and_strategy_sensitive() {
+        let a = compile(testdecks::CHAIN1D, 4);
+        let b = compile(testdecks::CHAIN1D, 4);
+        assert_eq!(a.sched.digest, b.sched.digest);
+        let c = compile(testdecks::CHAIN1D, 1);
+        assert_ne!(a.sched.digest, c.sched.digest, "vlen must move the digest");
+        let d = compile(testdecks::CHAIN1D, 8);
+        assert_ne!(a.sched.digest, d.sched.digest);
+    }
+
+    #[test]
+    fn visit_enumerates_scalar_order() {
+        // chain1d N=6: dbl runs one ahead of diff over i in [1, N-1).
+        let prog = compile(testdecks::CHAIN1D, 1);
+        let ext: BTreeMap<String, i64> = [("N".to_string(), 6i64)].into();
+        let mut got = Vec::new();
+        prog.sched
+            .visit(&ext, &mut |np, mi, idx| {
+                let nest = &prog.fd.nests[prog.sched.nests[np].nest];
+                let cs = nest.members[mi].callsite;
+                got.push((prog.df.callsites[cs].name.clone(), idx[0]));
+            })
+            .unwrap();
+        // dbl interval [0, 4), diff interval [1, 5): prologue t=0 (dbl),
+        // steady t=1..4 (dbl, diff), epilogue t=4 (diff).
+        let want: Vec<(String, i64)> = [
+            ("dbl", 0),
+            ("dbl", 1),
+            ("diff", 1),
+            ("dbl", 2),
+            ("diff", 2),
+            ("dbl", 3),
+            ("diff", 3),
+            ("diff", 4),
+        ]
+        .iter()
+        .map(|(n, i)| (n.to_string(), *i))
+        .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn visit_strip_covers_every_iteration_once() {
+        // At vlen 4 on N=13 the steady segment [1, 11) has strips + a
+        // remainder; every (member, i) pair must appear exactly once and
+        // member strips keep each kernel ahead of its consumer.
+        let prog = compile(testdecks::CHAIN1D, 4);
+        let ext: BTreeMap<String, i64> = [("N".to_string(), 13i64)].into();
+        let mut per: BTreeMap<(String, i64), usize> = BTreeMap::new();
+        prog.sched
+            .visit(&ext, &mut |np, mi, idx| {
+                let nest = &prog.fd.nests[prog.sched.nests[np].nest];
+                let cs = nest.members[mi].callsite;
+                *per.entry((prog.df.callsites[cs].name.clone(), idx[0])).or_default() += 1;
+            })
+            .unwrap();
+        for t in 0..11 {
+            assert_eq!(per.get(&("dbl".to_string(), t)).copied(), Some(1), "dbl@{t}");
+        }
+        for t in 1..12 {
+            assert_eq!(per.get(&("diff".to_string(), t)).copied(), Some(1), "diff@{t}");
+        }
+        assert_eq!(per.len(), 11 + 11);
+    }
+}

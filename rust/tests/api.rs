@@ -50,6 +50,8 @@ fn planspec_fingerprints_are_stable_and_distinct() {
         base.clone().vec_dim(VecDim::Outer("j".to_string())).vlen(Vlen::Fixed(4)),
         base.clone().aligned(true),
         base.clone().aligned(true).vlen(Vlen::Fixed(4)),
+        base.clone().tiled(true),
+        base.clone().tiled(true).vlen(Vlen::Fixed(4)),
         PlanSpec::app("laplace"),
         PlanSpec::deck_src("name: hydro2d\n"),
     ];
@@ -167,6 +169,8 @@ fn vectorization_knobs_and_extents_identity() {
         base.clone().vec_dim(VecDim::Auto),
         base.clone().aligned(true),
         base.clone().vec_dim(VecDim::Outer("k".to_string())).aligned(true),
+        base.clone().tiled(true),
+        base.clone().vec_dim(VecDim::Outer("k".to_string())).tiled(true),
     ];
     for (i, k) in knobs.iter().enumerate() {
         assert_ne!(k.fingerprint(), base.fingerprint(), "knob {i} escaped the fingerprint");

@@ -1,9 +1,11 @@
 //! Golden snapshot tests for generated code: the C99 and Rust emissions
 //! for small pipelined decks — scalar peeled loops (vlen 1), inner
 //! strips with in-register rotation (vlen 4), outer-dim lane loops
-//! (`rows2d` at `vec_dim outer:j`) and the aligned specialization — are
-//! pinned under `tests/golden/` so any emitter change shows up as a
-//! reviewable diff.
+//! (`rows2d` at `vec_dim outer:j`), multi-dim lane tiling (`rows2d`
+//! tiled), the aligned specialization, and the statically-provable
+//! alignment case (`align0`, whose head peel is elided at compile time)
+//! — are pinned under `tests/golden/` so any emitter change shows up as
+//! a reviewable diff.
 //!
 //! Workflow:
 //! * mismatch → the test fails and prints the path; run with
@@ -82,6 +84,38 @@ globals:
     diff(u[j][i]) => double g_d[j][i]
 "#;
 
+/// A two-stage offset-0 chain over `i: [0, N]`: the single fused
+/// segment starts at the constant 0, so under `--aligned` the schedule
+/// lowering *proves* alignment at compile time and emits no scalar
+/// alignment head — the target of the static-alignment goldens.
+const ALIGN0: &str = r#"
+name: align0
+iteration:
+  order: [i]
+  domains:
+    i: [0, N]
+kernels:
+  a:
+    declaration: a(double x, double &y);
+    inputs: |
+      x : u?[i?]
+    outputs: |
+      y : mid(u?[i?])
+    body: "y = 2.0*x;"
+  b:
+    declaration: b(double y, double &z);
+    inputs: |
+      y : mid(u?[i?])
+    outputs: |
+      z : fin(u?[i?])
+    body: "z = y + 1.0;"
+globals:
+  inputs: |
+    double g_u[i?] => u[i?]
+  outputs: |
+    fin(u[i]) => double g_o[i]
+"#;
+
 fn golden_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
 }
@@ -124,6 +158,37 @@ fn compile_outer(vlen: usize) -> Program {
                 vec_dim: hfav::analysis::VecDim::Outer("j".to_string()),
                 ..Default::default()
             },
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+fn compile_tiled(vlen: usize) -> Program {
+    compile_src(
+        ROWS2D,
+        CompileOptions {
+            analysis: hfav::analysis::AnalysisOptions {
+                vector_len: Some(vlen),
+                vec_dim: hfav::analysis::VecDim::Outer("j".to_string()),
+                tile: true,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+fn compile_align0(vlen: usize) -> Program {
+    compile_src(
+        ALIGN0,
+        CompileOptions {
+            analysis: hfav::analysis::AnalysisOptions {
+                vector_len: Some(vlen),
+                ..Default::default()
+            },
+            aligned: true,
             ..Default::default()
         },
     )
@@ -192,6 +257,26 @@ fn golden_rust_aligned_vlen4() {
     check("chain1d_vlen4_aligned.rs", &hfav::codegen::rs::emit(&compile_aligned(4)).unwrap());
 }
 
+#[test]
+fn golden_c99_tiled_vlen4() {
+    check("rows2d_tiled_vlen4.c", &hfav::codegen::c99::emit(&compile_tiled(4)).unwrap());
+}
+
+#[test]
+fn golden_rust_tiled_vlen4() {
+    check("rows2d_tiled_vlen4.rs", &hfav::codegen::rs::emit(&compile_tiled(4)).unwrap());
+}
+
+#[test]
+fn golden_c99_static_aligned_vlen4() {
+    check("align0_vlen4_aligned.c", &hfav::codegen::c99::emit(&compile_align0(4)).unwrap());
+}
+
+#[test]
+fn golden_rust_static_aligned_vlen4() {
+    check("align0_vlen4_aligned.rs", &hfav::codegen::rs::emit(&compile_align0(4)).unwrap());
+}
+
 /// Structural assertions that hold regardless of snapshot churn — the
 /// properties reviewers should look for in the goldens.
 #[test]
@@ -222,4 +307,57 @@ fn golden_structure_outer_and_aligned() {
     assert!(ca.contains("__builtin_assume_aligned"), "{ca}");
     let ra = hfav::codegen::rs::emit(&compile_aligned(4)).unwrap();
     assert!(ra.contains("alignment head"), "{ra}");
+}
+
+/// Structural assertions for multi-dim lane tiling: outer strips and
+/// inner strips coexist, and steady×steady invocations are vlen×vlen
+/// tiles — with zero shape logic in either backend (both print the same
+/// tree; the headers carry the same schedule digest).
+#[test]
+fn golden_structure_tiled() {
+    let prog = compile_tiled(4);
+    assert!(prog.tiled());
+    let c = hfav::codegen::c99::emit(&prog).unwrap();
+    assert!(c.contains("outer-dim strip: 4 lanes along j"), "{c}");
+    assert!(c.contains("strip-mined by 4 lanes"), "{c}");
+    assert!(c.contains("4x4 tile along i x j"), "{c}");
+    let r = hfav::codegen::rs::emit(&prog).unwrap();
+    assert!(r.contains("outer-dim strip: 4 lanes along j"), "{r}");
+    assert!(r.contains("4x4 tile along i x j"), "{r}");
+    let tag = format!("schedule: {:016x}", prog.schedule_digest());
+    assert!(c.contains(&tag) && r.contains(&tag), "digest must match across backends");
+}
+
+/// The compile-time-provable alignment satellite: when a strip's lower
+/// bound is statically a multiple of the vector length (align0's single
+/// segment starts at the constant 0), the schedule lowering emits *no*
+/// scalar alignment head under `--aligned` — the head node is absent
+/// from the tree and from both emissions.
+#[test]
+fn golden_structure_static_alignment_elides_head() {
+    let prog = compile_align0(4);
+    // Tree-level: every strip is statically aligned, none carries a head.
+    let mut strips = 0;
+    for np in &prog.sched.nests {
+        for node in &np.body {
+            if let hfav::schedule::Node::Strip(s) = node {
+                strips += 1;
+                assert!(s.head.is_none(), "head must be elided: {}", prog.sched.render());
+                assert!(s.static_aligned, "{}", prog.sched.render());
+            }
+        }
+    }
+    assert!(strips >= 1, "expected a strip: {}", prog.sched.render());
+    // Emission-level: aligned allocations remain, head peels do not.
+    let c = hfav::codegen::c99::emit(&prog).unwrap();
+    assert!(c.contains("aligned_alloc(64"), "{c}");
+    assert!(c.contains("alignment head elided"), "{c}");
+    assert!(!c.contains("alignment head:"), "no runtime head peel:\n{c}");
+    assert!(c.contains("strip-mined by 4 lanes"), "{c}");
+    let r = hfav::codegen::rs::emit(&prog).unwrap();
+    assert!(r.contains("alignment head elided"), "{r}");
+    assert!(!r.contains("alignment head:"), "{r}");
+    // Control: chain1d's steady segment starts at 1 → runtime head stays.
+    let chained = hfav::codegen::c99::emit(&compile_aligned(4)).unwrap();
+    assert!(chained.contains("alignment head:"), "{chained}");
 }

@@ -163,11 +163,11 @@ fn check_deck(seed: u64, ndims: usize, nstages: usize) {
         &reg,
         &ext,
         &inputs,
-        ExecOptions { mode: Mode::Peeled, strip: None },
+        ExecOptions { mode: Mode::Peeled },
     )
     .unwrap_or_else(|e| panic!("seed {seed}: naive run failed: {e}\n{deck}"));
     for mode in [Mode::Peeled, Mode::Guarded] {
-        let got = exec::run(&fused, &reg, &ext, &inputs, ExecOptions { mode, strip: None })
+        let got = exec::run(&fused, &reg, &ext, &inputs, ExecOptions { mode })
             .unwrap_or_else(|e| panic!("seed {seed} {mode:?}: fused run failed: {e}\n{deck}"));
         for (k, v) in &base {
             let err = max_err(v, &got[k]);
@@ -287,6 +287,83 @@ fn prop_outer_auto_and_aligned_preserve_semantics() {
                     err < 1e-12,
                     "seed {seed} {label} (resolved {:?}): diverged ({err:.2e})\n{deck}",
                     prog.vec_dim()
+                );
+            }
+        }
+    }
+}
+
+/// The interpreter's schedule walk must visit kernel invocations in the
+/// exact order the emitted code executes — for every app × strategy in
+/// {scalar, inner, outer, aligned, tiled}. The emitted order is given by
+/// the reference walker over the lowered tree
+/// ([`hfav::schedule::Schedule::visit`], the structure both emitters
+/// print verbatim); the executor side is the instrumented trace of
+/// [`hfav::exec::run_traced`]. The two walkers are independent
+/// implementations, so agreement pins the node semantics.
+#[test]
+fn prop_exec_trace_matches_schedule_walk() {
+    use hfav::analysis::VecDim;
+    use hfav::plan::Vlen;
+    let apps: [(&str, &str, &str, hfav::exec::registry::Registry); 3] = [
+        ("laplace", hfav::apps::laplace::DECK, "j", hfav::apps::laplace::registry()),
+        (
+            "normalize",
+            hfav::apps::normalization::DECK,
+            "j",
+            hfav::apps::normalization::registry(),
+        ),
+        ("cosmo", hfav::apps::cosmo::DECK, "k", hfav::apps::cosmo::registry()),
+    ];
+    for (app, deck, outer, reg) in apps {
+        let strategies: Vec<(&str, PlanSpec)> = vec![
+            ("scalar", PlanSpec::deck_src(deck).vlen(Vlen::Fixed(1))),
+            ("inner", PlanSpec::deck_src(deck).vlen(Vlen::Fixed(4))),
+            (
+                "outer",
+                PlanSpec::deck_src(deck)
+                    .vlen(Vlen::Fixed(4))
+                    .vec_dim(VecDim::Outer(outer.to_string())),
+            ),
+            ("aligned", PlanSpec::deck_src(deck).vlen(Vlen::Fixed(4)).aligned(true)),
+            ("tiled", PlanSpec::deck_src(deck).vlen(Vlen::Fixed(4)).tiled(true)),
+        ];
+        for (label, spec) in strategies {
+            let prog = spec.compile().unwrap_or_else(|e| panic!("{app} {label}: {e}"));
+            // Non-square extents so strips, remainders and (aligned)
+            // heads are all exercised.
+            let mut ext = BTreeMap::new();
+            for (k, name) in
+                hfav::codegen::c99::extent_names(&prog).into_iter().enumerate()
+            {
+                ext.insert(name, [13i64, 9, 7][k % 3]);
+            }
+            let mut inputs = BTreeMap::new();
+            for (name, _, _) in prog.external_inputs() {
+                let len = exec::external_len(&prog, &name, &ext).unwrap();
+                inputs.insert(name, Rng::new(77).f64s(len));
+            }
+            let (_, got) = hfav::exec::run_traced(&prog, &reg, &ext, &inputs)
+                .unwrap_or_else(|e| panic!("{app} {label}: {e}"));
+            let mut want: Vec<(String, Vec<i64>)> = Vec::new();
+            prog.sched
+                .visit(&ext, &mut |np, mi, idx| {
+                    let nest = &prog.fd.nests[prog.sched.nests[np].nest];
+                    let cs = nest.members[mi].callsite;
+                    want.push((prog.df.callsites[cs].name.clone(), idx.to_vec()));
+                })
+                .unwrap();
+            assert_eq!(
+                got.len(),
+                want.len(),
+                "{app} {label}: invocation counts diverge ({} vs {})",
+                got.len(),
+                want.len()
+            );
+            for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    g, w,
+                    "{app} {label}: invocation {k} diverges (exec {g:?} vs schedule {w:?})"
                 );
             }
         }
