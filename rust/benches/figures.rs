@@ -14,9 +14,9 @@ fn main() {
     println!();
     hfav::bench::hydro2d(&[64, 128, 256], 5);
     println!();
-    hfav::bench::serving(4, 8, None);
+    hfav::bench::serving(4, 8, None, hfav::engine::Threads::Serial);
     println!();
-    hfav::bench::vectorization(hfav::analysis::auto_vector_len());
+    hfav::bench::vectorization(hfav::analysis::auto_vector_len(), 4);
     println!();
     match hfav::bench::pjrt(&hfav::runtime::default_artifacts_dir()) {
         Ok(_) => {}

@@ -344,6 +344,62 @@ pub fn outer_vectorizable(df: &Dataflow, nest: &FusedNest, dim: &str) -> bool {
     true
 }
 
+/// Is `dim` a legal *chunk-parallel* dim for this nest — i.e. may
+/// disjoint ranges of it run concurrently on worker threads?
+///
+/// Builds on [`outer_vectorizable`] (k-independence: offset-0 accesses,
+/// no reduction, no pipeline shift, every write indexed by `dim`), then
+/// adds the storage-sharing obligation chunking introduces: lanes of an
+/// outer strip execute in lockstep inside one thread, but chunks run on
+/// *different* threads, so any written storage that is **contracted**
+/// along `dim` (a [`DimSize::One`] slot or rolling [`DimSize::Window`])
+/// would be overlapped by concurrent chunks. Such storages are legal
+/// only when private to the nest (enclosing region is this nest alone),
+/// in which case each chunk gets its own replica — k-independence
+/// guarantees no value flows across `dim` iterations through them, so
+/// replication is bitwise-invisible. Writes that are [`DimSize::Full`]
+/// along `dim` land in disjoint slabs and stay shared.
+///
+/// Returns the storage ids to replicate per chunk, or `None` when the
+/// nest must stay serial. Backends never call this: the decision is
+/// baked into the schedule tree by `schedule::lower`.
+pub fn parallel_safe(
+    df: &Dataflow,
+    sp: &StoragePlan,
+    nest: &FusedNest,
+    nest_index: usize,
+    dim: &str,
+) -> Option<Vec<usize>> {
+    if !outer_vectorizable(df, nest, dim) {
+        return None;
+    }
+    let mut private: BTreeSet<usize> = BTreeSet::new();
+    for m in &nest.members {
+        let cs = &df.callsites[m.callsite];
+        for (_, vid, _) in &cs.writes {
+            let sid = sp.of_var[*vid];
+            let st = &sp.storages[sid];
+            let full_along = st
+                .dims
+                .iter()
+                .position(|d| d == dim)
+                .map(|k| matches!(st.sizes[k], DimSize::Full))
+                .unwrap_or(false);
+            if full_along {
+                continue; // chunks write disjoint slabs: share
+            }
+            if st.external.is_some() {
+                return None; // contracted external: cannot replicate ABI arrays
+            }
+            if st.enclosing != (nest_index, nest_index) {
+                return None; // window escapes the nest: later nests read one copy
+            }
+            private.insert(sid);
+        }
+    }
+    Some(private.into_iter().collect())
+}
+
 /// Resolve the requested [`VecDim`] against the fused schedule into the
 /// concrete strategy a program compiles (and is fingerprinted) with:
 ///

@@ -3,8 +3,11 @@
 //! reports (throughput vs problem size per implementation variant) and a
 //! CSV block for plotting.
 
+pub mod report;
+
 use crate::analysis::VecDim;
 use crate::apps::{self, Variant};
+use crate::engine::Threads;
 use crate::plan::{PlanSpec, Vlen};
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -222,7 +225,12 @@ pub fn footprint() -> Vec<String> {
 /// the requested vector length — and reports the scalar-vs-vector
 /// throughput ratio; the cache shape (distinct keys, hit rate) is
 /// identical in both runs, isolating the codegen effect.
-pub fn serving(workers: usize, repeat: usize, vlen: Option<usize>) -> Vec<String> {
+pub fn serving(
+    workers: usize,
+    repeat: usize,
+    vlen: Option<usize>,
+    threads: Threads,
+) -> (Vec<String>, Vec<report::ServeRow>) {
     use crate::coordinator::{distinct_plan_keys, repeat_jobs, Coordinator, Job};
     let template: Vec<Job> = [
         ("laplace", Variant::Hfav, 64, 1),
@@ -234,19 +242,24 @@ pub fn serving(workers: usize, repeat: usize, vlen: Option<usize>) -> Vec<String
     .iter()
     .map(|&(app, variant, size, steps)| {
         Job::new(0, PlanSpec::app(app).variant(variant), "exec", size, steps)
+            .with_threads(threads)
     })
     .collect();
     let jobs = repeat_jobs(&template, repeat);
     let n = jobs.len();
     let distinct = distinct_plan_keys(&jobs);
-    println!("Serving — {n} jobs over {distinct} distinct plan keys, {workers} workers:");
+    println!(
+        "Serving — {n} jobs over {distinct} distinct plan keys, {workers} workers, \
+         threads {}:",
+        threads.label()
+    );
     let c = Coordinator::start(workers, None);
     let t0 = Instant::now();
     let results = c.run_batch(jobs);
     let wall = t0.elapsed();
     let failed = results.iter().filter(|r| !r.ok).count();
-    let report = c.report(wall);
-    for line in report.to_string().lines() {
+    let rep = c.report(wall);
+    for line in rep.to_string().lines() {
         println!("  {line}");
     }
     if failed > 0 {
@@ -255,10 +268,23 @@ pub fn serving(workers: usize, repeat: usize, vlen: Option<usize>) -> Vec<String
     let mut csv = vec!["jobs,distinct_keys,compiles,hit_rate,mcells_per_s".to_string()];
     csv.push(format!(
         "{n},{distinct},{},{:.3},{:.3}",
-        report.plans.computes,
-        report.plans.hit_rate(),
-        report.throughput() / 1e6
+        rep.plans.computes,
+        rep.plans.hit_rate(),
+        rep.throughput() / 1e6
     ));
+    let mut rows = vec![report::ServeRow {
+        scenario: "mixed-trace".to_string(),
+        workers,
+        threads: threads.resolve(),
+        jobs: n,
+        distinct_plan_keys: distinct,
+        plan_compiles: rep.plans.computes,
+        plan_hit_rate: rep.plans.hit_rate(),
+        mcells_per_s: rep.throughput() / 1e6,
+        batches: rep.batches,
+        batch_wall_ms: rep.batch_wall.as_secs_f64() * 1e3,
+        threads_effective: rep.threads_effective,
+    }];
     c.shutdown();
 
     // Scalar-vs-vector phase (hydro2d, native engine) — only when a
@@ -266,7 +292,7 @@ pub fn serving(workers: usize, repeat: usize, vlen: Option<usize>) -> Vec<String
     let v = vlen.unwrap_or(1);
     if v > 1 {
         println!("Serving, scalar vs vector — hydro2d native, vlen 1 vs {v}:");
-        let serve_at = |force: usize| -> (f64, f64, u64) {
+        let mut serve_at = |force: usize| -> (f64, f64, u64) {
             let template: Vec<Job> = (0..2 * workers.max(1))
                 .map(|i| {
                     Job::new(
@@ -276,9 +302,12 @@ pub fn serving(workers: usize, repeat: usize, vlen: Option<usize>) -> Vec<String
                         128,
                         2,
                     )
+                    .with_threads(threads)
                 })
                 .collect();
             let jobs = repeat_jobs(&template, repeat.max(2));
+            let n = jobs.len();
+            let distinct = distinct_plan_keys(&jobs);
             let c = Coordinator::start(workers, None);
             let t0 = Instant::now();
             let results = c.run_batch(jobs);
@@ -288,6 +317,19 @@ pub fn serving(workers: usize, repeat: usize, vlen: Option<usize>) -> Vec<String
             if bad > 0 {
                 println!("  WARNING: {bad} jobs failed at vlen {force}");
             }
+            rows.push(report::ServeRow {
+                scenario: format!("hydro2d-native-vlen{force}"),
+                workers,
+                threads: threads.resolve(),
+                jobs: n,
+                distinct_plan_keys: distinct,
+                plan_compiles: rep.plans.computes,
+                plan_hit_rate: rep.plans.hit_rate(),
+                mcells_per_s: rep.throughput() / 1e6,
+                batches: rep.batches,
+                batch_wall_ms: rep.batch_wall.as_secs_f64() * 1e3,
+                threads_effective: rep.threads_effective,
+            });
             c.shutdown();
             (rep.throughput(), rep.plans.hit_rate(), rep.plans.computes)
         };
@@ -309,7 +351,7 @@ pub fn serving(workers: usize, repeat: usize, vlen: Option<usize>) -> Vec<String
         csv.push(format!("1,{:.3},{h1:.3},1.00", t1 / 1e6));
         csv.push(format!("{v},{:.3},{hv:.3},{speedup:.2}", tv / 1e6));
     }
-    csv
+    (csv, rows)
 }
 
 /// Vectorization-strategy comparison: scalar vs inner-dim strips vs
@@ -319,10 +361,13 @@ pub fn serving(workers: usize, repeat: usize, vlen: Option<usize>) -> Vec<String
 /// 64 rows × 256 cells). All six variants are distinct `PlanSpec`
 /// fingerprints, so a serving pool would cache and dispatch them as
 /// distinct plans.
-pub fn vectorization(vlen: usize) -> Vec<String> {
+pub fn vectorization(vlen: usize, threads: usize) -> (Vec<String>, Vec<report::VecRow>) {
     let v = vlen.max(2);
-    let mut csv = vec!["app,strategy,mcells_per_s,speedup_vs_scalar".to_string()];
-    println!("Vectorization strategies (native C, vlen {v}):");
+    let t = threads.max(2);
+    let mut csv =
+        vec!["app,strategy,threads,mcells_per_s,speedup_vs_scalar,bitwise".to_string()];
+    let mut rows = Vec::new();
+    println!("Vectorization strategies (native C, vlen {v}, parallel rows at {t} threads):");
 
     // cosmo: 3-D fourth-order diffusion, outer dim k.
     {
@@ -336,7 +381,8 @@ pub fn vectorization(vlen: usize) -> Vec<String> {
         inputs.insert("g_u".to_string(), apps::seeded(nk * n * n, 7));
         let mut outputs = BTreeMap::new();
         outputs.insert("g_out".to_string(), vec![0.0; nk * (n - 4) * (n - 4)]);
-        vectorization_case(&mut csv, v, "cosmo", "k", n, &ext, cells, &inputs, &outputs);
+        let case = Case { v, threads: t, app: "cosmo", outer: "k", n, cells };
+        vectorization_case(&mut csv, &mut rows, &case, &ext, &inputs, &outputs);
     }
 
     // hydro2d sweep: independent rows, outer dim j; physically sane
@@ -365,70 +411,118 @@ pub fn vectorization(vlen: usize) -> Vec<String> {
             let len = crate::exec::external_len(&prog, &name, &ext).unwrap();
             outputs.insert(name, vec![0.0; len]);
         }
-        vectorization_case(&mut csv, v, "hydro2d", "j", ni, &ext, cells, &inputs, &outputs);
+        let case = Case { v, threads: t, app: "hydro2d", outer: "j", n: ni, cells };
+        vectorization_case(&mut csv, &mut rows, &case, &ext, &inputs, &outputs);
     }
 
-    csv
+    (csv, rows)
 }
 
 /// The strategy specs compared by [`vectorization`] for one app
 /// (scalar baseline first; `tiled` = outer lanes × inner strips, the
-/// schedule-IR multi-dim tiling).
-fn vectorization_strategies(app: &str, outer: &str, v: usize) -> Vec<(String, PlanSpec)> {
+/// schedule-IR multi-dim tiling). The third element is the *runtime*
+/// worker count the strategy runs at — `parallel` rows reuse the scalar
+/// and tiled *plans* and differ only in the [`Threads`] knob, which is
+/// the whole point: thread count is outside the plan fingerprint.
+fn vectorization_strategies(
+    app: &str,
+    outer: &str,
+    v: usize,
+    threads: usize,
+) -> Vec<(String, PlanSpec, usize)> {
+    let outer_spec =
+        || PlanSpec::app(app).vlen(Vlen::Fixed(v)).vec_dim(VecDim::Outer(outer.to_string()));
     vec![
-        ("scalar".to_string(), PlanSpec::app(app).vlen(Vlen::Fixed(1))),
-        ("inner-vec".to_string(), PlanSpec::app(app).vlen(Vlen::Fixed(v))),
-        ("inner+aligned".to_string(), PlanSpec::app(app).vlen(Vlen::Fixed(v)).aligned(true)),
-        (
-            format!("outer:{outer}"),
-            PlanSpec::app(app).vlen(Vlen::Fixed(v)).vec_dim(VecDim::Outer(outer.to_string())),
-        ),
-        (
-            format!("outer:{outer}+aligned"),
-            PlanSpec::app(app)
-                .vlen(Vlen::Fixed(v))
-                .vec_dim(VecDim::Outer(outer.to_string()))
-                .aligned(true),
-        ),
-        (
-            format!("tiled:{outer}"),
-            PlanSpec::app(app)
-                .vlen(Vlen::Fixed(v))
-                .vec_dim(VecDim::Outer(outer.to_string()))
-                .tiled(true),
-        ),
+        ("scalar".to_string(), PlanSpec::app(app).vlen(Vlen::Fixed(1)), 1),
+        ("inner-vec".to_string(), PlanSpec::app(app).vlen(Vlen::Fixed(v)), 1),
+        ("inner+aligned".to_string(), PlanSpec::app(app).vlen(Vlen::Fixed(v)).aligned(true), 1),
+        (format!("outer:{outer}"), outer_spec(), 1),
+        (format!("outer:{outer}+aligned"), outer_spec().aligned(true), 1),
+        (format!("tiled:{outer}"), outer_spec().tiled(true), 1),
+        ("parallel".to_string(), PlanSpec::app(app).vlen(Vlen::Fixed(1)), threads),
+        ("parallel+tiled".to_string(), outer_spec().tiled(true), threads),
     ]
 }
 
+/// One app of the vectorization comparison: fixed compile-time knobs
+/// plus the worker count the `parallel` rows run at.
+struct Case<'a> {
+    v: usize,
+    threads: usize,
+    app: &'a str,
+    outer: &'a str,
+    n: usize,
+    cells: f64,
+}
+
 /// Time every strategy of one app on the native-C engine and report
-/// rows + CSV (first strategy is the scalar baseline).
-#[allow(clippy::too_many_arguments)]
+/// rows + CSV (first strategy is the scalar baseline). Every strategy's
+/// output is compared bitwise against the serial scalar baseline before
+/// timing, and each row carries the plan's walk-derived
+/// [`crate::schedule::ScheduleStats`] at its worker count.
 fn vectorization_case(
     csv: &mut Vec<String>,
-    v: usize,
-    app: &str,
-    outer: &str,
-    n: usize,
+    rows: &mut Vec<report::VecRow>,
+    case: &Case<'_>,
     ext: &BTreeMap<String, i64>,
-    cells: f64,
     inputs: &BTreeMap<String, Vec<f64>>,
     outputs: &BTreeMap<String, Vec<f64>>,
 ) {
+    let (app, outer) = (case.app, case.outer);
+    let extents_label = ext.values().map(|v| v.to_string()).collect::<Vec<_>>().join("x");
     let mut t_scalar = 0.0;
-    for (k, (label, spec)) in vectorization_strategies(app, outer, v).into_iter().enumerate() {
+    let mut baseline: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    let strategies = vectorization_strategies(app, outer, case.v, case.threads);
+    for (k, (label, spec, nthreads)) in strategies.into_iter().enumerate() {
         let prog = spec.compile().unwrap();
         let module = crate::codegen::native::build(&prog, &Default::default()).unwrap();
+        let knob = if nthreads > 1 { Threads::Fixed(nthreads) } else { Threads::Serial };
         let mut arrays = inputs.clone();
         for (name, zeros) in outputs {
             arrays.insert(name.clone(), zeros.clone());
         }
-        let t = time_it(|| module.run(ext, &mut arrays).unwrap(), 3, 0.2);
+        // Correctness first: one run, compared bitwise against the
+        // serial scalar baseline (which row 0 establishes).
+        module.run_with(ext, &mut arrays, knob).unwrap();
+        let bitwise = if k == 0 {
+            for name in outputs.keys() {
+                baseline.insert(name.clone(), arrays[name].clone());
+            }
+            true
+        } else {
+            outputs.keys().all(|name| arrays[name] == baseline[name])
+        };
+        let t = time_it(|| module.run_with(ext, &mut arrays, knob).unwrap(), 3, 0.2);
         if k == 0 {
             t_scalar = t;
         }
-        row(&format!("{app}/{label}"), n, t, cells);
-        println!("      {:.2}x vs scalar", t_scalar / t);
-        csv.push(format!("{app},{label},{:.3},{:.2}", cells / t / 1e6, t_scalar / t));
+        let stats = prog.schedule_stats(ext, nthreads.max(1)).unwrap();
+        row(&format!("{app}/{label}"), case.n, t, case.cells);
+        println!(
+            "      {:.2}x vs scalar{}",
+            t_scalar / t,
+            if bitwise { "" } else { "  BITWISE MISMATCH" }
+        );
+        csv.push(format!(
+            "{app},{label},{nthreads},{:.3},{:.2},{bitwise}",
+            case.cells / t / 1e6,
+            t_scalar / t
+        ));
+        rows.push(report::VecRow {
+            app: app.to_string(),
+            strategy: label,
+            engine: "native".to_string(),
+            vlen: prog.vector_len(),
+            threads: nthreads,
+            extents: extents_label.clone(),
+            mcells_per_s: case.cells / t / 1e6,
+            speedup_vs_scalar: t_scalar / t,
+            bitwise_vs_scalar: bitwise,
+            invocations: stats.invocations,
+            loads: stats.loads,
+            stores: stats.stores,
+            parallel_chunks: stats.parallel.iter().map(|p| p.chunks as u64).sum(),
+        });
     }
 }
 

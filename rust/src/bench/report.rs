@@ -1,0 +1,209 @@
+//! Machine-readable bench reports: a stable, diffable JSON schema for
+//! the vectorization and serving benchmarks (`hfav bench ... --json`).
+//!
+//! The schema is the contract: every row carries the same keys in the
+//! same order, values are plain numbers/strings/bools, and the top-level
+//! `schema` tag is versioned (`hfav-bench-vectorization/v1`,
+//! `hfav-bench-serving/v1`). CI diffs the *key structure* of a fresh run
+//! against the committed `BENCH_*.json` baselines — values are advisory
+//! (they move with the host), the schema is strict. Serialization is
+//! hand-rolled (ordered keys, fixed float precision) so the crate needs
+//! no JSON dependency and identical runs produce byte-identical files.
+
+use std::fmt::Write;
+
+/// Schema tag of [`vectorization_json`].
+pub const VEC_SCHEMA: &str = "hfav-bench-vectorization/v1";
+/// Schema tag of [`serving_json`].
+pub const SERVE_SCHEMA: &str = "hfav-bench-serving/v1";
+
+/// One measured strategy of the vectorization benchmark.
+#[derive(Debug, Clone)]
+pub struct VecRow {
+    pub app: String,
+    /// Strategy label (`scalar`, `inner-vec`, `outer:k`, `parallel`,
+    /// `parallel+tiled`, ...).
+    pub strategy: String,
+    /// Engine registry name the row ran on (`native`).
+    pub engine: String,
+    /// Effective vector length the plan compiled at.
+    pub vlen: usize,
+    /// Runtime worker count the row ran at (1 = serial).
+    pub threads: usize,
+    /// Grid shape, extent values in sorted-name order (`NixNjxNk`).
+    pub extents: String,
+    pub mcells_per_s: f64,
+    pub speedup_vs_scalar: f64,
+    /// Outputs bitwise-equal to the serial scalar baseline.
+    pub bitwise_vs_scalar: bool,
+    /// [`crate::schedule::ScheduleStats`] of the plan at this shape.
+    pub invocations: u64,
+    pub loads: u64,
+    pub stores: u64,
+    /// Chunks the plan's parallel levels decompose into at `threads`
+    /// (0 = the plan has no parallel level).
+    pub parallel_chunks: u64,
+}
+
+/// One serving-benchmark scenario.
+#[derive(Debug, Clone)]
+pub struct ServeRow {
+    pub scenario: String,
+    pub workers: usize,
+    /// Intra-job worker count requested for every job (1 = serial).
+    pub threads: usize,
+    pub jobs: usize,
+    pub distinct_plan_keys: usize,
+    pub plan_compiles: u64,
+    pub plan_hit_rate: f64,
+    pub mcells_per_s: f64,
+    pub batches: u64,
+    pub batch_wall_ms: f64,
+    /// Largest effective intra-job worker count the report recorded.
+    pub threads_effective: u64,
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "0.000".to_string()
+    }
+}
+
+fn header(out: &mut String, schema: &str) {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let _ = writeln!(out, "{{");
+    let _ = writeln!(out, "  \"schema\": \"{schema}\",");
+    let _ = writeln!(out, "  \"sysinfo\": {{ \"logical_cores\": {cores} }},");
+    let _ = writeln!(out, "  \"rows\": [");
+}
+
+fn footer(out: &mut String) {
+    let _ = writeln!(out, "  ]");
+    let _ = writeln!(out, "}}");
+}
+
+/// Render the vectorization report (`BENCH_vectorization.json`).
+pub fn vectorization_json(rows: &[VecRow]) -> String {
+    let mut out = String::new();
+    header(&mut out, VEC_SCHEMA);
+    for (k, r) in rows.iter().enumerate() {
+        let comma = if k + 1 < rows.len() { "," } else { "" };
+        let _ = writeln!(
+            out,
+            "    {{ \"app\": \"{}\", \"strategy\": \"{}\", \"engine\": \"{}\", \
+             \"vlen\": {}, \"threads\": {}, \"extents\": \"{}\", \
+             \"mcells_per_s\": {}, \"speedup_vs_scalar\": {}, \
+             \"bitwise_vs_scalar\": {}, \"invocations\": {}, \"loads\": {}, \
+             \"stores\": {}, \"parallel_chunks\": {} }}{comma}",
+            esc(&r.app),
+            esc(&r.strategy),
+            esc(&r.engine),
+            r.vlen,
+            r.threads,
+            esc(&r.extents),
+            num(r.mcells_per_s),
+            num(r.speedup_vs_scalar),
+            r.bitwise_vs_scalar,
+            r.invocations,
+            r.loads,
+            r.stores,
+            r.parallel_chunks
+        );
+    }
+    footer(&mut out);
+    out
+}
+
+/// Render the serving report (`BENCH_serving.json`).
+pub fn serving_json(rows: &[ServeRow]) -> String {
+    let mut out = String::new();
+    header(&mut out, SERVE_SCHEMA);
+    for (k, r) in rows.iter().enumerate() {
+        let comma = if k + 1 < rows.len() { "," } else { "" };
+        let _ = writeln!(
+            out,
+            "    {{ \"scenario\": \"{}\", \"workers\": {}, \"threads\": {}, \
+             \"jobs\": {}, \"distinct_plan_keys\": {}, \"plan_compiles\": {}, \
+             \"plan_hit_rate\": {}, \"mcells_per_s\": {}, \"batches\": {}, \
+             \"batch_wall_ms\": {}, \"threads_effective\": {} }}{comma}",
+            esc(&r.scenario),
+            r.workers,
+            r.threads,
+            r.jobs,
+            r.distinct_plan_keys,
+            r.plan_compiles,
+            num(r.plan_hit_rate),
+            num(r.mcells_per_s),
+            r.batches,
+            num(r.batch_wall_ms),
+            r.threads_effective
+        );
+    }
+    footer(&mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vec_row() -> VecRow {
+        VecRow {
+            app: "cosmo".into(),
+            strategy: "parallel".into(),
+            engine: "native".into(),
+            vlen: 1,
+            threads: 4,
+            extents: "128x128x32".into(),
+            mcells_per_s: 123.456789,
+            speedup_vs_scalar: 1.75,
+            bitwise_vs_scalar: true,
+            invocations: 10,
+            loads: 20,
+            stores: 5,
+            parallel_chunks: 4,
+        }
+    }
+
+    #[test]
+    fn vectorization_schema_is_stable() {
+        let text = vectorization_json(&[vec_row(), vec_row()]);
+        assert!(text.contains("\"schema\": \"hfav-bench-vectorization/v1\""), "{text}");
+        assert!(text.contains("\"strategy\": \"parallel\""), "{text}");
+        assert!(text.contains("\"mcells_per_s\": 123.457"), "{text}");
+        assert!(text.contains("\"bitwise_vs_scalar\": true"), "{text}");
+        assert!(text.contains("\"parallel_chunks\": 4"), "{text}");
+        // Deterministic: two renders of the same rows are byte-identical.
+        assert_eq!(text, vectorization_json(&[vec_row(), vec_row()]));
+        // Exactly one trailing comma between the two rows, none after the
+        // last — the output is real JSON.
+        assert_eq!(text.matches("},").count(), 2, "{text}"); // sysinfo + row 1
+    }
+
+    #[test]
+    fn serving_schema_is_stable() {
+        let r = ServeRow {
+            scenario: "mixed-trace".into(),
+            workers: 4,
+            threads: 2,
+            jobs: 30,
+            distinct_plan_keys: 5,
+            plan_compiles: 5,
+            plan_hit_rate: 0.8333,
+            mcells_per_s: 55.5,
+            batches: 1,
+            batch_wall_ms: 12.5,
+            threads_effective: 2,
+        };
+        let text = serving_json(&[r]);
+        assert!(text.contains("\"schema\": \"hfav-bench-serving/v1\""), "{text}");
+        assert!(text.contains("\"plan_hit_rate\": 0.833"), "{text}");
+        assert!(text.contains("\"threads_effective\": 2"), "{text}");
+    }
+}

@@ -84,6 +84,10 @@ pub struct NativeModule {
     /// Keep the library alive for the lifetime of `run_fn`.
     _lib: Library,
     run_fn: unsafe extern "C" fn(*const i64, *const *mut f64),
+    /// Optional runtime thread knob exported by generated code that has a
+    /// parallel chunk level (`hfav_set_threads`). `None` for older or
+    /// chunk-free artifacts — the knob silently degrades to serial.
+    set_threads_fn: Option<unsafe extern "C" fn(i64)>,
     pub extents: Vec<String>,
     pub externals: Vec<String>,
     /// The emitted source this module was compiled from (C99 for
@@ -107,9 +111,10 @@ impl Default for CcOptions {
                 "-O3".into(),
                 "-march=native".into(),
                 "-fno-math-errno".into(),
-                // Honor `#pragma omp simd` on strip-mined lane loops
-                // without pulling in the OpenMP runtime.
-                "-fopenmp-simd".into(),
+                // Full OpenMP: `#pragma omp simd` on strip-mined lane
+                // loops AND `#pragma omp parallel for` on parallel chunk
+                // levels (the intra-job multicore schedule level).
+                "-fopenmp".into(),
                 "-shared".into(),
                 "-fPIC".into(),
             ],
@@ -244,9 +249,15 @@ fn load_module(
     let run_fn = unsafe {
         std::mem::transmute::<*mut c_void, unsafe extern "C" fn(*const i64, *const *mut f64)>(sym)
     };
+    // SAFETY: both generators declare it `void hfav_set_threads(int64_t)`
+    // when present.
+    let set_threads_fn = lib.sym("hfav_set_threads").ok().map(|p| unsafe {
+        std::mem::transmute::<*mut c_void, unsafe extern "C" fn(i64)>(p)
+    });
     Ok(NativeModule {
         _lib: lib,
         run_fn,
+        set_threads_fn,
         extents: c99::extent_names(prog),
         externals: c99::external_names(prog),
         c_source: source,
@@ -264,6 +275,30 @@ impl NativeModule {
         extents: &BTreeMap<String, i64>,
         arrays: &mut BTreeMap<String, Vec<f64>>,
     ) -> Result<(), String> {
+        self.run_with(extents, arrays, crate::engine::Threads::Serial)
+    }
+
+    /// [`run`](NativeModule::run) at an explicit chunk-thread count. The
+    /// knob is a module global behind an atomic in the generated code
+    /// (`hfav_set_threads`): last writer wins, and *any* count yields
+    /// bitwise-identical results, so concurrent runs of one shared module
+    /// at different counts stay correct (one may merely run at the
+    /// other's width). Artifacts without a parallel level ignore it.
+    pub fn run_with(
+        &self,
+        extents: &BTreeMap<String, i64>,
+        arrays: &mut BTreeMap<String, Vec<f64>>,
+        threads: crate::engine::Threads,
+    ) -> Result<(), String> {
+        if let Some(set) = self.set_threads_fn {
+            let n: i64 = match threads {
+                crate::engine::Threads::Serial => 1,
+                crate::engine::Threads::Fixed(n) => n.max(1) as i64,
+                // <= 0 means "all cores" to the generated code.
+                crate::engine::Threads::Auto => 0,
+            };
+            unsafe { set(n) };
+        }
         let ext: Vec<i64> = self
             .extents
             .iter()

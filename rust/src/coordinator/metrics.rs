@@ -23,6 +23,14 @@ pub struct Metrics {
     pub vlen_min: AtomicU64,
     /// Largest effective vector length served so far (0 = none yet).
     pub vlen_max: AtomicU64,
+    /// `run_batch` calls completed.
+    pub batches: AtomicU64,
+    /// Aggregate wall time spent inside `run_batch` (microseconds) —
+    /// submit-to-last-result per batch, summed.
+    pub batch_wall_us: AtomicU64,
+    /// Largest effective intra-job worker count served so far (resolved
+    /// from the job's [`crate::engine::Threads`] knob; 0 = none yet).
+    pub threads_max: AtomicU64,
 }
 
 impl Metrics {
@@ -56,6 +64,17 @@ impl Metrics {
                 Err(now) => cur = now,
             }
         }
+    }
+
+    /// Record one completed batch and its wall time.
+    pub fn record_batch(&self, wall: Duration) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_wall_us.fetch_add(wall.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    /// Record the effective intra-job worker count of a served job.
+    pub fn record_threads(&self, threads: u64) {
+        self.threads_max.fetch_max(threads.max(1), Ordering::Relaxed);
     }
 
     pub fn percentile(&self, p: f64) -> Duration {
@@ -102,6 +121,13 @@ pub struct ServeReport {
     pub vlen_min: u64,
     /// Largest effective vector length among served plans (0 = none).
     pub vlen_max: u64,
+    /// `run_batch` calls this report covers.
+    pub batches: u64,
+    /// Aggregate wall time spent inside `run_batch` (all batches).
+    pub batch_wall: Duration,
+    /// Largest effective intra-job worker count served (0 = none —
+    /// e.g. only artifact-executing backends ran).
+    pub threads_effective: u64,
 }
 
 impl ServeReport {
@@ -111,6 +137,24 @@ impl ServeReport {
             0.0
         } else {
             self.total_cells as f64 / self.wall.as_secs_f64()
+        }
+    }
+
+    /// Mean wall time per batch (zero when no batch ran).
+    pub fn batch_wall_mean(&self) -> Duration {
+        if self.batches == 0 {
+            Duration::ZERO
+        } else {
+            self.batch_wall / self.batches as u32
+        }
+    }
+
+    /// Human-readable effective intra-job worker count: `-` when none
+    /// was recorded, otherwise the maximum served.
+    pub fn threads_label(&self) -> String {
+        match self.threads_effective {
+            0 => "-".to_string(),
+            n => n.to_string(),
         }
     }
 
@@ -133,10 +177,17 @@ impl std::fmt::Display for ServeReport {
         )?;
         writeln!(
             f,
-            "throughput: {:.1} Mcells/s over wall={:?} (effective vlen {})",
+            "throughput: {:.1} Mcells/s over wall={:?} (effective vlen {}, threads {})",
             self.throughput() / 1e6,
             self.wall,
-            self.vlen_label()
+            self.vlen_label(),
+            self.threads_label()
+        )?;
+        writeln!(
+            f,
+            "batches: {} (mean wall {:?}/batch)",
+            self.batches,
+            self.batch_wall_mean()
         )?;
         writeln!(f, "plan cache:     {}", self.plans)?;
         writeln!(f, "prepared execs: {}", self.prepared)?;
@@ -193,13 +244,32 @@ mod tests {
             buffers_allocated: 4,
             vlen_min: 1,
             vlen_max: 8,
+            batches: 2,
+            batch_wall: Duration::from_millis(10),
+            threads_effective: 4,
         };
         assert!((r.throughput() - 1e6).abs() < 1e-6);
         assert_eq!(r.vlen_label(), "1..8");
+        assert_eq!(r.batch_wall_mean(), Duration::from_millis(5));
+        assert_eq!(r.threads_label(), "4");
         let text = format!("{r}");
         assert!(text.contains("plan cache"), "{text}");
         assert!(text.contains("reused=3"), "{text}");
-        assert!(text.contains("effective vlen 1..8"), "{text}");
+        assert!(text.contains("effective vlen 1..8, threads 4"), "{text}");
+        assert!(text.contains("batches: 2"), "{text}");
+    }
+
+    #[test]
+    fn batch_and_thread_counters() {
+        let m = Metrics::default();
+        m.record_batch(Duration::from_micros(1500));
+        m.record_batch(Duration::from_micros(500));
+        m.record_threads(1);
+        m.record_threads(4);
+        m.record_threads(2);
+        assert_eq!(m.batches.load(Ordering::Relaxed), 2);
+        assert_eq!(m.batch_wall_us.load(Ordering::Relaxed), 2000);
+        assert_eq!(m.threads_max.load(Ordering::Relaxed), 4);
     }
 
     #[test]

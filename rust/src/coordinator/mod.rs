@@ -57,16 +57,35 @@ pub struct Job {
     /// are shape-generic, so this affects *execution* (and the batch
     /// identity), never the plan-cache key.
     pub extents: Option<Vec<i64>>,
+    /// Intra-job worker count for the plan's parallel chunk levels — a
+    /// *runtime* knob ([`engine::RunConfig`]), deliberately outside both
+    /// the [`PlanSpec`] and the plan/batch cache identities: one compiled
+    /// plan serves every core count.
+    pub threads: engine::Threads,
 }
 
 impl Job {
     pub fn new(id: u64, spec: PlanSpec, backend: &str, size: usize, steps: usize) -> Job {
-        Job { id, spec, backend: backend.to_string(), size, steps, extents: None }
+        Job {
+            id,
+            spec,
+            backend: backend.to_string(),
+            size,
+            steps,
+            extents: None,
+            threads: engine::Threads::Serial,
+        }
     }
 
     /// Attach a per-job extents override (see [`Job::extents`]).
     pub fn with_extents(mut self, extents: Vec<i64>) -> Job {
         self.extents = Some(extents);
+        self
+    }
+
+    /// Set the intra-job worker count (see [`Job::threads`]).
+    pub fn with_threads(mut self, threads: engine::Threads) -> Job {
+        self.threads = threads;
         self
     }
 
@@ -236,6 +255,7 @@ impl Coordinator {
         if n == 0 {
             return Vec::new();
         }
+        let batch_start = Instant::now();
         let mut groups: BTreeMap<BatchKey, Vec<(usize, Job)>> = BTreeMap::new();
         for (slot, job) in jobs.into_iter().enumerate() {
             groups.entry(batch_key(&job)).or_default().push((slot, job));
@@ -255,6 +275,7 @@ impl Coordinator {
             let (slot, res) = rrx.recv().expect("worker died");
             out[slot] = Some(res);
         }
+        self.metrics.record_batch(batch_start.elapsed());
         out.into_iter().map(|r| r.expect("missing result")).collect()
     }
 
@@ -277,16 +298,37 @@ impl Coordinator {
             buffers_allocated: self.metrics.buffers_allocated.load(Ordering::Relaxed),
             vlen_min: self.metrics.vlen_min.load(Ordering::Relaxed),
             vlen_max: self.metrics.vlen_max.load(Ordering::Relaxed),
+            batches: self.metrics.batches.load(Ordering::Relaxed),
+            batch_wall: Duration::from_micros(self.metrics.batch_wall_us.load(Ordering::Relaxed)),
+            threads_effective: self.metrics.threads_max.load(Ordering::Relaxed),
         }
     }
 
-    pub fn shutdown(mut self) {
+    /// Stop the pool, draining in-flight work: each worker finishes its
+    /// current job (and any intra-job parallel chunks — [`exec::pool`]
+    /// scatter is synchronous, so chunks never outlive their job) before
+    /// seeing the stop message, and every thread is joined.
+    pub fn shutdown(self) {
+        // Drop runs `stop()`; taking `self` by value keeps the explicit
+        // call sites and makes "shut down" a move, not a method you can
+        // call twice.
+    }
+
+    fn stop(&mut self) {
         for _ in &self.workers {
             let _ = self.tx.send(Msg::Stop);
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+impl Drop for Coordinator {
+    /// A dropped coordinator shuts down cleanly even without an explicit
+    /// [`Coordinator::shutdown`] — no detached workers, no lost chunks.
+    fn drop(&mut self) {
+        self.stop();
     }
 }
 
@@ -385,6 +427,7 @@ impl Worker {
             // PJRT runs fixed pre-built artifacts; the compiled plan's
             // vector length says nothing about what it executes.
             self.metrics.record_vlen(prog.vector_len());
+            self.metrics.record_threads(job.threads.resolve() as u64);
         }
         let ctx = PrepareCtx { artifacts: self.artifacts.clone() };
         // Retrying cache: a cc/rustc/dlopen failure may be transient
@@ -423,7 +466,8 @@ impl Worker {
             }
         };
         let mut state = sod(nx, ny);
-        let mut sweeper = ExecutableSweeper { exe, ws: &mut self.ws };
+        let cfg = engine::RunConfig::with_threads(job.threads);
+        let mut sweeper = ExecutableSweeper { exe, ws: &mut self.ws, cfg };
         for _ in 0..job.steps {
             step(&mut state, 1.0 / nx as f64, 0.4, &mut sweeper)?;
         }
@@ -487,8 +531,9 @@ impl Worker {
                 arrays.insert(name.clone(), vec![0.0; len]);
             }
         }
+        let cfg = engine::RunConfig::with_threads(job.threads);
         for _ in 0..job.steps.max(1) {
-            exe.run(&ext, &mut arrays, &mut self.ws)?;
+            exe.run_with(&ext, &mut arrays, &mut self.ws, &cfg)?;
         }
         let mut checksum = 0.0;
         for name in output_names.difference(&input_names) {
@@ -506,6 +551,7 @@ impl Worker {
 struct ExecutableSweeper<'a> {
     exe: &'a dyn Executable,
     ws: &'a mut exec::Workspace,
+    cfg: engine::RunConfig,
 }
 
 impl crate::apps::hydro2d::solver::Sweeper for ExecutableSweeper<'_> {
@@ -531,7 +577,7 @@ impl crate::apps::hydro2d::solver::Sweeper for ExecutableSweeper<'_> {
         for name in ["g_nrho", "g_nrhou", "g_nrhov", "g_nE"] {
             arrays.insert(name.to_string(), vec![0.0; rows * n]);
         }
-        self.exe.run(&ext, &mut arrays, self.ws)?;
+        self.exe.run_with(&ext, &mut arrays, self.ws, &self.cfg)?;
         let mut take = |name: &str| arrays.remove(name).ok_or_else(|| format!("missing `{name}`"));
         Ok([take("g_nrho")?, take("g_nrhou")?, take("g_nrhov")?, take("g_nE")?])
     }
@@ -608,6 +654,7 @@ pub fn parse_trace_line(id: u64, line: &str) -> Result<Job, String> {
         size: f[3].parse().map_err(|e| format!("size: {e}"))?,
         steps: f[4].parse().map_err(|e| format!("steps: {e}"))?,
         extents,
+        threads: engine::Threads::Serial,
     })
 }
 
@@ -771,6 +818,40 @@ mod tests {
         assert_eq!(rep.vlen_min, 1);
         assert_eq!(rep.vlen_max, 8);
         c.shutdown();
+    }
+
+    #[test]
+    fn threads_are_runtime_only_and_bitwise_stable() {
+        // The knob changes neither the plan key nor the batch identity —
+        // one compiled plan, one warm-workspace group, any core count.
+        let base = mk(11, "cosmo", Variant::Hfav, "exec", 16, 1);
+        let threaded = base.clone().with_threads(engine::Threads::Fixed(3));
+        assert_eq!(base.plan_key(), threaded.plan_key());
+        assert_eq!(batch_key(&base), batch_key(&threaded));
+        let c = Coordinator::start(2, None);
+        let r1 = c.submit(base).recv().unwrap();
+        let r2 = c.submit(threaded).recv().unwrap();
+        assert!(r1.ok, "{}", r1.detail);
+        assert!(r2.ok, "{}", r2.detail);
+        assert_eq!(r1.checksum, r2.checksum, "threads changed results");
+        let rep = c.report(Duration::from_millis(1));
+        assert_eq!(rep.threads_effective, 3, "{rep}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn batches_are_metered() {
+        let c = Coordinator::start(2, None);
+        let jobs: Vec<Job> =
+            (0..4).map(|i| mk(i, "laplace", Variant::Hfav, "exec", 24, 1)).collect();
+        let results = c.run_batch(jobs);
+        assert!(results.iter().all(|r| r.ok));
+        let rep = c.report(Duration::from_millis(1));
+        assert_eq!(rep.batches, 1);
+        assert!(rep.batch_wall > Duration::ZERO, "{rep}");
+        assert!(rep.batch_wall_mean() > Duration::ZERO);
+        // Dropping without an explicit shutdown still drains the pool.
+        drop(c);
     }
 
     #[test]

@@ -42,20 +42,97 @@ pub struct PrepareCtx {
     pub artifacts: Option<PathBuf>,
 }
 
+/// Intra-job worker-thread count: a **runtime** knob, deliberately not
+/// part of [`PlanSpec`] or `PlanKey` identity — one compiled plan (one
+/// schedule tree, one loaded module) serves any core count, because the
+/// schedule's `Parallel` levels defer chunking to run time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Threads {
+    /// One chunk: bitwise- and order-identical to the pre-parallel
+    /// engine, and the default everywhere (paper figures are serial).
+    #[default]
+    Serial,
+    /// Exactly `n` chunk workers.
+    Fixed(usize),
+    /// One chunk worker per available core.
+    Auto,
+}
+
+impl Threads {
+    /// Concrete worker count (>= 1).
+    pub fn resolve(self) -> usize {
+        match self {
+            Threads::Serial => 1,
+            Threads::Fixed(n) => n.max(1),
+            Threads::Auto => {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            }
+        }
+    }
+
+    /// The `--threads` spelling (`serial` | `auto` | a positive count).
+    pub fn label(self) -> String {
+        match self {
+            Threads::Serial => "serial".to_string(),
+            Threads::Fixed(n) => n.to_string(),
+            Threads::Auto => "auto".to_string(),
+        }
+    }
+}
+
+impl std::str::FromStr for Threads {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Threads, String> {
+        match s.trim() {
+            "serial" | "1" => Ok(Threads::Serial),
+            "auto" => Ok(Threads::Auto),
+            t => match t.parse::<usize>() {
+                Ok(n) if n >= 1 => Ok(Threads::Fixed(n)),
+                _ => Err(format!("bad --threads `{s}` (serial | auto | N >= 1)")),
+            },
+        }
+    }
+}
+
+/// Per-run execution knobs, passed through [`Executable::run_with`].
+/// Everything here is excluded from plan fingerprints by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RunConfig {
+    pub threads: Threads,
+}
+
+impl RunConfig {
+    pub fn with_threads(threads: Threads) -> RunConfig {
+        RunConfig { threads }
+    }
+}
+
 /// A prepared, runnable form of one compiled plan. Implementations are
 /// shared pool-wide behind the coordinator's prepared-executable cache,
 /// so they must be stateless across runs (per-run scratch lives in the
-/// caller's [`Workspace`]).
+/// caller's [`Workspace`], per-run knobs in the [`RunConfig`]).
 pub trait Executable: Send + Sync {
     /// Run the plan once over `extents` and the named external `arrays`
     /// (inputs seeded by the caller, outputs zero-filled; results are
-    /// written back into `arrays`).
+    /// written back into `arrays`), under the given runtime knobs.
+    /// Engines without a parallel path ignore `cfg`.
+    fn run_with(
+        &self,
+        extents: &BTreeMap<String, i64>,
+        arrays: &mut BTreeMap<String, Vec<f64>>,
+        ws: &mut Workspace,
+        cfg: &RunConfig,
+    ) -> Result<(), String>;
+
+    /// [`Executable::run_with`] at the default (serial) knobs.
     fn run(
         &self,
         extents: &BTreeMap<String, i64>,
         arrays: &mut BTreeMap<String, Vec<f64>>,
         ws: &mut Workspace,
-    ) -> Result<(), String>;
+    ) -> Result<(), String> {
+        self.run_with(extents, arrays, ws, &RunConfig::default())
+    }
 }
 
 /// An execution engine: knows its registry name, whether the host can
@@ -154,11 +231,12 @@ struct InterpExecutable {
 }
 
 impl Executable for InterpExecutable {
-    fn run(
+    fn run_with(
         &self,
         extents: &BTreeMap<String, i64>,
         arrays: &mut BTreeMap<String, Vec<f64>>,
         ws: &mut Workspace,
+        cfg: &RunConfig,
     ) -> Result<(), String> {
         // Move (not clone) the declared inputs into the executor's input
         // map; everything is restored afterwards so callers see inputs
@@ -169,7 +247,8 @@ impl Executable for InterpExecutable {
                 inputs.insert(name.clone(), v);
             }
         }
-        let result = exec::run_with(&self.prog, &self.reg, extents, &inputs, self.opts, ws);
+        let opts = ExecOptions { threads: cfg.threads.resolve(), ..self.opts };
+        let result = exec::run_with(&self.prog, &self.reg, extents, &inputs, opts, ws);
         arrays.append(&mut inputs);
         for (k, v) in result? {
             arrays.insert(k, v);
@@ -207,13 +286,14 @@ impl Backend for InterpBackend {
 // ---------------------------------------------------------------------------
 
 impl Executable for NativeModule {
-    fn run(
+    fn run_with(
         &self,
         extents: &BTreeMap<String, i64>,
         arrays: &mut BTreeMap<String, Vec<f64>>,
         _ws: &mut Workspace,
+        cfg: &RunConfig,
     ) -> Result<(), String> {
-        NativeModule::run(self, extents, arrays)
+        NativeModule::run_with(self, extents, arrays, cfg.threads)
     }
 }
 
@@ -298,11 +378,13 @@ struct PjrtExecutable {
 }
 
 impl Executable for PjrtExecutable {
-    fn run(
+    // PJRT artifacts are fixed programs: the threads knob does not apply.
+    fn run_with(
         &self,
         _extents: &BTreeMap<String, i64>,
         arrays: &mut BTreeMap<String, Vec<f64>>,
         _ws: &mut Workspace,
+        _cfg: &RunConfig,
     ) -> Result<(), String> {
         // PJRT clients are not Send; when the real client is re-vendored
         // this must hold a per-thread runtime cache instead.
@@ -451,6 +533,50 @@ mod tests {
         assert!(apps::max_err(&arrays["g_out"], &want) < 1e-12);
         // Inputs survive the run (module-backend parity).
         assert_eq!(arrays["g_cell"], u);
+    }
+
+    #[test]
+    fn threads_knob_parses_and_resolves() {
+        assert_eq!("serial".parse::<Threads>().unwrap(), Threads::Serial);
+        assert_eq!("1".parse::<Threads>().unwrap(), Threads::Serial);
+        assert_eq!("4".parse::<Threads>().unwrap(), Threads::Fixed(4));
+        assert_eq!("auto".parse::<Threads>().unwrap(), Threads::Auto);
+        assert!("0".parse::<Threads>().is_err());
+        assert!("fast".parse::<Threads>().is_err());
+        assert_eq!(Threads::Serial.resolve(), 1);
+        assert_eq!(Threads::Fixed(3).resolve(), 3);
+        assert!(Threads::Auto.resolve() >= 1);
+        assert_eq!(Threads::default(), Threads::Serial);
+        assert_eq!(RunConfig::default().threads, Threads::Serial);
+        assert_eq!(Threads::Fixed(2).label(), "2");
+    }
+
+    #[test]
+    fn exec_backend_threads_are_bitwise_identical() {
+        // Same prepared executable, different RunConfig: one plan serves
+        // any core count and results never move.
+        let spec = crate::plan::PlanSpec::app("laplace");
+        let prog = Arc::new(spec.compile().unwrap());
+        let exe = registry()
+            .get("exec")
+            .unwrap()
+            .prepare(&spec, &prog, &PrepareCtx::default())
+            .unwrap();
+        let (nj, ni) = (10usize, 17usize);
+        let ext: BTreeMap<String, i64> =
+            [("Nj".to_string(), nj as i64), ("Ni".to_string(), ni as i64)].into();
+        let u = apps::seeded(nj * ni, 3);
+        let mut run = |threads: Threads| {
+            let mut arrays = BTreeMap::new();
+            arrays.insert("g_cell".to_string(), u.clone());
+            let mut ws = Workspace::new();
+            exe.run_with(&ext, &mut arrays, &mut ws, &RunConfig::with_threads(threads)).unwrap();
+            arrays.remove("g_out").unwrap()
+        };
+        let serial = run(Threads::Serial);
+        for t in [Threads::Fixed(2), Threads::Fixed(3), Threads::Auto] {
+            assert_eq!(run(t), serial, "{t:?} must be bitwise identical");
+        }
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! — the instrumented trace the property suite compares against
 //! [`crate::schedule::Schedule::visit`].
 
+pub mod pool;
 pub mod registry;
 
 use crate::analysis::DimSize;
@@ -27,6 +28,7 @@ use crate::plan::Program;
 use crate::schedule::Node;
 use registry::Registry;
 use std::collections::BTreeMap;
+use std::sync::Mutex;
 
 /// Execution mode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -35,17 +37,22 @@ pub enum Mode {
     Guarded,
 }
 
-/// Executor options. The loop shapes themselves (strips, lanes, peels)
-/// are carried by the compiled plan's schedule tree — there is nothing
-/// shape-related to configure here.
+/// Executor options. The loop shapes themselves (strips, lanes, peels,
+/// parallel levels) are carried by the compiled plan's schedule tree —
+/// there is nothing shape-related to configure here; `threads` only
+/// sets how many chunk workers a `Parallel` level may use at run time.
 #[derive(Debug, Clone, Copy)]
 pub struct ExecOptions {
     pub mode: Mode,
+    /// Resolved chunk-worker count for parallel levels (>= 1). At 1
+    /// (the default) every parallel level runs its single chunk inline,
+    /// identically to the pre-parallel executor.
+    pub threads: usize,
 }
 
 impl Default for ExecOptions {
     fn default() -> Self {
-        ExecOptions { mode: Mode::Peeled }
+        ExecOptions { mode: Mode::Peeled, threads: 1 }
     }
 }
 
@@ -221,6 +228,21 @@ pub fn run_traced(
     extents: &BTreeMap<String, i64>,
     inputs: &BTreeMap<String, Vec<f64>>,
 ) -> Result<(Outputs, InvocationTrace), String> {
+    run_traced_with(prog, reg, extents, inputs, 1)
+}
+
+/// [`run_traced`] at an explicit chunk-worker count. Chunks of a
+/// parallel level interleave in the trace, but each chunk's invocation
+/// subsequence stays in schedule order — the partition property pinned
+/// by the property suite against
+/// [`crate::schedule::Schedule::visit_threads`].
+pub fn run_traced_with(
+    prog: &Program,
+    reg: &Registry,
+    extents: &BTreeMap<String, i64>,
+    inputs: &BTreeMap<String, Vec<f64>>,
+    threads: usize,
+) -> Result<(Outputs, InvocationTrace), String> {
     let mut ws = Workspace::default();
     let mut buffers: Vec<Vec<f64>> = Vec::new();
     let mut trace = InvocationTrace::new();
@@ -229,7 +251,7 @@ pub fn run_traced(
         reg,
         extents,
         inputs,
-        ExecOptions { mode: Mode::Peeled },
+        ExecOptions { mode: Mode::Peeled, threads: threads.max(1) },
         &mut ws,
         &mut buffers,
         Some(&mut trace),
@@ -299,6 +321,15 @@ fn run_inner(
     let mut scratch_in: Vec<f64> = Vec::with_capacity(32);
     let mut scratch_out: Vec<f64> = Vec::with_capacity(16);
 
+    // All buffer pushes are done: raw views over them are stable from
+    // here, and chunk workers of a parallel level may share them (their
+    // writes are disjoint by the legality gate; contracted intermediates
+    // are replaced per chunk via `BufView::with_private`).
+    let bufs = BufView::of(&mut buffers[..]);
+    // The trace goes behind a mutex so parallel chunks can append; with
+    // one thread the lock is uncontended and the order is the serial one.
+    let sink: Option<TraceSink> = trace.as_ref().map(|_| Mutex::new(InvocationTrace::new()));
+
     for (nest, np) in prog.fd.nests.iter().zip(&prog.sched.nests) {
         let compiled: Vec<Compiled> = nest
             .members
@@ -310,16 +341,17 @@ fn run_inner(
             Mode::Peeled => {
                 // Interpret the lowered schedule tree — the same nodes
                 // the code emitters print.
-                let mut tr = trace.as_mut().map(|t| &mut **t);
                 exec_nodes(
                     &compiled,
                     &np.body,
                     extents,
                     &mut idx,
-                    &mut buffers[..],
+                    &bufs,
+                    &storage_buf,
+                    opts.threads.max(1),
                     &mut scratch_in,
                     &mut scratch_out,
-                    &mut tr,
+                    sink.as_ref(),
                 )?;
             }
             Mode::Guarded => {
@@ -330,12 +362,16 @@ fn run_inner(
                     0,
                     nest.dims.len(),
                     &mut idx,
-                    &mut buffers[..],
+                    &bufs,
                     &mut scratch_in,
                     &mut scratch_out,
                 )?;
             }
         }
+    }
+
+    if let (Some(t), Some(s)) = (trace.as_mut(), sink) {
+        t.extend(s.into_inner().unwrap_or_else(|e| e.into_inner()));
     }
 
     // ---- collect outputs ----------------------------------------------------
@@ -464,19 +500,76 @@ fn compile_member(
     })
 }
 
+/// Shared trace accumulator: parallel chunks append under the lock,
+/// serial runs pay one uncontended lock per invocation (test-only path).
+type TraceSink = Mutex<InvocationTrace>;
+
+/// Raw views of the storage buffers, shareable across chunk workers.
+///
+/// SAFETY argument: concurrent access is only reachable through a
+/// `Node::Parallel` level, whose legality gate
+/// ([`crate::analysis::parallel_safe`]) guarantees (a) chunk writes to
+/// shared storages hit disjoint slabs along the parallel dim (every
+/// write is `DimSize::Full` and offset-0 along it), and (b) every
+/// storage *not* full along that dim is replaced per chunk via
+/// [`BufView::with_private`] — so no two workers ever touch the same
+/// element with a write involved. Bounds are still checked on every
+/// access (the same safety net indexing `Vec` gave).
+struct BufView {
+    ptrs: Vec<*mut f64>,
+    lens: Vec<usize>,
+}
+
+unsafe impl Send for BufView {}
+unsafe impl Sync for BufView {}
+
+impl BufView {
+    fn of(buffers: &mut [Vec<f64>]) -> BufView {
+        let (ptrs, lens) = buffers.iter_mut().map(|b| (b.as_mut_ptr(), b.len())).unzip();
+        BufView { ptrs, lens }
+    }
+
+    fn len_of(&self, b: usize) -> usize {
+        self.lens[b]
+    }
+
+    /// This view with the given buffer indices re-pointed at the
+    /// chunk-private replicas (parallel workers' windowed intermediates).
+    fn with_private(&self, replace: &[usize], replicas: &mut [Vec<f64>]) -> BufView {
+        let mut v = BufView { ptrs: self.ptrs.clone(), lens: self.lens.clone() };
+        for (k, &b) in replace.iter().enumerate() {
+            v.ptrs[b] = replicas[k].as_mut_ptr();
+            v.lens[b] = replicas[k].len();
+        }
+        v
+    }
+
+    #[inline]
+    fn load(&self, b: usize, off: usize) -> f64 {
+        assert!(off < self.lens[b], "read OOB: buffer {b} len {} offset {off}", self.lens[b]);
+        unsafe { *self.ptrs[b].add(off) }
+    }
+
+    #[inline]
+    fn store(&self, b: usize, off: usize, v: f64) {
+        assert!(off < self.lens[b], "write OOB: buffer {b} len {} offset {off}", self.lens[b]);
+        unsafe { *self.ptrs[b].add(off) = v }
+    }
+}
+
 /// One kernel call: record it in the trace (if any), then invoke.
 fn call(
     c: &Compiled,
     idx: &[i64],
-    buffers: &mut [Vec<f64>],
+    bufs: &BufView,
     scratch_in: &mut Vec<f64>,
     scratch_out: &mut Vec<f64>,
-    trace: &mut Option<&mut InvocationTrace>,
+    trace: Option<&TraceSink>,
 ) -> Result<(), String> {
     if let Some(tr) = trace {
-        tr.push((c.name.clone(), idx.to_vec()));
+        tr.lock().unwrap_or_else(|e| e.into_inner()).push((c.name.clone(), idx.to_vec()));
     }
-    invoke(c, idx, buffers, scratch_in, scratch_out)
+    invoke(c, idx, bufs, scratch_in, scratch_out)
 }
 
 /// Interpret a sequence of schedule nodes ([`Mode::Peeled`]): the
@@ -488,21 +581,78 @@ fn exec_nodes(
     nodes: &[Node],
     extents: &BTreeMap<String, i64>,
     idx: &mut Vec<i64>,
-    buffers: &mut [Vec<f64>],
+    bufs: &BufView,
+    storage_buf: &[usize],
+    threads: usize,
     scratch_in: &mut Vec<f64>,
     scratch_out: &mut Vec<f64>,
-    trace: &mut Option<&mut InvocationTrace>,
+    trace: Option<&TraceSink>,
 ) -> Result<(), String> {
     for node in nodes {
         match node {
+            Node::Parallel(p) => {
+                let (lo, hi) = (p.lo.eval(extents)?, p.hi.eval(extents)?);
+                let spans = crate::schedule::chunk_spans(lo, hi, p.unit, threads);
+                if spans.len() <= 1 {
+                    // Single chunk: run inline on this thread — byte- and
+                    // order-identical to the pre-parallel executor.
+                    for (clo, chi) in spans {
+                        let mut ext = extents.clone();
+                        ext.insert(p.lo_sym(), clo);
+                        ext.insert(p.hi_sym(), chi);
+                        exec_nodes(
+                            compiled, &p.body, &ext, idx, bufs, storage_buf, threads,
+                            scratch_in, scratch_out, trace,
+                        )?;
+                    }
+                } else {
+                    let err: Mutex<Option<String>> = Mutex::new(None);
+                    let base_idx: Vec<i64> = idx.clone();
+                    let job = |c: usize| {
+                        let (clo, chi) = spans[c];
+                        let mut ext = extents.clone();
+                        ext.insert(p.lo_sym(), clo);
+                        ext.insert(p.hi_sym(), chi);
+                        // Per-chunk replicas of the nest-local windowed
+                        // intermediates (the "workspace slices"): zeroed
+                        // like a fresh serial buffer, and no value flows
+                        // across the parallel dim through them, so the
+                        // chunk computes bitwise what the serial run does.
+                        let mut replicas: Vec<Vec<f64>> = p
+                            .private_storages
+                            .iter()
+                            .map(|&sid| vec![0.0f64; bufs.len_of(storage_buf[sid])])
+                            .collect();
+                        let slots: Vec<usize> =
+                            p.private_storages.iter().map(|&sid| storage_buf[sid]).collect();
+                        let view = bufs.with_private(&slots, &mut replicas);
+                        let mut idx2 = base_idx.clone();
+                        let mut sin: Vec<f64> = Vec::with_capacity(32);
+                        let mut sout: Vec<f64> = Vec::with_capacity(16);
+                        if let Err(e) = exec_nodes(
+                            compiled, &p.body, &ext, &mut idx2, &view, storage_buf, threads,
+                            &mut sin, &mut sout, trace,
+                        ) {
+                            let mut g = err.lock().unwrap_or_else(|p| p.into_inner());
+                            if g.is_none() {
+                                *g = Some(e);
+                            }
+                        }
+                    };
+                    pool::scatter(spans.len(), &job)?;
+                    if let Some(e) = err.into_inner().unwrap_or_else(|p| p.into_inner()) {
+                        return Err(e);
+                    }
+                }
+            }
             Node::Loop(l) => {
                 let (lo, hi) = (l.lo.eval(extents)?, l.hi.eval(extents)?);
                 let mut t = lo;
                 while t < hi {
                     idx[l.level] = t;
                     exec_nodes(
-                        compiled, &l.body, extents, idx, buffers, scratch_in, scratch_out,
-                        trace,
+                        compiled, &l.body, extents, idx, bufs, storage_buf, threads,
+                        scratch_in, scratch_out, trace,
                     )?;
                     t += 1;
                 }
@@ -518,8 +668,8 @@ fn exec_nodes(
                     while t < he {
                         idx[s.level] = t;
                         exec_nodes(
-                            compiled, head, extents, idx, buffers, scratch_in, scratch_out,
-                            trace,
+                            compiled, head, extents, idx, bufs, storage_buf, threads,
+                            scratch_in, scratch_out, trace,
                         )?;
                         t += 1;
                     }
@@ -528,22 +678,16 @@ fn exec_nodes(
                 while t < steady {
                     idx[s.level] = t;
                     exec_nodes(
-                        compiled, &s.steady, extents, idx, buffers, scratch_in, scratch_out,
-                        trace,
+                        compiled, &s.steady, extents, idx, bufs, storage_buf, threads,
+                        scratch_in, scratch_out, trace,
                     )?;
                     t += lanes;
                 }
                 while t < hi {
                     idx[s.level] = t;
                     exec_nodes(
-                        compiled,
-                        &s.remainder,
-                        extents,
-                        idx,
-                        buffers,
-                        scratch_in,
-                        scratch_out,
-                        trace,
+                        compiled, &s.remainder, extents, idx, bufs, storage_buf, threads,
+                        scratch_in, scratch_out, trace,
                     )?;
                     t += 1;
                 }
@@ -560,8 +704,8 @@ fn exec_nodes(
                     for (a, &(alo, ahi)) in g.arms.iter().zip(&arms) {
                         if t >= alo && t < ahi {
                             exec_nodes(
-                                compiled, &a.body, extents, idx, buffers, scratch_in,
-                                scratch_out, trace,
+                                compiled, &a.body, extents, idx, bufs, storage_buf, threads,
+                                scratch_in, scratch_out, trace,
                             )?;
                         }
                     }
@@ -571,12 +715,12 @@ fn exec_nodes(
             Node::Invoke(inv) => {
                 let c = &compiled[inv.member];
                 match &inv.lanes {
-                    None => call(c, idx, buffers, scratch_in, scratch_out, trace)?,
+                    None => call(c, idx, bufs, scratch_in, scratch_out, trace)?,
                     Some(l) => {
                         let base = idx[l.level];
                         for k in 0..l.lanes as i64 {
                             idx[l.level] = base + k;
-                            call(c, idx, buffers, scratch_in, scratch_out, trace)?;
+                            call(c, idx, bufs, scratch_in, scratch_out, trace)?;
                         }
                         idx[l.level] = base;
                     }
@@ -588,12 +732,12 @@ fn exec_nodes(
                 for il in 0..ms.lanes as i64 {
                     idx[ms.level] = base + il;
                     match &ms.outer {
-                        None => call(c, idx, buffers, scratch_in, scratch_out, trace)?,
+                        None => call(c, idx, bufs, scratch_in, scratch_out, trace)?,
                         Some(l) => {
                             let ob = idx[l.level];
                             for ol in 0..l.lanes as i64 {
                                 idx[l.level] = ob + ol;
-                                call(c, idx, buffers, scratch_in, scratch_out, trace)?;
+                                call(c, idx, bufs, scratch_in, scratch_out, trace)?;
                             }
                             idx[l.level] = ob;
                         }
@@ -615,7 +759,7 @@ fn exec_guarded(
     level: usize,
     nlevels: usize,
     idx: &mut Vec<i64>,
-    buffers: &mut [Vec<f64>],
+    bufs: &BufView,
     scratch_in: &mut Vec<f64>,
     scratch_out: &mut Vec<f64>,
 ) -> Result<(), String> {
@@ -628,7 +772,7 @@ fn exec_guarded(
             if !active(c, idx, nlevels) {
                 continue;
             }
-            invoke(c, idx, buffers, scratch_in, scratch_out)?;
+            invoke(c, idx, bufs, scratch_in, scratch_out)?;
         }
         return Ok(());
     }
@@ -639,7 +783,7 @@ fn exec_guarded(
     let post: Vec<usize> =
         members.iter().copied().filter(|&m| compiled[m].phase_at(level) == Phase::Post).collect();
 
-    exec_guarded(compiled, &pre, level + 1, nlevels, idx, buffers, scratch_in, scratch_out)?;
+    exec_guarded(compiled, &pre, level + 1, nlevels, idx, bufs, scratch_in, scratch_out)?;
 
     if !inl.is_empty() {
         // Loop range: union of member ranges at this level.
@@ -653,13 +797,11 @@ fn exec_guarded(
         }
         for t in lo..hi {
             idx[level] = t;
-            exec_guarded(
-                compiled, &inl, level + 1, nlevels, idx, buffers, scratch_in, scratch_out,
-            )?;
+            exec_guarded(compiled, &inl, level + 1, nlevels, idx, bufs, scratch_in, scratch_out)?;
         }
     }
 
-    exec_guarded(compiled, &post, level + 1, nlevels, idx, buffers, scratch_in, scratch_out)
+    exec_guarded(compiled, &post, level + 1, nlevels, idx, bufs, scratch_in, scratch_out)
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -696,20 +838,20 @@ fn active(c: &Compiled, idx: &[i64], nlevels: usize) -> bool {
 fn invoke(
     c: &Compiled,
     idx: &[i64],
-    buffers: &mut [Vec<f64>],
+    bufs: &BufView,
     scratch_in: &mut Vec<f64>,
     scratch_out: &mut Vec<f64>,
 ) -> Result<(), String> {
     scratch_in.clear();
     for a in &c.reads {
-        scratch_in.push(buffers[a.storage][resolve(a, idx)]);
+        scratch_in.push(bufs.load(a.storage, resolve(a, idx)));
     }
     scratch_out.clear();
     scratch_out.resize(c.writes.len(), 0.0);
     (c.kernel)(scratch_in, scratch_out);
     for (k, a) in c.writes.iter().enumerate() {
         let off = resolve(a, idx);
-        buffers[a.storage][off] = scratch_out[k];
+        bufs.store(a.storage, off, scratch_out[k]);
     }
     Ok(())
 }
@@ -815,7 +957,9 @@ mod tests {
         inputs.insert("g_cell".to_string(), u.clone());
         let want = laplace_ref(&u, nj, ni);
         for mode in [Mode::Peeled, Mode::Guarded] {
-            let out = run(&prog, &reg, &ext, &inputs, ExecOptions { mode }).unwrap();
+            let out =
+                run(&prog, &reg, &ext, &inputs, ExecOptions { mode, ..Default::default() })
+                    .unwrap();
             assert_close(&out["g_out"], &want, 1e-12);
         }
     }
@@ -849,7 +993,9 @@ mod tests {
             want[i - 1] = 2.0 * u[i + 1] - 2.0 * u[i - 1];
         }
         for mode in [Mode::Peeled, Mode::Guarded] {
-            let out = run(&prog, &reg, &ext, &inputs, ExecOptions { mode }).unwrap();
+            let out =
+                run(&prog, &reg, &ext, &inputs, ExecOptions { mode, ..Default::default() })
+                    .unwrap();
             assert_close(&out["g_d"], &want, 1e-12);
         }
     }
@@ -882,7 +1028,9 @@ mod tests {
             }
         }
         for mode in [Mode::Peeled, Mode::Guarded] {
-            let out = run(&prog, &reg, &ext, &inputs, ExecOptions { mode }).unwrap();
+            let out =
+                run(&prog, &reg, &ext, &inputs, ExecOptions { mode, ..Default::default() })
+                    .unwrap();
             assert_close(&out["g_out"], &want, 1e-12);
         }
     }
@@ -1110,5 +1258,78 @@ mod tests {
         inputs.insert("g_u".to_string(), vec![0.0; 3]);
         let err = run(&prog, &reg, &ext, &inputs, ExecOptions::default()).unwrap_err();
         assert!(err.contains("expected"), "{err}");
+    }
+
+    fn cosmo_at(vlen: usize, tile: bool) -> Program {
+        compile_src(
+            crate::apps::cosmo::DECK,
+            CompileOptions {
+                analysis: crate::analysis::AnalysisOptions {
+                    vector_len: Some(vlen),
+                    vec_dim: if vlen > 1 {
+                        crate::analysis::VecDim::Auto
+                    } else {
+                        crate::analysis::VecDim::Inner
+                    },
+                    tile,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parallel_chunks_are_bitwise_identical_to_serial() {
+        // The tentpole invariant at the interpreter: a parallel level run
+        // at any worker count produces the exact bytes the serial walk
+        // does — chunk-private replicas make the windowed intermediates
+        // invisible, and shared writes land in disjoint slabs.
+        let (nk, nj, ni) = (7usize, 10usize, 13usize); // non-square
+        let ext = extents(&[("Nk", nk as i64), ("Nj", nj as i64), ("Ni", ni as i64)]);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("g_u".to_string(), seeded(nk * nj * ni, 17));
+        let reg = crate::apps::cosmo::registry();
+        for (vlen, tile) in [(1usize, false), (4, false), (4, true)] {
+            let prog = cosmo_at(vlen, tile);
+            let serial =
+                run(&prog, &reg, &ext, &inputs, ExecOptions { mode: Mode::Peeled, threads: 1 })
+                    .unwrap();
+            let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            for threads in [2usize, 3, auto] {
+                let got =
+                    run(&prog, &reg, &ext, &inputs, ExecOptions { mode: Mode::Peeled, threads })
+                        .unwrap();
+                // Bitwise: exact equality, not tolerance.
+                assert_eq!(
+                    got["g_out"],
+                    serial["g_out"],
+                    "vlen={vlen} tile={tile} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn traced_parallel_run_matches_serial_multiset() {
+        // Chunks interleave in the shared trace, but nothing is lost or
+        // duplicated: the multiset of invocations equals the serial one
+        // (exact per-chunk partition order is pinned in tests/property.rs).
+        let prog = cosmo_at(1, false);
+        let reg = crate::apps::cosmo::registry();
+        let (nk, nj, ni) = (6usize, 9, 11);
+        let ext = extents(&[("Nk", nk as i64), ("Nj", nj as i64), ("Ni", ni as i64)]);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("g_u".to_string(), seeded(nk * nj * ni, 23));
+        let (out1, t1) = run_traced_with(&prog, &reg, &ext, &inputs, 1).unwrap();
+        let (out3, t3) = run_traced_with(&prog, &reg, &ext, &inputs, 3).unwrap();
+        assert_eq!(out1["g_out"], out3["g_out"]);
+        assert_eq!(t1.len(), t3.len());
+        let mut s1 = t1.clone();
+        let mut s3 = t3.clone();
+        s1.sort();
+        s3.sort();
+        assert_eq!(s1, s3);
     }
 }

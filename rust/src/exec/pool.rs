@@ -1,0 +1,167 @@
+//! Persistent chunk-worker pool shared by every parallel schedule level
+//! in the process — all coordinator job workers scatter into this one
+//! pool, so intra-job chunk parallelism and across-job parallelism draw
+//! from the same set of cores instead of multiplying thread counts.
+//!
+//! [`scatter`] is synchronous: it enqueues one task per chunk and
+//! blocks until every chunk has signalled the completion latch. That
+//! single property carries the two guarantees the executor relies on:
+//! borrowed captures in the chunk closure are sound (the lifetime
+//! erasure below never outlives the call), and there is never an
+//! in-flight chunk after a caller returns — workers park idle between
+//! scatters, so dropping a coordinator (whose own `Drop` joins its job
+//! workers) leaves no detached thread holding work. Chunk closures must
+//! not scatter recursively (the schedule has one parallel level).
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+struct Task {
+    /// Chunk closure, lifetime-erased in [`scatter`]; the pool never
+    /// holds a task beyond its execution.
+    f: &'static (dyn Fn(usize) + Sync),
+    chunk: usize,
+    done: Arc<Latch>,
+}
+
+// SAFETY: the closure is Sync (shared calls from any thread are fine)
+// and `scatter` blocks on the latch until every task has run, so the
+// erased reference outlives all worker accesses.
+unsafe impl Send for Task {}
+
+struct Latch {
+    left: Mutex<usize>,
+    panicked: Mutex<usize>,
+    cv: Condvar,
+}
+
+struct Pool {
+    // `Sender` is cheaply clonable but historically !Sync; serialize
+    // enqueues through a mutex instead of assuming a newer std.
+    tx: Mutex<Sender<Task>>,
+    workers: usize,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let (tx, rx) = channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        for w in 0..workers {
+            let rx = rx.clone();
+            std::thread::Builder::new()
+                .name(format!("hfav-chunk-{w}"))
+                .spawn(move || loop {
+                    let task = {
+                        let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
+                        match guard.recv() {
+                            Ok(t) => t,
+                            Err(_) => return, // sender gone: process teardown
+                        }
+                    };
+                    // A panicking kernel must not wedge the latch (or
+                    // kill the pool thread): count it and move on.
+                    let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        (task.f)(task.chunk)
+                    }))
+                    .is_ok();
+                    if !ok {
+                        *task.done.panicked.lock().unwrap_or_else(|e| e.into_inner()) += 1;
+                    }
+                    let mut left = task.done.left.lock().unwrap_or_else(|e| e.into_inner());
+                    *left -= 1;
+                    if *left == 0 {
+                        task.done.cv.notify_all();
+                    }
+                })
+                .expect("spawn chunk worker");
+        }
+        Pool { tx: Mutex::new(tx), workers }
+    })
+}
+
+/// Worker count of the shared pool (effective-thread reporting).
+pub fn workers() -> usize {
+    pool().workers
+}
+
+/// Run `f(c)` for every chunk `c in 0..chunks` across the pool,
+/// blocking until all complete. Returns an error if any chunk panicked
+/// (the chunks that ran are *not* rolled back — callers treat the run
+/// as failed).
+pub fn scatter(chunks: usize, f: &(dyn Fn(usize) + Sync)) -> Result<(), String> {
+    if chunks == 0 {
+        return Ok(());
+    }
+    let p = pool();
+    let done =
+        Arc::new(Latch { left: Mutex::new(chunks), panicked: Mutex::new(0), cv: Condvar::new() });
+    // SAFETY (lifetime erasure): the wait below does not return until
+    // every enqueued task has finished executing `f`, so the 'static
+    // reference can never be used after this frame unwinds.
+    let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+    let mut unsent = 0usize;
+    {
+        let tx = p.tx.lock().unwrap_or_else(|e| e.into_inner());
+        for c in 0..chunks {
+            if tx.send(Task { f: f_static, chunk: c, done: done.clone() }).is_err() {
+                unsent = chunks - c;
+                break;
+            }
+        }
+    }
+    if unsent > 0 {
+        // Receiver gone (should not happen: workers never exit while the
+        // sender lives) — account for the tasks that never enqueued,
+        // then still drain the ones that did before touching `f`'s frame.
+        *done.left.lock().unwrap_or_else(|e| e.into_inner()) -= unsent;
+    }
+    let mut left = done.left.lock().unwrap_or_else(|e| e.into_inner());
+    while *left > 0 {
+        left = done.cv.wait(left).unwrap_or_else(|e| e.into_inner());
+    }
+    drop(left);
+    if unsent > 0 {
+        return Err("chunk pool is gone".to_string());
+    }
+    let panicked = *done.panicked.lock().unwrap_or_else(|e| e.into_inner());
+    if panicked > 0 {
+        return Err(format!("{panicked} chunk task(s) panicked"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn scatter_runs_every_chunk_and_drains() {
+        let hits = AtomicUsize::new(0);
+        let mask = Mutex::new(vec![false; 23]);
+        scatter(23, &|c| {
+            hits.fetch_add(1, Ordering::SeqCst);
+            mask.lock().unwrap()[c] = true;
+        })
+        .unwrap();
+        // Synchronous: by the time scatter returns, every chunk ran.
+        assert_eq!(hits.load(Ordering::SeqCst), 23);
+        assert!(mask.into_inner().unwrap().iter().all(|&b| b));
+        assert!(workers() >= 1);
+    }
+
+    #[test]
+    fn scatter_reports_panicked_chunks() {
+        let e = scatter(4, &|c| {
+            if c == 2 {
+                panic!("boom");
+            }
+        })
+        .unwrap_err();
+        assert!(e.contains("panicked"), "{e}");
+        // The pool survives a panicking task.
+        scatter(2, &|_| {}).unwrap();
+    }
+}

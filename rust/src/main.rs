@@ -29,11 +29,12 @@ fn usage() -> ! {
   run --app <app|deck.yaml> [--engine exec|native|rust|pjrt] [--variant hfav|autovec]
       [--size N] [--steps S] [--extents NxM[xK]] [--vlen auto|N]
       [--vec-dim inner|auto|outer:<dim>] [--aligned] [--tile] [--tuned]
+      [--threads serial|auto|N]
   serve --trace <file> [--workers N] [--repeat R] [--artifacts DIR] [--vlen auto|N]
-      [--vec-dim inner|auto|outer:<dim>] [--aligned] [--tile]
+      [--vec-dim inner|auto|outer:<dim>] [--aligned] [--tile] [--threads serial|auto|N]
   e2e [--size N] [--steps S]
   bench <sysinfo|normalization|cosmo|hydro2d|footprint|serving|vectorization|pjrt|all>
-      [--vlen auto|N]
+      [--vlen auto|N] [--threads serial|auto|N] [--json]
   smoke [hlo.txt]
 
   engines: list the registered execution backends and their availability
@@ -61,6 +62,15 @@ fn usage() -> ! {
              deck's extents in sorted-name order (e.g. cosmo: Ni x Nj x
              Nk) — also the trace v3 `extents=` field. NOTE: `footprint
              --extents` takes the *named* form Ni=512,Nj=512 instead.
+  --threads: intra-job worker count for the plan's parallel chunk levels —
+             a pure *runtime* knob (never part of the plan fingerprint;
+             one compiled plan serves every core count, bitwise
+             identically). `serial`/`1` (default) runs single-threaded,
+             `auto` uses all cores, N fixes N workers. On `serve` it
+             overrides every job in the trace.
+  --json:    (bench serving|vectorization|all) also write the
+             machine-readable reports BENCH_serving.json /
+             BENCH_vectorization.json (stable schema, see README)
   --tuned:   paper §5.3 'HFAV + Tuning' (innermost windows stay full rows)"
     );
     std::process::exit(2)
@@ -119,6 +129,14 @@ fn vec_dim_of(rest: &[String]) -> Result<hfav::analysis::VecDim, CliError> {
     }
 }
 
+/// Parse `--threads serial|auto|N` (`Serial` when omitted).
+fn threads_of(rest: &[String]) -> Result<hfav::engine::Threads, CliError> {
+    match flag(rest, "--threads") {
+        None => Ok(hfav::engine::Threads::Serial),
+        Some(v) => Ok(v.parse::<hfav::engine::Threads>()?),
+    }
+}
+
 /// Build the [`PlanSpec`] a subcommand's flags describe: a built-in app
 /// or deck-file target, variant, vectorization knobs and tuning — the
 /// exact spec (and plan-cache identity) serving would use.
@@ -145,7 +163,16 @@ fn generate(rest: &[String]) -> CliResult {
         "dot-dataflow" => print!("{}", hfav::codegen::dot::dataflow(&prog.df)),
         "dot-inest" => print!("{}", hfav::codegen::dot::inest(&prog.df, &prog.fd)),
         "schedule" => print!("{}", prog.schedule_text()),
-        "schedule-ir" => print!("{}", prog.sched.render()),
+        "schedule-ir" => {
+            print!("{}", prog.sched.render());
+            // Walk-derived counters at a sample shape: 16 per extent,
+            // serial and 4-worker chunking side by side.
+            let names = hfav::codegen::c99::extent_names(&prog);
+            let ext: std::collections::BTreeMap<String, i64> =
+                names.into_iter().map(|n| (n, 16i64)).collect();
+            println!("# stats @16/dim threads=1: {}", prog.schedule_stats(&ext, 1)?.summary());
+            println!("# stats @16/dim threads=4: {}", prog.schedule_stats(&ext, 4)?.summary());
+        }
         other => return Err(format!("unknown backend `{other}`").into()),
     }
     Ok(())
@@ -209,7 +236,7 @@ fn run(rest: &[String]) -> CliResult {
         return Err(format!("engine `{}` unavailable: {why}", backend.name()).into());
     }
     let spec = spec_of(&app, rest)?;
-    let mut job = Job::new(0, spec, backend.name(), size, steps);
+    let mut job = Job::new(0, spec, backend.name(), size, steps).with_threads(threads_of(rest)?);
     if let Some(s) = flag(rest, "--extents") {
         job = job.with_extents(hfav::coordinator::parse_extents(&s)?);
     }
@@ -270,6 +297,15 @@ fn serve(rest: &[String]) -> CliResult {
             j.spec = j.spec.clone().tiled(true);
         }
     }
+    // `--threads` is the one trace-global override that does NOT touch
+    // the specs: it sets each job's runtime knob, so the trace's plan
+    // keys (and cache behavior) are exactly what they were serially.
+    if flag(rest, "--threads").is_some() {
+        let threads = threads_of(rest)?;
+        for j in template.iter_mut() {
+            j.threads = threads;
+        }
+    }
     let jobs = repeat_jobs(&template, repeat);
     println!(
         "serving {} jobs ({} distinct plan keys) on {workers} workers",
@@ -308,6 +344,19 @@ fn bench(rest: &[String]) -> CliResult {
     println!("{}", hfav::bench::sysinfo());
     let sizes_small = [64usize, 128, 256, 512];
     let sizes_big = [128usize, 256, 512, 1024];
+    let json = has_flag(rest, "--json");
+    let threads = threads_of(rest)?;
+    // Worker count for the vectorization bench's `parallel` rows: the
+    // --threads knob when given, else 4 (the acceptance shape).
+    let tcount = match threads {
+        hfav::engine::Threads::Serial => 4,
+        other => other.resolve(),
+    };
+    let write_json = |path: &str, text: String| -> CliResult {
+        std::fs::write(path, text)?;
+        println!("wrote {path}");
+        Ok(())
+    };
     match which {
         "sysinfo" => {}
         "normalization" => {
@@ -323,11 +372,20 @@ fn bench(rest: &[String]) -> CliResult {
             hfav::bench::footprint();
         }
         "serving" => {
-            hfav::bench::serving(4, 6, vlen_of(rest)?.resolve());
+            let (_, rows) = hfav::bench::serving(4, 6, vlen_of(rest)?.resolve(), threads);
+            if json {
+                write_json("BENCH_serving.json", hfav::bench::report::serving_json(&rows))?;
+            }
         }
         "vectorization" => {
             let v = vlen_of(rest)?.resolve().unwrap_or_else(hfav::analysis::auto_vector_len);
-            hfav::bench::vectorization(v);
+            let (_, rows) = hfav::bench::vectorization(v, tcount);
+            if json {
+                write_json(
+                    "BENCH_vectorization.json",
+                    hfav::bench::report::vectorization_json(&rows),
+                )?;
+            }
         }
         "pjrt" => {
             hfav::bench::pjrt(&hfav::runtime::default_artifacts_dir())?;
@@ -337,10 +395,17 @@ fn bench(rest: &[String]) -> CliResult {
             hfav::bench::normalization(&sizes_big);
             hfav::bench::cosmo(&sizes_small, 8);
             hfav::bench::hydro2d(&[64, 128, 256], 5);
-            hfav::bench::serving(4, 6, vlen_of(rest)?.resolve());
+            let (_, srows) = hfav::bench::serving(4, 6, vlen_of(rest)?.resolve(), threads);
             let v = vlen_of(rest)?.resolve().unwrap_or_else(hfav::analysis::auto_vector_len);
-            hfav::bench::vectorization(v);
+            let (_, vrows) = hfav::bench::vectorization(v, tcount);
             let _ = hfav::bench::pjrt(&hfav::runtime::default_artifacts_dir());
+            if json {
+                write_json("BENCH_serving.json", hfav::bench::report::serving_json(&srows))?;
+                write_json(
+                    "BENCH_vectorization.json",
+                    hfav::bench::report::vectorization_json(&vrows),
+                )?;
+            }
         }
         other => return Err(format!("unknown bench `{other}`").into()),
     }

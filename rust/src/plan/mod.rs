@@ -234,6 +234,24 @@ impl Program {
     pub fn footprint_words(&self, extents: &BTreeMap<String, i64>) -> Result<i64, String> {
         self.sp.intermediate_words(&self.df, extents)
     }
+
+    /// Walk-derived schedule counters ([`crate::schedule::Schedule::stats`])
+    /// with the per-invocation load/store cost bound to this program's
+    /// dataflow: each member invocation costs its callsite's read count in
+    /// loads and write count in stores. `threads` sets the chunk-worker
+    /// count the parallel levels are decomposed at (1 = serial).
+    pub fn schedule_stats(
+        &self,
+        extents: &BTreeMap<String, i64>,
+        threads: usize,
+    ) -> Result<crate::schedule::ScheduleStats, String> {
+        let cost = |np: usize, mi: usize| -> (u64, u64) {
+            let m = &self.fd.nests[self.sched.nests[np].nest].members[mi];
+            let cs = &self.df.callsites[m.callsite];
+            (cs.reads.len() as u64, cs.writes.len() as u64)
+        };
+        self.sched.stats(extents, threads, &cost)
+    }
 }
 
 #[cfg(test)]
@@ -348,6 +366,29 @@ mod tests {
         .unwrap();
         assert_eq!(scalar.vec_dim(), &VecDim::Inner);
         assert_eq!(scalar.outer_lane_dim(), None);
+    }
+
+    #[test]
+    fn schedule_stats_counts_work_and_chunks() {
+        let prog = compile_src(crate::apps::cosmo::DECK, CompileOptions::default()).unwrap();
+        let mut ext = BTreeMap::new();
+        for d in ["Nk", "Nj", "Ni"] {
+            ext.insert(d.to_string(), 12i64);
+        }
+        let serial = prog.schedule_stats(&ext, 1).unwrap();
+        let par = prog.schedule_stats(&ext, 4).unwrap();
+        // Worker count changes chunking only, never the work.
+        assert_eq!(serial.invocations, par.invocations);
+        assert_eq!(serial.loads, par.loads);
+        assert_eq!(serial.stores, par.stores);
+        assert!(serial.invocations > 0);
+        assert!(serial.loads > serial.stores);
+        // cosmo carries one parallel level along k.
+        assert_eq!(par.parallel.len(), 1);
+        assert_eq!(par.parallel[0].dim, "k");
+        assert_eq!(serial.parallel[0].chunks, 1);
+        assert_eq!(par.parallel[0].chunks, 4);
+        assert!(par.summary().contains("chunks"), "{}", par.summary());
     }
 
     #[test]

@@ -26,7 +26,20 @@
 //! * **multi-dim lane tiling** — outer lanes × inner strips together
 //!   (`PlanSpec::tiled` / `--tile`): the steady×steady region runs each
 //!   kernel over a `vlen × vlen` tile ([`MemberStrip::outer`]), with no
-//!   new shape logic in any backend.
+//!   new shape logic in any backend;
+//! * **chunk parallelism** ([`Node::Parallel`]) — when the outermost dim
+//!   is k-independent *and* no contracted intermediate window is shared
+//!   across chunks ([`crate::analysis::parallel_safe`]), the level-0
+//!   loop/strip is wrapped in a Parallel level that splits the iteration
+//!   space into `len.div_ceil(threads)`-sized chunks ([`chunk_spans`]).
+//!   The thread count is a *runtime* knob (`RunConfig`), never plan
+//!   identity: the node carries only the chunk granule and the storage
+//!   ids each chunk must privatize; each walker binds the chunk bounds
+//!   to the [`ParallelNode::lo_sym`]/[`ParallelNode::hi_sym`] symbols at
+//!   run time (OpenMP in C99, `std::thread::scope` in Rust, the shared
+//!   worker pool in the interpreter). At one thread the single chunk is
+//!   the whole range, so serial runs are bitwise- and order-identical
+//!   to the unwrapped tree.
 //!
 //! The tree is symbolic (bounds are [`Bound`]s over extent names), so
 //! one lowering serves every grid shape. [`Schedule::digest`] is a
@@ -88,6 +101,10 @@ pub enum Node {
     /// over all `lanes` consecutive innermost iterations before the next
     /// node starts (vector expansion, Fig. 9c).
     MemberStrip(MemberStrip),
+    /// A chunk-parallel level over a k-independent outer dim: the range
+    /// `[lo, hi)` splits into per-thread chunks at run time and the body
+    /// runs once per chunk with its bounds bound to the chunk symbols.
+    Parallel(ParallelNode),
 }
 
 /// See [`Node::Loop`].
@@ -125,6 +142,73 @@ pub struct StripNode {
     pub static_aligned: bool,
     pub steady: Vec<Node>,
     pub remainder: Vec<Node>,
+}
+
+/// See [`Node::Parallel`]. The wrapped body's loop/strip bounds have
+/// been rewritten to [`ParallelNode::lo_sym`]/[`ParallelNode::hi_sym`],
+/// which every walker binds per chunk — the node itself keeps the full
+/// range and the chunking parameters, so no backend re-derives shape.
+#[derive(Debug, Clone)]
+pub struct ParallelNode {
+    pub dim: String,
+    pub level: usize,
+    /// Full range of the parallelized level.
+    pub lo: Bound,
+    pub hi: Bound,
+    /// Chunk granule in iterations: 1 for a plain loop, `lanes` for a
+    /// strip-mined level (chunk boundaries never split a steady strip).
+    pub unit: usize,
+    /// Storage ids each chunk must privatize (intermediates contracted
+    /// along `dim`, proven nest-local by the legality gate); all other
+    /// storages are shared — chunk writes land in disjoint slabs.
+    pub private_storages: Vec<usize>,
+    pub body: Vec<Node>,
+}
+
+impl ParallelNode {
+    /// Extent symbol the body's lower bounds reference; bound per chunk.
+    pub fn lo_sym(&self) -> String {
+        par_lo_sym(self.level)
+    }
+    /// Extent symbol the body's upper bounds reference; bound per chunk.
+    pub fn hi_sym(&self) -> String {
+        par_hi_sym(self.level)
+    }
+}
+
+/// Chunk lower-bound symbol for a parallel level (a valid C/Rust
+/// identifier, so emitters declare a variable of the same name).
+pub fn par_lo_sym(level: usize) -> String {
+    format!("hfav_par_lo{level}")
+}
+/// Chunk upper-bound symbol for a parallel level.
+pub fn par_hi_sym(level: usize) -> String {
+    format!("hfav_par_hi{level}")
+}
+
+/// The one chunk-decomposition formula every consumer shares: split
+/// `[lo, hi)` into at most `threads` chunks of whole `unit`-granules,
+/// `ceil(units/threads)` granules per chunk (`len.div_ceil(threads)`
+/// when `unit == 1`). Empty chunks are dropped; at `threads <= 1` the
+/// single chunk is the full range. The source emitters print this same
+/// arithmetic symbolically — [`tests::chunk_spans_cover_exactly`] and
+/// the differential suite pin the agreement.
+pub fn chunk_spans(lo: i64, hi: i64, unit: usize, threads: usize) -> Vec<(i64, i64)> {
+    let len = hi - lo;
+    if len <= 0 {
+        return Vec::new();
+    }
+    let unit = unit.max(1) as i64;
+    let units = (len + unit - 1) / unit;
+    let t = (threads.max(1) as i64).min(units);
+    let per = ((units + t - 1) / t) * unit;
+    (0..t)
+        .map(|c| {
+            let clo = lo + c * per;
+            (clo, (clo + per).min(hi))
+        })
+        .filter(|(a, b)| a < b)
+        .collect()
 }
 
 /// See [`Node::Guarded`].
@@ -366,7 +450,14 @@ pub fn lower(
             aligned: opts.aligned,
         };
         let all: Vec<usize> = (0..nest.members.len()).collect();
-        let body = cx.level(&all, 0, None)?;
+        let mut body = cx.level(&all, 0, None)?;
+        if let Some(d0) = nest.dims.first() {
+            if nest.dims.len() > 1 {
+                if let Some(private) = analysis::parallel_safe(df, sp, nest, ni, d0) {
+                    body = wrap_parallel(body, d0, &private);
+                }
+            }
+        }
         nests.push(NestPlan { nest: ni, dims: nest.dims.clone(), body });
     }
     let mut sched = Schedule { nests, digest: 0 };
@@ -374,6 +465,57 @@ pub fn lower(
     h.write_str(&sched.render());
     sched.digest = h.finish();
     Ok(sched)
+}
+
+/// Wrap the qualifying level-0 segments of a legal nest in
+/// [`Node::Parallel`] levels. A segment qualifies when chunk boundaries
+/// cannot change what runs: a plain level-0 [`Node::Loop`] over the dim
+/// (granule 1), or a head-less level-0 outer [`Node::Strip`] (granule
+/// `lanes`, so chunks never split a steady strip; runtime alignment
+/// heads would peel per chunk instead of once, so those stay serial).
+/// Guarded fallbacks and pre/post sub-schedules stay serial too. The
+/// wrapped node's bounds are rewritten to the chunk symbols.
+fn wrap_parallel(body: Vec<Node>, dim: &str, private: &[usize]) -> Vec<Node> {
+    body.into_iter()
+        .map(|n| match n {
+            Node::Loop(l) if l.level == 0 && l.dim == dim => {
+                let (lo, hi) = (l.lo.clone(), l.hi.clone());
+                let inner = Node::Loop(LoopNode {
+                    lo: Bound::of(&par_lo_sym(0), 0),
+                    hi: Bound::of(&par_hi_sym(0), 0),
+                    ..l
+                });
+                Node::Parallel(ParallelNode {
+                    dim: dim.to_string(),
+                    level: 0,
+                    lo,
+                    hi,
+                    unit: 1,
+                    private_storages: private.to_vec(),
+                    body: vec![inner],
+                })
+            }
+            Node::Strip(s) if s.level == 0 && s.dim == dim && s.outer && s.head.is_none() => {
+                let (lo, hi) = (s.lo.clone(), s.hi.clone());
+                let unit = s.lanes;
+                let inner = Node::Strip(StripNode {
+                    lo: Bound::of(&par_lo_sym(0), 0),
+                    hi: Bound::of(&par_hi_sym(0), 0),
+                    ..s
+                });
+                Node::Parallel(ParallelNode {
+                    dim: dim.to_string(),
+                    level: 0,
+                    lo,
+                    hi,
+                    unit,
+                    private_storages: private.to_vec(),
+                    body: vec![inner],
+                })
+            }
+            other => other,
+        })
+        .collect()
 }
 
 /// Per-nest lowering context.
@@ -723,6 +865,21 @@ fn render_nodes(nodes: &[Node], indent: usize, s: &mut String) {
                     let _ = writeln!(s, "{pad}{}", i.name);
                 }
             },
+            Node::Parallel(p) => {
+                let privs = if p.private_storages.is_empty() {
+                    String::new()
+                } else {
+                    let ids: Vec<String> =
+                        p.private_storages.iter().map(|s| format!("b{s}")).collect();
+                    format!(" private[{}]", ids.join(","))
+                };
+                let _ = writeln!(
+                    s,
+                    "{pad}parallel {} in [{}, {}) chunk-unit {}{}:",
+                    p.dim, p.lo, p.hi, p.unit, privs
+                );
+                render_nodes(&p.body, indent + 1, s);
+            }
             Node::MemberStrip(m) => {
                 let how = if m.simd { "simd" } else { "sequential" };
                 match &m.outer {
@@ -760,11 +917,107 @@ impl Schedule {
     where
         F: FnMut(usize, usize, &[i64]),
     {
+        self.visit_threads(extents, 1, f)
+    }
+
+    /// [`Schedule::visit`] at an explicit chunk-worker count: parallel
+    /// levels enumerate their [`chunk_spans`] in chunk order, each chunk
+    /// sequentially — the reference partition a threaded executor's
+    /// per-chunk invocation sets must match exactly. At `threads == 1`
+    /// this is the plain serial order.
+    pub fn visit_threads<F>(
+        &self,
+        extents: &BTreeMap<String, i64>,
+        threads: usize,
+        f: &mut F,
+    ) -> Result<(), String>
+    where
+        F: FnMut(usize, usize, &[i64]),
+    {
         for (k, np) in self.nests.iter().enumerate() {
             let mut idx = vec![0i64; np.dims.len()];
-            visit_nodes(k, &np.body, extents, &mut idx, f)?;
+            visit_nodes(k, &np.body, extents, threads, &mut idx, f)?;
         }
         Ok(())
+    }
+
+    /// Walk-derived cost counters over concrete extents — the seed of
+    /// the ROADMAP cost model. `cost(nest_plan_idx, member_idx)` supplies
+    /// (loads, stores) per invocation (see
+    /// [`crate::plan::Program::schedule_stats`] for the dataflow-backed
+    /// binding); parallel chunk counts come from [`chunk_spans`] at the
+    /// given worker count.
+    pub fn stats(
+        &self,
+        extents: &BTreeMap<String, i64>,
+        threads: usize,
+        cost: &dyn Fn(usize, usize) -> (u64, u64),
+    ) -> Result<ScheduleStats, String> {
+        let mut st = ScheduleStats::default();
+        self.visit_threads(extents, threads, &mut |np, mi, _| {
+            let (l, s) = cost(np, mi);
+            st.invocations += 1;
+            st.loads += l;
+            st.stores += s;
+        })?;
+        for (k, np) in self.nests.iter().enumerate() {
+            for n in &np.body {
+                if let Node::Parallel(p) = n {
+                    let (lo, hi) = (p.lo.eval(extents)?, p.hi.eval(extents)?);
+                    st.parallel.push(ParallelStats {
+                        nest: k,
+                        dim: p.dim.clone(),
+                        unit: p.unit,
+                        span: (hi - lo).max(0),
+                        chunks: chunk_spans(lo, hi, p.unit, threads).len(),
+                    });
+                }
+            }
+        }
+        Ok(st)
+    }
+}
+
+/// Output of [`Schedule::stats`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ScheduleStats {
+    /// Kernel invocations the walk enumerates (lanes count individually).
+    pub invocations: u64,
+    /// Scalar loads implied by the invocations' read accesses.
+    pub loads: u64,
+    /// Scalar stores implied by the invocations' write accesses.
+    pub stores: u64,
+    /// One entry per parallel level, in nest order.
+    pub parallel: Vec<ParallelStats>,
+}
+
+/// Chunk decomposition of one parallel level at a concrete shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParallelStats {
+    pub nest: usize,
+    pub dim: String,
+    pub unit: usize,
+    /// Iterations of the parallelized level.
+    pub span: i64,
+    /// Chunks actually formed at the queried worker count.
+    pub chunks: usize,
+}
+
+impl ScheduleStats {
+    /// One-line summary (CLI `generate --backend schedule-ir`, bench JSON).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "{} invocations, {} loads, {} stores",
+            self.invocations, self.loads, self.stores
+        );
+        for p in &self.parallel {
+            let _ = write!(
+                s,
+                "; nest {} parallel {} span {} unit {} -> {} chunks",
+                p.nest, p.dim, p.span, p.unit, p.chunks
+            );
+        }
+        s
     }
 }
 
@@ -772,6 +1025,7 @@ fn visit_nodes<F>(
     nest: usize,
     nodes: &[Node],
     extents: &BTreeMap<String, i64>,
+    threads: usize,
     idx: &mut Vec<i64>,
     f: &mut F,
 ) -> Result<(), String>
@@ -780,12 +1034,21 @@ where
 {
     for n in nodes {
         match n {
+            Node::Parallel(p) => {
+                let (lo, hi) = (p.lo.eval(extents)?, p.hi.eval(extents)?);
+                for (clo, chi) in chunk_spans(lo, hi, p.unit, threads) {
+                    let mut ext = extents.clone();
+                    ext.insert(p.lo_sym(), clo);
+                    ext.insert(p.hi_sym(), chi);
+                    visit_nodes(nest, &p.body, &ext, threads, idx, f)?;
+                }
+            }
             Node::Loop(l) => {
                 let (lo, hi) = (l.lo.eval(extents)?, l.hi.eval(extents)?);
                 let mut t = lo;
                 while t < hi {
                     idx[l.level] = t;
-                    visit_nodes(nest, &l.body, extents, idx, f)?;
+                    visit_nodes(nest, &l.body, extents, threads, idx, f)?;
                     t += 1;
                 }
             }
@@ -797,19 +1060,19 @@ where
                     let he = (t + ((lanes - t.rem_euclid(lanes)) % lanes)).min(hi);
                     while t < he {
                         idx[s.level] = t;
-                        visit_nodes(nest, head, extents, idx, f)?;
+                        visit_nodes(nest, head, extents, threads, idx, f)?;
                         t += 1;
                     }
                 }
                 let steady = t + ((hi - t) / lanes) * lanes;
                 while t < steady {
                     idx[s.level] = t;
-                    visit_nodes(nest, &s.steady, extents, idx, f)?;
+                    visit_nodes(nest, &s.steady, extents, threads, idx, f)?;
                     t += lanes;
                 }
                 while t < hi {
                     idx[s.level] = t;
-                    visit_nodes(nest, &s.remainder, extents, idx, f)?;
+                    visit_nodes(nest, &s.remainder, extents, threads, idx, f)?;
                     t += 1;
                 }
             }
@@ -824,7 +1087,7 @@ where
                     idx[g.level] = t;
                     for (a, &(alo, ahi)) in g.arms.iter().zip(&arms) {
                         if t >= alo && t < ahi {
-                            visit_nodes(nest, &a.body, extents, idx, f)?;
+                            visit_nodes(nest, &a.body, extents, threads, idx, f)?;
                         }
                     }
                     t += 1;
@@ -903,6 +1166,7 @@ mod tests {
                         n += count_nodes(&a.body, pred);
                     }
                 }
+                Node::Parallel(p) => n += count_nodes(&p.body, pred),
                 _ => {}
             }
         }
@@ -1052,6 +1316,139 @@ mod tests {
         .map(|(n, i)| (n.to_string(), *i))
         .collect();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn chunk_spans_cover_exactly() {
+        // Coverage, order, and granule alignment across shapes.
+        let shapes = [
+            (1i64, 23i64, 4usize, 3usize),
+            (0, 17, 1, 4),
+            (2, 30, 4, 8),
+            (0, 3, 4, 4),
+            (5, 5, 1, 2),
+        ];
+        for (lo, hi, unit, threads) in shapes {
+            let spans = chunk_spans(lo, hi, unit, threads);
+            let mut t = lo;
+            for &(a, b) in &spans {
+                assert_eq!(a, t, "chunks must tile the range in order");
+                assert!(b > a);
+                assert_eq!((a - lo).rem_euclid(unit as i64), 0, "chunk start off-granule");
+                t = b;
+            }
+            assert_eq!(t, if hi > lo { hi } else { lo }, "chunks must cover [{lo}, {hi})");
+            assert!(spans.len() <= threads.max(1));
+        }
+        // threads <= 1: the single chunk is the whole range.
+        assert_eq!(chunk_spans(3, 11, 4, 1), vec![(3, 11)]);
+        assert_eq!(chunk_spans(3, 11, 4, 0), vec![(3, 11)]);
+        // div_ceil split at unit 1: 10 over 4 threads -> 3,3,3,1.
+        assert_eq!(chunk_spans(0, 10, 1, 4), vec![(0, 3), (3, 6), (6, 9), (9, 10)]);
+    }
+
+    #[test]
+    fn parallel_levels_wrap_k_independent_outer_dims() {
+        // Scalar cosmo: the k loop is k-independent, so the level-0 loop
+        // gains a Parallel wrapper whose body reads the chunk symbols;
+        // contracted intermediates are recorded for per-chunk replication.
+        let prog = compile(crate::apps::cosmo::DECK, 1);
+        let pars = count(&prog, &|n| matches!(n, Node::Parallel(_)));
+        assert!(pars >= 1, "{}", prog.sched.render());
+        for np in &prog.sched.nests {
+            for n in &np.body {
+                if let Node::Parallel(p) = n {
+                    assert_eq!(p.dim, "k");
+                    assert_eq!(p.unit, 1, "plain loop chunks by single iterations");
+                    match &p.body[0] {
+                        Node::Loop(l) => {
+                            assert_eq!(l.lo, Bound::of(&p.lo_sym(), 0));
+                            assert_eq!(l.hi, Bound::of(&p.hi_sym(), 0));
+                        }
+                        other => panic!("expected loop under parallel, got {other:?}"),
+                    }
+                    for &sid in &p.private_storages {
+                        assert!(
+                            prog.sp.storages[sid].external.is_none(),
+                            "externals are never replicated"
+                        );
+                    }
+                }
+            }
+        }
+        assert!(prog.sched.render().contains("parallel k"), "{}", prog.sched.render());
+        // 1-D chains have no non-innermost dim: nothing to chunk.
+        let chain = compile(testdecks::CHAIN1D, 1);
+        assert_eq!(count(&chain, &|n| matches!(n, Node::Parallel(_))), 0);
+    }
+
+    #[test]
+    fn parallel_composes_with_outer_strips_and_tiles() {
+        // Outer-vectorized cosmo: the level-0 outer strip is chunked by
+        // whole strips (unit = lanes) so boundaries never split one.
+        let prog = compile_src(
+            crate::apps::cosmo::DECK,
+            CompileOptions {
+                analysis: crate::analysis::AnalysisOptions {
+                    vector_len: Some(4),
+                    vec_dim: crate::analysis::VecDim::Outer("k".to_string()),
+                    tile: true,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut seen = 0;
+        for np in &prog.sched.nests {
+            for n in &np.body {
+                if let Node::Parallel(p) = n {
+                    seen += 1;
+                    assert_eq!(p.unit, 4, "strip-level chunks move by whole strips");
+                    assert!(matches!(&p.body[0], Node::Strip(s) if s.outer));
+                }
+            }
+        }
+        assert!(seen >= 1, "{}", prog.sched.render());
+        // Threads over k chunks, lanes inside: tiles survive under Parallel.
+        assert!(count(&prog, &|n| matches!(n, Node::MemberStrip(m) if m.outer.is_some())) >= 1);
+    }
+
+    #[test]
+    fn visit_threads_is_order_invariant_and_stats_count() {
+        // Chunks enumerate in range order, sequential within, so the
+        // visit_threads sequence is independent of the worker count —
+        // which is exactly why serial and chunked runs stay bitwise equal.
+        let prog = compile(crate::apps::cosmo::DECK, 1);
+        let ext: BTreeMap<String, i64> =
+            [("Nk".to_string(), 6i64), ("Nj".to_string(), 9), ("Ni".to_string(), 11)].into();
+        let seq = |threads: usize| {
+            let mut got = Vec::new();
+            prog.sched
+                .visit_threads(&ext, threads, &mut |np, mi, idx| {
+                    got.push((np, mi, idx.to_vec()));
+                })
+                .unwrap();
+            got
+        };
+        let one = seq(1);
+        assert!(!one.is_empty());
+        for t in [2, 3, 8] {
+            assert_eq!(seq(t), one, "threads={t}");
+        }
+        let stats = prog
+            .sched
+            .stats(&ext, 3, &|_, _| (2, 1))
+            .unwrap();
+        assert_eq!(stats.invocations as usize, one.len());
+        assert_eq!(stats.loads, 2 * stats.invocations);
+        assert_eq!(stats.stores, stats.invocations);
+        assert!(!stats.parallel.is_empty());
+        for p in &stats.parallel {
+            assert!(p.chunks >= 1 && p.chunks <= 3);
+            assert_eq!(p.dim, "k");
+        }
+        assert!(stats.summary().contains("invocations"), "{}", stats.summary());
     }
 
     #[test]

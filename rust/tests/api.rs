@@ -228,6 +228,32 @@ fn trace_v3_non_square_extents_serve_end_to_end() {
     c.shutdown();
 }
 
+/// The `--threads` knob is a *runtime* knob by construction: it lives in
+/// `RunConfig`/`Job.threads`, not in `PlanSpec`, so it can move neither
+/// the plan key nor the batch identity — and a threaded job serves the
+/// serial checksum bitwise from the same single compiled plan.
+#[test]
+fn threads_knob_is_outside_every_fingerprint() {
+    use hfav::engine::Threads;
+    let spec = PlanSpec::app("cosmo").vlen(Vlen::Fixed(4)).vec_dim(VecDim::Auto).tiled(true);
+    let serial = Job::new(4, spec.clone(), "native", 24, 1);
+    let threaded = Job::new(4, spec.clone(), "native", 24, 1).with_threads(Threads::Fixed(4));
+    let auto = Job::new(4, spec, "native", 24, 1).with_threads(Threads::Auto);
+    assert_eq!(serial.plan_key(), threaded.plan_key(), "threads leaked into the plan key");
+    assert_eq!(serial.plan_key(), auto.plan_key());
+    assert_eq!(batch_key(&serial), batch_key(&threaded), "threads leaked into the batch key");
+    assert_eq!(batch_key(&serial), batch_key(&auto));
+    let c = Coordinator::start(2, None);
+    let results = c.run_batch(vec![serial, threaded, auto]);
+    for r in &results {
+        assert!(r.ok, "job {}: {}", r.id, r.detail);
+    }
+    assert_eq!(results[0].checksum, results[1].checksum, "Fixed(4) moved results");
+    assert_eq!(results[0].checksum, results[2].checksum, "Auto moved results");
+    assert_eq!(c.plans.stats().computes, 1, "threads must not split the plan cache");
+    c.shutdown();
+}
+
 /// Fails closed: a `Job` carries only a `PlanSpec` + backend name, its
 /// plan key is derived solely from the spec, and every spec knob is
 /// covered by the fingerprint — so there is no way to build two jobs

@@ -79,8 +79,23 @@ fn run_stencil(
     ext: &BTreeMap<String, i64>,
     inputs: &BTreeMap<String, Vec<f64>>,
 ) -> BTreeMap<String, Vec<f64>> {
+    run_stencil_threads(prog, reg, eng, ext, inputs, hfav::engine::Threads::Serial)
+}
+
+/// [`run_stencil`] at an explicit runtime worker count.
+fn run_stencil_threads(
+    prog: &Program,
+    reg: &hfav::exec::registry::Registry,
+    eng: Eng,
+    ext: &BTreeMap<String, i64>,
+    inputs: &BTreeMap<String, Vec<f64>>,
+    threads: hfav::engine::Threads,
+) -> BTreeMap<String, Vec<f64>> {
     match eng {
-        Eng::Interp => exec::run(prog, reg, ext, inputs, ExecOptions::default()).unwrap(),
+        Eng::Interp => {
+            let opts = ExecOptions { threads: threads.resolve(), ..Default::default() };
+            exec::run(prog, reg, ext, inputs, opts).unwrap()
+        }
         _ => {
             let module = build_module(prog, eng);
             let mut arrays = inputs.clone();
@@ -90,7 +105,7 @@ fn run_stencil(
                     arrays.insert(name.clone(), vec![0.0; len]);
                 }
             }
-            module.run(ext, &mut arrays).unwrap();
+            module.run_with(ext, &mut arrays, threads).unwrap();
             let out_names: Vec<String> =
                 prog.external_outputs().into_iter().map(|(n, _, _)| n).collect();
             arrays.into_iter().filter(|(k, _)| out_names.contains(k)).collect()
@@ -354,6 +369,47 @@ fn differential_tiled_hydro2d() {
                 assert!(
                     err < TOL,
                     "hydro2d {label} {} field {name}: err {err:.2e}",
+                    eng.label()
+                );
+            }
+        }
+    }
+}
+
+/// Parallel chunking is partitioning, never reassociation: at any worker
+/// count every engine must reproduce its own serial output *bitwise* —
+/// interpreter (persistent worker pool), native C (OpenMP chunks), and
+/// generated Rust (scoped threads) — on non-square cosmo, both scalar
+/// and tiled×threaded (threads over outer chunks, vlen lanes inside).
+#[test]
+fn differential_threads_bitwise_across_engines() {
+    use hfav::engine::Threads;
+    let (nk, nj, ni) = (7usize, 10usize, 13usize);
+    let mut ext = BTreeMap::new();
+    ext.insert("Nk".to_string(), nk as i64);
+    ext.insert("Nj".to_string(), nj as i64);
+    ext.insert("Ni".to_string(), ni as i64);
+    let mut inputs = BTreeMap::new();
+    inputs.insert("g_u".to_string(), apps::seeded(nk * nj * ni, 31));
+    let reg = apps::cosmo::registry();
+    let engines = engines();
+    let specs = [
+        ("scalar", PlanSpec::deck_src(apps::cosmo::DECK).vlen(Vlen::Fixed(1))),
+        (
+            "tiled:k vlen4",
+            PlanSpec::deck_src(apps::cosmo::DECK).vlen(Vlen::Fixed(4)).tiled(true),
+        ),
+    ];
+    for (label, spec) in specs {
+        let prog = spec.compile().unwrap_or_else(|e| panic!("{label}: {e}"));
+        for &eng in &engines {
+            let serial = run_stencil_threads(&prog, &reg, eng, &ext, &inputs, Threads::Serial);
+            for t in [Threads::Fixed(2), Threads::Fixed(3), Threads::Auto] {
+                let out = run_stencil_threads(&prog, &reg, eng, &ext, &inputs, t);
+                assert_eq!(
+                    out["g_out"],
+                    serial["g_out"],
+                    "cosmo {label} {} at {t:?} diverged bitwise from serial",
                     eng.label()
                 );
             }

@@ -163,11 +163,11 @@ fn check_deck(seed: u64, ndims: usize, nstages: usize) {
         &reg,
         &ext,
         &inputs,
-        ExecOptions { mode: Mode::Peeled },
+        ExecOptions { mode: Mode::Peeled, threads: 1 },
     )
     .unwrap_or_else(|e| panic!("seed {seed}: naive run failed: {e}\n{deck}"));
     for mode in [Mode::Peeled, Mode::Guarded] {
-        let got = exec::run(&fused, &reg, &ext, &inputs, ExecOptions { mode })
+        let got = exec::run(&fused, &reg, &ext, &inputs, ExecOptions { mode, threads: 1 })
             .unwrap_or_else(|e| panic!("seed {seed} {mode:?}: fused run failed: {e}\n{deck}"));
         for (k, v) in &base {
             let err = max_err(v, &got[k]);
@@ -365,6 +365,101 @@ fn prop_exec_trace_matches_schedule_walk() {
                     g, w,
                     "{app} {label}: invocation {k} diverges (exec {g:?} vs schedule {w:?})"
                 );
+            }
+        }
+    }
+}
+
+/// Chunked execution is an interleaving, never a reordering: project the
+/// threaded trace of [`hfav::exec::run_traced_with`] onto any one chunk
+/// of the parallel partition and it must replay that chunk's subsequence
+/// of [`hfav::schedule::Schedule::visit_threads`] *exactly* — same
+/// invocations, same order. Chunk identity is recomputed independently
+/// here from [`hfav::schedule::chunk_spans`] over the lowered tree's
+/// `Parallel` node, so the partition itself is pinned too (an executor
+/// that split the iteration space differently would fail even if every
+/// per-chunk order were internally consistent).
+#[test]
+fn prop_threaded_trace_partitions_schedule_walk() {
+    use hfav::plan::Vlen;
+    use hfav::schedule::{chunk_spans, Node};
+    let apps: [(&str, &str, hfav::exec::registry::Registry); 2] = [
+        ("laplace", hfav::apps::laplace::DECK, hfav::apps::laplace::registry()),
+        ("cosmo", hfav::apps::cosmo::DECK, hfav::apps::cosmo::registry()),
+    ];
+    for (app, deck, reg) in apps {
+        let strategies: Vec<(&str, PlanSpec)> = vec![
+            ("scalar", PlanSpec::deck_src(deck).vlen(Vlen::Fixed(1))),
+            ("tiled", PlanSpec::deck_src(deck).vlen(Vlen::Fixed(4)).tiled(true)),
+        ];
+        for (label, spec) in strategies {
+            let prog = spec.compile().unwrap_or_else(|e| panic!("{app} {label}: {e}"));
+            let mut ext = BTreeMap::new();
+            for (k, name) in
+                hfav::codegen::c99::extent_names(&prog).into_iter().enumerate()
+            {
+                ext.insert(name, [14i64, 10, 6][k % 3]);
+            }
+            let mut inputs = BTreeMap::new();
+            for (name, _, _) in prog.external_inputs() {
+                let len = exec::external_len(&prog, &name, &ext).unwrap();
+                inputs.insert(name, Rng::new(99).f64s(len));
+            }
+            // Every callsite name belongs to exactly one nest plan here,
+            // so the trace side can recover `np` from the kernel name.
+            let mut np_of: BTreeMap<String, usize> = BTreeMap::new();
+            for (np, plan) in prog.sched.nests.iter().enumerate() {
+                for m in &prog.fd.nests[plan.nest].members {
+                    np_of.insert(prog.df.callsites[m.callsite].name.clone(), np);
+                }
+            }
+            for threads in [2usize, 3] {
+                let chunk_of = |np: usize, idx: &[i64]| -> usize {
+                    let plan = &prog.sched.nests[np];
+                    for n in &plan.body {
+                        if let Node::Parallel(p) = n {
+                            let lvl =
+                                plan.dims.iter().position(|d| *d == p.dim).unwrap();
+                            let lo = p.lo.eval(&ext).unwrap();
+                            let hi = p.hi.eval(&ext).unwrap();
+                            return chunk_spans(lo, hi, p.unit, threads)
+                                .iter()
+                                .position(|&(a, b)| a <= idx[lvl] && idx[lvl] < b)
+                                .unwrap();
+                        }
+                    }
+                    0 // no parallel level: everything is one chunk
+                };
+                let mut want: Vec<Vec<(String, Vec<i64>)>> = vec![Vec::new(); threads];
+                prog.sched
+                    .visit_threads(&ext, threads, &mut |np, mi, idx| {
+                        let nest = &prog.fd.nests[prog.sched.nests[np].nest];
+                        let cs = nest.members[mi].callsite;
+                        want[chunk_of(np, idx)]
+                            .push((prog.df.callsites[cs].name.clone(), idx.to_vec()));
+                    })
+                    .unwrap();
+                if app == "cosmo" {
+                    assert!(
+                        want[1..].iter().any(|c| !c.is_empty()),
+                        "{app} {label} t{threads}: partition degenerated to one chunk"
+                    );
+                }
+                let (_, trace) =
+                    hfav::exec::run_traced_with(&prog, &reg, &ext, &inputs, threads)
+                        .unwrap_or_else(|e| panic!("{app} {label} t{threads}: {e}"));
+                let mut got: Vec<Vec<(String, Vec<i64>)>> = vec![Vec::new(); threads];
+                for (name, idx) in trace {
+                    let np = np_of[&name];
+                    got[chunk_of(np, &idx)].push((name, idx));
+                }
+                for (c, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        g, w,
+                        "{app} {label} t{threads}: chunk {c} subsequence diverges \
+                         from the schedule walk"
+                    );
+                }
             }
         }
     }
