@@ -4,6 +4,7 @@
 //! CSV block for plotting.
 
 pub mod report;
+pub mod tune;
 
 use crate::analysis::VecDim;
 use crate::apps::{self, Variant};
@@ -12,22 +13,40 @@ use crate::plan::{PlanSpec, Vlen};
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-/// Run `f` repeatedly: a warmup call, then at least `min_reps` reps or
-/// until `min_time_s` elapsed; returns seconds-per-call (median of reps).
-pub fn time_it<F: FnMut()>(mut f: F, min_reps: usize, min_time_s: f64) -> f64 {
+/// Safety cap on [`time_it`] reps — a backstop against pathological
+/// spins, set far above what `min_time_s` needs on any real kernel.
+pub const MAX_REPS: usize = 100_000;
+
+/// One timing measurement: median seconds-per-call and the rep count
+/// the median came from (recorded by the tuner's DB entries).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Timing {
+    /// Median seconds-per-call across the measured reps.
+    pub secs: f64,
+    /// Reps the median was taken over.
+    pub reps: usize,
+}
+
+/// Run `f` repeatedly: a warmup call, then until *both* at least
+/// `min_reps` reps have run *and* `min_time_s` has elapsed (an earlier
+/// version broke at a hard 1000-rep cap before the time check, silently
+/// under-measuring fast kernels on exactly the small shapes the tuner
+/// times most). [`MAX_REPS`] remains as a generous safety cap. Always
+/// measures at least one rep.
+pub fn time_it<F: FnMut()>(mut f: F, min_reps: usize, min_time_s: f64) -> Timing {
     f(); // warmup
     let mut times = Vec::new();
     let start = Instant::now();
-    while times.len() < min_reps || start.elapsed().as_secs_f64() < min_time_s {
+    while times.is_empty()
+        || (times.len() < MAX_REPS
+            && (times.len() < min_reps || start.elapsed().as_secs_f64() < min_time_s))
+    {
         let t0 = Instant::now();
         f();
         times.push(t0.elapsed().as_secs_f64());
-        if times.len() > 1000 {
-            break;
-        }
     }
     times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    times[times.len() / 2]
+    Timing { secs: times[times.len() / 2], reps: times.len() }
 }
 
 /// Table-row printer: name, size, cell-updates/s.
@@ -78,7 +97,8 @@ pub fn normalization(sizes: &[usize]) -> Vec<String> {
             || apps::normalization::reference(&q, n, n, &mut out),
             3,
             0.2,
-        );
+        )
+        .secs;
         row("autovec", n, t_auto, (n * n) as f64);
         csv.push(format!("normalize,{n},autovec,{:.3}", (n * n) as f64 / t_auto / 1e6));
         // HFAV: generated C, cc -O3, dlopen.
@@ -90,7 +110,7 @@ pub fn normalization(sizes: &[usize]) -> Vec<String> {
         let mut arrays = BTreeMap::new();
         arrays.insert("g_q".to_string(), q.clone());
         arrays.insert("g_out".to_string(), vec![0.0; n * n]);
-        let t_hfav = time_it(|| module.run(&ext, &mut arrays).unwrap(), 3, 0.2);
+        let t_hfav = time_it(|| module.run(&ext, &mut arrays).unwrap(), 3, 0.2).secs;
         row("HFAV", n, t_hfav, (n * n) as f64);
         csv.push(format!("normalize,{n},hfav,{:.3}", (n * n) as f64 / t_hfav / 1e6));
         println!("    speedup {:.2}x", t_auto / t_hfav);
@@ -106,10 +126,10 @@ pub fn cosmo(sizes: &[usize], nk: usize) -> Vec<String> {
         let u = apps::seeded(nk * n * n, 7);
         let cells = (nk * (n - 4) * (n - 4)) as f64;
         let mut out = vec![0.0; nk * (n - 4) * (n - 4)];
-        let t_ref = time_it(|| apps::cosmo::reference(&u, nk, n, n, &mut out), 3, 0.2);
+        let t_ref = time_it(|| apps::cosmo::reference(&u, nk, n, n, &mut out), 3, 0.2).secs;
         row("autovec", n, t_ref, cells);
         csv.push(format!("cosmo,{n},autovec,{:.3}", cells / t_ref / 1e6));
-        let t_st = time_it(|| apps::cosmo::stella(&u, nk, n, n, &mut out), 3, 0.2);
+        let t_st = time_it(|| apps::cosmo::stella(&u, nk, n, n, &mut out), 3, 0.2).secs;
         row("STELLA", n, t_st, cells);
         csv.push(format!("cosmo,{n},stella,{:.3}", cells / t_st / 1e6));
 
@@ -122,7 +142,7 @@ pub fn cosmo(sizes: &[usize], nk: usize) -> Vec<String> {
         let mut arrays = BTreeMap::new();
         arrays.insert("g_u".to_string(), u.clone());
         arrays.insert("g_out".to_string(), vec![0.0; nk * (n - 4) * (n - 4)]);
-        let t_hfav = time_it(|| module.run(&ext, &mut arrays).unwrap(), 3, 0.2);
+        let t_hfav = time_it(|| module.run(&ext, &mut arrays).unwrap(), 3, 0.2).secs;
         row("HFAV", n, t_hfav, cells);
         csv.push(format!("cosmo,{n},hfav,{:.3}", cells / t_hfav / 1e6));
 
@@ -133,7 +153,7 @@ pub fn cosmo(sizes: &[usize], nk: usize) -> Vec<String> {
         let mut arrays_t = BTreeMap::new();
         arrays_t.insert("g_u".to_string(), u.clone());
         arrays_t.insert("g_out".to_string(), vec![0.0; nk * (n - 4) * (n - 4)]);
-        let t_tuned = time_it(|| module_t.run(&ext, &mut arrays_t).unwrap(), 3, 0.2);
+        let t_tuned = time_it(|| module_t.run(&ext, &mut arrays_t).unwrap(), 3, 0.2).secs;
         row("HFAV+Tuning", n, t_tuned, cells);
         csv.push(format!("cosmo,{n},hfav_tuned,{:.3}", cells / t_tuned / 1e6));
         println!(
@@ -492,7 +512,7 @@ fn vectorization_case(
         } else {
             outputs.keys().all(|name| arrays[name] == baseline[name])
         };
-        let t = time_it(|| module.run_with(ext, &mut arrays, knob).unwrap(), 3, 0.2);
+        let t = time_it(|| module.run_with(ext, &mut arrays, knob).unwrap(), 3, 0.2).secs;
         if k == 0 {
             t_scalar = t;
         }
@@ -563,9 +583,45 @@ pub fn pjrt(artifacts: &std::path::Path) -> Result<Vec<String>, String> {
             },
             2,
             0.1,
-        );
+        )
+        .secs;
         println!("  {name:<18} {:.3} ms/call", secs * 1e3);
         csv.push(format!("{name},{:.4}", secs * 1e3));
     }
     Ok(csv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_honors_min_time_past_old_rep_cap() {
+        let start = Instant::now();
+        let mut acc = 0u64;
+        let t = time_it(|| acc = acc.wrapping_add(1), 3, 0.02);
+        std::hint::black_box(acc);
+        // A trivially fast closure must keep measuring until the time
+        // budget (or the generous safety cap) — not stop at the old
+        // hard 1000-rep cap.
+        assert!(t.reps > 1000, "rep cap resurfaced: {} reps", t.reps);
+        assert!(t.reps <= MAX_REPS);
+        assert!(
+            start.elapsed().as_secs_f64() >= 0.02 || t.reps == MAX_REPS,
+            "stopped before min_time_s with only {} reps",
+            t.reps
+        );
+        assert!(t.secs >= 0.0);
+    }
+
+    #[test]
+    fn time_it_honors_min_reps_and_always_measures_once() {
+        let mut calls = 0usize;
+        let t = time_it(|| calls += 1, 5, 0.0);
+        assert!(t.reps >= 5);
+        assert_eq!(calls, t.reps + 1, "warmup call not counted in reps");
+        // Degenerate request still measures one rep (no panic).
+        let t0 = time_it(|| {}, 0, 0.0);
+        assert_eq!(t0.reps, 1);
+    }
 }

@@ -63,8 +63,13 @@ pub struct ServeRow {
     pub threads_effective: u64,
 }
 
+/// JSON string escaping. An earlier hand-rolled version only handled
+/// backslash and quote, so a deck path containing a newline or other
+/// control character produced invalid JSON; [`crate::json::escape`]
+/// covers the full mandatory set (quote, backslash, `\n\r\t\b\f`, and
+/// `\u00XX` for remaining control characters).
 fn esc(s: &str) -> String {
-    s.replace('\\', "\\\\").replace('"', "\\\"")
+    crate::json::escape(s)
 }
 
 fn num(x: f64) -> String {
@@ -205,5 +210,52 @@ mod tests {
         assert!(text.contains("\"schema\": \"hfav-bench-serving/v1\""), "{text}");
         assert!(text.contains("\"plan_hit_rate\": 0.833"), "{text}");
         assert!(text.contains("\"threads_effective\": 2"), "{text}");
+    }
+
+    #[test]
+    fn hostile_strings_round_trip_through_a_json_parser() {
+        // Deck-file paths end up in `app`/`scenario`/`extents` fields;
+        // quotes, backslashes, control characters and unicode must all
+        // survive rendering and parse back to the original text.
+        let hostile = [
+            "decks/my deck.yaml",
+            "decks/quo\"te.yaml",
+            "C:\\decks\\win.yaml",
+            "line\nbreak\tand\rcontrol\u{1}\u{1f}",
+            "uni-ço∂é ☃",
+        ];
+        for s in hostile {
+            let mut r = vec_row();
+            r.app = s.to_string();
+            r.strategy = s.to_string();
+            let text = vectorization_json(&[r]);
+            let doc = crate::json::parse(&text)
+                .unwrap_or_else(|e| panic!("invalid JSON for {s:?}: {e}\n{text}"));
+            let row = &doc.get("rows").and_then(crate::json::Value::as_arr).unwrap()[0];
+            assert_eq!(row.get("app").and_then(crate::json::Value::as_str), Some(s));
+            assert_eq!(row.get("strategy").and_then(crate::json::Value::as_str), Some(s));
+        }
+        let mut sr = ServeRow {
+            scenario: "trace \"x\"\\\n".to_string(),
+            workers: 1,
+            threads: 1,
+            jobs: 1,
+            distinct_plan_keys: 1,
+            plan_compiles: 1,
+            plan_hit_rate: 0.0,
+            mcells_per_s: 1.0,
+            batches: 1,
+            batch_wall_ms: 1.0,
+            threads_effective: 1,
+        };
+        let text = serving_json(&[sr.clone()]);
+        let doc = crate::json::parse(&text).unwrap();
+        let row = &doc.get("rows").and_then(crate::json::Value::as_arr).unwrap()[0];
+        assert_eq!(
+            row.get("scenario").and_then(crate::json::Value::as_str),
+            Some(sr.scenario.as_str())
+        );
+        sr.mcells_per_s = f64::NAN; // non-finite values render as 0.000
+        assert!(crate::json::parse(&serving_json(&[sr])).is_ok());
     }
 }

@@ -1,0 +1,366 @@
+//! The `hfav tune` driver: empirical plan selection over the knob
+//! cross-product (ROADMAP "shape-class autotuner").
+//!
+//! The pipeline has three stages, cheapest first:
+//!
+//! 1. **Enumerate** ([`candidate_specs`]): the vectorization/tuning
+//!    knob cross-product over the base spec — vector length (scalar and
+//!    host SIMD width), lane dim (`inner` / `auto`-resolved outer),
+//!    aligned heads, multi-dim tiling, §5.3 tuning — deduplicated by
+//!    fingerprint. *Compilation is the legality gate*: the same
+//!    `resolve_vec_dim` / `parallel_safe` analyses that protect serving
+//!    reject illegal combinations here (e.g. tiling a deck with no
+//!    k-independent outer dim), so an illegal knob set is filtered, not
+//!    an error.
+//! 2. **Rank** ([`legal_candidates`]): each surviving plan is costed
+//!    with the analytical model ([`crate::schedule::cost::estimate`])
+//!    over its walk counters ([`crate::plan::Program::schedule_stats`])
+//!    at the tuning shape; plans with parallel levels are costed at
+//!    every configured worker count. Ranking is cheap — no execution.
+//! 3. **Time** ([`tune`]): only the `budget` best-ranked candidates are
+//!    actually run ([`crate::bench::time_it`] medians on the configured
+//!    engine), and the measured winner is returned as a
+//!    [`TunedEntry`] ready for the tuned-plans DB
+//!    ([`crate::plan::tunedb::TunedDb`]).
+//!
+//! The entry records the *resolved* knobs of the winning compiled plan
+//! (concrete lane dim and vector length, never `auto`), so serving can
+//! re-apply them without re-running any analysis.
+
+use crate::analysis::VecDim;
+use crate::bench::time_it;
+use crate::engine::{self, PrepareCtx, RunConfig, Threads};
+use crate::exec;
+use crate::plan::tunedb::{deck_digest, ShapeClass, TunedEntry};
+use crate::plan::{PlanSpec, Program};
+use crate::schedule::cost;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+/// Tuner configuration (CLI flags of `hfav tune`).
+#[derive(Debug, Clone)]
+pub struct TuneConfig {
+    /// Concrete extents to tune at, in sorted-name order (`--extents`).
+    pub extents: Vec<i64>,
+    /// Candidates to time after cost ranking (`--budget`).
+    pub budget: usize,
+    /// Engine registry name to time on (`--engine`).
+    pub engine: String,
+    /// Worker counts considered for plans with parallel levels.
+    pub threads: Vec<usize>,
+    /// Per-candidate timing: minimum reps and minimum measured seconds.
+    pub min_reps: usize,
+    pub min_time_s: f64,
+}
+
+impl TuneConfig {
+    /// Defaults for a given tuning shape: time the 4 best candidates on
+    /// the best available engine, considering serial and all-cores
+    /// execution for parallel plans.
+    pub fn for_extents(extents: Vec<i64>) -> TuneConfig {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        TuneConfig {
+            extents,
+            budget: 4,
+            engine: default_engine().to_string(),
+            threads: if cores > 1 { vec![1, cores] } else { vec![1] },
+            min_reps: 3,
+            min_time_s: 0.1,
+        }
+    }
+}
+
+/// The engine candidates are timed on by default: compiled C when a C
+/// compiler is present (what production serves), else the interpreter.
+pub fn default_engine() -> &'static str {
+    match engine::registry().get("native") {
+        Ok(b) if b.available().is_ready() => "native",
+        _ => "exec",
+    }
+}
+
+/// One ranked candidate: a legal (compiled) plan plus the worker count
+/// it would run at and its predicted relative cost.
+#[derive(Clone)]
+pub struct Candidate {
+    pub spec: PlanSpec,
+    pub prog: Arc<Program>,
+    pub threads: usize,
+    pub cost: f64,
+}
+
+impl Candidate {
+    /// Human-readable knob label (tune progress output).
+    pub fn label(&self) -> String {
+        format!(
+            "vec_dim={} vlen={} aligned={} tiled={} tuned={} threads={}",
+            self.prog.vec_dim(),
+            self.prog.vector_len(),
+            self.spec.is_aligned(),
+            self.prog.tiled(),
+            self.spec.is_tuned(),
+            self.threads
+        )
+    }
+}
+
+/// The knob cross-product over `base`, deduplicated by fingerprint (at
+/// vector length 1 the lane-dim/aligned/tile knobs are no-ops, so the
+/// scalar corner contributes only the §5.3-tuning toggle). Legality is
+/// *not* checked here — [`legal_candidates`] compiles each spec and
+/// drops the ones the analysis gates reject.
+pub fn candidate_specs(base: &PlanSpec) -> Vec<PlanSpec> {
+    let auto = crate::analysis::auto_vector_len();
+    let mut vlens = vec![1usize];
+    if auto > 1 {
+        vlens.push(auto);
+    }
+    let mut out = Vec::new();
+    for &vlen in &vlens {
+        for tuned in [false, true] {
+            let b = base.clone().vlen_resolved(Some(vlen)).tuned(tuned);
+            if vlen == 1 {
+                out.push(b);
+                continue;
+            }
+            for vd in [VecDim::Inner, VecDim::Auto] {
+                for aligned in [false, true] {
+                    for tiled in [false, true] {
+                        out.push(b.clone().vec_dim(vd.clone()).aligned(aligned).tiled(tiled));
+                    }
+                }
+            }
+        }
+    }
+    let mut seen = BTreeSet::new();
+    out.retain(|s| seen.insert(s.fingerprint()));
+    out
+}
+
+/// Compile every candidate spec (the legality gate), cost the legal
+/// ones at the tuning shape, and return them sorted best-first. Plans
+/// without parallel levels are costed at one worker only; plans with
+/// them get one candidate per configured worker count.
+pub fn legal_candidates(base: &PlanSpec, cfg: &TuneConfig) -> Result<Vec<Candidate>, String> {
+    let mut threads: Vec<usize> = cfg.threads.iter().map(|&t| t.max(1)).collect();
+    threads.sort_unstable();
+    threads.dedup();
+    if threads.is_empty() {
+        threads.push(1);
+    }
+    let mut out = Vec::new();
+    for spec in candidate_specs(base) {
+        let Ok(prog) = spec.compile() else {
+            continue; // illegal knob set for this deck — filtered, not fatal
+        };
+        let prog = Arc::new(prog);
+        let ext = extents_map(&prog, &cfg.extents)?;
+        let base_stats = prog.schedule_stats(&ext, 1)?;
+        let counts: &[usize] =
+            if base_stats.parallel.is_empty() { &threads[..1] } else { &threads };
+        for &t in counts {
+            let stats = if t == 1 { base_stats.clone() } else { prog.schedule_stats(&ext, t)? };
+            out.push(Candidate {
+                spec: spec.clone(),
+                prog: prog.clone(),
+                threads: t,
+                cost: cost::estimate(&stats, prog.vector_len(), t),
+            });
+        }
+    }
+    if out.is_empty() {
+        return Err("no legal candidate plans for this deck".to_string());
+    }
+    out.sort_by(|a, b| a.cost.total_cmp(&b.cost));
+    Ok(out)
+}
+
+/// Bind the tuning extents to the compiled deck's extent names (sorted
+/// order, like trace-v3 overrides).
+fn extents_map(prog: &Program, extents: &[i64]) -> Result<BTreeMap<String, i64>, String> {
+    let names = crate::codegen::c99::extent_names(prog);
+    if names.len() != extents.len() {
+        return Err(format!(
+            "--extents has {} values but deck `{}` takes {} ({})",
+            extents.len(),
+            prog.deck.name,
+            names.len(),
+            names.join("x")
+        ));
+    }
+    Ok(names.iter().cloned().zip(extents.iter().copied()).collect())
+}
+
+/// Time one candidate on the configured engine: external inputs seeded,
+/// outputs zero-filled (the coordinator's generic grid setup), one
+/// validated run, then a [`time_it`] median. Returns (Mcells/s, reps).
+fn time_candidate(c: &Candidate, cfg: &TuneConfig) -> Result<(f64, usize), String> {
+    let backend = engine::registry().get(&cfg.engine)?;
+    let exe = backend.prepare(&c.spec, &c.prog, &PrepareCtx { artifacts: None })?;
+    let ext = extents_map(&c.prog, &cfg.extents)?;
+    let cells: f64 = ext.values().map(|&v| v.max(1) as f64).product();
+    let input_names: BTreeSet<String> =
+        c.prog.external_inputs().into_iter().map(|(n, _, _)| n).collect();
+    let mut arrays = BTreeMap::new();
+    for name in &input_names {
+        let len = exec::external_len(&c.prog, name, &ext)?;
+        arrays.insert(name.clone(), crate::apps::seeded(len, 42));
+    }
+    for (name, _, _) in c.prog.external_outputs() {
+        if !arrays.contains_key(&name) {
+            let len = exec::external_len(&c.prog, &name, &ext)?;
+            arrays.insert(name, vec![0.0; len]);
+        }
+    }
+    let run_cfg = RunConfig::with_threads(if c.threads > 1 {
+        Threads::Fixed(c.threads)
+    } else {
+        Threads::Serial
+    });
+    let mut ws = exec::Workspace::new();
+    exe.run_with(&ext, &mut arrays, &mut ws, &run_cfg)?;
+    let mut err: Option<String> = None;
+    let t = time_it(
+        || {
+            if err.is_none() {
+                if let Err(e) = exe.run_with(&ext, &mut arrays, &mut ws, &run_cfg) {
+                    err = Some(e);
+                }
+            }
+        },
+        cfg.min_reps,
+        cfg.min_time_s,
+    );
+    if let Some(e) = err {
+        return Err(format!("timing run failed: {e}"));
+    }
+    Ok((cells / t.secs / 1e6, t.reps))
+}
+
+/// Run the full tuning pipeline for `base` at the configured shape and
+/// return the measured winner as a DB-ready [`TunedEntry`]. Progress is
+/// printed (bench-style); persistence is the caller's (`hfav tune`
+/// loads, inserts, and saves the DB around this).
+pub fn tune(base: &PlanSpec, cfg: &TuneConfig) -> Result<TunedEntry, String> {
+    let digest = deck_digest(base)?;
+    let class = ShapeClass::of(&cfg.extents);
+    let extents_label = cfg.extents.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("x");
+    let ranked = legal_candidates(base, cfg)?;
+    println!(
+        "tune {} @ {extents_label} (class {}, engine {}): {} legal candidates, timing {}",
+        base.target(),
+        class.label(),
+        cfg.engine,
+        ranked.len(),
+        cfg.budget.clamp(1, ranked.len()),
+    );
+    let mut best: Option<(TunedEntry, f64)> = None;
+    let mut timed = 0usize;
+    for c in ranked.iter().take(cfg.budget.max(1)) {
+        let (mcells, reps) = match time_candidate(c, cfg) {
+            Ok(r) => r,
+            Err(e) => {
+                println!("  {:<58} FAILED: {e}", c.label());
+                continue;
+            }
+        };
+        timed += 1;
+        println!("  {:<58} {mcells:>9.1} Mcells/s  ({reps} reps)", c.label());
+        let entry = TunedEntry {
+            deck_digest: digest,
+            target: base.target().to_string(),
+            shape_class: class.label(),
+            extents: extents_label.clone(),
+            tuned: c.spec.is_tuned(),
+            vec_dim: c.prog.vec_dim().to_string(),
+            vlen: c.prog.vector_len(),
+            aligned: c.spec.is_aligned(),
+            tiled: c.prog.tiled(),
+            threads: c.threads,
+            mcells_per_s: mcells,
+            candidates: ranked.len(),
+            timed: 0, // final count patched below
+            reps,
+        };
+        let better = match &best {
+            None => true,
+            Some((_, b)) => mcells > *b,
+        };
+        if better {
+            best = Some((entry, mcells));
+        }
+    }
+    let (mut entry, _) = best.ok_or("all timed candidates failed")?;
+    entry.timed = timed;
+    println!("  winner: {}  ({:.1} Mcells/s)", entry.knob_label(), entry.mcells_per_s);
+    Ok(entry)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidate_specs_cover_the_knob_space_without_duplicates() {
+        let specs = candidate_specs(&PlanSpec::app("cosmo"));
+        let fps: BTreeSet<u64> = specs.iter().map(|s| s.fingerprint()).collect();
+        assert_eq!(fps.len(), specs.len(), "duplicate fingerprints survived dedup");
+        // At minimum the two scalar corners (tuned off/on) exist...
+        assert!(specs.len() >= 2);
+        // ...and when the host has SIMD lanes, the vector knob space too.
+        if crate::analysis::auto_vector_len() > 1 {
+            assert!(specs.len() >= 2 + 16, "vector cross-product missing: {}", specs.len());
+            assert!(specs.iter().any(|s| s.is_tiled()));
+            assert!(specs.iter().any(|s| s.is_aligned()));
+        }
+    }
+
+    #[test]
+    fn legal_candidates_rank_by_cost_and_respect_the_shape() {
+        let cfg = TuneConfig {
+            extents: vec![12, 12, 3],
+            budget: 2,
+            engine: "exec".to_string(),
+            threads: vec![1, 2],
+            min_reps: 1,
+            min_time_s: 0.0,
+        };
+        let ranked = legal_candidates(&PlanSpec::app("cosmo"), &cfg).unwrap();
+        assert!(!ranked.is_empty());
+        for w in ranked.windows(2) {
+            assert!(w[0].cost <= w[1].cost, "not sorted by cost");
+        }
+        for c in &ranked {
+            assert!(c.cost.is_finite());
+            assert!(c.threads >= 1);
+        }
+        // Wrong extent count is a hard error, not a silent mis-bind.
+        let bad = TuneConfig { extents: vec![12, 12], ..cfg };
+        assert!(legal_candidates(&PlanSpec::app("cosmo"), &bad).is_err());
+    }
+
+    #[test]
+    fn tune_produces_a_db_ready_entry() {
+        let cfg = TuneConfig {
+            extents: vec![10, 10, 3],
+            budget: 2,
+            engine: "exec".to_string(),
+            threads: vec![1],
+            min_reps: 1,
+            min_time_s: 0.0,
+        };
+        let base = PlanSpec::app("cosmo");
+        let entry = tune(&base, &cfg).unwrap();
+        assert_eq!(entry.deck_digest, deck_digest(&base).unwrap());
+        assert_eq!(entry.shape_class, ShapeClass::of(&[10, 10, 3]).label());
+        assert_eq!(entry.extents, "10x10x3");
+        assert!(entry.mcells_per_s > 0.0);
+        assert!(entry.vlen >= 1);
+        assert_ne!(entry.vec_dim, "auto", "entry must record the resolved lane dim");
+        assert!(entry.timed >= 1 && entry.timed <= 2);
+        assert!(entry.candidates >= entry.timed);
+        assert!(entry.reps >= 1);
+        // The recorded knobs apply onto a fresh spec without error.
+        entry.apply(PlanSpec::app("cosmo")).unwrap();
+    }
+}

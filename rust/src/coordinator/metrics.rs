@@ -8,12 +8,97 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+/// Fixed-size latency reservoir (Vitter's Algorithm R). The first
+/// [`LatencyReservoir::CAP`] samples are kept exactly; after that each
+/// new sample replaces a uniformly random slot with probability
+/// `CAP/seen`, so the buffer remains a uniform sample of the *whole*
+/// run and a serve of any length uses bounded memory. (The previous
+/// unbounded `Vec` grew by 8 bytes per job forever, and every
+/// percentile call cloned and sorted all of it.) The RNG is a small
+/// deterministic xorshift — percentile estimates need statistical
+/// fairness, not cryptographic randomness, and determinism keeps tests
+/// exact.
+#[derive(Debug)]
+pub struct LatencyReservoir {
+    samples: Vec<u64>,
+    /// Samples ever recorded (`>= samples.len()`).
+    seen: u64,
+    rng: u64,
+}
+
+impl Default for LatencyReservoir {
+    fn default() -> LatencyReservoir {
+        LatencyReservoir { samples: Vec::new(), seen: 0, rng: 0x9e37_79b9_7f4a_7c15 }
+    }
+}
+
+impl LatencyReservoir {
+    /// Reservoir capacity: large enough for stable p50/p95 estimates
+    /// (sampling error well under 1% at this size), small enough that a
+    /// million-job serve holds 32 KiB of latencies, not 8 MB.
+    pub const CAP: usize = 4096;
+
+    fn next_rand(&mut self) -> u64 {
+        // xorshift64*: fast, full-period, deterministic.
+        let mut x = self.rng;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.rng = x;
+        x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+    }
+
+    /// Record one latency sample.
+    pub fn record(&mut self, us: u64) {
+        self.seen += 1;
+        if self.samples.len() < Self::CAP {
+            self.samples.push(us);
+        } else {
+            // Algorithm R: keep the new sample with probability CAP/seen.
+            let j = (self.next_rand() % self.seen) as usize;
+            if j < Self::CAP {
+                self.samples[j] = us;
+            }
+        }
+    }
+
+    /// Samples currently held (bounded by [`Self::CAP`]).
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Samples ever recorded (the unbounded count the reservoir summarizes).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Percentile estimates, one per requested fraction — a single sort
+    /// of the bounded buffer serves all of them.
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<Duration> {
+        if self.samples.is_empty() {
+            return vec![Duration::ZERO; ps.len()];
+        }
+        let mut v = self.samples.clone();
+        v.sort_unstable();
+        ps.iter()
+            .map(|p| {
+                let idx = ((v.len() as f64 - 1.0) * p.clamp(0.0, 1.0)).round() as usize;
+                Duration::from_micros(v[idx])
+            })
+            .collect()
+    }
+}
+
 /// Aggregated job metrics, updated by every worker.
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub completed: AtomicU64,
     pub failed: AtomicU64,
-    pub latencies_us: Mutex<Vec<u64>>,
+    pub latencies: Mutex<LatencyReservoir>,
     pub total_cells: AtomicU64,
     /// Executor buffers recycled from worker workspaces.
     pub buffers_reused: AtomicU64,
@@ -41,7 +126,7 @@ impl Metrics {
         } else {
             self.failed.fetch_add(1, Ordering::Relaxed);
         }
-        self.latencies_us.lock().unwrap().push(r.latency.as_micros() as u64);
+        self.latencies.lock().unwrap().record(r.latency.as_micros() as u64);
     }
 
     /// Record the effective vector length of a served job's plan.
@@ -77,23 +162,26 @@ impl Metrics {
         self.threads_max.fetch_max(threads.max(1), Ordering::Relaxed);
     }
 
+    /// One latency percentile estimate. For several percentiles at
+    /// once, [`percentiles`](Self::percentiles) sorts only once.
     pub fn percentile(&self, p: f64) -> Duration {
-        let mut v = self.latencies_us.lock().unwrap().clone();
-        if v.is_empty() {
-            return Duration::ZERO;
-        }
-        v.sort_unstable();
-        let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
-        Duration::from_micros(v[idx])
+        self.percentiles(&[p])[0]
+    }
+
+    /// Latency percentile estimates from the bounded reservoir, one
+    /// sort for all requested fractions.
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<Duration> {
+        self.latencies.lock().unwrap().percentiles(ps)
     }
 
     pub fn summary(&self) -> String {
+        let pcts = self.percentiles(&[0.5, 0.95]);
         format!(
             "completed={} failed={} p50={:?} p95={:?} total_cells={}",
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
-            self.percentile(0.5),
-            self.percentile(0.95),
+            pcts[0],
+            pcts[1],
             self.total_cells.load(Ordering::Relaxed),
         )
     }
@@ -227,6 +315,45 @@ mod tests {
         assert!(m.percentile(0.5) >= Duration::from_micros(200));
         assert!(m.percentile(1.0) == Duration::from_micros(1000));
         assert!(m.summary().contains("completed=5"));
+    }
+
+    #[test]
+    fn reservoir_bounds_memory_over_100k_records() {
+        let m = Metrics::default();
+        // Latencies 1..=100_000 us, uniformly — known true percentiles.
+        for us in 1..=100_000u64 {
+            m.record(&result(true, us), 1);
+        }
+        {
+            let res = m.latencies.lock().unwrap();
+            assert_eq!(res.seen(), 100_000);
+            assert_eq!(res.len(), LatencyReservoir::CAP, "reservoir must stay capped");
+            assert!(res.samples.capacity() <= 2 * LatencyReservoir::CAP);
+        }
+        // Percentile estimates from the uniform sample stay sane
+        // (deterministic RNG, so these bounds are exact-reproducible;
+        // they are ~10 sigma wide regardless).
+        let pcts = m.percentiles(&[0.5, 0.95]);
+        let (p50, p95) = (pcts[0].as_micros() as u64, pcts[1].as_micros() as u64);
+        assert!((40_000..=60_000).contains(&p50), "p50 = {p50}us");
+        assert!((88_000..=100_000).contains(&p95), "p95 = {p95}us");
+        assert!(p50 < p95);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 100_000);
+    }
+
+    #[test]
+    fn reservoir_is_exact_below_capacity() {
+        let mut r = LatencyReservoir::default();
+        assert!(r.is_empty());
+        assert_eq!(r.percentiles(&[0.5]), vec![Duration::ZERO]);
+        for us in [100, 200, 300] {
+            r.record(us);
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.seen(), 3);
+        let got: Vec<u64> =
+            r.percentiles(&[0.0, 0.5, 1.0]).iter().map(|d| d.as_micros() as u64).collect();
+        assert_eq!(got, vec![100, 200, 300]);
     }
 
     #[test]

@@ -62,6 +62,12 @@ pub struct Job {
     /// the [`PlanSpec`] and the plan/batch cache identities: one compiled
     /// plan serves every core count.
     pub threads: engine::Threads,
+    /// The trace line said `variant=tuned`: serving should consult the
+    /// tuned-plans DB ([`resolve_tuned`]) before dispatch. The spec
+    /// already carries the heuristic `hfav+tuned` fallback knobs, so an
+    /// unresolved request (no DB, no matching entry) serves correctly
+    /// with no further handling — a miss is never an error.
+    pub tuned_request: bool,
 }
 
 impl Job {
@@ -74,6 +80,7 @@ impl Job {
             steps,
             extents: None,
             threads: engine::Threads::Serial,
+            tuned_request: false,
         }
     }
 
@@ -150,6 +157,82 @@ pub fn target_spec(target: &str) -> Result<PlanSpec, String> {
 /// Depth of the cosmo 3-D grid served by the coordinator (the `Nk`
 /// extent the grid driver passes for decks named `cosmo`).
 const COSMO_NK: i64 = 4;
+
+/// The concrete extent values a job runs at for a compiled program, in
+/// sorted-name order (the generated code's `hfav_extents` order): the
+/// trace-v3 override when present, else the square default the grid
+/// driver applies (every extent = `job.size`, cosmo's `Nk` =
+/// [`COSMO_NK`]). This is the single source of the default-shape rule —
+/// the grid driver and tuned-plan shape classification both use it, so
+/// the shape class a serve resolves against is exactly the shape the
+/// job executes.
+pub fn job_extents(job: &Job, prog: &Program) -> Result<Vec<i64>, String> {
+    let names = crate::codegen::c99::extent_names(prog);
+    match &job.extents {
+        Some(vals) => {
+            if vals.len() != names.len() {
+                return Err(format!(
+                    "extents override has {} values but deck `{}` takes {} ({})",
+                    vals.len(),
+                    prog.deck.name,
+                    names.len(),
+                    names.join("x")
+                ));
+            }
+            Ok(vals.clone())
+        }
+        None => Ok(names
+            .iter()
+            .map(|name| {
+                if prog.deck.name == "cosmo" && name == "Nk" {
+                    COSMO_NK
+                } else {
+                    job.size as i64
+                }
+            })
+            .collect()),
+    }
+}
+
+/// Resolve a `variant=tuned` job against the tuned-plans DB, in place.
+///
+/// Returns `Ok(Some(label))` — a human-readable description of the
+/// chosen knob set — when a DB entry matched the job's (deck digest,
+/// shape class) and its knobs were applied to the job's spec (plus the
+/// entry's worker count, unless the job already carries an explicit
+/// [`engine::Threads`] request). Returns `Ok(None)` when the job is not
+/// a tuned request or no entry matched — the spec keeps its heuristic
+/// `hfav+tuned` fallback knobs, so a miss is never an error.
+///
+/// Resolution deliberately happens *outside* `PlanKey` construction, at
+/// prepare time: the resolved spec fingerprints like any hand-written
+/// spec, so one tuned entry maps onto the existing compiled-plan cache.
+/// The fallback spec is compiled through the caller's shared `plans`
+/// cache to learn the deck's extent names — on a miss, serving proceeds
+/// on exactly that plan, so the compile is never wasted.
+pub fn resolve_tuned(
+    job: &mut Job,
+    db: &crate::plan::tunedb::TunedDb,
+    plans: &PlanCache,
+) -> Result<Option<String>, String> {
+    if !job.tuned_request {
+        return Ok(None);
+    }
+    let key = job.spec.plan_key();
+    let prog = plans.get_or_compile(&key, || job.spec.compile())?;
+    let digest = crate::plan::tunedb::deck_digest(&job.spec)?;
+    let vals = job_extents(job, &prog)?;
+    let class = crate::plan::tunedb::ShapeClass::of(&vals);
+    let entry = match db.lookup(digest, &class.label()) {
+        Some(e) => e,
+        None => return Ok(None),
+    };
+    job.spec = entry.apply(job.spec.clone())?;
+    if matches!(job.threads, engine::Threads::Serial) && entry.threads > 1 {
+        job.threads = engine::Threads::Fixed(entry.threads);
+    }
+    Ok(Some(format!("{} [{}]", entry.knob_label(), class.label())))
+}
 
 /// Same-key batching: jobs agreeing on this tuple run back-to-back on one
 /// worker, so its plan lookup is hot and its executor workspace buffers
@@ -285,11 +368,12 @@ impl Coordinator {
     /// `wall` must cover everything served so far (time the coordinator,
     /// not the last batch) or the throughput figure will be inflated.
     pub fn report(&self, wall: Duration) -> ServeReport {
+        let pcts = self.metrics.percentiles(&[0.5, 0.95]);
         ServeReport {
             completed: self.metrics.completed.load(Ordering::Relaxed),
             failed: self.metrics.failed.load(Ordering::Relaxed),
-            p50: self.metrics.percentile(0.5),
-            p95: self.metrics.percentile(0.95),
+            p50: pcts[0],
+            p95: pcts[1],
             total_cells: self.metrics.total_cells.load(Ordering::Relaxed),
             wall,
             plans: self.plans.stats(),
@@ -490,31 +574,8 @@ impl Worker {
         exe: &dyn Executable,
     ) -> Result<(f64, u64), String> {
         let names = crate::codegen::c99::extent_names(prog);
-        let mut ext: BTreeMap<String, i64> = BTreeMap::new();
-        match &job.extents {
-            Some(vals) => {
-                if vals.len() != names.len() {
-                    return Err(format!(
-                        "extents override has {} values but deck `{}` takes {} ({})",
-                        vals.len(),
-                        prog.deck.name,
-                        names.len(),
-                        names.join("x")
-                    ));
-                }
-                for (name, v) in names.iter().zip(vals) {
-                    ext.insert(name.clone(), *v);
-                }
-            }
-            None => {
-                for name in &names {
-                    ext.insert(name.clone(), job.size as i64);
-                }
-                if prog.deck.name == "cosmo" {
-                    ext.insert("Nk".to_string(), COSMO_NK);
-                }
-            }
-        }
+        let vals = job_extents(job, prog)?;
+        let ext: BTreeMap<String, i64> = names.iter().cloned().zip(vals.iter().copied()).collect();
         let cells_per_step: u64 = ext.values().map(|&v| v.max(1) as u64).product();
         let input_names: BTreeSet<String> =
             prog.external_inputs().into_iter().map(|(n, _, _)| n).collect();
@@ -617,6 +678,11 @@ pub fn distinct_plan_keys(jobs: &[Job]) -> usize {
 /// (values bind to the deck's extents in sorted-name order — see
 /// [`parse_extents`]), opening non-square workloads through the generic
 /// grid driver. v2 lines (without `extents=`) parse unchanged.
+///
+/// The variant field additionally accepts `tuned`: the job is marked a
+/// tuned request ([`Job::tuned_request`]) and its spec defaults to the
+/// heuristic `hfav+tuned` knobs, so it serves correctly even when no
+/// tuned-plans DB is consulted ([`resolve_tuned`] upgrades it on a hit).
 pub fn parse_trace_line(id: u64, line: &str) -> Result<Job, String> {
     let f: Vec<&str> = line.split(',').map(str::trim).collect();
     if !(5..=7).contains(&f.len()) {
@@ -625,7 +691,8 @@ pub fn parse_trace_line(id: u64, line: &str) -> Result<Job, String> {
              (app|deck.yaml, variant, engine, size, steps[, vlen][, extents=NxM])"
         ));
     }
-    let variant: Variant = f[1].parse()?;
+    let tuned_request = f[1] == "tuned";
+    let variant: Variant = if tuned_request { Variant::Hfav } else { f[1].parse()? };
     let mut vlen: Option<Vlen> = None;
     let mut extents: Option<Vec<i64>> = None;
     for field in &f[5..] {
@@ -646,7 +713,7 @@ pub fn parse_trace_line(id: u64, line: &str) -> Result<Job, String> {
     }
     let vlen = vlen.unwrap_or(Vlen::Deck);
     let backend = engine::registry().get(f[2])?.name().to_string();
-    let spec = target_spec(f[0])?.variant(variant).vlen(vlen);
+    let spec = target_spec(f[0])?.variant(variant).vlen(vlen).tuned(tuned_request);
     Ok(Job {
         id,
         spec,
@@ -655,6 +722,7 @@ pub fn parse_trace_line(id: u64, line: &str) -> Result<Job, String> {
         steps: f[4].parse().map_err(|e| format!("steps: {e}"))?,
         extents,
         threads: engine::Threads::Serial,
+        tuned_request,
     })
 }
 
@@ -852,6 +920,97 @@ mod tests {
         assert!(rep.batch_wall_mean() > Duration::ZERO);
         // Dropping without an explicit shutdown still drains the pool.
         drop(c);
+    }
+
+    #[test]
+    fn trace_variant_tuned_marks_request_with_heuristic_fallback() {
+        let j = parse_trace_line(1, "cosmo, tuned, exec, 16, 1").unwrap();
+        assert!(j.tuned_request);
+        assert!(j.spec.is_tuned(), "fallback must carry the heuristic +tuned knobs");
+        assert_eq!(j.spec.variant_label(), "hfav+tuned");
+        // Optional fields still parse after the tuned variant.
+        let j = parse_trace_line(2, "cosmo, tuned, exec, 16, 1, 8, extents=12x10x3").unwrap();
+        assert!(j.tuned_request);
+        assert_eq!(j.spec.vlen_override(), Some(8));
+        assert_eq!(j.extents, Some(vec![12, 10, 3]));
+        // Plain variants leave the flag off.
+        let j = parse_trace_line(3, "cosmo, hfav, exec, 16, 1").unwrap();
+        assert!(!j.tuned_request);
+        assert!(!j.spec.is_tuned());
+    }
+
+    #[test]
+    fn job_extents_defaults_mirror_the_grid_driver() {
+        let prog = PlanSpec::app("cosmo").compile().unwrap();
+        let job = mk(1, "cosmo", Variant::Hfav, "exec", 16, 1);
+        // Sorted extent names Ni, Nj, Nk — square default with Nk pinned.
+        assert_eq!(job_extents(&job, &prog).unwrap(), vec![16, 16, COSMO_NK]);
+        let over = job.clone().with_extents(vec![12, 10, 3]);
+        assert_eq!(job_extents(&over, &prog).unwrap(), vec![12, 10, 3]);
+        let bad = job.with_extents(vec![12, 10]);
+        assert!(job_extents(&bad, &prog).unwrap_err().contains("extents override"));
+    }
+
+    #[test]
+    fn resolve_tuned_hit_miss_and_non_request() {
+        use crate::plan::tunedb::{deck_digest, ShapeClass, TunedDb, TunedEntry};
+        let plans = PlanCache::new();
+        let mut db = TunedDb::default();
+        let mut job = parse_trace_line(1, "cosmo, tuned, exec, 16, 1").unwrap();
+        let fallback_fp = job.spec.fingerprint();
+
+        // Miss: no entry — spec keeps its fallback knobs, no error.
+        assert_eq!(resolve_tuned(&mut job, &db, &plans).unwrap(), None);
+        assert_eq!(job.spec.fingerprint(), fallback_fp);
+        // The miss path compiled the fallback through the shared cache.
+        assert_eq!(plans.stats().computes, 1, "{}", plans.stats());
+
+        // Hit: entry keyed by the job's (deck digest, shape class).
+        let digest = deck_digest(&job.spec).unwrap();
+        let class = ShapeClass::of(&[16, 16, COSMO_NK]).label();
+        db.insert(TunedEntry {
+            deck_digest: digest,
+            target: "cosmo".to_string(),
+            shape_class: class.clone(),
+            extents: "16x16x4".to_string(),
+            tuned: true,
+            vec_dim: "inner".to_string(),
+            vlen: 4,
+            aligned: true,
+            tiled: false,
+            threads: 2,
+            mcells_per_s: 100.0,
+            candidates: 10,
+            timed: 3,
+            reps: 20,
+        });
+        let label = resolve_tuned(&mut job, &db, &plans).unwrap().expect("hit");
+        assert!(label.contains("vlen=4"), "{label}");
+        assert!(label.contains(&class), "{label}");
+        assert_eq!(job.spec.vlen_override(), Some(4));
+        assert!(job.spec.is_aligned());
+        assert_ne!(job.spec.fingerprint(), fallback_fp, "resolution must change the plan");
+        assert!(matches!(job.threads, engine::Threads::Fixed(2)));
+        // Resolution itself compiles nothing new (the resolved plan
+        // compiles lazily at dispatch, through the same cache).
+        assert_eq!(plans.stats().computes, 1, "{}", plans.stats());
+
+        // An explicit runtime threads request wins over the entry's.
+        let mut pinned = parse_trace_line(2, "cosmo, tuned, exec, 16, 1")
+            .unwrap()
+            .with_threads(engine::Threads::Fixed(7));
+        resolve_tuned(&mut pinned, &db, &plans).unwrap().expect("hit");
+        assert!(matches!(pinned.threads, engine::Threads::Fixed(7)));
+
+        // Non-tuned jobs pass through untouched.
+        let mut plain = parse_trace_line(3, "cosmo, hfav, exec, 16, 1").unwrap();
+        let fp = plain.spec.fingerprint();
+        assert_eq!(resolve_tuned(&mut plain, &db, &plans).unwrap(), None);
+        assert_eq!(plain.spec.fingerprint(), fp);
+
+        // A different shape class misses cleanly.
+        let mut big = parse_trace_line(4, "cosmo, tuned, exec, 64, 1").unwrap();
+        assert_eq!(resolve_tuned(&mut big, &db, &plans).unwrap(), None);
     }
 
     #[test]

@@ -34,6 +34,7 @@
 //! and latency/throughput/cache metrics ([`coordinator::metrics`]).
 
 pub mod ir;
+pub mod json;
 pub mod yaml;
 pub mod frontend;
 pub mod inference;

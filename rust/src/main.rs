@@ -32,6 +32,9 @@ fn usage() -> ! {
       [--threads serial|auto|N]
   serve --trace <file> [--workers N] [--repeat R] [--artifacts DIR] [--vlen auto|N]
       [--vec-dim inner|auto|outer:<dim>] [--aligned] [--tile] [--threads serial|auto|N]
+      [--db FILE]
+  tune <app|deck.yaml> --extents NxM[xK] [--budget N] [--engine exec|native|rust|pjrt]
+      [--db FILE] [--min-reps N] [--min-time SECS]
   e2e [--size N] [--steps S]
   bench <sysinfo|normalization|cosmo|hydro2d|footprint|serving|vectorization|pjrt|all>
       [--vlen auto|N] [--threads serial|auto|N] [--json]
@@ -71,7 +74,14 @@ fn usage() -> ! {
   --json:    (bench serving|vectorization|all) also write the
              machine-readable reports BENCH_serving.json /
              BENCH_vectorization.json (stable schema, see README)
-  --tuned:   paper §5.3 'HFAV + Tuning' (innermost windows stay full rows)"
+  --tuned:   paper §5.3 'HFAV + Tuning' (innermost windows stay full rows)
+  --db:      tuned-plans database file (default tuned_plans.json).
+             `tune` writes the measured winner for (deck, shape class)
+             into it; `serve --db` consults it for trace jobs whose
+             variant is `tuned` — a hit re-applies the recorded knobs, a
+             miss falls back to heuristic hfav+tuned (never an error).
+  --budget:  (tune) how many top-ranked candidates to actually time
+             after the cost model orders the legal knob cross-product"
     );
     std::process::exit(2)
 }
@@ -94,6 +104,7 @@ fn main() -> CliResult {
         "engines" => engines(),
         "run" => run(rest),
         "serve" => serve(rest),
+        "tune" => tune(rest),
         "e2e" => e2e(rest),
         "bench" => bench(rest),
         "smoke" => {
@@ -273,6 +284,27 @@ fn serve(rest: &[String]) -> CliResult {
     for (i, l) in lines.iter().enumerate() {
         template.push(parse_trace_line(i as u64, l)?);
     }
+    // Tuned-plans resolution: trace jobs with `variant=tuned` look up the
+    // DB by (deck digest, shape class) and re-apply the recorded knobs; a
+    // miss keeps the heuristic hfav+tuned fallback the parser installed.
+    // Resolution compiles through the same plan cache the coordinator
+    // serves from, so nothing is compiled twice — and it runs *before*
+    // the CLI template overrides below, which therefore still win.
+    let plans = std::sync::Arc::new(hfav::plan::cache::PlanCache::new());
+    let db_path = flag(rest, "--db").unwrap_or_else(|| hfav::plan::tunedb::DEFAULT_DB_PATH.into());
+    if template.iter().any(|j| j.tuned_request) {
+        let db = hfav::plan::tunedb::TunedDb::load(&db_path)?;
+        for j in template.iter_mut() {
+            match hfav::coordinator::resolve_tuned(j, &db, &plans)? {
+                Some(label) => println!("job {}: tuned db hit -> {label}", j.id),
+                None if j.tuned_request => println!(
+                    "job {}: tuned db miss ({}) -> heuristic hfav+tuned fallback",
+                    j.id, db_path
+                ),
+                None => {}
+            }
+        }
+    }
     // `--vlen` overrides every job in the trace (per-job vlens come from
     // the optional sixth trace field), as do `--vec-dim`, `--aligned`
     // and `--tile`.
@@ -312,7 +344,7 @@ fn serve(rest: &[String]) -> CliResult {
         jobs.len(),
         distinct_plan_keys(&jobs)
     );
-    let c = Coordinator::start(workers, Some(artifacts));
+    let c = Coordinator::start_with_cache(workers, Some(artifacts), plans);
     let t0 = std::time::Instant::now();
     let results = c.run_batch(jobs);
     let wall = t0.elapsed();
@@ -329,6 +361,45 @@ fn serve(rest: &[String]) -> CliResult {
         // Nonzero exit so CI smoke runs catch serving regressions.
         return Err(format!("{failed} of {} jobs failed", results.len()).into());
     }
+    Ok(())
+}
+
+/// `hfav tune`: enumerate + rank + time candidate plans for one deck at
+/// one shape, then persist the measured winner in the tuned-plans DB
+/// (keyed by deck digest and shape class, so nearby shapes share it).
+fn tune(rest: &[String]) -> CliResult {
+    let target = match rest.first() {
+        Some(t) if !t.starts_with("--") => t.clone(),
+        _ => return Err("tune: target <app|deck.yaml> required".into()),
+    };
+    let extents_s = flag(rest, "--extents").ok_or("--extents required (e.g. 32x32x32)")?;
+    let extents = hfav::coordinator::parse_extents(&extents_s)?;
+    let mut cfg = hfav::bench::tune::TuneConfig::for_extents(extents);
+    if let Some(b) = flag(rest, "--budget") {
+        cfg.budget = b.parse::<usize>()?.max(1);
+    }
+    if let Some(e) = flag(rest, "--engine") {
+        cfg.engine = e;
+    }
+    if let Some(r) = flag(rest, "--min-reps") {
+        cfg.min_reps = r.parse()?;
+    }
+    if let Some(t) = flag(rest, "--min-time") {
+        cfg.min_time_s = t.parse()?;
+    }
+    // Fail fast on an unavailable engine, like `run` does, instead of
+    // letting every candidate fail the same way one by one.
+    let backend = hfav::engine::registry().get(&cfg.engine)?;
+    if let Availability::Missing(why) = backend.available() {
+        return Err(format!("engine `{}` unavailable: {why}", backend.name()).into());
+    }
+    let db_path = flag(rest, "--db").unwrap_or_else(|| hfav::plan::tunedb::DEFAULT_DB_PATH.into());
+    let base = target_spec(&target)?;
+    let entry = hfav::bench::tune::tune(&base, &cfg)?;
+    let mut db = hfav::plan::tunedb::TunedDb::load(&db_path)?;
+    db.insert(entry);
+    db.save(&db_path)?;
+    println!("recorded -> {db_path} ({} entries)", db.len());
     Ok(())
 }
 

@@ -12,6 +12,7 @@
 
 pub mod cache;
 pub mod spec;
+pub mod tunedb;
 
 pub use self::spec::{PlanSpec, Vlen};
 

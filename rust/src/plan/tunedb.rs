@@ -1,0 +1,406 @@
+//! The tuned-plans database: persisted winners of the `hfav tune`
+//! empirical search, consulted by serving when a job says
+//! `variant=tuned`.
+//!
+//! Entries are keyed by **(deck digest, shape class)**:
+//!
+//! * the deck digest ([`deck_digest`]) hashes the
+//!   deck *content*, so a built-in app and an external deck file with
+//!   identical text share tuning, and editing a deck invalidates its
+//!   entries;
+//! * the [`ShapeClass`] buckets concrete extents by dimensionality,
+//!   magnitude (nearest power of two of the total cell count) and
+//!   squareness — one tuning run generalizes to nearby shapes instead
+//!   of demanding an exact-extent match.
+//!
+//! The DB is a JSON file beside the plan cache's other on-disk artifacts
+//! (default [`DEFAULT_DB_PATH`]), written with [`crate::json::escape`]
+//! and read back with [`crate::json::parse`] — hostile deck paths
+//! round-trip. Lookups resolve to a concrete knob set
+//! ([`TunedEntry::apply`]) **outside** `PlanKey` construction: the
+//! resolved [`PlanSpec`] fingerprints like any hand-written spec, so one
+//! tuned entry maps onto the existing compiled-plan cache and a miss
+//! falls back to the heuristic `+tuned` options without error.
+
+use crate::json::{self, Value};
+use crate::plan::cache::Fnv64;
+use crate::plan::PlanSpec;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Default on-disk location of the tuned-plans DB (CLI `--db` overrides).
+pub const DEFAULT_DB_PATH: &str = "tuned_plans.json";
+
+/// Schema tag of the DB file.
+pub const TUNED_SCHEMA: &str = "hfav-tuned-plans/v1";
+
+/// Shape bucket of a concrete extents vector. Two shapes in the same
+/// class are served by the same tuned entry.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ShapeClass {
+    /// Number of extents (grid dimensionality).
+    pub dims: usize,
+    /// `log2(total cells)` rounded to the nearest integer.
+    pub magnitude: u32,
+    /// All extents within 2x of each other.
+    pub square: bool,
+}
+
+impl ShapeClass {
+    /// Classify a concrete extents vector. Empty or degenerate extents
+    /// clamp to 1, so classification never fails.
+    pub fn of(extents: &[i64]) -> ShapeClass {
+        let vals: Vec<i64> = extents.iter().map(|&v| v.max(1)).collect();
+        let cells: f64 = vals.iter().map(|&v| v as f64).product::<f64>().max(1.0);
+        let magnitude = cells.log2().round().max(0.0) as u32;
+        let (min, max) = vals.iter().fold((i64::MAX, 1i64), |(lo, hi), &v| (lo.min(v), hi.max(v)));
+        ShapeClass {
+            dims: vals.len().max(1),
+            magnitude,
+            square: !vals.is_empty() && max <= 2 * min.max(1),
+        }
+    }
+
+    /// Stable label used as the persisted key (`d3/m15/square`).
+    pub fn label(&self) -> String {
+        format!(
+            "d{}/m{}/{}",
+            self.dims,
+            self.magnitude,
+            if self.square { "square" } else { "rect" }
+        )
+    }
+}
+
+impl std::fmt::Display for ShapeClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+/// One persisted tuning winner: the knob set plus its measurement
+/// provenance (throughput, how many candidates were enumerated/timed,
+/// timing reps of the winner).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedEntry {
+    /// [`deck_digest`] of the deck the entry was tuned on.
+    pub deck_digest: u64,
+    /// Human-readable target label (app name or deck path) — display
+    /// only, never part of the lookup key.
+    pub target: String,
+    /// [`ShapeClass::label`] the entry covers.
+    pub shape_class: String,
+    /// The concrete extents the tuner actually timed (`32x32x32`).
+    pub extents: String,
+    /// Winning knob set.
+    pub tuned: bool,
+    pub vec_dim: String,
+    pub vlen: usize,
+    pub aligned: bool,
+    pub tiled: bool,
+    /// Winning runtime worker count (1 = serial).
+    pub threads: usize,
+    /// Measured throughput of the winner at tune time.
+    pub mcells_per_s: f64,
+    /// Legal candidates enumerated / candidates actually timed.
+    pub candidates: usize,
+    pub timed: usize,
+    /// Timing reps the winner's median came from.
+    pub reps: usize,
+}
+
+impl TunedEntry {
+    /// Apply the recorded knob set to a base spec (the deck/variant
+    /// identity is the caller's; this overwrites only the vectorization
+    /// and §5.3 tuning knobs). The result fingerprints like any
+    /// hand-written spec — resolution stays outside `PlanKey`.
+    pub fn apply(&self, base: PlanSpec) -> Result<PlanSpec, String> {
+        let vec_dim: crate::analysis::VecDim =
+            self.vec_dim.parse().map_err(|e| format!("tuned entry vec_dim: {e}"))?;
+        Ok(base
+            .tuned(self.tuned)
+            .vlen_resolved(Some(self.vlen.max(1)))
+            .vec_dim(vec_dim)
+            .aligned(self.aligned)
+            .tiled(self.tiled))
+    }
+
+    /// One-line human-readable knob set (serve reports, tune output).
+    pub fn knob_label(&self) -> String {
+        format!(
+            "vec_dim={} vlen={} aligned={} tiled={} tuned={} threads={}",
+            self.vec_dim, self.vlen, self.aligned, self.tiled, self.tuned, self.threads
+        )
+    }
+}
+
+/// The tuned-plans database: a flat entry list with (digest, class)
+/// replace-on-insert semantics, persisted as versioned JSON.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TunedDb {
+    pub entries: Vec<TunedEntry>,
+}
+
+impl TunedDb {
+    /// Load from `path`. A missing file is an empty DB (tuning is
+    /// always optional); a present-but-malformed file is an error, so a
+    /// corrupted DB never silently drops tunings.
+    pub fn load(path: impl AsRef<Path>) -> Result<TunedDb, String> {
+        let path = path.as_ref();
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(TunedDb::default())
+            }
+            Err(e) => return Err(format!("reading tuned DB `{}`: {e}", path.display())),
+        };
+        TunedDb::parse(&text).map_err(|e| format!("tuned DB `{}`: {e}", path.display()))
+    }
+
+    /// Parse the JSON document [`TunedDb::render`] writes.
+    pub fn parse(text: &str) -> Result<TunedDb, String> {
+        let doc = json::parse(text)?;
+        let schema = doc.get("schema").and_then(Value::as_str).unwrap_or("?");
+        if schema != TUNED_SCHEMA {
+            return Err(format!("schema `{schema}` (want `{TUNED_SCHEMA}`)"));
+        }
+        let raw = doc.get("entries").and_then(Value::as_arr).ok_or("missing `entries` array")?;
+        let mut entries = Vec::with_capacity(raw.len());
+        for (i, e) in raw.iter().enumerate() {
+            let err = |what: &str| format!("entry {i}: bad or missing `{what}`");
+            let s = |k: &str| {
+                e.get(k).and_then(Value::as_str).map(str::to_string).ok_or_else(|| err(k))
+            };
+            let n = |k: &str| e.get(k).and_then(Value::as_f64).ok_or_else(|| err(k));
+            let b = |k: &str| e.get(k).and_then(Value::as_bool).ok_or_else(|| err(k));
+            let digest_hex = s("deck_digest")?;
+            let deck_digest = u64::from_str_radix(&digest_hex, 16)
+                .map_err(|e| format!("entry {i}: bad deck_digest `{digest_hex}`: {e}"))?;
+            entries.push(TunedEntry {
+                deck_digest,
+                target: s("target")?,
+                shape_class: s("shape_class")?,
+                extents: s("extents")?,
+                tuned: b("tuned")?,
+                vec_dim: s("vec_dim")?,
+                vlen: n("vlen")? as usize,
+                aligned: b("aligned")?,
+                tiled: b("tiled")?,
+                threads: n("threads")? as usize,
+                mcells_per_s: n("mcells_per_s")?,
+                candidates: n("candidates")? as usize,
+                timed: n("timed")? as usize,
+                reps: n("reps")? as usize,
+            });
+        }
+        Ok(TunedDb { entries })
+    }
+
+    /// Render the versioned JSON document (deterministic: ordered keys,
+    /// fixed float precision — identical DBs produce identical bytes).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{{");
+        let _ = writeln!(out, "  \"schema\": \"{TUNED_SCHEMA}\",");
+        let _ = writeln!(out, "  \"entries\": [");
+        for (k, e) in self.entries.iter().enumerate() {
+            let comma = if k + 1 < self.entries.len() { "," } else { "" };
+            let rate = if e.mcells_per_s.is_finite() { e.mcells_per_s } else { 0.0 };
+            let _ = writeln!(
+                out,
+                "    {{ \"deck_digest\": \"{:016x}\", \"target\": \"{}\", \
+                 \"shape_class\": \"{}\", \"extents\": \"{}\", \"tuned\": {}, \
+                 \"vec_dim\": \"{}\", \"vlen\": {}, \"aligned\": {}, \"tiled\": {}, \
+                 \"threads\": {}, \"mcells_per_s\": {:.3}, \"candidates\": {}, \
+                 \"timed\": {}, \"reps\": {} }}{comma}",
+                e.deck_digest,
+                json::escape(&e.target),
+                json::escape(&e.shape_class),
+                json::escape(&e.extents),
+                e.tuned,
+                json::escape(&e.vec_dim),
+                e.vlen,
+                e.aligned,
+                e.tiled,
+                e.threads,
+                rate,
+                e.candidates,
+                e.timed,
+                e.reps
+            );
+        }
+        let _ = writeln!(out, "  ]");
+        let _ = writeln!(out, "}}");
+        out
+    }
+
+    /// Write the DB to `path` (whole-file rewrite; the DB is small).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), String> {
+        let path = path.as_ref();
+        std::fs::write(path, self.render())
+            .map_err(|e| format!("writing tuned DB `{}`: {e}", path.display()))
+    }
+
+    /// Insert `entry`, replacing any existing entry with the same
+    /// (deck digest, shape class) key.
+    pub fn insert(&mut self, entry: TunedEntry) {
+        self.entries
+            .retain(|e| e.deck_digest != entry.deck_digest || e.shape_class != entry.shape_class);
+        self.entries.push(entry);
+    }
+
+    /// Look up the entry for (deck digest, shape-class label).
+    pub fn lookup(&self, deck_digest: u64, class: &str) -> Option<&TunedEntry> {
+        self.entries.iter().find(|e| e.deck_digest == deck_digest && e.shape_class == class)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Content digest of a spec's deck source (knob-independent — two specs
+/// over the same deck text share tuning entries regardless of variant
+/// or vectorization knobs). Defined here rather than on [`PlanSpec`]
+/// itself to keep the spec module free of tuning concerns.
+pub fn deck_digest(spec: &PlanSpec) -> Result<u64, String> {
+    let mut h = Fnv64::new();
+    h.write_str(&spec.deck_source()?);
+    Ok(h.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(digest: u64, class: &str) -> TunedEntry {
+        TunedEntry {
+            deck_digest: digest,
+            target: "cosmo".to_string(),
+            shape_class: class.to_string(),
+            extents: "32x32x32".to_string(),
+            tuned: true,
+            vec_dim: "outer:k".to_string(),
+            vlen: 8,
+            aligned: true,
+            tiled: false,
+            threads: 2,
+            mcells_per_s: 123.456,
+            candidates: 18,
+            timed: 4,
+            reps: 37,
+        }
+    }
+
+    #[test]
+    fn shape_class_buckets_by_magnitude_and_squareness() {
+        let a = ShapeClass::of(&[32, 32, 32]);
+        assert_eq!(a.label(), "d3/m15/square");
+        // Nearby shapes land in the same bucket...
+        assert_eq!(ShapeClass::of(&[30, 31, 33]), a);
+        assert_eq!(ShapeClass::of(&[32, 28, 36]), a);
+        // ...a much bigger grid does not...
+        assert_ne!(ShapeClass::of(&[128, 128, 128]), a);
+        // ...and skew moves the squareness half of the key.
+        let skew = ShapeClass::of(&[512, 8, 8]);
+        assert!(!skew.square);
+        assert_ne!(skew, ShapeClass::of(&[32, 32, 32]));
+        // Dimensionality is part of the class.
+        assert_ne!(ShapeClass::of(&[64, 64]).label(), ShapeClass::of(&[64, 64, 1]).label());
+        // 2x aspect still counts as square; beyond does not.
+        assert!(ShapeClass::of(&[64, 32]).square);
+        assert!(!ShapeClass::of(&[65, 32]).square);
+        // Degenerate inputs clamp instead of panicking.
+        assert_eq!(ShapeClass::of(&[]).dims, 1);
+        assert_eq!(ShapeClass::of(&[0, -3]).magnitude, 0);
+    }
+
+    #[test]
+    fn db_round_trips_through_json() {
+        let mut db = TunedDb::default();
+        db.insert(entry(0xdead_beef_0123_4567, "d3/m15/square"));
+        let mut hostile = entry(7, "d2/m10/rect");
+        hostile.target = "decks/my \"deck\"\\with\nnewline.yaml".to_string();
+        db.insert(hostile);
+        let text = db.render();
+        // The writer's output is valid JSON by our own parser...
+        crate::json::parse(&text).unwrap();
+        // ...and loads back to an identical DB.
+        let back = TunedDb::parse(&text).unwrap();
+        assert_eq!(back, db);
+        // Render is deterministic.
+        assert_eq!(text, back.render());
+    }
+
+    #[test]
+    fn db_load_save_round_trip_on_disk() {
+        let dir = std::env::temp_dir().join(format!("hfav-tunedb-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tuned_plans.json");
+        let mut db = TunedDb::default();
+        db.insert(entry(42, "d3/m12/square"));
+        db.save(&path).unwrap();
+        assert_eq!(TunedDb::load(&path).unwrap(), db);
+        // Missing file = empty DB; malformed file = hard error.
+        assert!(TunedDb::load(dir.join("nope.json")).unwrap().is_empty());
+        std::fs::write(dir.join("bad.json"), "{ not json").unwrap();
+        assert!(TunedDb::load(dir.join("bad.json")).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn insert_replaces_same_key_and_lookup_finds_it() {
+        let mut db = TunedDb::default();
+        db.insert(entry(1, "d3/m15/square"));
+        let mut better = entry(1, "d3/m15/square");
+        better.vlen = 4;
+        better.mcells_per_s = 999.0;
+        db.insert(better.clone());
+        assert_eq!(db.len(), 1, "same (digest, class) must replace");
+        assert_eq!(db.lookup(1, "d3/m15/square"), Some(&better));
+        assert_eq!(db.lookup(1, "d3/m9/square"), None);
+        assert_eq!(db.lookup(2, "d3/m15/square"), None);
+        db.insert(entry(1, "d2/m9/rect"));
+        assert_eq!(db.len(), 2, "distinct class is a distinct key");
+    }
+
+    #[test]
+    fn entry_applies_concrete_knobs() {
+        let e = entry(1, "d3/m15/square");
+        let spec = e.apply(PlanSpec::app("cosmo")).unwrap();
+        assert!(spec.is_tuned());
+        assert_eq!(spec.vlen_override(), Some(8));
+        assert!(spec.is_aligned());
+        assert!(!spec.is_tiled());
+        assert_eq!(spec.vec_dim_kind(), &crate::analysis::VecDim::Outer("k".to_string()));
+        // The applied spec fingerprints differently from the heuristic
+        // fallback — resolution really changes the knob set...
+        let fallback = PlanSpec::app("cosmo").tuned(true);
+        assert_ne!(spec.fingerprint(), fallback.fingerprint());
+        // ...while staying an ordinary spec (same plan-key machinery).
+        assert_eq!(spec.plan_key().app, "cosmo");
+        // A corrupt vec_dim fails loudly.
+        let mut bad = e.clone();
+        bad.vec_dim = "sideways".to_string();
+        assert!(bad.apply(PlanSpec::app("cosmo")).is_err());
+    }
+
+    #[test]
+    fn deck_digest_is_content_keyed() {
+        let app = deck_digest(&PlanSpec::app("cosmo")).unwrap();
+        // Knobs never move the digest...
+        let knobbed = PlanSpec::app("cosmo").tuned(true).aligned(true).vlen_resolved(Some(8));
+        assert_eq!(deck_digest(&knobbed).unwrap(), app);
+        // ...an inline deck with identical content shares it...
+        let inline = PlanSpec::deck_src(crate::apps::cosmo::DECK);
+        assert_eq!(deck_digest(&inline).unwrap(), app);
+        // ...and different decks differ.
+        assert_ne!(deck_digest(&PlanSpec::app("laplace")).unwrap(), app);
+        // Unknown apps fail like deck resolution does.
+        assert!(deck_digest(&PlanSpec::app("nope")).is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! A cheap analytical cost model over [`ScheduleStats`] — the ranking
+//! stage of the `hfav tune` pipeline (ROADMAP "shape-class autotuner +
+//! schedule cost model").
+//!
+//! The model predicts *relative* runtime, not absolute seconds: the
+//! tuner uses it only to order legal candidate plans so that the
+//! expensive empirical timing stage measures the top few instead of the
+//! whole knob cross-product. Inputs are exactly what the walk counters
+//! expose — invocation / scalar load / scalar store counts plus the
+//! chunk decomposition of each parallel level — combined with the
+//! candidate's effective vector length and worker count:
+//!
+//! * memory traffic dominates: `loads + STORE_WEIGHT × stores`
+//!   (stores carry writeback/ownership traffic);
+//! * each kernel invocation adds `INVOKE_WEIGHT` of loop/call
+//!   bookkeeping;
+//! * vector lanes discount the total by `sqrt(vlen)`, not `vlen` —
+//!   remainder strips, unaligned heads and gather-ish access keep real
+//!   SIMD speedups sublinear;
+//! * a parallel level divides by its usable speedup
+//!   `min(chunks, threads)` and charges `CHUNK_OVERHEAD` per chunk for
+//!   fork/join and replica merging — so tiny grids correctly prefer
+//!   fewer threads.
+//!
+//! All weights are unit-free tuning constants calibrated against the
+//! committed `BENCH_*.json` trajectories; they only need to get the
+//! *ordering* of candidates roughly right.
+
+use crate::schedule::ScheduleStats;
+
+/// Relative cost of one scalar store vs. one scalar load.
+pub const STORE_WEIGHT: f64 = 2.0;
+/// Bookkeeping cost charged per kernel invocation.
+pub const INVOKE_WEIGHT: f64 = 0.5;
+/// Fork/join + replica-merge cost charged per parallel chunk.
+pub const CHUNK_OVERHEAD: f64 = 256.0;
+
+/// Predicted relative runtime (arbitrary units, lower is better) of a
+/// candidate whose walk produced `stats`, running `vlen` lanes wide at
+/// `threads` workers. Deterministic and total: degenerate inputs clamp
+/// instead of returning NaN, so sorting by this value is always safe.
+pub fn estimate(stats: &ScheduleStats, vlen: usize, threads: usize) -> f64 {
+    let serial = stats.loads as f64
+        + STORE_WEIGHT * stats.stores as f64
+        + INVOKE_WEIGHT * stats.invocations as f64;
+    let simd = serial / (vlen.max(1) as f64).sqrt();
+    // One parallel region runs at a time, so speedup is bounded by the
+    // *least* parallel level; chunk overhead accrues across all of them.
+    let min_chunks = stats
+        .parallel
+        .iter()
+        .filter(|p| p.chunks > 0)
+        .map(|p| p.chunks.min(threads.max(1)) as f64)
+        .fold(f64::INFINITY, f64::min);
+    let speedup = if min_chunks.is_finite() { min_chunks.max(1.0) } else { 1.0 };
+    let overhead: f64 = stats.parallel.iter().map(|p| CHUNK_OVERHEAD * p.chunks as f64).sum();
+    simd / speedup + overhead
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::ParallelStats;
+
+    fn stats(invocations: u64, loads: u64, stores: u64) -> ScheduleStats {
+        ScheduleStats { invocations, loads, stores, parallel: Vec::new() }
+    }
+
+    fn with_parallel(mut st: ScheduleStats, chunks: usize, span: i64) -> ScheduleStats {
+        st.parallel.push(ParallelStats { nest: 0, dim: "k".to_string(), unit: 1, span, chunks });
+        st
+    }
+
+    #[test]
+    fn wider_vectors_rank_cheaper() {
+        let st = stats(1000, 4000, 1000);
+        let scalar = estimate(&st, 1, 1);
+        let v4 = estimate(&st, 4, 1);
+        let v8 = estimate(&st, 8, 1);
+        assert!(v4 < scalar && v8 < v4, "{scalar} {v4} {v8}");
+        // ...but sublinearly: 8 lanes are not 8x.
+        assert!(v8 > scalar / 8.0);
+    }
+
+    #[test]
+    fn stores_cost_more_than_loads() {
+        let load_heavy = estimate(&stats(100, 1000, 0), 1, 1);
+        let store_heavy = estimate(&stats(100, 0, 1000), 1, 1);
+        assert!(store_heavy > load_heavy);
+    }
+
+    #[test]
+    fn parallel_chunks_help_big_grids_only() {
+        let big = stats(100_000, 400_000, 100_000);
+        let serial = estimate(&big, 1, 1);
+        let par = estimate(&with_parallel(big.clone(), 4, 1024), 1, 4);
+        assert!(par < serial, "{par} vs {serial}");
+        // A tiny grid's chunk overhead outweighs the division.
+        let small = stats(64, 256, 64);
+        let small_serial = estimate(&small, 1, 1);
+        let small_par = estimate(&with_parallel(small.clone(), 4, 8), 1, 4);
+        assert!(small_par > small_serial, "{small_par} vs {small_serial}");
+    }
+
+    #[test]
+    fn speedup_capped_by_threads_and_chunks() {
+        let st = stats(100_000, 400_000, 100_000);
+        // 8 chunks but 2 workers: speedup bounded by threads...
+        let two = estimate(&with_parallel(st.clone(), 8, 1024), 1, 2);
+        let eight = estimate(&with_parallel(st.clone(), 8, 1024), 1, 8);
+        assert!(eight < two);
+        // ...and 2 chunks at 8 workers is no better than at 2.
+        let c2_t8 = estimate(&with_parallel(st.clone(), 2, 1024), 1, 8);
+        let c2_t2 = estimate(&with_parallel(st, 2, 1024), 1, 2);
+        assert!((c2_t8 - c2_t2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn total_on_degenerate_inputs() {
+        assert!(estimate(&stats(0, 0, 0), 0, 0).is_finite());
+        let zero_chunks = with_parallel(stats(10, 10, 10), 0, 0);
+        assert!(estimate(&zero_chunks, 1, 1).is_finite());
+    }
+}

@@ -50,6 +50,8 @@
 //! exactly the order the emitted code executes them (the property suite
 //! compares the executor's instrumented trace against it).
 
+pub mod cost;
+
 use crate::analysis::{self, DimSize, StoragePlan};
 use crate::dataflow::Dataflow;
 use crate::fusion::{FusedDag, FusedNest, Member, Role};

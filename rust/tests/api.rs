@@ -254,6 +254,64 @@ fn threads_knob_is_outside_every_fingerprint() {
     c.shutdown();
 }
 
+/// Tuned-plan resolution stays outside `PlanKey`: resolving N repeat
+/// `variant=tuned` jobs against one DB entry changes their knobs (the
+/// specs really are rewritten) but costs exactly two compiles total —
+/// the heuristic fallback (compiled once during resolution, shared) and
+/// the resolved winner (compiled once when served) — no matter how many
+/// jobs repeat the trace line.
+#[test]
+fn tuned_resolution_changes_knobs_not_compile_counts() {
+    use hfav::plan::cache::PlanCache;
+    use hfav::plan::tunedb::{deck_digest, ShapeClass, TunedDb, TunedEntry};
+    use std::sync::Arc;
+
+    let mut template = Vec::new();
+    for i in 0..4u64 {
+        template.push(parse_trace_line(i, "cosmo, tuned, exec, 16, 1").unwrap());
+    }
+    let fallback_fp = template[0].spec.fingerprint();
+    let mut db = TunedDb::default();
+    db.insert(TunedEntry {
+        deck_digest: deck_digest(&template[0].spec).unwrap(),
+        // size=16 cosmo runs at [16, 16, 4]: the class the grid driver's
+        // default shape buckets into.
+        shape_class: ShapeClass::of(&[16, 16, 4]).label(),
+        target: "cosmo".to_string(),
+        extents: "16x16x4".to_string(),
+        tuned: false,
+        vec_dim: "inner".to_string(),
+        vlen: 2,
+        aligned: false,
+        tiled: false,
+        threads: 1,
+        mcells_per_s: 1.0,
+        candidates: 1,
+        timed: 1,
+        reps: 1,
+    });
+
+    let plans = Arc::new(PlanCache::new());
+    for j in template.iter_mut() {
+        let label = hfav::coordinator::resolve_tuned(j, &db, &plans).unwrap();
+        assert!(label.expect("entry must hit").contains("vlen=2"));
+        assert_ne!(j.spec.fingerprint(), fallback_fp, "knobs did not change");
+        assert_eq!(j.spec.vlen_override(), Some(2));
+        assert!(!j.spec.is_tuned());
+    }
+    assert_eq!(hfav::coordinator::distinct_plan_keys(&template), 1);
+    // Resolution compiled the fallback exactly once, cache-shared.
+    assert_eq!(plans.stats().computes, 1);
+
+    let c = Coordinator::start_with_cache(2, None, plans.clone());
+    let results = c.run_batch(template);
+    for r in &results {
+        assert!(r.ok, "job {}: {}", r.id, r.detail);
+    }
+    assert_eq!(plans.stats().computes, 2, "fallback + resolved winner only: {}", plans.stats());
+    c.shutdown();
+}
+
 /// Fails closed: a `Job` carries only a `PlanSpec` + backend name, its
 /// plan key is derived solely from the spec, and every spec knob is
 /// covered by the fingerprint — so there is no way to build two jobs

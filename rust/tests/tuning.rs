@@ -1,0 +1,154 @@
+//! Autotuner integration tests: the full `tune -> persist -> serve`
+//! loop. The tuner's winner round-trips through the on-disk DB, a
+//! `variant=tuned` trace job resolves to the recorded knob set (hit) or
+//! the heuristic fallback (miss, never an error), and resolution stays
+//! outside `PlanKey` — one tuned entry maps onto the ordinary
+//! compiled-plan cache.
+
+use hfav::apps::Variant;
+use hfav::bench::tune::{tune, TuneConfig};
+use hfav::coordinator::{parse_trace_line, resolve_tuned, Coordinator};
+use hfav::engine::Threads;
+use hfav::plan::cache::PlanCache;
+use hfav::plan::tunedb::{deck_digest, ShapeClass, TunedDb, TunedEntry};
+use hfav::plan::PlanSpec;
+use std::sync::Arc;
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("hfav-tuning-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn fast_cfg(extents: Vec<i64>) -> TuneConfig {
+    TuneConfig {
+        extents,
+        budget: 2,
+        engine: "exec".to_string(),
+        threads: vec![1],
+        min_reps: 1,
+        min_time_s: 0.0,
+    }
+}
+
+/// Nearby shapes bucket together; different magnitudes and aspect
+/// ratios do not. This is the stability contract that lets one tuned
+/// entry serve a whole family of grids.
+#[test]
+fn shape_classes_bucket_nearby_shapes() {
+    let canon = ShapeClass::of(&[32, 32, 32]);
+    assert_eq!(canon.label(), "d3/m15/square");
+    assert_eq!(ShapeClass::of(&[30, 31, 33]), canon);
+    assert_eq!(ShapeClass::of(&[32, 28, 36]), canon);
+    assert_ne!(ShapeClass::of(&[64, 64, 64]), canon, "magnitude must split");
+    assert_ne!(ShapeClass::of(&[512, 16, 4]), canon, "aspect ratio must split");
+    assert_ne!(ShapeClass::of(&[181, 181]), canon, "dimensionality must split");
+}
+
+/// The tuner's entry survives a disk round-trip byte-exactly and is
+/// found again under its (deck digest, shape class) key; the file
+/// itself is well-formed JSON.
+#[test]
+fn tuned_entry_round_trips_through_the_disk_db() {
+    let base = PlanSpec::app("cosmo");
+    let entry = tune(&base, &fast_cfg(vec![12, 12, 4])).unwrap();
+    let dir = tmp_dir("roundtrip");
+    let path = dir.join("tuned_plans.json");
+    let mut db = TunedDb::load(&path).unwrap();
+    assert!(db.is_empty(), "missing file must load as an empty DB");
+    db.insert(entry.clone());
+    db.save(&path).unwrap();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    hfav::json::parse(&text).expect("tuned DB must be well-formed JSON");
+
+    let back = TunedDb::load(&path).unwrap();
+    assert_eq!(back.len(), 1);
+    let digest = deck_digest(&base).unwrap();
+    let found = back.lookup(digest, &entry.shape_class).expect("entry lost on reload");
+    assert_eq!(found, &entry, "disk round-trip changed the entry");
+    assert!(back.lookup(digest, "d3/m30/rect").is_none());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The acceptance loop end-to-end: tune cosmo at the exact shape the
+/// grid driver gives a size-16 trace job, persist, then serve a
+/// `variant=tuned` trace line against the DB — resolution reports the
+/// recorded knob set, the job's spec carries it, and the job runs.
+#[test]
+fn serve_of_variant_tuned_consults_the_db() {
+    // size=16 cosmo serves at [16, 16, 4] (Nk plane default).
+    let entry = tune(&PlanSpec::app("cosmo"), &fast_cfg(vec![16, 16, 4])).unwrap();
+    let dir = tmp_dir("serve");
+    let path = dir.join("db.json");
+    let mut db = TunedDb::default();
+    db.insert(entry.clone());
+    db.save(&path).unwrap();
+    let db = TunedDb::load(&path).unwrap();
+
+    let mut job = parse_trace_line(0, "cosmo, tuned, exec, 16, 1").unwrap();
+    assert!(job.tuned_request);
+    let fallback_fp = job.spec.fingerprint();
+    let plans = Arc::new(PlanCache::new());
+    let label = resolve_tuned(&mut job, &db, &plans)
+        .unwrap()
+        .expect("entry tuned at the serve shape must hit");
+    assert!(label.contains(&format!("vlen={}", entry.vlen)), "{label}");
+    assert!(label.contains(&entry.shape_class), "{label}");
+    assert_eq!(job.spec.vlen_override(), Some(entry.vlen));
+    assert_eq!(job.spec.is_tuned(), entry.tuned);
+    if entry.threads > 1 {
+        assert!(matches!(job.threads, Threads::Fixed(t) if t == entry.threads));
+    }
+
+    let c = Coordinator::start_with_cache(1, None, plans);
+    let r = c.submit(job).recv().unwrap();
+    assert!(r.ok, "resolved tuned job failed: {}", r.detail);
+    assert!(r.checksum.is_finite());
+    c.shutdown();
+    let _ = fallback_fp; // may legitimately equal the winner's knobs
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A tuned request with no matching DB entry is *not* an error: the job
+/// keeps the heuristic `hfav+tuned` fallback the trace parser installed
+/// and serves normally.
+#[test]
+fn tuned_miss_falls_back_to_heuristic_and_serves() {
+    let mut job = parse_trace_line(3, "cosmo, tuned, exec, 24, 1").unwrap();
+    assert!(job.tuned_request);
+    assert_eq!(job.spec.variant_kind(), Variant::Hfav);
+    assert!(job.spec.is_tuned(), "fallback must be the +tuned heuristic");
+    let before = job.spec.fingerprint();
+
+    let plans = Arc::new(PlanCache::new());
+    let empty = TunedDb::default();
+    assert_eq!(resolve_tuned(&mut job, &empty, &plans).unwrap(), None);
+    assert_eq!(job.spec.fingerprint(), before, "a miss must not touch the spec");
+
+    // A populated DB whose only entry covers a *different* shape class
+    // also misses — lookup is class-exact.
+    let mut other = TunedDb::default();
+    other.insert(TunedEntry {
+        deck_digest: deck_digest(&job.spec).unwrap(),
+        target: "cosmo".to_string(),
+        shape_class: ShapeClass::of(&[512, 512, 512]).label(),
+        extents: "512x512x512".to_string(),
+        tuned: false,
+        vec_dim: "inner".to_string(),
+        vlen: 4,
+        aligned: false,
+        tiled: false,
+        threads: 1,
+        mcells_per_s: 1.0,
+        candidates: 1,
+        timed: 1,
+        reps: 1,
+    });
+    assert_eq!(resolve_tuned(&mut job, &other, &plans).unwrap(), None);
+
+    let c = Coordinator::start_with_cache(1, None, plans);
+    let r = c.submit(job).recv().unwrap();
+    assert!(r.ok, "fallback job failed: {}", r.detail);
+    c.shutdown();
+}
