@@ -145,6 +145,27 @@ pub fn storage_words(
     Ok(words)
 }
 
+/// Words of the buffer backing an *external* storage: the product of the
+/// representative variable's span per dim — the executor's allocation
+/// rule for terminal arrays, shared here so the static verifier
+/// ([`crate::verify`]) sizes external buffers exactly like a run does.
+pub fn external_storage_words(
+    s: &Storage,
+    df: &Dataflow,
+    extents: &BTreeMap<String, i64>,
+) -> Result<i64, String> {
+    let rep = &df.vars[s.vars[0]];
+    let mut words = 1i64;
+    for d in &rep.dims {
+        let span = rep
+            .span
+            .get(d)
+            .ok_or_else(|| format!("no span for `{d}` of `{}`", rep.ident))?;
+        words *= (span.hi.eval(extents)? - span.lo.eval(extents)?).max(0);
+    }
+    Ok(words)
+}
+
 /// Which loop dimension vector lanes run along.
 ///
 /// `Inner` is the paper's Fig. 9c scheme: strip-mine the innermost loop

@@ -153,6 +153,17 @@ pub fn legal_candidates(base: &PlanSpec, cfg: &TuneConfig) -> Result<Vec<Candida
         let Ok(prog) = spec.compile() else {
             continue; // illegal knob set for this deck — filtered, not fatal
         };
+        // Second gate behind compilation: a candidate whose lowered
+        // schedule fails the static bounds/race/def-use proofs is
+        // rejected with its reason rather than timed (see crate::verify).
+        if let Some(reason) = crate::verify::reject_reason(&prog) {
+            println!(
+                "  candidate {} vlen={} rejected by verifier: {reason}",
+                spec.variant_label(),
+                prog.vector_len()
+            );
+            continue;
+        }
         let prog = Arc::new(prog);
         let ext = extents_map(&prog, &cfg.extents)?;
         let base_stats = prog.schedule_stats(&ext, 1)?;

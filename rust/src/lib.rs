@@ -19,6 +19,9 @@
 //!    the single place loop shapes are decided.
 //! 6. [`plan`] assembles the executable schedule; [`codegen`] prints it
 //!    as C99 / Rust / DOT; [`exec`] interprets the same tree in-process.
+//! 7. [`verify`] independently re-proves the lowered schedule safe —
+//!    bounds, race freedom, def-before-use — behind `hfav check` and
+//!    the `HFAV_VERIFY` compile gate.
 //!
 //! Serving layer: *what* to compile is a [`plan::PlanSpec`] (deck target
 //! + variant + tuning knobs) whose canonical fingerprint is the cache
@@ -44,6 +47,7 @@ pub mod fusion;
 pub mod analysis;
 pub mod schedule;
 pub mod plan;
+pub mod verify;
 pub mod exec;
 pub mod codegen;
 pub mod apps;

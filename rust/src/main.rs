@@ -25,6 +25,8 @@ fn usage() -> ! {
       [--variant hfav|autovec] [--vlen auto|N] [--vec-dim inner|auto|outer:<dim>]
       [--aligned] [--tile] [--tuned]
   footprint <deck.yaml|app> --extents Ni=512,Nj=512
+  check <deck.yaml|app> [--vlen auto|N] [--vec-dim inner|auto|outer:<dim>]
+      [--aligned] [--tile] [--tuned] [--variant hfav|autovec]
   engines
   run --app <app|deck.yaml> [--engine exec|native|rust|pjrt] [--variant hfav|autovec]
       [--size N] [--steps S] [--extents NxM[xK]] [--vlen auto|N]
@@ -41,6 +43,12 @@ fn usage() -> ! {
   smoke [hlo.txt]
 
   engines: list the registered execution backends and their availability
+  check:   static schedule verification — deck lints plus independent
+           bounds / race / def-before-use proofs over the lowered
+           schedule (see also the HFAV_VERIFY env knob on compiles).
+           With no knob flags it sweeps the tuner's whole knob
+           cross-product; with explicit flags it checks that one plan.
+           Exit is nonzero when any error-severity finding fires.
   --vlen:    vector length for strip-mined codegen (Fig. 9c); `auto` picks
              the host's SIMD width (runtime-detected), N forces N lanes
              (1 = scalar), omitted = each deck's declared default.
@@ -101,6 +109,7 @@ fn main() -> CliResult {
     match cmd.as_str() {
         "generate" => generate(rest),
         "footprint" => footprint(rest),
+        "check" => check(rest),
         "engines" => engines(),
         "run" => run(rest),
         "serve" => serve(rest),
@@ -213,6 +222,85 @@ fn footprint(rest: &[String]) -> CliResult {
     Ok(())
 }
 
+/// `hfav check`: static verification of one deck's lowered schedules.
+/// Deck lints run once; the bounds/race/def-before-use proofs run per
+/// plan — over the tuner's full knob cross-product by default, or the
+/// single plan the explicit knob flags describe. Nonzero exit on any
+/// error-severity finding.
+fn check(rest: &[String]) -> CliResult {
+    let target = match rest.first() {
+        Some(t) if !t.starts_with("--") => t.clone(),
+        _ => return Err("check: target <app|deck.yaml> required".into()),
+    };
+    let explicit = ["--vlen", "--vec-dim", "--aligned", "--tile", "--tuned", "--variant"]
+        .iter()
+        .any(|f| has_flag(rest, f));
+    let base = spec_of(&target, rest)?;
+    let specs = if explicit {
+        vec![base]
+    } else {
+        hfav::bench::tune::candidate_specs(&base)
+    };
+    let mut errors = 0usize;
+    let mut warnings = 0usize;
+    let mut checked = 0usize;
+    let mut skipped = 0usize;
+    let mut linted = false;
+    for spec in specs {
+        let prog = match spec.compile() {
+            Ok(p) => p,
+            Err(e) => {
+                if explicit {
+                    return Err(format!("compile failed: {e}").into());
+                }
+                // Illegal knob corner for this deck (e.g. no legal outer
+                // dim) — the same filter tuning applies.
+                skipped += 1;
+                continue;
+            }
+        };
+        // Deck lints are knob-independent: report them once, against the
+        // first plan that compiles.
+        if !linted {
+            linted = true;
+            for d in hfav::verify::lint_deck(&prog) {
+                println!("{d}");
+                match d.severity {
+                    hfav::verify::Severity::Error => errors += 1,
+                    hfav::verify::Severity::Warning => warnings += 1,
+                }
+            }
+        }
+        checked += 1;
+        let label = format!(
+            "variant={} vlen={} vec_dim={} aligned={} tiled={}",
+            spec.variant_label(),
+            prog.vector_len(),
+            prog.vec_dim(),
+            spec.is_aligned(),
+            prog.tiled()
+        );
+        let report = hfav::verify::check_schedule(&prog)?;
+        for d in &report.diagnostics {
+            println!("[{label}] {d}");
+        }
+        errors += report.error_count();
+        warnings += report.warning_count();
+        println!("{} {label}", if report.has_errors() { "FAIL" } else { "ok  " });
+    }
+    if checked == 0 {
+        return Err(format!("no plan for `{target}` compiles ({skipped} knob sets tried)").into());
+    }
+    println!(
+        "checked {checked} plan(s), {skipped} illegal knob corner(s) skipped: \
+         {errors} error(s), {warnings} warning(s)"
+    );
+    if errors > 0 {
+        return Err(format!("check failed with {errors} error(s)").into());
+    }
+    Ok(())
+}
+
 /// List every registered backend with its availability — one line per
 /// engine, machine-parseable (`name<TAB>available|unavailable<TAB>why`),
 /// so CI can smoke every engine the registry knows about.
@@ -291,7 +379,23 @@ fn serve(rest: &[String]) -> CliResult {
     // serves from, so nothing is compiled twice — and it runs *before*
     // the CLI template overrides below, which therefore still win.
     let plans = std::sync::Arc::new(hfav::plan::cache::PlanCache::new());
-    let db_path = flag(rest, "--db").unwrap_or_else(|| hfav::plan::tunedb::DEFAULT_DB_PATH.into());
+    let db_flag = flag(rest, "--db");
+    // An explicitly named DB must exist and parse — catch a typo'd path
+    // or a corrupt file at startup with a clear message, instead of
+    // failing mid-trace (or silently serving all-miss fallbacks). The
+    // default path keeps its lenient semantics: missing file = empty DB,
+    // per-job lookup misses still fall back silently.
+    if let Some(p) = &db_flag {
+        if !std::path::Path::new(p).exists() {
+            return Err(format!(
+                "--db {p}: tuned-plans DB not found (run `hfav tune <target> --db {p}` to create it)"
+            )
+            .into());
+        }
+        hfav::plan::tunedb::TunedDb::load(p)
+            .map_err(|e| format!("--db {p}: not a usable tuned-plans DB: {e}"))?;
+    }
+    let db_path = db_flag.unwrap_or_else(|| hfav::plan::tunedb::DEFAULT_DB_PATH.into());
     if template.iter().any(|j| j.tuned_request) {
         let db = hfav::plan::tunedb::TunedDb::load(&db_path)?;
         for j in template.iter_mut() {

@@ -97,7 +97,15 @@ pub fn compile(deck: Deck, opts: CompileOptions) -> Result<Program, String> {
     // (vec dim, vector length, tiling, alignment) and the storage plan
     // are final. Everything downstream walks this tree.
     let sched = crate::schedule::lower(&deck, &df, &fd, &sp, &opts)?;
-    Ok(Program { deck, df, fd, sp, sched, opts })
+    let prog = Program { deck, df, fd, sp, sched, opts };
+    // Independent safety net behind the `HFAV_VERIFY` env knob (on by
+    // default under `cfg(test)`): re-prove the lowered schedule
+    // in-bounds, race-free and def-before-use clean before any backend
+    // sees it. See [`crate::verify`].
+    if crate::verify::gate_enabled() {
+        crate::verify::gate_check(&prog)?;
+    }
+    Ok(prog)
 }
 
 /// Convenience: compile from deck source text.

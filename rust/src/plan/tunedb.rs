@@ -141,6 +141,34 @@ pub struct TunedDb {
     pub entries: Vec<TunedEntry>,
 }
 
+/// Decode one DB record. Any missing or mistyped field is an `Err` —
+/// [`TunedDb::parse`] turns that into "skip this record".
+fn decode_entry(e: &Value) -> Result<TunedEntry, String> {
+    let err = |what: &str| format!("bad or missing `{what}`");
+    let s = |k: &str| e.get(k).and_then(Value::as_str).map(str::to_string).ok_or_else(|| err(k));
+    let n = |k: &str| e.get(k).and_then(Value::as_f64).ok_or_else(|| err(k));
+    let b = |k: &str| e.get(k).and_then(Value::as_bool).ok_or_else(|| err(k));
+    let digest_hex = s("deck_digest")?;
+    let deck_digest = u64::from_str_radix(&digest_hex, 16)
+        .map_err(|e| format!("bad deck_digest `{digest_hex}`: {e}"))?;
+    Ok(TunedEntry {
+        deck_digest,
+        target: s("target")?,
+        shape_class: s("shape_class")?,
+        extents: s("extents")?,
+        tuned: b("tuned")?,
+        vec_dim: s("vec_dim")?,
+        vlen: n("vlen")? as usize,
+        aligned: b("aligned")?,
+        tiled: b("tiled")?,
+        threads: n("threads")? as usize,
+        mcells_per_s: n("mcells_per_s")?,
+        candidates: n("candidates")? as usize,
+        timed: n("timed")? as usize,
+        reps: n("reps")? as usize,
+    })
+}
+
 impl TunedDb {
     /// Load from `path`. A missing file is an empty DB (tuning is
     /// always optional); a present-but-malformed file is an error, so a
@@ -158,6 +186,14 @@ impl TunedDb {
     }
 
     /// Parse the JSON document [`TunedDb::render`] writes.
+    ///
+    /// Forward compatibility: the top-level document must be this
+    /// schema's (a damaged file never silently drops tunings), but a
+    /// *record* that fails to decode — missing or mistyped fields
+    /// written by some other version — is skipped rather than failing
+    /// the whole DB, and unknown extra keys on a record are ignored by
+    /// construction (lookup-by-key decoding). Future versions can add
+    /// provenance keys without breaking older readers.
     pub fn parse(text: &str) -> Result<TunedDb, String> {
         let doc = json::parse(text)?;
         let schema = doc.get("schema").and_then(Value::as_str).unwrap_or("?");
@@ -166,32 +202,10 @@ impl TunedDb {
         }
         let raw = doc.get("entries").and_then(Value::as_arr).ok_or("missing `entries` array")?;
         let mut entries = Vec::with_capacity(raw.len());
-        for (i, e) in raw.iter().enumerate() {
-            let err = |what: &str| format!("entry {i}: bad or missing `{what}`");
-            let s = |k: &str| {
-                e.get(k).and_then(Value::as_str).map(str::to_string).ok_or_else(|| err(k))
-            };
-            let n = |k: &str| e.get(k).and_then(Value::as_f64).ok_or_else(|| err(k));
-            let b = |k: &str| e.get(k).and_then(Value::as_bool).ok_or_else(|| err(k));
-            let digest_hex = s("deck_digest")?;
-            let deck_digest = u64::from_str_radix(&digest_hex, 16)
-                .map_err(|e| format!("entry {i}: bad deck_digest `{digest_hex}`: {e}"))?;
-            entries.push(TunedEntry {
-                deck_digest,
-                target: s("target")?,
-                shape_class: s("shape_class")?,
-                extents: s("extents")?,
-                tuned: b("tuned")?,
-                vec_dim: s("vec_dim")?,
-                vlen: n("vlen")? as usize,
-                aligned: b("aligned")?,
-                tiled: b("tiled")?,
-                threads: n("threads")? as usize,
-                mcells_per_s: n("mcells_per_s")?,
-                candidates: n("candidates")? as usize,
-                timed: n("timed")? as usize,
-                reps: n("reps")? as usize,
-            });
+        for e in raw {
+            if let Ok(entry) = decode_entry(e) {
+                entries.push(entry);
+            }
         }
         Ok(TunedDb { entries })
     }
@@ -350,6 +364,34 @@ mod tests {
         std::fs::write(dir.join("bad.json"), "{ not json").unwrap();
         assert!(TunedDb::load(dir.join("bad.json")).is_err());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn parse_skips_undecodable_records_for_forward_compat() {
+        let mut db = TunedDb::default();
+        db.insert(entry(1, "d3/m15/square"));
+        let text = db.render();
+        // A record with only future/unknown fields is skipped, not fatal.
+        let spliced = text.replace(
+            "  \"entries\": [",
+            "  \"entries\": [\n    { \"deck_digest\": \"0000000000000002\", \"provenance\": \"v2\" },",
+        );
+        assert_ne!(spliced, text, "splice target must match the rendered document");
+        let back = TunedDb::parse(&spliced).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back.lookup(1, "d3/m15/square"), db.lookup(1, "d3/m15/square"));
+        // Unknown extra keys on an otherwise-good record are ignored: the
+        // DB round-trips to exactly the known fields.
+        let extra = text.replace("\"reps\": 37 }", "\"reps\": 37, \"provenance\": \"v2\" }");
+        assert_ne!(extra, text);
+        assert_eq!(TunedDb::parse(&extra).unwrap(), db);
+        // A mistyped field (string where a number belongs) skips too.
+        let mistyped = text.replace("\"vlen\": 8", "\"vlen\": \"eight\"");
+        assert_ne!(mistyped, text);
+        assert!(TunedDb::parse(&mistyped).unwrap().is_empty());
+        // Top-level damage stays a hard error.
+        assert!(TunedDb::parse("{ \"schema\": \"nope\", \"entries\": [] }").is_err());
+        assert!(TunedDb::parse(&format!("{{ \"schema\": \"{TUNED_SCHEMA}\" }}")).is_err());
     }
 
     #[test]

@@ -1023,6 +1023,26 @@ impl ScheduleStats {
     }
 }
 
+/// Walk one node sequence with explicit extents and index state — the
+/// same traversal [`Schedule::visit_threads`] performs per nest, exposed
+/// so external analyses (the static verifier, [`crate::verify`]) can
+/// walk a sub-tree such as a single parallel chunk's body under
+/// chunk-bound extents. `f(nest, member, idx)` fires per invocation in
+/// reference order.
+pub fn visit_body<F>(
+    nest: usize,
+    nodes: &[Node],
+    extents: &BTreeMap<String, i64>,
+    threads: usize,
+    idx: &mut Vec<i64>,
+    f: &mut F,
+) -> Result<(), String>
+where
+    F: FnMut(usize, usize, &[i64]),
+{
+    visit_nodes(nest, nodes, extents, threads, idx, f)
+}
+
 fn visit_nodes<F>(
     nest: usize,
     nodes: &[Node],

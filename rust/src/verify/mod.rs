@@ -1,0 +1,858 @@
+//! Static schedule verification: independent proofs that a lowered
+//! [`Program`] is memory-safe and deterministic.
+//!
+//! The compilation pipeline *constructs* legality: gates like
+//! `outer_vectorizable`, `parallel_safe` and `lane_fission_safe` decide
+//! what the schedule may do, and lowering encodes the result. Nothing
+//! downstream re-checks that the encoded tree actually has the claimed
+//! properties — and transformation code is exactly where silent
+//! corruption bugs live. This module is the independent oracle: it
+//! rebuilds the executor's address model from the storage plan alone and
+//! walks the schedule tree symbolically over probe extents, proving
+//! three properties:
+//!
+//! 1. **bounds** — every access of every invocation reachable via
+//!    [`crate::schedule::Schedule::visit`] (window rotations, padded
+//!    intermediates, outer-lane slots, aligned heads, tile members)
+//!    stays inside its buffer at every probed shape;
+//! 2. **races** — for every [`Node::Parallel`], per-chunk read/write
+//!    footprints recomputed from [`chunk_spans`] are pairwise disjoint
+//!    on shared storages (no chunk writes a cell another chunk touches),
+//!    and chunk-private replicas are written in-chunk before they are
+//!    read (replicas start zeroed, not carried over from other chunks);
+//! 3. **def-before-use** — every read of an intermediate cell is
+//!    preceded in walk order by a write of the *same logical
+//!    coordinates* to that cell: an unwritten cell is an uninitialized
+//!    read (`def-before-use`), a coordinate mismatch is a rotation
+//!    clobber (`stale-read` — the window is too small for the schedule
+//!    that reads it).
+//!
+//! The proofs are exhaustive over small staggered probe extents (chosen
+//! so alignment heads, steady strips, scalar remainders and uneven
+//! parallel chunks all execute), which is exactly the regime where
+//! off-by-one peeling and padding bugs live — larger extents only repeat
+//! steady-state iterations the probes already cover.
+//!
+//! Surfaced three ways: the `hfav check <app|deck.yaml>` CLI command
+//! (deck lints + schedule proofs, nonzero exit on errors), the
+//! `HFAV_VERIFY` gate inside [`crate::plan::compile`] (on by default
+//! under `cfg(test)`, so every unit-test compile is verified), and
+//! [`reject_reason`] as the tuner's pre-timing candidate filter.
+
+use crate::analysis::{self, DimSize};
+use crate::dataflow::Terminal;
+use crate::fusion::Role;
+use crate::plan::Program;
+use crate::schedule::{chunk_spans, Node};
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+/// Finding severity: errors fail `hfav check` (nonzero exit) and the
+/// compile gate; warnings are advisory lints.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Severity::Warning => write!(f, "warning"),
+            Severity::Error => write!(f, "error"),
+        }
+    }
+}
+
+/// One verifier finding, tagged with the rule that produced it.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    /// Stable rule tag: `bounds`, `race`, `def-before-use`, `stale-read`,
+    /// `chunk-uninit-read`, or a deck-lint tag (`dead-kernel`,
+    /// `unused-input`, `dead-value`, `input-underrun`).
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Diagnostic {
+    fn error(rule: &'static str, message: String) -> Diagnostic {
+        Diagnostic { severity: Severity::Error, rule, message }
+    }
+    fn warning(rule: &'static str, message: String) -> Diagnostic {
+        Diagnostic { severity: Severity::Warning, rule, message }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[{}]: {}", self.severity, self.rule, self.message)
+    }
+}
+
+/// Accumulated findings of one verification run. Findings are
+/// deduplicated per (rule, site): a bug that fires on every iteration of
+/// a walk is reported once, at its first occurrence.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+    seen: BTreeSet<String>,
+}
+
+impl Report {
+    fn push(&mut self, site: String, d: Diagnostic) {
+        if self.seen.insert(format!("{}\u{1}{site}", d.rule)) {
+            self.diagnostics.push(d);
+        }
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.error_count() > 0
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.diagnostics.len() - self.error_count()
+    }
+
+    /// All findings, one rendered line per diagnostic.
+    pub fn render(&self) -> String {
+        self.diagnostics.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+    }
+
+    /// Error findings only (the compile-gate failure payload).
+    pub fn render_errors(&self) -> String {
+        self.diagnostics
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .map(|d| format!("  {d}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------------
+
+/// Whether the [`crate::plan::compile`] verification gate is on. The
+/// `HFAV_VERIFY` env var wins (`0`/`off`/empty disable, anything else
+/// enables); unset defaults to on under `cfg(test)` so every unit-test
+/// compile is verified, and off otherwise (production compiles stay
+/// cheap; `hfav check` runs the verifier explicitly).
+pub fn gate_enabled() -> bool {
+    gate_from(std::env::var("HFAV_VERIFY").ok().as_deref())
+}
+
+fn gate_from(v: Option<&str>) -> bool {
+    match v {
+        Some(s) => !(s.is_empty() || s == "0" || s.eq_ignore_ascii_case("off")),
+        None => cfg!(test),
+    }
+}
+
+/// The compile-gate body: one small probe shape (the gate runs on every
+/// unit-test compile, so it stays cheap), serial walk plus a two-chunk
+/// race walk. `Ok(())` or the rendered error findings.
+pub fn gate_check(prog: &Program) -> Result<(), String> {
+    let ext = probe_extents(prog, 1);
+    let mut report = Report::default();
+    check_at(prog, &ext, &[2], &mut report)?;
+    if report.has_errors() {
+        return Err(format!("schedule verification failed:\n{}", report.render_errors()));
+    }
+    Ok(())
+}
+
+/// The tuner's candidate filter: `Some(reason)` when the lowered
+/// schedule fails verification (candidate must not be timed), `None`
+/// when it proves clean.
+pub fn reject_reason(prog: &Program) -> Option<String> {
+    gate_check(prog).err()
+}
+
+/// Full verification: deck lints plus schedule proofs over two staggered
+/// probe shapes, with race walks at 2 and 3 chunk workers each.
+pub fn check_program(prog: &Program) -> Result<Report, String> {
+    let mut report = Report::default();
+    for d in lint_deck(prog) {
+        let site = d.message.clone();
+        report.push(site, d);
+    }
+    check_schedule_into(prog, &mut report)?;
+    Ok(report)
+}
+
+/// Schedule proofs only (no deck lints): two probe shapes, serial walk
+/// plus 2- and 3-worker race walks at each.
+pub fn check_schedule(prog: &Program) -> Result<Report, String> {
+    let mut report = Report::default();
+    check_schedule_into(prog, &mut report)?;
+    Ok(report)
+}
+
+fn check_schedule_into(prog: &Program, report: &mut Report) -> Result<(), String> {
+    for scale in [4, 2] {
+        let ext = probe_extents(prog, scale);
+        check_at(prog, &ext, &[2, 3], report)?;
+    }
+    Ok(())
+}
+
+/// Schedule proofs at one explicit shape: a serial bounds/def walk, then
+/// a race walk per worker count in `threads` (entries below 2 are
+/// covered by the serial walk and skipped).
+pub fn check_schedule_at(
+    prog: &Program,
+    extents: &BTreeMap<String, i64>,
+    threads: &[usize],
+) -> Result<Report, String> {
+    let mut report = Report::default();
+    check_at(prog, extents, threads, &mut report)?;
+    Ok(report)
+}
+
+/// Staggered, deliberately unaligned probe extents: roughly `scale`
+/// vector strips per dim plus a distinct odd offset per extent name, so
+/// alignment heads, steady strips, scalar remainders and uneven parallel
+/// chunks all execute during the walk.
+pub fn probe_extents(prog: &Program, scale: i64) -> BTreeMap<String, i64> {
+    let vl = prog.vector_len().max(1) as i64;
+    let mut ext = BTreeMap::new();
+    for (i, name) in crate::codegen::c99::extent_names(prog).into_iter().enumerate() {
+        ext.insert(name, scale * vl + 5 + 2 * i as i64);
+    }
+    ext
+}
+
+fn check_at(
+    prog: &Program,
+    extents: &BTreeMap<String, i64>,
+    threads: &[usize],
+    report: &mut Report,
+) -> Result<(), String> {
+    let model = Model::build(prog, extents)?;
+    model.check_serial(report)?;
+    for &t in threads {
+        if t >= 2 {
+            model.check_races(t, report)?;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Deck lints
+// ---------------------------------------------------------------------------
+
+/// Deck-level lints, independent of any particular schedule: dead
+/// kernels (rules the goal chain never instantiates), inputs nothing
+/// consumes, computed values nothing reads, and input stencil spans that
+/// reach below index 0 — an offset larger than the array the deck
+/// declares (`input-underrun`, the only lint that is an error).
+pub fn lint_deck(prog: &Program) -> Vec<Diagnostic> {
+    let df = &prog.df;
+    let mut out = Vec::new();
+
+    // Rules never instantiated by inference. Synthetic roll callsites
+    // carry `rule == usize::MAX` and don't count as uses.
+    let used: BTreeSet<usize> =
+        df.callsites.iter().map(|c| c.rule).filter(|&r| r != usize::MAX).collect();
+    for (i, r) in prog.deck.rules.iter().enumerate() {
+        if !used.contains(&i) {
+            out.push(Diagnostic::warning(
+                "dead-kernel",
+                format!("kernel `{}` is never instantiated by the goal chain", r.name),
+            ));
+        }
+    }
+
+    // Input axioms nothing reads.
+    for a in &prog.deck.axioms {
+        let ident = a.provides.ident();
+        let consumed = df
+            .var_by_ident
+            .get(&ident)
+            .map(|&v| !df.reads_of[v].is_empty())
+            .unwrap_or(false);
+        if !consumed {
+            out.push(Diagnostic::warning(
+                "unused-input",
+                format!("input `{ident}` is never consumed by any instantiated kernel"),
+            ));
+        }
+    }
+
+    // Computed values that are neither terminal nor read.
+    for v in &df.vars {
+        if v.producer.is_some()
+            && matches!(v.terminal, Terminal::No)
+            && df.reads_of[v.id].is_empty()
+        {
+            out.push(Diagnostic::warning(
+                "dead-value",
+                format!("value `{}` is computed but never read", v.ident),
+            ));
+        }
+    }
+
+    // Input spans reaching below index 0: a stencil offset exceeds the
+    // declared array. The executor *allocates* the halo (spans size the
+    // buffers), so bounds proofs pass — this is the deck-level check
+    // that catches the mistake.
+    for v in &df.vars {
+        if !matches!(v.terminal, Terminal::Input { .. }) {
+            continue;
+        }
+        for d in &v.dims {
+            let lo = &v.span[d].lo;
+            if lo.base.is_none() && lo.offset < 0 {
+                out.push(Diagnostic::error(
+                    "input-underrun",
+                    format!(
+                        "input `{}`: stencil reads reach index {} along `{d}`, below the \
+                         array start — widen the domain or shrink the negative offset",
+                        v.ident, lo.offset
+                    ),
+                ));
+            }
+        }
+    }
+
+    out
+}
+
+// ---------------------------------------------------------------------------
+// The address model (mirrors the executor, rebuilt independently)
+// ---------------------------------------------------------------------------
+
+/// How one dim of an access resolves to a physical index — the
+/// executor's three index rules, rebuilt from the storage plan.
+#[derive(Debug, Clone, Copy)]
+enum Rule {
+    One,
+    Window { alloc: i64 },
+    Full { lo: i64 },
+}
+
+#[derive(Debug, Clone)]
+struct DimPlan {
+    dim: String,
+    level: usize,
+    /// Pipeline shift (loop roles only) plus the subscript offset.
+    add: i64,
+    size: i64,
+    stride: i64,
+    rule: Rule,
+}
+
+#[derive(Debug, Clone)]
+struct AccessPlan {
+    /// Accessed variable ident (diagnostics).
+    ident: String,
+    /// Buffer id (storage after external-alias dedup).
+    buf: usize,
+    dims: Vec<DimPlan>,
+}
+
+#[derive(Debug, Clone)]
+struct MemberAccess {
+    /// Callsite name (diagnostics).
+    name: String,
+    reads: Vec<AccessPlan>,
+    writes: Vec<AccessPlan>,
+}
+
+/// The executor's whole address model at one concrete shape: buffer
+/// identity (externals deduplicated through deck aliases), buffer sizes
+/// in words, and per-member resolved access plans per nest.
+struct Model<'a> {
+    prog: &'a Program,
+    extents: &'a BTreeMap<String, i64>,
+    /// storage id -> buffer id.
+    storage_buf: Vec<usize>,
+    /// buffer id -> words allocated at these extents.
+    buf_words: Vec<i64>,
+    /// buffer id -> display name (external canon or storage name).
+    buf_names: Vec<String>,
+    /// buffer id -> true when backed by an external array (externals are
+    /// always-defined: the host initializes them before a run).
+    buf_external: Vec<bool>,
+    /// per nest plan, per fused-nest member: resolved access plans.
+    nests: Vec<Vec<MemberAccess>>,
+}
+
+impl<'a> Model<'a> {
+    fn build(prog: &'a Program, extents: &'a BTreeMap<String, i64>) -> Result<Model<'a>, String> {
+        // Buffer identity and sizing, exactly like the executor's
+        // allocation pass: externals dedup through deck aliases and size
+        // by the representative var's span; intermediates size by the
+        // storage plan.
+        let mut ext_buf: BTreeMap<String, usize> = BTreeMap::new();
+        let mut storage_buf = vec![usize::MAX; prog.sp.storages.len()];
+        let mut buf_words = Vec::new();
+        let mut buf_names = Vec::new();
+        let mut buf_external = Vec::new();
+        for s in &prog.sp.storages {
+            let b = if let Some(name) = &s.external {
+                let canon = canonical_alias(prog, name);
+                match ext_buf.get(&canon) {
+                    Some(&b) => b,
+                    None => {
+                        buf_words.push(analysis::external_storage_words(s, &prog.df, extents)?);
+                        buf_names.push(canon.clone());
+                        buf_external.push(true);
+                        ext_buf.insert(canon, buf_words.len() - 1);
+                        buf_words.len() - 1
+                    }
+                }
+            } else {
+                buf_words.push(analysis::storage_words(s, &prog.df, extents)?);
+                buf_names.push(s.name.clone());
+                buf_external.push(false);
+                buf_words.len() - 1
+            };
+            storage_buf[s.id] = b;
+        }
+
+        // Access plans per nest member, mirroring the executor's member
+        // compilation: nest level per var dim, role-gated pipeline shift
+        // plus subscript offset, index rule and size from the storage
+        // plan, strides per the shared layout order.
+        let mut nests = Vec::with_capacity(prog.sched.nests.len());
+        for np in &prog.sched.nests {
+            let nest = &prog.fd.nests[np.nest];
+            let mut members = Vec::with_capacity(nest.members.len());
+            for m in &nest.members {
+                let cs = &prog.df.callsites[m.callsite];
+                let access = |vid: usize, offsets: &[i64]| -> Result<AccessPlan, String> {
+                    let var = &prog.df.vars[vid];
+                    let sid = prog.sp.of_var[vid];
+                    let st = &prog.sp.storages[sid];
+                    let mut dims = Vec::with_capacity(var.dims.len());
+                    let mut sizes = Vec::with_capacity(var.dims.len());
+                    for (k, d) in var.dims.iter().enumerate() {
+                        let level = nest
+                            .dim_index(d)
+                            .ok_or_else(|| format!("dim `{d}` of `{}` not in nest", var.ident))?;
+                        let shift = if m.roles[level] == Role::Loop { m.shifts[level] } else { 0 };
+                        let (rule, size) = match &st.sizes[k] {
+                            DimSize::One => (Rule::One, 1i64),
+                            DimSize::Window { alloc, .. } => {
+                                (Rule::Window { alloc: *alloc }, *alloc)
+                            }
+                            DimSize::Full => {
+                                let span = &var.span[d];
+                                let lo = span.lo.eval(extents)?;
+                                let hi = span.hi.eval(extents)?;
+                                (Rule::Full { lo }, (hi - lo).max(0))
+                            }
+                        };
+                        dims.push(DimPlan {
+                            dim: d.clone(),
+                            level,
+                            add: shift + offsets[k],
+                            size,
+                            stride: 1,
+                            rule,
+                        });
+                        sizes.push(size);
+                    }
+                    let order = analysis::layout_order(st, prog.outer_lane_dim());
+                    for k in 0..sizes.len() {
+                        let pos = order.iter().position(|&x| x == k).unwrap();
+                        dims[k].stride = order[pos + 1..].iter().map(|&x| sizes[x]).product();
+                    }
+                    Ok(AccessPlan {
+                        ident: var.ident.clone(),
+                        buf: storage_buf[sid],
+                        dims,
+                    })
+                };
+                let mut reads = Vec::new();
+                for (_, vid, offsets) in &cs.reads {
+                    reads.push(access(*vid, offsets)?);
+                }
+                let mut writes = Vec::new();
+                for (_, vid, offsets) in &cs.writes {
+                    writes.push(access(*vid, offsets)?);
+                }
+                members.push(MemberAccess { name: cs.name.clone(), reads, writes });
+            }
+            nests.push(members);
+        }
+
+        Ok(Model { prog, extents, storage_buf, buf_words, buf_names, buf_external, nests })
+    }
+
+    /// Resolve one access at a loop index: per-dim bounds proof plus the
+    /// flat cell and the logical coordinates (one per var dim). `Err` is
+    /// a bounds violation message (without the kernel prefix).
+    fn resolve(&self, a: &AccessPlan, idx: &[i64]) -> Result<(i64, Vec<i64>), String> {
+        let mut flat = 0i64;
+        let mut coords = Vec::with_capacity(a.dims.len());
+        for d in &a.dims {
+            let pos = idx[d.level] + d.add;
+            let x = match d.rule {
+                Rule::One => 0,
+                Rule::Window { alloc } => pos.rem_euclid(alloc),
+                Rule::Full { lo } => {
+                    let x = pos - lo;
+                    if x < 0 || x >= d.size {
+                        return Err(format!(
+                            "`{}`: index {pos} outside span [{lo}, {}) along `{}`",
+                            a.ident,
+                            lo + d.size,
+                            d.dim
+                        ));
+                    }
+                    x
+                }
+            };
+            coords.push(pos);
+            flat += x * d.stride;
+        }
+        let words = self.buf_words[a.buf];
+        if flat < 0 || flat >= words {
+            return Err(format!(
+                "`{}`: flat word {flat} outside the {words}-word buffer `{}`",
+                a.ident, self.buf_names[a.buf]
+            ));
+        }
+        Ok((flat, coords))
+    }
+
+    /// Serial walk: bounds on every access, and def-before-use /
+    /// stale-read on every intermediate read. Definition state persists
+    /// across nests (earlier nests feed later ones); external buffers
+    /// are always-defined.
+    fn check_serial(&self, report: &mut Report) -> Result<(), String> {
+        let mut defs: Vec<BTreeMap<i64, Vec<i64>>> = vec![BTreeMap::new(); self.buf_words.len()];
+        let mut findings: Vec<(String, Diagnostic)> = Vec::new();
+        self.prog.sched.visit(self.extents, &mut |np, mi, idx| {
+            let ma = &self.nests[np][mi];
+            for a in &ma.reads {
+                match self.resolve(a, idx) {
+                    Err(msg) => findings.push((
+                        format!("{}/{}", ma.name, a.ident),
+                        Diagnostic::error("bounds", format!("`{}` reads {msg}", ma.name)),
+                    )),
+                    Ok((flat, coords)) => {
+                        if !self.buf_external[a.buf] {
+                            match defs[a.buf].get(&flat) {
+                                None => findings.push((
+                                    format!("{}/{}", ma.name, a.ident),
+                                    Diagnostic::error(
+                                        "def-before-use",
+                                        format!(
+                                            "`{}` reads `{}` at {coords:?} before any write \
+                                             defines that cell",
+                                            ma.name, a.ident
+                                        ),
+                                    ),
+                                )),
+                                Some(held) if *held != coords => findings.push((
+                                    format!("{}/{}", ma.name, a.ident),
+                                    Diagnostic::error(
+                                        "stale-read",
+                                        format!(
+                                            "`{}` reads `{}` expecting {coords:?} but the cell \
+                                             last held {held:?} — window clobbered before use",
+                                            ma.name, a.ident
+                                        ),
+                                    ),
+                                )),
+                                Some(_) => {}
+                            }
+                        }
+                    }
+                }
+            }
+            for a in &ma.writes {
+                match self.resolve(a, idx) {
+                    Err(msg) => findings.push((
+                        format!("{}/{}", ma.name, a.ident),
+                        Diagnostic::error("bounds", format!("`{}` writes {msg}", ma.name)),
+                    )),
+                    Ok((flat, coords)) => {
+                        defs[a.buf].insert(flat, coords);
+                    }
+                }
+            }
+        })?;
+        for (site, d) in findings {
+            report.push(site, d);
+        }
+        Ok(())
+    }
+
+    /// Race walk at one worker count: for every parallel level, rebuild
+    /// each chunk's read/write footprint on shared buffers and prove the
+    /// chunks disjoint (no write overlaps another chunk's footprint);
+    /// chunk-private buffers instead get a fresh per-chunk definition
+    /// state (replicas start zeroed), proving every private read was
+    /// written by the same chunk with matching coordinates.
+    fn check_races(&self, threads: usize, report: &mut Report) -> Result<(), String> {
+        for (np_i, np) in self.prog.sched.nests.iter().enumerate() {
+            for node in &np.body {
+                let Node::Parallel(p) = node else { continue };
+                let lo = p.lo.eval(self.extents)?;
+                let hi = p.hi.eval(self.extents)?;
+                let spans = chunk_spans(lo, hi, p.unit, threads);
+                if spans.len() <= 1 {
+                    continue;
+                }
+                let private: BTreeSet<usize> =
+                    p.private_storages.iter().map(|&sid| self.storage_buf[sid]).collect();
+                let mut findings: Vec<(String, Diagnostic)> = Vec::new();
+                // (shared reads, shared writes) per chunk, keyed by buffer.
+                type Foot = BTreeMap<usize, BTreeSet<i64>>;
+                let mut feet: Vec<(Foot, Foot)> = Vec::with_capacity(spans.len());
+                for &(clo, chi) in &spans {
+                    let mut ext = self.extents.clone();
+                    ext.insert(p.lo_sym(), clo);
+                    ext.insert(p.hi_sym(), chi);
+                    let mut reads: Foot = BTreeMap::new();
+                    let mut writes: Foot = BTreeMap::new();
+                    let mut pdefs: BTreeMap<usize, BTreeMap<i64, Vec<i64>>> =
+                        private.iter().map(|&b| (b, BTreeMap::new())).collect();
+                    let mut idx = vec![0i64; np.dims.len()];
+                    crate::schedule::visit_body(
+                        np_i,
+                        &p.body,
+                        &ext,
+                        1,
+                        &mut idx,
+                        &mut |_, mi, idx| {
+                            let ma = &self.nests[np_i][mi];
+                            for a in &ma.reads {
+                                // Bounds violations are the serial
+                                // walk's findings; here only footprints
+                                // and private definedness matter.
+                                let Ok((flat, coords)) = self.resolve(a, idx) else { continue };
+                                if let Some(defs) = pdefs.get(&a.buf) {
+                                    match defs.get(&flat) {
+                                        None => findings.push((
+                                            format!("{}/{}", ma.name, a.ident),
+                                            Diagnostic::error(
+                                                "chunk-uninit-read",
+                                                format!(
+                                                    "`{}` reads chunk-private `{}` at {coords:?} \
+                                                     before the chunk writes it (replicas start \
+                                                     zeroed, not carried over)",
+                                                    ma.name, a.ident
+                                                ),
+                                            ),
+                                        )),
+                                        Some(held) if *held != coords => findings.push((
+                                            format!("{}/{}", ma.name, a.ident),
+                                            Diagnostic::error(
+                                                "stale-read",
+                                                format!(
+                                                    "`{}` reads chunk-private `{}` expecting \
+                                                     {coords:?} but the replica cell last held \
+                                                     {held:?}",
+                                                    ma.name, a.ident
+                                                ),
+                                            ),
+                                        )),
+                                        Some(_) => {}
+                                    }
+                                } else {
+                                    reads.entry(a.buf).or_default().insert(flat);
+                                }
+                            }
+                            for a in &ma.writes {
+                                let Ok((flat, coords)) = self.resolve(a, idx) else { continue };
+                                if let Some(defs) = pdefs.get_mut(&a.buf) {
+                                    defs.insert(flat, coords);
+                                } else {
+                                    writes.entry(a.buf).or_default().insert(flat);
+                                }
+                            }
+                        },
+                    )?;
+                    feet.push((reads, writes));
+                }
+                // Pairwise disjointness: a chunk's writes must not touch
+                // any cell another chunk reads or writes.
+                for i in 0..feet.len() {
+                    for j in 0..feet.len() {
+                        if i == j {
+                            continue;
+                        }
+                        for (buf, w) in &feet[i].1 {
+                            let mut overlap = |other: &BTreeSet<i64>, kind: &str| {
+                                let common: Vec<i64> =
+                                    w.intersection(other).take(4).copied().collect();
+                                if !common.is_empty() {
+                                    findings.push((
+                                        format!("nest{np_i}/{}/{kind}", self.buf_names[*buf]),
+                                        Diagnostic::error(
+                                            "race",
+                                            format!(
+                                                "parallel `{}` at {threads} workers: chunk {i} \
+                                                 writes cells of `{}` that chunk {j} {kind} \
+                                                 (e.g. word {})",
+                                                p.dim, self.buf_names[*buf], common[0]
+                                            ),
+                                        ),
+                                    ));
+                                }
+                            };
+                            if i < j {
+                                if let Some(w2) = feet[j].1.get(buf) {
+                                    overlap(w2, "writes");
+                                }
+                            }
+                            if let Some(r2) = feet[j].0.get(buf) {
+                                overlap(r2, "reads");
+                            }
+                        }
+                    }
+                }
+                for (site, d) in findings {
+                    report.push(site, d);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Externals aliased in the deck share one buffer (in/out chaining); the
+/// executor's canonicalization, mirrored.
+fn canonical_alias(prog: &Program, name: &str) -> String {
+    for (a, b) in &prog.deck.aliases {
+        if name == b {
+            return a.clone();
+        }
+    }
+    name.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::testdecks;
+    use crate::plan::{compile_src, CompileOptions, PlanSpec};
+
+    fn compile(src: &str, vlen: usize) -> Program {
+        compile_src(
+            src,
+            CompileOptions {
+                analysis: crate::analysis::AnalysisOptions {
+                    vector_len: Some(vlen),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn gate_env_semantics() {
+        assert!(!gate_from(Some("0")));
+        assert!(!gate_from(Some("")));
+        assert!(!gate_from(Some("off")));
+        assert!(!gate_from(Some("OFF")));
+        assert!(gate_from(Some("1")));
+        assert!(gate_from(Some("yes")));
+        // Unset defaults to on in the test cfg.
+        assert!(gate_from(None));
+    }
+
+    #[test]
+    fn testdecks_verify_clean_at_all_vector_lengths() {
+        for src in [testdecks::LAPLACE, testdecks::NORMALIZE, testdecks::CHAIN1D] {
+            for vlen in [1, 4, 8] {
+                let prog = compile(src, vlen);
+                let report = check_program(&prog).unwrap();
+                assert!(
+                    !report.has_errors(),
+                    "{} vlen {vlen}:\n{}",
+                    prog.deck.name,
+                    report.render()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn builtin_apps_verify_clean_and_lint_free() {
+        for app in crate::apps::APP_NAMES {
+            let prog = PlanSpec::app(app).compile().unwrap();
+            // One probe here (debug builds): the integration matrix and
+            // the CI `check` sweep run the full multi-probe pass.
+            let ext = probe_extents(&prog, 2);
+            let report = check_schedule_at(&prog, &ext, &[2]).unwrap();
+            assert!(!report.has_errors(), "{app}:\n{}", report.render());
+            assert!(
+                lint_deck(&prog).iter().all(|d| d.severity != Severity::Error),
+                "{app} has error-severity lints"
+            );
+        }
+    }
+
+    #[test]
+    fn shrunk_window_is_reported_as_clobber() {
+        // dbl(u)'s window along `i` holds the producer's run-ahead; halving
+        // the allocation makes the i+1 write land on the cell the i-1 read
+        // still needs.
+        let mut prog = compile(testdecks::CHAIN1D, 1);
+        let mut shrunk = false;
+        for s in &mut prog.sp.storages {
+            for sz in &mut s.sizes {
+                if let DimSize::Window { alloc, .. } = sz {
+                    if *alloc >= 2 {
+                        *alloc /= 2;
+                        shrunk = true;
+                    }
+                }
+            }
+        }
+        assert!(shrunk, "chain1d must carry a windowed intermediate");
+        let report = check_schedule(&prog).unwrap();
+        assert!(
+            report.diagnostics.iter().any(|d| d.rule == "stale-read"),
+            "expected a stale-read finding:\n{}",
+            report.render()
+        );
+    }
+
+    #[test]
+    fn underrun_deck_is_a_lint_error() {
+        // Widen laplace's stencil past the declared input: with `j`
+        // starting at 0, the `j-1` read reaches index -1 of `g_cell`.
+        let bad = testdecks::LAPLACE.replace("j: [1, Nj-1]", "j: [0, Nj-1]");
+        let prog = compile(&bad, 1);
+        let lints = lint_deck(&prog);
+        assert!(
+            lints
+                .iter()
+                .any(|d| d.severity == Severity::Error && d.rule == "input-underrun"),
+            "expected input-underrun: {lints:?}"
+        );
+        // And the full report carries it as an error.
+        let report = check_program(&prog).unwrap();
+        assert!(report.has_errors());
+    }
+
+    #[test]
+    fn report_dedups_by_rule_and_site() {
+        let mut r = Report::default();
+        r.push("a".into(), Diagnostic::error("bounds", "x".into()));
+        r.push("a".into(), Diagnostic::error("bounds", "y".into()));
+        r.push("b".into(), Diagnostic::warning("dead-kernel", "z".into()));
+        assert_eq!(r.diagnostics.len(), 2);
+        assert_eq!(r.error_count(), 1);
+        assert_eq!(r.warning_count(), 1);
+        assert!(r.has_errors());
+        assert_eq!(r.render().lines().count(), 2);
+        assert_eq!(r.render_errors(), "  error[bounds]: x");
+    }
+}
