@@ -1,0 +1,204 @@
+//! 3D first-order upwind advection sweep (flux form): a fourth builtin
+//! app whose shape none of the paper's codes reach — a stencil with
+//! in-nest-produced values read at nonzero offsets along **all three**
+//! loop dims, including the outermost.
+//!
+//! One sweep of `u_t + v·∇u = 0` with a constant positive velocity
+//! `(VZ, VY, VX)` at unit CFL numbers per component:
+//!
+//! ```text
+//! F_d = v_d * u                       (one flux kernel per dim)
+//! o   = u - Σ_d (F_d[x_d] - F_d[x_d - 1])
+//! ```
+//!
+//! The update kernel reads `afx` at `i-1`, `afy` at `j-1` **and `afz` at
+//! `k-1`** — so contraction has to carry a rolling window along the
+//! *outermost* dim (`afz` contracts to a 2-deep window of full (j,i)
+//! slices), and no loop dim is k-independent: `outer:<dim>` lanes and
+//! `--tile` are illegal on this deck, `parallel_safe` finds no chunkable
+//! level, and `vec_dim auto` must fall back to inner strips. That makes
+//! advect3d the differential/verify suites' probe for the "every outer
+//! knob is an illegal corner" quadrant, with per-dim extents
+//! (`Nk`/`Nj`/`Ni`) exercising non-cubic grids end to end.
+
+use crate::exec::registry::Registry;
+
+/// Per-component CFL numbers baked into the flux kernels (positive, so
+/// the upwind direction is statically the low side of each dim).
+pub const VX: f64 = 0.3;
+pub const VY: f64 = 0.2;
+pub const VZ: f64 = 0.1;
+
+pub const DECK: &str = r#"
+name: advect3d
+iteration:
+  order: [k, j, i]
+  domains:
+    k: [1, Nk]
+    j: [1, Nj]
+    i: [1, Ni]
+kernels:
+  adv_flux_x:
+    declaration: adv_flux_x(double c, double &f);
+    inputs: |
+      c : u?[k?][j?][i?]
+    outputs: |
+      f : afx(u?[k?][j?][i?])
+    body: "f = 0.3*c;"
+  adv_flux_y:
+    declaration: adv_flux_y(double c, double &f);
+    inputs: |
+      c : u?[k?][j?][i?]
+    outputs: |
+      f : afy(u?[k?][j?][i?])
+    body: "f = 0.2*c;"
+  adv_flux_z:
+    declaration: adv_flux_z(double c, double &f);
+    inputs: |
+      c : u?[k?][j?][i?]
+    outputs: |
+      f : afz(u?[k?][j?][i?])
+    body: "f = 0.1*c;"
+  adv_update:
+    declaration: adv_update(double c, double fxm, double fxc, double fym, double fyc, double fzm, double fzc, double &o);
+    inputs: |
+      c : u?[k?][j?][i?]
+      fxm : afx(u[k?][j?][i?-1])
+      fxc : afx(u[k?][j?][i?])
+      fym : afy(u[k?][j?-1][i?])
+      fyc : afy(u[k?][j?][i?])
+      fzm : afz(u[k?-1][j?][i?])
+      fzc : afz(u[k?][j?][i?])
+    outputs: |
+      o : adv(u?[k?][j?][i?])
+    body: "o = c - (fxc - fxm) - (fyc - fym) - (fzc - fzm);"
+globals:
+  inputs: |
+    double g_u[k?][j?][i?] => u[k?][j?][i?]
+  outputs: |
+    adv(u[k][j][i]) => double g_out[k][j][i]
+"#;
+
+pub fn registry() -> Registry {
+    let mut r = Registry::new();
+    r.register("adv_flux_x", |i, o| o[0] = VX * i[0]);
+    r.register("adv_flux_y", |i, o| o[0] = VY * i[0]);
+    r.register("adv_flux_z", |i, o| o[0] = VZ * i[0]);
+    r.register("adv_update", |i, o| {
+        o[0] = i[0] - (i[2] - i[1]) - (i[4] - i[3]) - (i[6] - i[5]);
+    });
+    r
+}
+
+/// Hand-written "autovec" baseline: four separate materialized sweeps
+/// (three flux grids plus the update), in the same flux-difference
+/// arithmetic order as the kernels so errors stay at rounding level.
+pub fn reference(u: &[f64], nk: usize, nj: usize, ni: usize, out: &mut [f64]) {
+    assert_eq!(u.len(), nk * nj * ni);
+    let (onk, onj, oni) = (nk - 1, nj - 1, ni - 1);
+    assert_eq!(out.len(), onk * onj * oni);
+    let at = |k: usize, j: usize, i: usize| u[(k * nj + j) * ni + i];
+    let mut fx = vec![0.0; nk * nj * ni];
+    let mut fy = vec![0.0; nk * nj * ni];
+    let mut fz = vec![0.0; nk * nj * ni];
+    for k in 0..nk {
+        for j in 0..nj {
+            for i in 0..ni {
+                let idx = (k * nj + j) * ni + i;
+                fx[idx] = VX * u[idx];
+                fy[idx] = VY * u[idx];
+                fz[idx] = VZ * u[idx];
+            }
+        }
+    }
+    for k in 1..nk {
+        for j in 1..nj {
+            for i in 1..ni {
+                let idx = (k * nj + j) * ni + i;
+                let o = at(k, j, i)
+                    - (fx[idx] - fx[idx - 1])
+                    - (fy[idx] - fy[idx - ni])
+                    - (fz[idx] - fz[idx - nj * ni]);
+                out[((k - 1) * onj + (j - 1)) * oni + (i - 1)] = o;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{max_err, seeded, Variant};
+    use crate::exec::{self, ExecOptions};
+    use crate::plan::PlanSpec;
+    use std::collections::BTreeMap;
+
+    fn ext(nk: usize, nj: usize, ni: usize) -> BTreeMap<String, i64> {
+        [("Nk", nk), ("Nj", nj), ("Ni", ni)]
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v as i64))
+            .collect()
+    }
+
+    #[test]
+    fn hfav_matches_reference() {
+        let (nk, nj, ni) = (5usize, 9usize, 12usize);
+        let e = ext(nk, nj, ni);
+        let u = seeded(nk * nj * ni, 13);
+        let mut want = vec![0.0; (nk - 1) * (nj - 1) * (ni - 1)];
+        reference(&u, nk, nj, ni, &mut want);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("g_u".to_string(), u);
+        for v in [Variant::Hfav, Variant::Autovec] {
+            let prog = PlanSpec::deck_src(DECK).variant(v).compile().unwrap();
+            let shape = exec::external_shape(&prog, "g_u", &e).unwrap();
+            assert_eq!(shape, vec![(0, nk as i64), (0, nj as i64), (0, ni as i64)], "{v:?}");
+            let out =
+                exec::run(&prog, &registry(), &e, &inputs, ExecOptions::default()).unwrap();
+            assert!(max_err(&out["g_out"], &want) < 1e-13, "variant {v:?}");
+        }
+    }
+
+    #[test]
+    fn outermost_dim_carries_a_rolling_window() {
+        // The shape the other builtins never reach: afz is read at k-1
+        // and k, so contraction keeps a 2-deep rolling window of full
+        // (j,i) slices along the *outermost* dim.
+        let prog = PlanSpec::deck_src(DECK).compile().unwrap();
+        assert_eq!(prog.fd.nests.len(), 1, "all four kernels fuse");
+        use crate::analysis::DimSize::*;
+        let sizes = |ident: &str| {
+            let v = prog.df.var(ident).unwrap().id;
+            prog.sp.storage_of(v).sizes.clone()
+        };
+        let fz = sizes("afz(u)");
+        assert!(matches!(fz[0], Window { w: 2, .. }), "afz k window: {fz:?}");
+        let fy = sizes("afy(u)");
+        assert!(matches!(fy[1], Window { w: 2, .. }), "afy j window: {fy:?}");
+        let fx = sizes("afx(u)");
+        assert!(matches!(fx[2], Window { w: 2, .. }), "afx i window: {fx:?}");
+    }
+
+    #[test]
+    fn no_outer_dim_is_legal() {
+        // Every dim carries an offset read of an in-nest value, so outer
+        // lanes and tiling must fail compilation (the legality gates are
+        // this deck's whole point) while `auto` falls back to inner.
+        use crate::analysis::VecDim;
+        use crate::plan::Vlen;
+        for dim in ["k", "j", "i"] {
+            let r = PlanSpec::deck_src(DECK)
+                .vlen(Vlen::Fixed(4))
+                .vec_dim(VecDim::Outer(dim.to_string()))
+                .compile();
+            assert!(r.is_err(), "outer:{dim} must be illegal");
+        }
+        assert!(PlanSpec::deck_src(DECK).vlen(Vlen::Fixed(4)).tiled(true).compile().is_err());
+        let auto = PlanSpec::deck_src(DECK)
+            .vlen(Vlen::Fixed(4))
+            .vec_dim(VecDim::Auto)
+            .compile()
+            .unwrap();
+        assert_eq!(auto.vector_len(), 4);
+    }
+}

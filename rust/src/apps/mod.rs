@@ -1,14 +1,17 @@
 //! The paper's application codes (§3, §5): Laplace, the normalization
 //! example, the COSMO fourth-order-diffusion micro-kernels, and the
-//! Hydro2D shock-hydrodynamics benchmark — each with its HFAV deck, a
-//! kernel registry for the executor, hand-written baselines
-//! (`autovec`-shaped unfused loops, plus the paper's comparison variants),
-//! and workload generators.
+//! Hydro2D shock-hydrodynamics benchmark — plus a 3D upwind advection
+//! sweep ([`advect3d`]) covering the stencil shape the paper's codes
+//! never reach (offset reads along the outermost dim). Each app carries
+//! its HFAV deck, a kernel registry for the executor, hand-written
+//! baselines (`autovec`-shaped unfused loops, plus the paper's
+//! comparison variants), and workload generators.
 //!
 //! Compilation goes through [`crate::plan::PlanSpec`]: a spec names a
 //! deck (builtin app, file, or inline source), a [`Variant`], and the
 //! tuning knobs, and its canonical fingerprint is the plan-cache key.
 
+pub mod advect3d;
 pub mod cosmo;
 pub mod hydro2d;
 pub mod laplace;
@@ -54,12 +57,13 @@ pub fn deck_of(app: &str) -> Result<&'static str, String> {
         "normalize" => Ok(normalization::DECK),
         "cosmo" => Ok(cosmo::DECK),
         "hydro2d" => Ok(hydro2d::DECK),
-        _ => Err(format!("unknown app `{app}` (laplace|normalize|cosmo|hydro2d)")),
+        "advect3d" => Ok(advect3d::DECK),
+        _ => Err(format!("unknown app `{app}` (laplace|normalize|cosmo|hydro2d|advect3d)")),
     }
 }
 
 /// Names of the built-in apps, in `deck_of` order.
-pub const APP_NAMES: [&str; 4] = ["laplace", "normalize", "cosmo", "hydro2d"];
+pub const APP_NAMES: [&str; 5] = ["laplace", "normalize", "cosmo", "hydro2d", "advect3d"];
 
 /// One registry holding every built-in app's kernels (the names are
 /// globally unique across apps), so the interpreter backend can execute
@@ -71,6 +75,7 @@ pub fn builtin_registry() -> Registry {
     r.extend(normalization::registry());
     r.extend(cosmo::registry());
     r.extend(hydro2d::registry());
+    r.extend(advect3d::registry());
     r
 }
 
@@ -112,7 +117,9 @@ mod tests {
     #[test]
     fn builtin_registry_covers_all_apps() {
         let reg = builtin_registry();
-        for name in ["laplace5", "flux", "norm_acc", "ustage", "flux_x", "riemann", "trace"] {
+        for name in
+            ["laplace5", "flux", "norm_acc", "ustage", "flux_x", "riemann", "trace", "adv_update"]
+        {
             assert!(reg.get(name).is_some(), "missing kernel `{name}`");
         }
     }

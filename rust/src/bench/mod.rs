@@ -165,6 +165,38 @@ pub fn cosmo(sizes: &[usize], nk: usize) -> Vec<String> {
     csv
 }
 
+/// advect3d: 3D upwind advection (flux form) — autovec vs HFAV
+/// (native-compiled generated code) on an `nk × n × n` slab. The deck
+/// rolls a window along the *outermost* dim, so this is the bench row
+/// for contraction's worst-covered shape.
+pub fn advect3d(sizes: &[usize], nk: usize) -> Vec<String> {
+    let mut csv = vec!["app,size,variant,mcells_per_s".to_string()];
+    println!("advect3d — 3D upwind advection sweep (cell updates/s, nk={nk}):");
+    for &n in sizes {
+        let u = apps::seeded(nk * n * n, 19);
+        let cells = ((nk - 1) * (n - 1) * (n - 1)) as f64;
+        let mut out = vec![0.0; (nk - 1) * (n - 1) * (n - 1)];
+        let t_ref = time_it(|| apps::advect3d::reference(&u, nk, n, n, &mut out), 3, 0.2).secs;
+        row("autovec", n, t_ref, cells);
+        csv.push(format!("advect3d,{n},autovec,{:.3}", cells / t_ref / 1e6));
+
+        let prog = PlanSpec::app("advect3d").compile().unwrap();
+        let module = crate::codegen::native::build(&prog, &Default::default()).unwrap();
+        let mut ext = BTreeMap::new();
+        ext.insert("Nk".to_string(), nk as i64);
+        ext.insert("Nj".to_string(), n as i64);
+        ext.insert("Ni".to_string(), n as i64);
+        let mut arrays = BTreeMap::new();
+        arrays.insert("g_u".to_string(), u.clone());
+        arrays.insert("g_out".to_string(), vec![0.0; (nk - 1) * (n - 1) * (n - 1)]);
+        let t_hfav = time_it(|| module.run(&ext, &mut arrays).unwrap(), 3, 0.2).secs;
+        row("HFAV", n, t_hfav, cells);
+        csv.push(format!("advect3d,{n},hfav,{:.3}", cells / t_hfav / 1e6));
+        println!("    speedup {:.2}x", t_ref / t_hfav);
+    }
+    csv
+}
+
 /// Figure 13: Hydro2D — autovec vs handvec vs HFAV (native).
 pub fn hydro2d(sizes: &[usize], steps: usize) -> Vec<String> {
     use crate::apps::hydro2d::solver::*;

@@ -148,6 +148,16 @@ impl Default for RustcOptions {
     }
 }
 
+/// Is a working C compiler reachable (the fuzz driver uses this to skip
+/// the native-C differential engine in toolchain-less environments)?
+pub fn cc_available() -> bool {
+    std::process::Command::new(CcOptions::default().cc)
+        .arg("--version")
+        .output()
+        .map(|o| o.status.success())
+        .unwrap_or(false)
+}
+
 /// Is a working `rustc` reachable (used by tests to skip the generated-
 /// Rust engine in toolchain-less environments)?
 pub fn rustc_available() -> bool {

@@ -1,0 +1,641 @@
+//! Two-stage fuzz driver over generated decks.
+//!
+//! For every seed, [`gen::generate`] produces a legal-by-construction
+//! deck, and a handful of random knob settings (vlen × vec_dim × aligned
+//! × tiled × threads) push it through the full pipeline:
+//!
+//! * **Stage 1 (cheap, always on)** — compile the fused variant at each
+//!   knob set and run [`crate::verify::check_program`] as the static
+//!   oracle. A compile `Err` that is not a verifier rejection is a
+//!   *legality skip* (illegal knob corner, e.g. tiling a deck with
+//!   loop-carried reuse on every dim); a panic, a verifier-gate
+//!   rejection, or verifier errors on a compiled plan are findings.
+//! * **Stage 2 (differential)** — run each surviving plan on every
+//!   requested engine (interpreter / native C / generated Rust) and
+//!   compare against the interpreted unfused scalar baseline at 1e-12
+//!   relative tolerance.
+//!
+//! The first finding per seed is greedily minimized
+//! ([`super::minimize`]) against an oracle that replays the same
+//! failure kind, and — when an output directory is set — written as a
+//! self-contained reproducer deck (`fuzz-regress-s<seed>.yaml`) whose
+//! header comments carry the exact knob line.
+
+use super::gen::{self, GenDeck, Rng};
+use super::minimize;
+use crate::analysis::VecDim;
+use crate::apps::{self, Variant};
+use crate::codegen::native::{self, CcOptions, RustcOptions};
+use crate::engine::Threads;
+use crate::exec::{self, ExecOptions, Outputs};
+use crate::plan::{PlanSpec, Program, Vlen};
+use crate::verify;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Differential tolerance (max relative-ish error, [`apps::max_err`]).
+pub const TOL: f64 = 1e-12;
+
+/// Execution backends the differential stage can drive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FuzzEngine {
+    /// In-process schedule interpreter (always available).
+    Exec,
+    /// Emitted C99, built with the system C compiler.
+    Native,
+    /// Emitted Rust, built with `rustc`.
+    Rust,
+}
+
+impl FuzzEngine {
+    pub const ALL: [FuzzEngine; 3] = [FuzzEngine::Exec, FuzzEngine::Native, FuzzEngine::Rust];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            FuzzEngine::Exec => "exec",
+            FuzzEngine::Native => "native",
+            FuzzEngine::Rust => "rust",
+        }
+    }
+
+    /// Can this engine run here? (Toolchain probes, so the driver can
+    /// degrade to interpreter-only in bare environments.)
+    pub fn available(self) -> bool {
+        match self {
+            FuzzEngine::Exec => true,
+            FuzzEngine::Native => native::cc_available(),
+            FuzzEngine::Rust => native::rustc_available(),
+        }
+    }
+}
+
+impl std::str::FromStr for FuzzEngine {
+    type Err = String;
+    fn from_str(s: &str) -> Result<FuzzEngine, String> {
+        match s {
+            "exec" => Ok(FuzzEngine::Exec),
+            "native" => Ok(FuzzEngine::Native),
+            "rust" => Ok(FuzzEngine::Rust),
+            other => Err(format!("unknown fuzz engine `{other}` (exec|native|rust)")),
+        }
+    }
+}
+
+/// One sampled knob setting for the fused variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Knobs {
+    pub vlen: usize,
+    pub vec_dim: VecDim,
+    pub aligned: bool,
+    pub tiled: bool,
+    /// Runtime worker count (stage 2 only; stage 1 proves race freedom
+    /// at several counts regardless).
+    pub threads: usize,
+}
+
+impl Knobs {
+    /// The always-tested baseline corner.
+    pub fn scalar() -> Knobs {
+        Knobs { vlen: 1, vec_dim: VecDim::Inner, aligned: false, tiled: false, threads: 1 }
+    }
+
+    pub fn sample(rng: &mut Rng) -> Knobs {
+        let vlen = *rng.pick(&[1usize, 2, 4, 8]);
+        Knobs {
+            vlen,
+            vec_dim: if rng.chance(1, 3) { VecDim::Auto } else { VecDim::Inner },
+            aligned: vlen > 1 && rng.chance(1, 2),
+            tiled: rng.chance(1, 4),
+            threads: 1 + rng.below(3) as usize,
+        }
+    }
+
+    /// The exact knob line reproducer headers carry.
+    pub fn label(&self) -> String {
+        format!(
+            "vlen={} vec_dim={} aligned={} tiled={} threads={}",
+            self.vlen, self.vec_dim, self.aligned, self.tiled, self.threads
+        )
+    }
+
+    pub fn apply(&self, spec: PlanSpec) -> PlanSpec {
+        spec.vlen(Vlen::Fixed(self.vlen))
+            .vec_dim(self.vec_dim.clone())
+            .aligned(self.aligned)
+            .tiled(self.tiled)
+    }
+}
+
+/// Fuzz campaign configuration.
+#[derive(Debug, Clone)]
+pub struct FuzzConfig {
+    /// Number of consecutive seeds to run.
+    pub seeds: u64,
+    /// First seed.
+    pub seed0: u64,
+    /// Engines for the differential stage; `None` = all available.
+    pub engines: Option<Vec<FuzzEngine>>,
+    /// Run the stage-2 differential (stage 1 always runs).
+    pub stage2: bool,
+    /// Directory for minimized reproducer decks (`None` = don't write).
+    pub out_dir: Option<PathBuf>,
+    /// Print per-finding lines to stderr as they happen.
+    pub verbose: bool,
+}
+
+impl Default for FuzzConfig {
+    fn default() -> FuzzConfig {
+        FuzzConfig {
+            seeds: 100,
+            seed0: 0,
+            engines: None,
+            stage2: true,
+            out_dir: None,
+            verbose: false,
+        }
+    }
+}
+
+/// One triaged failure.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub seed: u64,
+    /// `panic` | `baseline` | `verify-gate` | `verify` | `run` |
+    /// `differential`
+    pub kind: String,
+    /// Exact knob line of the failing plan.
+    pub knobs: String,
+    pub engine: Option<FuzzEngine>,
+    pub detail: String,
+    /// Minimized reproducer deck YAML.
+    pub deck: String,
+    /// Shrink steps the minimizer accepted.
+    pub shrunk: usize,
+    /// Reproducer file, when an out dir was configured.
+    pub path: Option<PathBuf>,
+}
+
+/// Campaign totals.
+#[derive(Debug, Default)]
+pub struct FuzzReport {
+    pub seeds_run: u64,
+    pub plans_compiled: usize,
+    /// Compile `Err`s from illegal knob corners (expected, not findings).
+    pub legality_skips: usize,
+    /// Plans that passed the stage-1 verifier oracle.
+    pub plans_verified: usize,
+    /// Engine runs compared in stage 2.
+    pub diff_runs: usize,
+    pub findings: Vec<Finding>,
+}
+
+impl FuzzReport {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        writeln!(
+            s,
+            "fuzz: {} seeds | {} plans compiled, {} legality skips, {} verified, {} differential runs",
+            self.seeds_run, self.plans_compiled, self.legality_skips, self.plans_verified,
+            self.diff_runs
+        )
+        .unwrap();
+        if self.findings.is_empty() {
+            writeln!(s, "fuzz: clean — no findings").unwrap();
+        } else {
+            writeln!(s, "fuzz: {} finding(s)", self.findings.len()).unwrap();
+            for f in &self.findings {
+                let eng = f.engine.map(|e| format!(" engine={}", e.label())).unwrap_or_default();
+                let head = f.detail.lines().next().unwrap_or("");
+                writeln!(
+                    s,
+                    "  seed 0x{:x}: {} [{}{eng}] (shrunk {} steps) — {head}",
+                    f.seed, f.kind, f.knobs, f.shrunk
+                )
+                .unwrap();
+                if let Some(p) = &f.path {
+                    writeln!(s, "    reproducer: {}", p.display()).unwrap();
+                }
+            }
+        }
+        s
+    }
+}
+
+/// Run a fuzz campaign.
+pub fn run(cfg: &FuzzConfig) -> Result<FuzzReport, String> {
+    let engines: Vec<FuzzEngine> = match &cfg.engines {
+        Some(list) => {
+            for e in list {
+                if !e.available() {
+                    return Err(format!(
+                        "fuzz engine `{}` requested but its toolchain is unavailable",
+                        e.label()
+                    ));
+                }
+            }
+            list.clone()
+        }
+        None => FuzzEngine::ALL.into_iter().filter(|e| e.available()).collect(),
+    };
+    let mut report = FuzzReport::default();
+    for seed in cfg.seed0..cfg.seed0.saturating_add(cfg.seeds) {
+        fuzz_one(seed, &engines, cfg, &mut report);
+        report.seeds_run += 1;
+    }
+    Ok(report)
+}
+
+/// What compiling one spec did, with panics contained.
+enum Compiled {
+    Ok(Box<Program>),
+    /// Clean rejection of an illegal knob corner.
+    Illegal(String),
+    /// The `HFAV_VERIFY` gate inside compile fired — the schedule was
+    /// built but failed its own proof. Always a finding.
+    VerifierReject(String),
+    Panicked(String),
+}
+
+fn compile_catching(spec: &PlanSpec) -> Compiled {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| spec.compile())) {
+        Ok(Ok(p)) => Compiled::Ok(Box::new(p)),
+        Ok(Err(e)) if e.contains("schedule verification failed") => Compiled::VerifierReject(e),
+        Ok(Err(e)) => Compiled::Illegal(e),
+        Err(payload) => Compiled::Panicked(panic_text(payload)),
+    }
+}
+
+fn panic_text(payload: Box<dyn std::any::Any + Send>) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string())
+}
+
+/// Concrete extents for stage 2: odd, unequal, and per-dim distinct, so
+/// strips, remainders and alignment heads are all exercised; floored so
+/// every domain stays non-empty.
+fn extents_of(deck: &GenDeck) -> BTreeMap<String, i64> {
+    (0..deck.ndims())
+        .map(|d| {
+            let min = deck.lo[d] + deck.hi_back[d] + 3;
+            (deck.extent_name(d), (17 + 2 * d as i64).max(min))
+        })
+        .collect()
+}
+
+fn autovec_scalar_spec(yaml: &str) -> PlanSpec {
+    PlanSpec::deck_src(yaml).variant(Variant::Autovec).vlen(Vlen::Fixed(1))
+}
+
+/// Run one engine with panics contained. `Err` carries (kind, detail).
+fn run_caught(
+    prog: &Program,
+    reg: &crate::exec::registry::Registry,
+    eng: FuzzEngine,
+    ext: &BTreeMap<String, i64>,
+    inputs: &BTreeMap<String, Vec<f64>>,
+    threads: usize,
+) -> Result<Outputs, (String, String)> {
+    let run = || -> Result<Outputs, String> {
+        match eng {
+            FuzzEngine::Exec => {
+                let opts = ExecOptions { threads, ..Default::default() };
+                exec::run(prog, reg, ext, inputs, opts)
+            }
+            FuzzEngine::Native | FuzzEngine::Rust => {
+                let module = match eng {
+                    FuzzEngine::Native => native::build(prog, &CcOptions::default())?,
+                    _ => native::build_rust(prog, &RustcOptions::default())?,
+                };
+                let mut arrays = inputs.clone();
+                for name in &module.externals {
+                    if !arrays.contains_key(name) {
+                        arrays.insert(name.clone(), vec![0.0; exec::external_len(prog, name, ext)?]);
+                    }
+                }
+                let th = if threads <= 1 { Threads::Serial } else { Threads::Fixed(threads) };
+                module.run_with(ext, &mut arrays, th)?;
+                let outs: Vec<String> =
+                    prog.external_outputs().into_iter().map(|(n, _, _)| n).collect();
+                Ok(arrays.into_iter().filter(|(k, _)| outs.contains(k)).collect())
+            }
+        }
+    };
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(run)) {
+        Ok(Ok(o)) => Ok(o),
+        Ok(Err(e)) => Err(("run".to_string(), e)),
+        Err(payload) => Err(("panic".to_string(), panic_text(payload))),
+    }
+}
+
+/// Worst relative-ish error across all shared outputs; infinite on
+/// missing or mis-sized outputs.
+fn diff(want: &Outputs, got: &Outputs) -> f64 {
+    let mut worst = 0.0f64;
+    for (name, a) in want {
+        match got.get(name) {
+            Some(b) if b.len() == a.len() => worst = worst.max(apps::max_err(a, b)),
+            _ => return f64::INFINITY,
+        }
+    }
+    worst
+}
+
+/// Replay one (knob set, engine) check on a candidate deck and name the
+/// first failure kind, or `None` if it checks out (or became an illegal
+/// knob corner — a shrink that breaks legality is not a reproducer).
+fn first_failure(
+    deck: &GenDeck,
+    seed: u64,
+    knobs: &Knobs,
+    engine: Option<FuzzEngine>,
+) -> Option<String> {
+    let yaml = deck.yaml();
+    let baseline = match compile_catching(&autovec_scalar_spec(&yaml)) {
+        Compiled::Ok(p) => p,
+        Compiled::Panicked(_) => return Some("panic".to_string()),
+        Compiled::Illegal(_) | Compiled::VerifierReject(_) => return Some("baseline".to_string()),
+    };
+    let spec = knobs.apply(PlanSpec::deck_src(yaml.as_str()).variant(Variant::Hfav));
+    let prog = match compile_catching(&spec) {
+        Compiled::Ok(p) => p,
+        Compiled::Panicked(_) => return Some("panic".to_string()),
+        Compiled::VerifierReject(_) => return Some("verify-gate".to_string()),
+        Compiled::Illegal(_) => return None,
+    };
+    match verify::check_program(&prog) {
+        Ok(rep) if !rep.has_errors() => {}
+        _ => return Some("verify".to_string()),
+    }
+    let eng = engine?;
+    let reg = deck.registry();
+    let ext = extents_of(deck);
+    let len = match exec::external_len(&baseline, "g_u", &ext) {
+        Ok(l) => l,
+        Err(_) => return Some("run".to_string()),
+    };
+    let mut inputs = BTreeMap::new();
+    inputs.insert("g_u".to_string(), apps::seeded(len, seed ^ 0xDA7A_F111));
+    let want = match run_caught(&baseline, &reg, FuzzEngine::Exec, &ext, &inputs, 1) {
+        Ok(o) => o,
+        Err((kind, _)) => return Some(kind),
+    };
+    match run_caught(&prog, &reg, eng, &ext, &inputs, knobs.threads) {
+        Ok(got) if diff(&want, &got) <= TOL => None,
+        Ok(_) => Some("differential".to_string()),
+        Err((kind, _)) => Some(kind),
+    }
+}
+
+/// Minimize, persist and log one finding.
+#[allow(clippy::too_many_arguments)]
+fn record(
+    report: &mut FuzzReport,
+    cfg: &FuzzConfig,
+    deck: &GenDeck,
+    seed: u64,
+    kind: &str,
+    knobs: Knobs,
+    engine: Option<FuzzEngine>,
+    detail: String,
+) {
+    let (min_deck, shrunk) =
+        minimize::minimize(deck, |d| first_failure(d, seed, &knobs, engine).as_deref() == Some(kind));
+    let path = cfg.out_dir.as_ref().and_then(|dir| {
+        match write_reproducer(dir, seed, &min_deck, kind, &knobs, engine, &detail) {
+            Ok(p) => Some(p),
+            Err(e) => {
+                eprintln!("fuzz: cannot write reproducer for seed 0x{seed:x}: {e}");
+                None
+            }
+        }
+    });
+    let finding = Finding {
+        seed,
+        kind: kind.to_string(),
+        knobs: knobs.label(),
+        engine,
+        detail,
+        deck: min_deck.yaml(),
+        shrunk,
+        path,
+    };
+    if cfg.verbose {
+        let eng = engine.map(|e| format!(" engine={}", e.label())).unwrap_or_default();
+        eprintln!(
+            "fuzz: FINDING seed 0x{seed:x} kind={kind} [{}{eng}] shrunk {shrunk} steps",
+            finding.knobs
+        );
+    }
+    report.findings.push(finding);
+}
+
+fn write_reproducer(
+    dir: &Path,
+    seed: u64,
+    deck: &GenDeck,
+    kind: &str,
+    knobs: &Knobs,
+    engine: Option<FuzzEngine>,
+    detail: &str,
+) -> Result<PathBuf, String> {
+    std::fs::create_dir_all(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    let path = dir.join(format!("fuzz-regress-s{seed:x}.yaml"));
+    let mut text = String::new();
+    writeln!(text, "# hfav fuzz reproducer (minimized)").unwrap();
+    writeln!(text, "# seed: 0x{seed:x}").unwrap();
+    writeln!(text, "# kind: {kind}").unwrap();
+    writeln!(text, "# knobs: variant=hfav {}", knobs.label()).unwrap();
+    if let Some(e) = engine {
+        writeln!(text, "# engine: {} (vs interpreted autovec scalar baseline)", e.label()).unwrap();
+    }
+    for line in detail.lines().take(4) {
+        writeln!(text, "# detail: {line}").unwrap();
+    }
+    text.push_str(&deck.yaml());
+    std::fs::write(&path, text).map_err(|e| format!("{}: {e}", path.display()))?;
+    Ok(path)
+}
+
+/// Fuzz one seed; records at most one (the first) finding per seed.
+fn fuzz_one(seed: u64, engines: &[FuzzEngine], cfg: &FuzzConfig, report: &mut FuzzReport) {
+    let deck = gen::generate(seed);
+    let yaml = deck.yaml();
+
+    let mut rng = Rng::new(seed ^ 0x6B0B_5EED_0000_0002);
+    let mut knob_sets = vec![Knobs::scalar()];
+    for _ in 0..3 {
+        let k = Knobs::sample(&mut rng);
+        if !knob_sets.contains(&k) {
+            knob_sets.push(k);
+        }
+    }
+
+    // The unfused scalar plan is both the stage-2 oracle and a stage-1
+    // canary: a legal-by-construction deck must always compile there.
+    let baseline = match compile_catching(&autovec_scalar_spec(&yaml)) {
+        Compiled::Ok(p) => {
+            report.plans_compiled += 1;
+            p
+        }
+        Compiled::Panicked(e) => {
+            return record(report, cfg, &deck, seed, "panic", Knobs::scalar(), None, e);
+        }
+        Compiled::Illegal(e) | Compiled::VerifierReject(e) => {
+            return record(report, cfg, &deck, seed, "baseline", Knobs::scalar(), None, e);
+        }
+    };
+
+    // Stage 1: compile the fused variant at each knob set, then hold it
+    // to the independent schedule verifier.
+    let mut plans: Vec<(Knobs, Box<Program>)> = Vec::new();
+    for knobs in &knob_sets {
+        let spec = knobs.apply(PlanSpec::deck_src(yaml.as_str()).variant(Variant::Hfav));
+        match compile_catching(&spec) {
+            Compiled::Ok(p) => {
+                report.plans_compiled += 1;
+                match verify::check_program(&p) {
+                    Ok(rep) if !rep.has_errors() => {
+                        report.plans_verified += 1;
+                        plans.push((knobs.clone(), p));
+                    }
+                    Ok(rep) => {
+                        return record(
+                            report,
+                            cfg,
+                            &deck,
+                            seed,
+                            "verify",
+                            knobs.clone(),
+                            None,
+                            rep.render_errors(),
+                        );
+                    }
+                    Err(e) => {
+                        return record(report, cfg, &deck, seed, "verify", knobs.clone(), None, e);
+                    }
+                }
+            }
+            Compiled::Illegal(_) => report.legality_skips += 1,
+            Compiled::VerifierReject(e) => {
+                return record(report, cfg, &deck, seed, "verify-gate", knobs.clone(), None, e);
+            }
+            Compiled::Panicked(e) => {
+                return record(report, cfg, &deck, seed, "panic", knobs.clone(), None, e);
+            }
+        }
+    }
+
+    if !cfg.stage2 {
+        return;
+    }
+
+    // Stage 2: every surviving plan × engine against the interpreted
+    // unfused scalar baseline.
+    let reg = deck.registry();
+    let ext = extents_of(&deck);
+    let len = match exec::external_len(&baseline, "g_u", &ext) {
+        Ok(l) => l,
+        Err(e) => {
+            return record(report, cfg, &deck, seed, "run", Knobs::scalar(), None, e);
+        }
+    };
+    let mut inputs = BTreeMap::new();
+    inputs.insert("g_u".to_string(), apps::seeded(len, seed ^ 0xDA7A_F111));
+    let want = match run_caught(&baseline, &reg, FuzzEngine::Exec, &ext, &inputs, 1) {
+        Ok(o) => o,
+        Err((kind, e)) => {
+            return record(
+                report,
+                cfg,
+                &deck,
+                seed,
+                &kind,
+                Knobs::scalar(),
+                Some(FuzzEngine::Exec),
+                e,
+            );
+        }
+    };
+    for (knobs, prog) in &plans {
+        for &eng in engines {
+            report.diff_runs += 1;
+            match run_caught(prog, &reg, eng, &ext, &inputs, knobs.threads) {
+                Ok(got) => {
+                    let err = diff(&want, &got);
+                    if !(err <= TOL) {
+                        return record(
+                            report,
+                            cfg,
+                            &deck,
+                            seed,
+                            "differential",
+                            knobs.clone(),
+                            Some(eng),
+                            format!("max rel err {err:.3e} vs interpreted autovec scalar baseline"),
+                        );
+                    }
+                }
+                Err((kind, e)) => {
+                    return record(report, cfg, &deck, seed, &kind, knobs.clone(), Some(eng), e);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knob_sampling_is_deterministic() {
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        for _ in 0..16 {
+            assert_eq!(Knobs::sample(&mut a), Knobs::sample(&mut b));
+        }
+    }
+
+    #[test]
+    fn scalar_knobs_label_is_stable() {
+        assert_eq!(
+            Knobs::scalar().label(),
+            "vlen=1 vec_dim=inner aligned=false tiled=false threads=1"
+        );
+    }
+
+    #[test]
+    fn engine_parse_round_trip() {
+        for e in FuzzEngine::ALL {
+            assert_eq!(e.label().parse::<FuzzEngine>().unwrap(), e);
+        }
+        assert!("pjrt".parse::<FuzzEngine>().is_err());
+    }
+
+    #[test]
+    fn unavailable_engine_request_is_an_error_or_runs() {
+        // `exec` is always available; an explicit request must succeed.
+        let cfg = FuzzConfig {
+            seeds: 1,
+            stage2: false,
+            engines: Some(vec![FuzzEngine::Exec]),
+            ..Default::default()
+        };
+        let rep = run(&cfg).expect("exec engine always available");
+        assert_eq!(rep.seeds_run, 1);
+    }
+
+    #[test]
+    fn report_summary_mentions_clean_when_empty() {
+        let rep = FuzzReport { seeds_run: 3, ..Default::default() };
+        assert!(rep.summary().contains("clean"));
+    }
+}

@@ -1,0 +1,582 @@
+//! Random deck generator: seeded, self-contained DAGs of 1–3-dim
+//! stencil / reduction chains rendered as deck YAML.
+//!
+//! The generator's contract is **legal by construction**: every deck it
+//! emits must parse, pass `Deck::validate`, and describe a well-defined
+//! computation (no reads before the input span, no division / sqrt in
+//! bodies so results stay finite, domain lower bounds cover the
+//! transitive negative reach of every read chain). Anything the pipeline
+//! then does wrong with such a deck — a compile panic, a verifier error
+//! on a compiled plan, or an engine disagreeing with the scalar
+//! interpreter — is a *finding*, not generator noise. Vectorization
+//! legality is deliberately **not** part of the contract: illegal knob
+//! corners (e.g. `--tile` on a deck with loop-carried reuse along every
+//! dim) must be rejected with a clean `Err`, and the driver counts those
+//! as legality skips.
+//!
+//! Structure of a generated deck (mirroring the builtin apps' idioms):
+//!
+//! * 1–3 loop dims drawn from `[k, j, i]` (outermost first), half-open
+//!   domains `[lo, Nd-hi]` per dim.
+//! * a chain of 1–3 stencil stages `t1, t2, ...` over grid base `u`;
+//!   each stage's spine reads the previous value (stage 1 reads the
+//!   terminal input `u?`) plus 0–2 extra reads of earlier values or the
+//!   input. Terminal-input reads draw offsets from `[-2, 2]` on every
+//!   dim; intermediate reads keep non-innermost offsets in `[-2, 0]`
+//!   (producer-runs-behind shapes — the windowed-reuse direction this
+//!   grammar is here to stress; positive outer offsets on intermediates
+//!   are covered separately by `tests/property.rs` at magnitude 1 and
+//!   are future grammar here).
+//! * optionally (2-dim decks) a normalization-shaped reduction block:
+//!   `z(acc[..])` init, `s(acc[..])` accumulate over the innermost dim,
+//!   a `w(acc[..])` post stage (the once-written value a broadcast may
+//!   legally read, mirroring `norm_root`), and a `fin(u[..])` grid
+//!   stage consuming it.
+//! * kernel bodies are expression trees over `+ - *` and a small
+//!   constant pool — the C subset that is also literal Rust, so `body`
+//!   and `body_rs` are the same string and all three engines (interp
+//!   closure, emitted C, emitted Rust) evaluate the identical tree.
+
+use crate::exec::registry::Registry;
+use std::fmt::Write as _;
+
+/// Deterministic xorshift64* RNG (same core as [`crate::apps::seeded`]).
+/// Fuzz reproducibility only needs stability within this crate, not any
+/// external stream compatibility.
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1)
+    }
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 ^= self.0 >> 12;
+        self.0 ^= self.0 << 25;
+        self.0 ^= self.0 >> 27;
+        self.0.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+    /// Uniform-ish in `[0, n)` (modulo bias is irrelevant at fuzz scale).
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        self.next_u64() % n
+    }
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+    /// True with probability `num`/`den`.
+    pub fn chance(&mut self, num: u64, den: u64) -> bool {
+        self.below(den) < num
+    }
+}
+
+/// Kernel-body expression over input params `p0..pN`. The rendered form
+/// is simultaneously valid C99 and Rust (fully parenthesized, `f64`
+/// literals with a decimal point, no calls), and [`Expr::eval`] is the
+/// interpreter-registry semantics of the same tree.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Param(usize),
+    Const(f64),
+    Add(Box<Expr>, Box<Expr>),
+    Sub(Box<Expr>, Box<Expr>),
+    Mul(Box<Expr>, Box<Expr>),
+}
+
+impl Expr {
+    pub fn eval(&self, p: &[f64]) -> f64 {
+        match self {
+            Expr::Param(i) => p[*i],
+            Expr::Const(c) => *c,
+            Expr::Add(a, b) => a.eval(p) + b.eval(p),
+            Expr::Sub(a, b) => a.eval(p) - b.eval(p),
+            Expr::Mul(a, b) => a.eval(p) * b.eval(p),
+        }
+    }
+
+    /// Render as a C-and-Rust expression over the given param names.
+    pub fn code(&self, params: &[String]) -> String {
+        match self {
+            Expr::Param(i) => params[*i].clone(),
+            // `{:?}` prints f64 with a decimal point (`2.0`, `0.25`), which
+            // both C and Rust read back as the same double literal.
+            Expr::Const(c) if *c < 0.0 => format!("({:?})", c),
+            Expr::Const(c) => format!("{:?}", c),
+            Expr::Add(a, b) => format!("({} + {})", a.code(params), b.code(params)),
+            Expr::Sub(a, b) => format!("({} - {})", a.code(params), b.code(params)),
+            Expr::Mul(a, b) => format!("({} * {})", a.code(params), b.code(params)),
+        }
+    }
+
+    /// Highest param index referenced, or None for constant exprs.
+    pub fn max_param(&self) -> Option<usize> {
+        match self {
+            Expr::Param(i) => Some(*i),
+            Expr::Const(_) => None,
+            Expr::Add(a, b) | Expr::Sub(a, b) | Expr::Mul(a, b) => match (a.max_param(), b.max_param()) {
+                (Some(x), Some(y)) => Some(x.max(y)),
+                (x, None) => x,
+                (None, y) => y,
+            },
+        }
+    }
+}
+
+/// Magnitude-bounded constant pool: no value can blow past ~1e15 over a
+/// handful of chained stages, keeping the 1e-12 relative tolerance
+/// meaningful, and there is no division or sqrt so nothing can produce
+/// inf/NaN from in-range inputs.
+const CONSTS: [f64; 7] = [0.125, 0.25, 0.5, 0.75, 1.5, 2.0, 3.0];
+
+/// One named intermediate value in the deck's dataflow.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenValue {
+    /// Tag (`t1`, `z`, `s`, `fin`).
+    pub tag: String,
+    /// Base term family: `u` for grid values, `acc` for reduced ones.
+    pub base: String,
+    /// Reduced values drop the innermost dim (normalization idiom).
+    pub reduced: bool,
+}
+
+/// One read in a stage: a producer value (or the terminal input) at a
+/// per-dim offset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenRead {
+    /// Index into `GenDeck::values`, or -1 for the terminal input `u`.
+    pub value: isize,
+    /// One offset per deck dim, outermost first. Ignored entries (the
+    /// innermost slot of a reduced read) are kept at 0.
+    pub offsets: Vec<i64>,
+}
+
+/// One kernel + callsite: reads, an expression over them, one output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenStage {
+    pub kernel: String,
+    pub reads: Vec<GenRead>,
+    pub expr: Expr,
+    /// Index into `GenDeck::values`.
+    pub out: usize,
+}
+
+/// A generated deck: structured form first, YAML via [`GenDeck::yaml`].
+/// Keeping the structure (not just text) is what makes greedy
+/// minimization tractable — mutations edit this and re-render.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenDeck {
+    pub name: String,
+    /// Loop dims, outermost first (suffix of `[k, j, i]`).
+    pub dims: Vec<String>,
+    /// Domain lower bounds per dim (covers the negative input reach).
+    pub lo: Vec<i64>,
+    /// Domain upper offsets per dim: domain hi is `Nd - hi_back`, so
+    /// entries are >= 0.
+    pub hi_back: Vec<i64>,
+    pub values: Vec<GenValue>,
+    pub stages: Vec<GenStage>,
+    /// Index of the value exported through `globals.outputs`.
+    pub goal: usize,
+}
+
+impl GenDeck {
+    pub fn ndims(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Extent parameter name for dim `d` (`k` -> `Nk`).
+    pub fn extent_name(&self, d: usize) -> String {
+        format!("N{}", self.dims[d])
+    }
+
+    /// Per-dim (negative, positive) transitive reach of the terminal
+    /// input from the goal — how far outside the goal's domain the
+    /// chain reads `u`. Stages are in producer order, so one reverse
+    /// sweep propagates consumer reach back through every read.
+    pub fn input_reach(&self) -> (Vec<i64>, Vec<i64>) {
+        let nd = self.ndims();
+        // Slot 0 is the terminal input; slot v+1 is values[v].
+        let mut neg = vec![vec![0i64; nd]; self.values.len() + 1];
+        let mut pos = vec![vec![0i64; nd]; self.values.len() + 1];
+        for st in self.stages.iter().rev() {
+            let (oneg, opos) = (neg[st.out + 1].clone(), pos[st.out + 1].clone());
+            for r in &st.reads {
+                let vi = (r.value + 1) as usize;
+                for d in 0..nd {
+                    neg[vi][d] = neg[vi][d].max(oneg[d] + (-r.offsets[d]).max(0));
+                    pos[vi][d] = pos[vi][d].max(opos[d] + r.offsets[d].max(0));
+                }
+            }
+        }
+        (neg[0].clone(), pos[0].clone())
+    }
+
+    /// Subscript list for a value (or the input) at given offsets, in
+    /// deck pattern (`j?`) or concrete (`j`) spelling.
+    fn subscripts(&self, reduced: bool, offsets: Option<&[i64]>, pattern: bool) -> String {
+        let nd = if reduced { self.ndims() - 1 } else { self.ndims() };
+        let mut s = String::new();
+        for d in 0..nd {
+            let var = &self.dims[d];
+            let q = if pattern { "?" } else { "" };
+            let off = offsets.map_or(0, |o| o[d]);
+            match off.cmp(&0) {
+                std::cmp::Ordering::Equal => write!(s, "[{var}{q}]").unwrap(),
+                std::cmp::Ordering::Greater => write!(s, "[{var}{q}+{off}]").unwrap(),
+                std::cmp::Ordering::Less => write!(s, "[{var}{q}-{}]", -off).unwrap(),
+            }
+        }
+        s
+    }
+
+    /// Term text for one read, in kernel-inputs position.
+    fn read_term(&self, r: &GenRead) -> String {
+        if r.value < 0 {
+            // Terminal input: pattern base.
+            format!("u?{}", self.subscripts(false, Some(&r.offsets), true))
+        } else {
+            let v = &self.values[r.value as usize];
+            // Produced values: tagged concrete base.
+            format!("{}({}{})", v.tag, v.base, self.subscripts(v.reduced, Some(&r.offsets), true))
+        }
+    }
+
+    /// Render the deck as YAML in the house style.
+    pub fn yaml(&self) -> String {
+        let mut y = String::new();
+        writeln!(y, "name: {}", self.name).unwrap();
+        writeln!(y, "iteration:").unwrap();
+        let order = self.dims.join(", ");
+        writeln!(y, "  order: [{order}]").unwrap();
+        writeln!(y, "  domains:").unwrap();
+        for d in 0..self.ndims() {
+            let hi = if self.hi_back[d] == 0 {
+                self.extent_name(d)
+            } else {
+                format!("{}-{}", self.extent_name(d), self.hi_back[d])
+            };
+            writeln!(y, "    {}: [{}, {}]", self.dims[d], self.lo[d], hi).unwrap();
+        }
+        writeln!(y, "kernels:").unwrap();
+        for st in &self.stages {
+            let out = &self.values[st.out];
+            let params: Vec<String> = (0..st.reads.len()).map(|i| format!("p{i}")).collect();
+            let decl_params: Vec<String> = params
+                .iter()
+                .map(|p| format!("double {p}"))
+                .chain(std::iter::once("double &o".to_string()))
+                .collect();
+            writeln!(y, "  {}:", st.kernel).unwrap();
+            writeln!(y, "    declaration: {}({});", st.kernel, decl_params.join(", ")).unwrap();
+            if !st.reads.is_empty() {
+                writeln!(y, "    inputs: |").unwrap();
+                for (p, r) in params.iter().zip(&st.reads) {
+                    writeln!(y, "      {p} : {}", self.read_term(r)).unwrap();
+                }
+            }
+            writeln!(y, "    outputs: |").unwrap();
+            // Outputs of grid stages are patterns over `u?`; reduced
+            // outputs use the concrete `acc` base (normalization idiom).
+            let out_term = if out.reduced {
+                format!("{}({}{})", out.tag, out.base, self.subscripts(true, None, true))
+            } else {
+                format!("{}({}?{})", out.tag, out.base, self.subscripts(false, None, true))
+            };
+            writeln!(y, "      o : {out_term}").unwrap();
+            let body = format!("o = {};", st.expr.code(&params));
+            writeln!(y, "    body: \"{body}\"").unwrap();
+            writeln!(y, "    body_rs: \"{body}\"").unwrap();
+        }
+        writeln!(y, "globals:").unwrap();
+        writeln!(y, "  inputs: |").unwrap();
+        let pat = self.subscripts(false, None, true);
+        writeln!(y, "    double g_u{pat} => u{pat}").unwrap();
+        writeln!(y, "  outputs: |").unwrap();
+        let goal = &self.values[self.goal];
+        let conc = self.subscripts(goal.reduced, None, false);
+        writeln!(y, "    {}({}{conc}) => double g_out{conc}", goal.tag, goal.base).unwrap();
+        y
+    }
+
+    /// Interpreter registry for this deck's kernels: each closure is the
+    /// stage's expression tree evaluated over the input slice.
+    pub fn registry(&self) -> Registry {
+        let mut r = Registry::new();
+        for st in &self.stages {
+            let e = st.expr.clone();
+            r.register(&st.kernel, move |i, o| o[0] = e.eval(i));
+        }
+        r
+    }
+}
+
+/// Random per-dim offsets, weighted toward small magnitudes. When
+/// `intermediate`, non-innermost dims are clamped non-positive (see the
+/// module docs on the supported fusion envelope).
+fn rand_offsets(rng: &mut Rng, nd: usize, intermediate: bool) -> Vec<i64> {
+    (0..nd)
+        .map(|d| {
+            let o: i64 = match rng.below(10) {
+                0..=4 => 0,
+                5 | 6 => -1,
+                7 => 1,
+                8 => -2,
+                _ => 2,
+            };
+            if intermediate && d + 1 < nd {
+                -o.abs()
+            } else {
+                o
+            }
+        })
+        .collect()
+}
+
+/// Random expression using **all** of `n` params exactly once as leaves
+/// (plus optional constants), so every declared kernel param is live.
+fn rand_expr(rng: &mut Rng, n: usize) -> Expr {
+    assert!(n > 0);
+    let mut e = Expr::Param(0);
+    for i in 1..n {
+        let p = Expr::Param(i);
+        let term = if rng.chance(1, 2) {
+            Expr::Mul(Box::new(Expr::Const(*rng.pick(&CONSTS))), Box::new(p))
+        } else {
+            p
+        };
+        e = if rng.chance(1, 3) {
+            Expr::Sub(Box::new(e), Box::new(term))
+        } else {
+            Expr::Add(Box::new(e), Box::new(term))
+        };
+    }
+    if rng.chance(1, 4) {
+        e = Expr::Mul(Box::new(Expr::Const(*rng.pick(&CONSTS))), Box::new(e));
+    }
+    e
+}
+
+/// The verifier probes extents as small as 7 (`probe_extents` scale 2 at
+/// vlen 1), so a generated domain must be non-empty there:
+/// `lo + hi_back <= 7 - 1` keeps at least one iteration at the probe.
+const MAX_EDGE: i64 = 6;
+/// Cap on per-dim total input reach (`neg + pos`); chains that exceed it
+/// get their offsets clamped until they fit.
+const MAX_REACH: i64 = 4;
+
+/// Generate the deck for one fuzz seed. Pure function of the seed.
+pub fn generate(seed: u64) -> GenDeck {
+    let mut rng = Rng::new(seed ^ 0xF022_5EED_CAFE_0001);
+    let all = ["k", "j", "i"];
+    let ndims = 1 + rng.below(3) as usize;
+    let dims: Vec<String> = all[3 - ndims..].iter().map(|s| s.to_string()).collect();
+
+    let mut values = Vec::new();
+    let mut stages = Vec::new();
+
+    // Stencil chain t1 -> t2 -> ... over grid base `u`.
+    let n_sten = 1 + rng.below(3) as usize;
+    for s in 0..n_sten {
+        values.push(GenValue { tag: format!("t{}", s + 1), base: "u".into(), reduced: false });
+        let mut reads = vec![GenRead {
+            value: s as isize - 1,
+            offsets: rand_offsets(&mut rng, ndims, s > 0),
+        }];
+        for _ in 0..rng.below(3) {
+            // Any earlier value or the input.
+            let v = rng.below(s as u64 + 1) as isize - 1;
+            reads.push(GenRead { value: v, offsets: rand_offsets(&mut rng, ndims, v >= 0) });
+        }
+        let expr = rand_expr(&mut rng, reads.len());
+        stages.push(GenStage { kernel: format!("f{}", s + 1), reads, expr, out: s });
+    }
+    let mut goal = n_sten - 1;
+
+    // Optional reduction block, 2D decks only for now: the shape is
+    // exactly normalization's (init / accumulate / post / broadcast),
+    // which the repo's own differential suite proves end to end. 3D
+    // reductions are future grammar.
+    if ndims == 2 && rng.chance(2, 5) {
+        let zi = values.len();
+        values.push(GenValue { tag: "z".into(), base: "acc".into(), reduced: true });
+        stages.push(GenStage {
+            kernel: "r_init".into(),
+            reads: vec![],
+            expr: Expr::Const(0.0),
+            out: zi,
+        });
+        let si = values.len();
+        values.push(GenValue { tag: "s".into(), base: "acc".into(), reduced: true });
+        let acc_expr = if rng.chance(1, 2) {
+            // p0 + p1*p1 (sum of squares, like normalization)
+            Expr::Add(
+                Box::new(Expr::Param(0)),
+                Box::new(Expr::Mul(Box::new(Expr::Param(1)), Box::new(Expr::Param(1)))),
+            )
+        } else {
+            // p0 + c*p1 (weighted sum)
+            Expr::Add(
+                Box::new(Expr::Param(0)),
+                Box::new(Expr::Mul(
+                    Box::new(Expr::Const(*rng.pick(&CONSTS))),
+                    Box::new(Expr::Param(1)),
+                )),
+            )
+        };
+        stages.push(GenStage {
+            kernel: "r_acc".into(),
+            reads: vec![
+                GenRead { value: zi as isize, offsets: vec![0; ndims] },
+                GenRead { value: (n_sten - 1) as isize, offsets: vec![0; ndims] },
+            ],
+            expr: acc_expr,
+            out: si,
+        });
+        // Post stage (norm_root's slot): the accumulator tag is written
+        // once per inner-loop step, so broadcasts read this once-written
+        // value instead.
+        let wi = values.len();
+        values.push(GenValue { tag: "w".into(), base: "acc".into(), reduced: true });
+        stages.push(GenStage {
+            kernel: "r_post".into(),
+            reads: vec![GenRead { value: si as isize, offsets: vec![0; ndims] }],
+            expr: Expr::Mul(
+                Box::new(Expr::Const(*rng.pick(&CONSTS))),
+                Box::new(Expr::Param(0)),
+            ),
+            out: wi,
+        });
+        let fi = values.len();
+        values.push(GenValue { tag: "fin".into(), base: "u".into(), reduced: false });
+        stages.push(GenStage {
+            kernel: "r_fin".into(),
+            reads: vec![
+                GenRead { value: (n_sten - 1) as isize, offsets: vec![0; ndims] },
+                GenRead { value: wi as isize, offsets: vec![0; ndims] },
+            ],
+            expr: rand_expr(&mut rng, 2),
+            out: fi,
+        });
+        goal = fi;
+    }
+
+    let mut deck = GenDeck {
+        name: format!("fuzz_s{seed:x}"),
+        dims,
+        lo: vec![0; ndims],
+        hi_back: vec![0; ndims],
+        values,
+        stages,
+        goal,
+    };
+
+    // Clamp runaway reach: first squeeze offsets to |1|, then to 0, on
+    // any dim whose total transitive reach exceeds the budget.
+    for max_mag in [1i64, 0] {
+        let (neg, pos) = deck.input_reach();
+        let over: Vec<bool> = (0..ndims).map(|d| neg[d] + pos[d] > MAX_REACH).collect();
+        if !over.iter().any(|&b| b) {
+            break;
+        }
+        for st in &mut deck.stages {
+            for r in &mut st.reads {
+                for d in 0..ndims {
+                    if over[d] {
+                        r.offsets[d] = r.offsets[d].clamp(-max_mag, max_mag);
+                    }
+                }
+            }
+        }
+    }
+
+    // Domains: lower bound covers the negative input reach (plus random
+    // slack), upper bound backs off 0-2 from the extent, all within the
+    // verifier's smallest probe extent.
+    let (neg, _pos) = deck.input_reach();
+    for d in 0..ndims {
+        let extra = if rng.chance(1, 3) { 1 } else { 0 };
+        deck.lo[d] = (neg[d] + extra).min(MAX_EDGE);
+        let room = MAX_EDGE - deck.lo[d];
+        deck.hi_back[d] = (rng.below(3) as i64).min(room.max(0));
+    }
+
+    deck
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        for s in [0u64, 1, 7, 0xC0FFEE] {
+            assert_eq!(generate(s), generate(s), "seed {s}");
+        }
+    }
+
+    #[test]
+    fn decks_parse_and_validate() {
+        for s in 0..64u64 {
+            let deck = generate(s);
+            let y = deck.yaml();
+            let parsed = crate::frontend::parse_deck(&y)
+                .unwrap_or_else(|e| panic!("seed {s}: generated deck does not parse: {e}\n{y}"));
+            assert_eq!(parsed.name, deck.name);
+            assert_eq!(parsed.iteration.order, deck.dims);
+        }
+    }
+
+    #[test]
+    fn domains_fit_probe_extents() {
+        for s in 0..256u64 {
+            let deck = generate(s);
+            let (neg, _) = deck.input_reach();
+            for d in 0..deck.ndims() {
+                assert!(deck.lo[d] >= neg[d], "seed {s} dim {d}: lo below input reach");
+                assert!(
+                    deck.lo[d] + deck.hi_back[d] <= MAX_EDGE,
+                    "seed {s} dim {d}: domain empty at the verifier's probe extent"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn expr_code_matches_eval() {
+        let e = Expr::Sub(
+            Box::new(Expr::Add(Box::new(Expr::Param(0)), Box::new(Expr::Const(0.5)))),
+            Box::new(Expr::Mul(Box::new(Expr::Const(2.0)), Box::new(Expr::Param(1)))),
+        );
+        assert_eq!(e.code(&["a".into(), "b".into()]), "((a + 0.5) - (2.0 * b))");
+        assert_eq!(e.eval(&[1.0, 3.0]), (1.0 + 0.5) - 2.0 * 3.0);
+        assert_eq!(e.max_param(), Some(1));
+    }
+
+    #[test]
+    fn registry_covers_all_stages() {
+        let deck = generate(3);
+        let reg = deck.registry();
+        for st in &deck.stages {
+            assert!(reg.get(&st.kernel).is_some(), "kernel {}", st.kernel);
+        }
+    }
+
+    #[test]
+    fn every_param_is_used() {
+        for s in 0..128u64 {
+            let deck = generate(s);
+            for st in &deck.stages {
+                if st.reads.is_empty() {
+                    assert_eq!(st.expr.max_param(), None);
+                } else {
+                    assert_eq!(
+                        st.expr.max_param(),
+                        Some(st.reads.len() - 1),
+                        "seed {s} kernel {}: unused tail params",
+                        st.kernel
+                    );
+                }
+            }
+        }
+    }
+}

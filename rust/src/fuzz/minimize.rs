@@ -1,0 +1,253 @@
+//! Greedy reproducer minimization: repeatedly try structural shrinks of
+//! a failing [`GenDeck`], keeping a mutation only if the caller's
+//! failure oracle still fires, until no candidate helps.
+//!
+//! Every mutation can only *shrink* the deck — drop stages, drop the
+//! outermost dim, remove reads, move offsets toward zero, simplify
+//! bodies — so a deck that was legal by construction stays legal
+//! (the transitive input reach never grows), and the loop terminates:
+//! each accepted candidate strictly decreases a finite size measure.
+
+use super::gen::{Expr, GenDeck, GenRead, GenStage};
+
+/// Shrink `deck` while `fails` keeps returning true. Returns the
+/// minimized deck and the number of accepted shrink steps.
+pub fn minimize<F: Fn(&GenDeck) -> bool>(deck: &GenDeck, fails: F) -> (GenDeck, usize) {
+    let mut cur = deck.clone();
+    let mut steps = 0usize;
+    loop {
+        let mut improved = false;
+        for cand in candidates(&cur) {
+            if fails(&cand) {
+                cur = cand;
+                steps += 1;
+                improved = true;
+                break;
+            }
+        }
+        if !improved {
+            return (cur, steps);
+        }
+    }
+}
+
+/// All single-step shrinks of `deck`, most aggressive first (bigger cuts
+/// earlier means fewer oracle invocations on the way down).
+fn candidates(deck: &GenDeck) -> Vec<GenDeck> {
+    let mut out = Vec::new();
+
+    // 1. Retarget the goal at an earlier grid value and garbage-collect
+    //    everything that no longer feeds it.
+    for v in 0..deck.goal {
+        if !deck.values[v].reduced {
+            if let Some(d) = retarget(deck, v) {
+                out.push(d);
+            }
+        }
+    }
+
+    // 2. Drop the outermost dim (only when no reduced value would end up
+    //    zero-dimensional).
+    if deck.ndims() >= 2 && !(deck.ndims() == 2 && deck.values.iter().any(|v| v.reduced)) {
+        let mut d = deck.clone();
+        d.dims.remove(0);
+        d.lo.remove(0);
+        d.hi_back.remove(0);
+        for st in &mut d.stages {
+            for r in &mut st.reads {
+                r.offsets.remove(0);
+            }
+        }
+        out.push(d);
+    }
+
+    // 3. Remove one non-spine read (keep each stage's first read so the
+    //    chain stays connected), re-pointing the expression at a plain
+    //    sum of the surviving params.
+    for (si, st) in deck.stages.iter().enumerate() {
+        for ri in (1..st.reads.len()).rev() {
+            let mut d = deck.clone();
+            d.stages[si].reads.remove(ri);
+            d.stages[si].expr = param_sum(d.stages[si].reads.len());
+            out.push(d);
+        }
+    }
+
+    // 4. Zero one read's offsets.
+    for (si, st) in deck.stages.iter().enumerate() {
+        for (ri, r) in st.reads.iter().enumerate() {
+            if r.offsets.iter().any(|&o| o != 0) {
+                let mut d = deck.clone();
+                d.stages[si].reads[ri].offsets = vec![0; deck.ndims()];
+                out.push(d);
+            }
+        }
+    }
+
+    // 5. Halve one nonzero offset toward zero.
+    for (si, st) in deck.stages.iter().enumerate() {
+        for (ri, r) in st.reads.iter().enumerate() {
+            for (di, &o) in r.offsets.iter().enumerate() {
+                if o.abs() > 1 {
+                    let mut d = deck.clone();
+                    d.stages[si].reads[ri].offsets[di] = o.signum();
+                    out.push(d);
+                }
+            }
+        }
+    }
+
+    // 6. Replace one compound body with the plain sum of its params.
+    for (si, st) in deck.stages.iter().enumerate() {
+        if !st.reads.is_empty() && st.expr != param_sum(st.reads.len()) {
+            let mut d = deck.clone();
+            d.stages[si].expr = param_sum(st.reads.len());
+            out.push(d);
+        }
+    }
+
+    // 7. Tighten domain slack: lower bounds down to the exact input
+    //    reach, upper back-off to zero.
+    {
+        let (neg, _) = deck.input_reach();
+        let mut d = deck.clone();
+        let mut changed = false;
+        for dim in 0..deck.ndims() {
+            if d.lo[dim] > neg[dim] {
+                d.lo[dim] = neg[dim];
+                changed = true;
+            }
+            if d.hi_back[dim] != 0 {
+                d.hi_back[dim] = 0;
+                changed = true;
+            }
+        }
+        if changed {
+            out.push(d);
+        }
+    }
+
+    out
+}
+
+/// `p0 + p1 + ...` — the simplest body that still uses every param.
+fn param_sum(n: usize) -> Expr {
+    let mut e = Expr::Param(0);
+    for i in 1..n {
+        e = Expr::Add(Box::new(e), Box::new(Expr::Param(i)));
+    }
+    e
+}
+
+/// New deck whose goal is grid value `new_goal`, with all stages and
+/// values that don't transitively feed it removed and indices remapped.
+fn retarget(deck: &GenDeck, new_goal: usize) -> Option<GenDeck> {
+    let nv = deck.values.len();
+    let mut live = vec![false; nv];
+    live[new_goal] = true;
+    // Stages are in producer order; a reverse sweep marks producers of
+    // every live consumer.
+    for st in deck.stages.iter().rev() {
+        if live[st.out] {
+            for r in &st.reads {
+                if r.value >= 0 {
+                    live[r.value as usize] = true;
+                }
+            }
+        }
+    }
+    let mut remap = vec![usize::MAX; nv];
+    let mut values = Vec::new();
+    for (i, v) in deck.values.iter().enumerate() {
+        if live[i] {
+            remap[i] = values.len();
+            values.push(v.clone());
+        }
+    }
+    if values.len() == nv {
+        return None; // nothing died — not a shrink
+    }
+    let stages: Vec<GenStage> = deck
+        .stages
+        .iter()
+        .filter(|st| live[st.out])
+        .map(|st| GenStage {
+            kernel: st.kernel.clone(),
+            reads: st
+                .reads
+                .iter()
+                .map(|r| GenRead {
+                    value: if r.value < 0 { -1 } else { remap[r.value as usize] as isize },
+                    offsets: r.offsets.clone(),
+                })
+                .collect(),
+            expr: st.expr.clone(),
+            out: remap[st.out],
+        })
+        .collect();
+    let mut d = deck.clone();
+    d.values = values;
+    d.stages = stages;
+    d.goal = remap[new_goal];
+    Some(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::gen::generate;
+    use super::*;
+
+    /// Find a seed whose deck has >= 2 stencil stages and multi-read
+    /// stages, so shrinks have room to act.
+    fn rich_deck() -> GenDeck {
+        (0..512u64)
+            .map(generate)
+            .find(|d| d.stages.len() >= 3 && d.stages.iter().any(|s| s.reads.len() >= 2))
+            .expect("no rich deck in seed range")
+    }
+
+    #[test]
+    fn always_failing_oracle_reaches_a_fixpoint_minimum() {
+        let deck = rich_deck();
+        let (min, steps) = minimize(&deck, |_| true);
+        assert!(steps > 0, "rich deck should shrink at least once");
+        // Fixpoint under "always fails": single dim, single stage,
+        // single zero-offset read, trivial body, tight domain.
+        assert_eq!(min.ndims(), 1);
+        assert_eq!(min.stages.len(), 1);
+        assert_eq!(min.stages[0].reads.len(), 1);
+        assert!(min.stages[0].reads[0].offsets.iter().all(|&o| o == 0));
+        assert_eq!(min.goal, 0);
+        // Still legal: parses and validates.
+        crate::frontend::parse_deck(&min.yaml()).expect("minimized deck must stay parseable");
+    }
+
+    #[test]
+    fn oracle_constraints_are_respected() {
+        let deck = rich_deck();
+        let nd = deck.ndims();
+        // Oracle: "fails" only while the dim count is intact and `f1`
+        // survives — minimization must never accept a shrink past that.
+        let (min, _) =
+            minimize(&deck, |d| d.ndims() == nd && d.stages.iter().any(|s| s.kernel == "f1"));
+        assert_eq!(min.ndims(), nd);
+        assert!(min.stages.iter().any(|s| s.kernel == "f1"));
+    }
+
+    #[test]
+    fn shrinks_never_grow_input_reach() {
+        let deck = rich_deck();
+        let (neg0, pos0) = deck.input_reach();
+        for cand in candidates(&deck) {
+            // Dim count may change; compare only when it matches.
+            if cand.ndims() == deck.ndims() {
+                let (neg, pos) = cand.input_reach();
+                for d in 0..deck.ndims() {
+                    assert!(neg[d] <= neg0[d] && pos[d] <= pos0[d]);
+                }
+                crate::frontend::parse_deck(&cand.yaml())
+                    .expect("every shrink candidate must stay parseable");
+            }
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! Random-deck differential fuzzer with verifier-backed triage.
+//!
+//! Three pieces, surfaced through `hfav fuzz`:
+//!
+//! * [`gen`] — a seeded, legal-by-construction random deck generator:
+//!   DAGs of 1–3-dim stencil chains and normalization-shaped reductions
+//!   with random window depths, offsets and extents-relative bounds,
+//!   whose kernel bodies are expression trees rendered identically for
+//!   the C backend, the Rust backend, and the interpreter registry.
+//! * [`driver`] — the two-stage campaign loop: stage 1 compiles each
+//!   deck at random knob settings with the schedule verifier as a
+//!   static oracle (and panics contained); stage 2 runs every surviving
+//!   plan on each available engine against the interpreted unfused
+//!   scalar baseline at 1e-12.
+//! * [`minimize`] — greedy structural shrinking of failing decks, so
+//!   every finding lands as a small self-contained reproducer deck
+//!   (`traces/fuzz-regress-*.yaml`) with its exact knob line.
+//!
+//! The split keeps the oracle honest: the generator promises legality,
+//! the verifier and the differential promise correctness, and anything
+//! in between — a panic, a verifier rejection, a cross-engine mismatch
+//! — is a pipeline bug with a replayable witness.
+
+pub mod driver;
+pub mod gen;
+pub mod minimize;
+
+pub use driver::{run, Finding, FuzzConfig, FuzzEngine, FuzzReport, Knobs, TOL};
+pub use gen::{generate, GenDeck};
+pub use minimize::minimize;

@@ -35,6 +35,12 @@
 //! it — a worker pool with pool-wide plan + prepared-executable caches,
 //! same-key job batching, executor buffer reuse ([`exec::Workspace`])
 //! and latency/throughput/cache metrics ([`coordinator::metrics`]).
+//!
+//! Testing layer: beyond the differential/property suites, [`fuzz`]
+//! generates random legal decks and pushes them through the full
+//! pipeline at random knob settings — verifier as the stage-1 oracle,
+//! cross-engine differential as stage 2, failures auto-minimized into
+//! replayable reproducer decks (`hfav fuzz`).
 
 pub mod ir;
 pub mod json;
@@ -54,4 +60,5 @@ pub mod apps;
 pub mod engine;
 pub mod coordinator;
 pub mod bench;
+pub mod fuzz;
 pub mod e2e;

@@ -38,11 +38,21 @@ fn usage() -> ! {
   tune <app|deck.yaml> --extents NxM[xK] [--budget N] [--engine exec|native|rust|pjrt]
       [--db FILE] [--min-reps N] [--min-time SECS]
   e2e [--size N] [--steps S]
-  bench <sysinfo|normalization|cosmo|hydro2d|footprint|serving|vectorization|pjrt|all>
+  bench <sysinfo|normalization|cosmo|hydro2d|advect3d|footprint|serving|vectorization|pjrt|all>
       [--vlen auto|N] [--threads serial|auto|N] [--json]
+  fuzz [--seeds N] [--seed S] [--engine exec[,native,rust]] [--out DIR] [--stage1-only]
   smoke [hlo.txt]
 
   engines: list the registered execution backends and their availability
+  fuzz:    random-deck differential fuzzing — generate N seeded decks,
+           compile each at random knob settings with the schedule
+           verifier as the stage-1 oracle, then differential-test every
+           surviving plan on each engine against the interpreted unfused
+           scalar baseline (1e-12). `--seed` takes decimal or 0x-hex;
+           `--out DIR` writes minimized reproducer decks as
+           DIR/fuzz-regress-s<seed>.yaml (replayable via `hfav check`);
+           `--stage1-only` skips the differential. Exit is nonzero when
+           any finding fires.
   check:   static schedule verification — deck lints plus independent
            bounds / race / def-before-use proofs over the lowered
            schedule (see also the HFAV_VERIFY env knob on compiles).
@@ -116,6 +126,7 @@ fn main() -> CliResult {
         "tune" => tune(rest),
         "e2e" => e2e(rest),
         "bench" => bench(rest),
+        "fuzz" => fuzz(rest),
         "smoke" => {
             let path = rest.first().cloned().unwrap_or_else(|| "/tmp/fn_hlo.txt".into());
             let v = hfav::runtime::smoke(&path)?;
@@ -297,6 +308,56 @@ fn check(rest: &[String]) -> CliResult {
     );
     if errors > 0 {
         return Err(format!("check failed with {errors} error(s)").into());
+    }
+    Ok(())
+}
+
+/// `--seed` accepts decimal or `0x`-prefixed hex (campaign seeds read
+/// better in hex).
+fn parse_seed(s: &str) -> Result<u64, CliError> {
+    let parsed = match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => s.parse::<u64>(),
+    };
+    parsed.map_err(|e| format!("--seed `{s}`: {e}").into())
+}
+
+/// Random-deck differential fuzz campaign (see `hfav::fuzz`). Exit is
+/// nonzero when any finding fires, so CI can gate on it directly.
+fn fuzz(rest: &[String]) -> CliResult {
+    let seeds = match flag(rest, "--seeds") {
+        Some(s) => s.parse::<u64>().map_err(|e| format!("--seeds: {e}"))?,
+        None => 100,
+    };
+    let seed0 = match flag(rest, "--seed") {
+        Some(s) => parse_seed(&s)?,
+        None => 0,
+    };
+    let engines = match flag(rest, "--engine") {
+        Some(list) => Some(
+            list.split(',')
+                .map(|e| e.trim().parse::<hfav::fuzz::FuzzEngine>())
+                .collect::<Result<Vec<_>, String>>()?,
+        ),
+        None => None,
+    };
+    let cfg = hfav::fuzz::FuzzConfig {
+        seeds,
+        seed0,
+        engines,
+        stage2: !has_flag(rest, "--stage1-only"),
+        out_dir: flag(rest, "--out").map(std::path::PathBuf::from),
+        verbose: true,
+    };
+    let report = hfav::fuzz::run(&cfg)?;
+    print!("{}", report.summary());
+    if !report.clean() {
+        let wrote = cfg
+            .out_dir
+            .as_ref()
+            .map(|d| format!(" — minimized reproducers in {}", d.display()))
+            .unwrap_or_else(|| " — re-run with --out DIR to write reproducers".to_string());
+        return Err(format!("fuzz: {} finding(s){wrote}", report.findings.len()).into());
     }
     Ok(())
 }
@@ -543,6 +604,9 @@ fn bench(rest: &[String]) -> CliResult {
         "hydro2d" => {
             hfav::bench::hydro2d(&[64, 128, 256], 5);
         }
+        "advect3d" => {
+            hfav::bench::advect3d(&[64, 128, 256], 8);
+        }
         "footprint" => {
             hfav::bench::footprint();
         }
@@ -570,6 +634,7 @@ fn bench(rest: &[String]) -> CliResult {
             hfav::bench::normalization(&sizes_big);
             hfav::bench::cosmo(&sizes_small, 8);
             hfav::bench::hydro2d(&[64, 128, 256], 5);
+            hfav::bench::advect3d(&[64, 128, 256], 8);
             let (_, srows) = hfav::bench::serving(4, 6, vlen_of(rest)?.resolve(), threads);
             let v = vlen_of(rest)?.resolve().unwrap_or_else(hfav::analysis::auto_vector_len);
             let (_, vrows) = hfav::bench::vectorization(v, tcount);

@@ -2,7 +2,7 @@
 //! deck × variant × engine × vector length must agree with the
 //! hand-written scalar reference within 1e-12.
 //!
-//! * apps: hydro2d, cosmo, normalization
+//! * apps: hydro2d, cosmo, normalization, advect3d
 //! * variants: Hfav (fused + contracted + pipelined), Autovec (unfused)
 //! * engines: interpreter executor, generated C (cc + dlopen), generated
 //!   Rust (rustc --crate-type cdylib + dlopen)
@@ -498,5 +498,117 @@ fn differential_interp_vs_rust_bitwise_on_laplace() {
         let a = run_stencil(&prog, &reg, Eng::Interp, &ext, &inputs);
         let b = run_stencil(&prog, &reg, Eng::GenRust, &ext, &inputs);
         assert_eq!(a["g_out"], b["g_out"], "vlen {vlen}: generated Rust diverged bitwise");
+    }
+}
+
+/// 3D upwind advection: flux values are read at nonzero offsets along
+/// ALL THREE dims — including the outermost — so every flux carries a
+/// rolling window and no outer dim is legal. The full engine matrix at
+/// every vector length against the hand-written reference.
+#[test]
+fn differential_advect3d() {
+    let (nk, nj, ni) = (5usize, 9usize, 12usize);
+    let u = apps::seeded(nk * nj * ni, 23);
+    let mut want = vec![0.0; (nk - 1) * (nj - 1) * (ni - 1)];
+    apps::advect3d::reference(&u, nk, nj, ni, &mut want);
+    let mut ext = BTreeMap::new();
+    ext.insert("Nk".to_string(), nk as i64);
+    ext.insert("Nj".to_string(), nj as i64);
+    ext.insert("Ni".to_string(), ni as i64);
+    let mut inputs = BTreeMap::new();
+    inputs.insert("g_u".to_string(), u);
+    let reg = apps::advect3d::registry();
+    let engines = engines();
+    for variant in [Variant::Hfav, Variant::Autovec] {
+        for vlen in VLENS {
+            let prog = compile(apps::advect3d::DECK, variant, vlen);
+            for &eng in &engines {
+                let out = run_stencil(&prog, &reg, eng, &ext, &inputs);
+                let err = apps::max_err(&out["g_out"], &want);
+                assert!(
+                    err < TOL,
+                    "advect3d {variant:?} vlen {vlen} {}: err {err:.2e}",
+                    eng.label()
+                );
+            }
+        }
+    }
+}
+
+/// advect3d's *legal* knob corners on non-square extents: inner strips
+/// with the aligned specialization, and `auto` vec-dim (which must fall
+/// back to inner because the outermost-dim window disqualifies every
+/// outer candidate). `outer:*`/`--tile` are compile errors here — that
+/// is pinned in the app's own unit tests.
+#[test]
+fn differential_advect3d_knobs() {
+    let (nk, nj, ni) = (6usize, 7usize, 21usize);
+    let u = apps::seeded(nk * nj * ni, 41);
+    let mut want = vec![0.0; (nk - 1) * (nj - 1) * (ni - 1)];
+    apps::advect3d::reference(&u, nk, nj, ni, &mut want);
+    let mut ext = BTreeMap::new();
+    ext.insert("Nk".to_string(), nk as i64);
+    ext.insert("Nj".to_string(), nj as i64);
+    ext.insert("Ni".to_string(), ni as i64);
+    let mut inputs = BTreeMap::new();
+    inputs.insert("g_u".to_string(), u);
+    let reg = apps::advect3d::registry();
+    let engines = engines();
+    let specs: Vec<(&str, PlanSpec)> = vec![
+        (
+            "inner vlen4 aligned",
+            PlanSpec::deck_src(apps::advect3d::DECK).vlen(Vlen::Fixed(4)).aligned(true),
+        ),
+        (
+            "inner vlen8 aligned",
+            PlanSpec::deck_src(apps::advect3d::DECK).vlen(Vlen::Fixed(8)).aligned(true),
+        ),
+        (
+            "auto(->inner) vlen4",
+            PlanSpec::deck_src(apps::advect3d::DECK).vlen(Vlen::Fixed(4)).vec_dim(VecDim::Auto),
+        ),
+    ];
+    for (label, spec) in specs {
+        let prog = spec.compile().unwrap_or_else(|e| panic!("{label}: {e}"));
+        for &eng in &engines {
+            let out = run_stencil(&prog, &reg, eng, &ext, &inputs);
+            let err = apps::max_err(&out["g_out"], &want);
+            assert!(err < TOL, "advect3d {label} {}: err {err:.2e}", eng.label());
+        }
+    }
+}
+
+/// advect3d under runtime threading: every engine must reproduce its own
+/// serial output bitwise at any worker count (chunking partitions the
+/// outermost windowed dim's *chunks*, never reassociates arithmetic).
+#[test]
+fn differential_advect3d_threads_bitwise() {
+    use hfav::engine::Threads;
+    let (nk, nj, ni) = (7usize, 8usize, 13usize);
+    let mut ext = BTreeMap::new();
+    ext.insert("Nk".to_string(), nk as i64);
+    ext.insert("Nj".to_string(), nj as i64);
+    ext.insert("Ni".to_string(), ni as i64);
+    let mut inputs = BTreeMap::new();
+    inputs.insert("g_u".to_string(), apps::seeded(nk * nj * ni, 37));
+    let reg = apps::advect3d::registry();
+    let engines = engines();
+    for (label, spec) in [
+        ("scalar", PlanSpec::deck_src(apps::advect3d::DECK).vlen(Vlen::Fixed(1))),
+        ("inner vlen4", PlanSpec::deck_src(apps::advect3d::DECK).vlen(Vlen::Fixed(4))),
+    ] {
+        let prog = spec.compile().unwrap_or_else(|e| panic!("{label}: {e}"));
+        for &eng in &engines {
+            let serial = run_stencil_threads(&prog, &reg, eng, &ext, &inputs, Threads::Serial);
+            for t in [Threads::Fixed(2), Threads::Fixed(3)] {
+                let out = run_stencil_threads(&prog, &reg, eng, &ext, &inputs, t);
+                assert_eq!(
+                    out["g_out"],
+                    serial["g_out"],
+                    "advect3d {label} {} at {t:?} diverged bitwise from serial",
+                    eng.label()
+                );
+            }
+        }
     }
 }

@@ -1,0 +1,133 @@
+//! Tier-1 fuzz coverage: a bounded, deterministic seed range through the
+//! two-stage fuzz driver, plus replay of every committed minimized
+//! reproducer (`traces/fuzz-regress-*.yaml`) so fixed bugs stay fixed.
+//!
+//! The ranges here are deliberately small (seconds, not minutes) — the
+//! CI `fuzz` job runs the wide campaign (`hfav fuzz --seeds 200 --seed
+//! 0xC0FFEE`). Failures print the minimized reproducer decks so a red
+//! run is immediately replayable.
+
+use hfav::fuzz::{self, FuzzConfig, FuzzEngine};
+use hfav::plan::{PlanSpec, Vlen};
+use hfav::apps::Variant;
+
+/// Panic with full minimized reproducers when a campaign isn't clean.
+fn assert_clean(rep: &fuzz::FuzzReport, what: &str) {
+    if rep.clean() {
+        return;
+    }
+    let mut msg = format!("{what}:\n{}", rep.summary());
+    for f in &rep.findings {
+        msg.push_str(&format!(
+            "--- seed 0x{:x} [{}] minimized reproducer ---\n{}",
+            f.seed, f.knobs, f.deck
+        ));
+    }
+    panic!("{msg}");
+}
+
+#[test]
+fn stage1_clean_on_deterministic_seed_range() {
+    let cfg = FuzzConfig {
+        seeds: 32,
+        seed0: 0,
+        engines: Some(vec![FuzzEngine::Exec]),
+        stage2: false,
+        out_dir: None,
+        verbose: false,
+    };
+    let rep = fuzz::run(&cfg).unwrap();
+    assert_clean(&rep, "stage-1 fuzz (compile + verifier oracle)");
+    assert_eq!(rep.seeds_run, 32);
+    // Every seed's unfused scalar baseline must have compiled, plus at
+    // least some fused plans.
+    assert!(rep.plans_compiled >= 32, "baseline compiles missing: {}", rep.plans_compiled);
+    assert!(rep.plans_verified > 0, "no fused plan survived to the verifier");
+}
+
+#[test]
+fn stage2_differential_clean_on_interpreter() {
+    let cfg = FuzzConfig {
+        seeds: 10,
+        seed0: 0,
+        engines: Some(vec![FuzzEngine::Exec]),
+        stage2: true,
+        out_dir: None,
+        verbose: false,
+    };
+    let rep = fuzz::run(&cfg).unwrap();
+    assert_clean(&rep, "stage-2 fuzz differential (interpreter)");
+    assert!(rep.diff_runs > 0, "differential stage never ran");
+}
+
+#[test]
+fn stage2_differential_clean_on_native_c() {
+    if !FuzzEngine::Native.available() {
+        eprintln!("fuzz: no C compiler on PATH — native differential test skipped");
+        return;
+    }
+    let cfg = FuzzConfig {
+        seeds: 6,
+        seed0: 0,
+        engines: Some(vec![FuzzEngine::Native]),
+        stage2: true,
+        out_dir: None,
+        verbose: false,
+    };
+    let rep = fuzz::run(&cfg).unwrap();
+    assert_clean(&rep, "stage-2 fuzz differential (native C)");
+    assert!(rep.diff_runs > 0);
+}
+
+#[test]
+fn campaign_is_deterministic() {
+    let cfg = FuzzConfig {
+        seeds: 8,
+        seed0: 0x51,
+        engines: Some(vec![FuzzEngine::Exec]),
+        stage2: false,
+        out_dir: None,
+        verbose: false,
+    };
+    let a = fuzz::run(&cfg).unwrap();
+    let b = fuzz::run(&cfg).unwrap();
+    assert_eq!(a.summary(), b.summary());
+    assert_eq!(a.plans_compiled, b.plans_compiled);
+    assert_eq!(a.legality_skips, b.legality_skips);
+    assert_eq!(a.plans_verified, b.plans_verified);
+}
+
+/// Every committed minimized reproducer must replay clean: it pinned a
+/// bug that has since been fixed, so compile + independent verification
+/// must now succeed at the scalar corner (the header's exact knob line
+/// is for manual replay via `hfav check`/`hfav fuzz`). An empty set of
+/// reproducers — a clean campaign history — passes trivially.
+#[test]
+fn committed_reproducers_replay_clean() {
+    let traces = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../traces");
+    let mut replayed = 0usize;
+    for entry in std::fs::read_dir(&traces).expect("traces dir") {
+        let path = entry.unwrap().path();
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        if !(name.starts_with("fuzz-regress-") && name.ends_with(".yaml")) {
+            continue;
+        }
+        let src = std::fs::read_to_string(&path).unwrap();
+        for variant in [Variant::Hfav, Variant::Autovec] {
+            let prog = PlanSpec::deck_src(src.as_str())
+                .variant(variant)
+                .vlen(Vlen::Fixed(1))
+                .compile()
+                .unwrap_or_else(|e| panic!("{name} ({variant:?}): does not compile: {e}"));
+            let rep = hfav::verify::check_program(&prog)
+                .unwrap_or_else(|e| panic!("{name} ({variant:?}): verifier refused: {e}"));
+            assert!(
+                !rep.has_errors(),
+                "{name} ({variant:?}): verifier errors:\n{}",
+                rep.render()
+            );
+        }
+        replayed += 1;
+    }
+    eprintln!("fuzz: replayed {replayed} committed reproducer deck(s)");
+}

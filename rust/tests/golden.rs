@@ -361,3 +361,48 @@ fn golden_structure_static_alignment_elides_head() {
     let chained = hfav::codegen::c99::emit(&compile_aligned(4)).unwrap();
     assert!(chained.contains("alignment head:"), "{chained}");
 }
+
+fn compile_advect3d(vlen: usize) -> Program {
+    compile_src(
+        hfav::apps::advect3d::DECK,
+        CompileOptions {
+            analysis: hfav::analysis::AnalysisOptions {
+                vector_len: Some(vlen),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn golden_c99_advect3d_vlen1() {
+    check("advect3d_vlen1.c", &hfav::codegen::c99::emit(&compile_advect3d(1)).unwrap());
+}
+
+#[test]
+fn golden_c99_advect3d_vlen4() {
+    check("advect3d_vlen4.c", &hfav::codegen::c99::emit(&compile_advect3d(4)).unwrap());
+}
+
+#[test]
+fn golden_rust_advect3d_vlen4() {
+    check("advect3d_vlen4.rs", &hfav::codegen::rs::emit(&compile_advect3d(4)).unwrap());
+}
+
+/// Structural assertions for the 3D advection emission: the three flux
+/// stages and the update fuse into one nest, the carried `k-1`/`j-1`
+/// reads force rolling windows on the outer dims, and the vlen-4
+/// emission strip-mines the innermost dim like every other deck.
+#[test]
+fn golden_structure_advect3d() {
+    let p1 = compile_advect3d(1);
+    assert_eq!(p1.sched.nests.len(), 1, "advect3d must fuse into one nest");
+    let c4 = hfav::codegen::c99::emit(&compile_advect3d(4)).unwrap();
+    assert!(c4.contains("strip-mined by 4 lanes"), "{c4}");
+    let r4 = hfav::codegen::rs::emit(&compile_advect3d(4)).unwrap();
+    assert!(r4.contains("while hfav_l < 4"), "{r4}");
+    let tag = format!("schedule: {:016x}", compile_advect3d(4).schedule_digest());
+    assert!(c4.contains(&tag) && r4.contains(&tag), "digest must match across backends");
+}
