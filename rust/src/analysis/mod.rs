@@ -252,6 +252,12 @@ pub struct AnalysisOptions {
     /// *both* expansions: innermost windows padded by `vlen − 1` (inner
     /// strips stay legal) and outer lane slots along the lane dim.
     pub tile: bool,
+    /// Temporal blocking depth: execute this many sweep-steps per
+    /// cache-resident block of the outermost loop dim before advancing
+    /// (`schedule::lower` wraps each nest in a time-tile node when
+    /// [`time_tileable`] holds, else the nest falls back to untiled).
+    /// 1 = off.
+    pub time_tile: usize,
 }
 
 impl Default for AnalysisOptions {
@@ -264,6 +270,7 @@ impl Default for AnalysisOptions {
             contract_innermost: true,
             vec_dim: VecDim::Inner,
             tile: false,
+            time_tile: 1,
         }
     }
 }
@@ -419,6 +426,130 @@ pub fn parallel_safe(
         }
     }
     Some(private.into_iter().collect())
+}
+
+/// Cap on per-member warm-up replay depth for time tiling. A fixpoint
+/// that climbs past this (e.g. a scan reading its own past output, whose
+/// self-edge diverges) means step-to-step dependence is not a bounded
+/// halo, so the nest falls back to untiled.
+const MAX_WARM_DEPTH: i64 = 64;
+
+/// Per-member warm-up depths for temporal blocking along the nest's
+/// outermost loop dim.
+///
+/// A time-tiled walk re-executes a block of the outer dim `t_block`
+/// times before advancing. Re-execution pass `s > 0` restarts at the
+/// block base `b` after pass `s − 1` marched rolling windows forward to
+/// the block end, so window cells behind `b` hold *newer* coordinates
+/// than the restarted reads expect. The fix is a per-member warm-up
+/// replay: before each re-execution pass, member `m` is replayed over
+/// loop coords `[b − D_m, b)` (clamped to its activity interval),
+/// rebuilding exactly the cells reads at the block base reach back to.
+/// Replays are idempotent — every invocation recomputes the same value
+/// at the same coordinate — so results stay bitwise identical.
+///
+/// Depths come from a fixpoint over read edges. When consumer `m`
+/// (replayed from depth `D_m`) reads a storage contracted along the dim
+/// at add `A_r = shift_m + offset`, and in-nest producer `p` rewrites
+/// that storage at add `A_w = shift_p + write_offset`, covering the
+/// read requires `D_p ≥ D_m + (A_w − A_r)`. All depths start at 0 and
+/// the constraints iterate to fixpoint.
+///
+/// Returns `Some(depths)` (one per nest member, in member order) when
+/// the nest is time-tileable, `None` when it must stay untiled:
+/// * a member runs a prologue/epilogue phase ([`Role::Pre`]/[`Role::Post`])
+///   at the outer level, or anything reduces over the outer dim —
+///   cross-step state with no bounded-halo form;
+/// * a storage contracted along the dim has no in-nest writer to replay;
+/// * the fixpoint exceeds [`MAX_WARM_DEPTH`] (scan-like self edges);
+/// * a replay deeper than a window's allocation would wrap and clobber
+///   cells the consumer still needs (`D_m + delta > alloc`).
+///
+/// Reads of storages kept [`DimSize::Full`] along the dim need no
+/// warm-up: their cells are coordinate-distinct slabs that persist
+/// across passes, and idempotent re-execution leaves them correct.
+pub fn time_tile_depths(
+    df: &Dataflow,
+    sp: &StoragePlan,
+    nest: &FusedNest,
+) -> Option<Vec<i64>> {
+    let dim = nest.dims.first()?;
+    for m in &nest.members {
+        if m.roles[0] != Role::Loop {
+            return None;
+        }
+        if df.callsites[m.callsite].reduce_dims.contains(dim) {
+            return None;
+        }
+    }
+    struct Edge {
+        consumer: usize,
+        producer: usize,
+        delta: i64,
+        alloc: i64,
+    }
+    let member_index =
+        |cs: CallsiteId| nest.members.iter().position(|m| m.callsite == cs);
+    let mut edges: Vec<Edge> = Vec::new();
+    for (mi, m) in nest.members.iter().enumerate() {
+        let cs = &df.callsites[m.callsite];
+        for (_, vid, offsets) in &cs.reads {
+            let var = &df.vars[*vid];
+            let k = match var.dims.iter().position(|d| d == dim) {
+                Some(k) => k,
+                None => continue, // dim-invariant: never rewritten along the dim
+            };
+            let st = &sp.storages[sp.of_var[*vid]];
+            let alloc = match &st.sizes[k] {
+                DimSize::Full => continue,
+                DimSize::One => 1,
+                DimSize::Window { alloc, .. } => *alloc,
+            };
+            let a_r = m.shifts[0] + offsets[k];
+            let mut found_writer = false;
+            for &wv in &st.vars {
+                let wvar = &df.vars[wv];
+                let Some(pcs) = wvar.producer else { continue };
+                let Some(pi) = member_index(pcs) else { continue };
+                found_writer = true;
+                let a_w = nest.members[pi].shifts[0] + wvar.write_offset[k];
+                edges.push(Edge { consumer: mi, producer: pi, delta: a_w - a_r, alloc });
+            }
+            if !found_writer {
+                return None;
+            }
+        }
+    }
+    let mut depth = vec![0i64; nest.members.len()];
+    loop {
+        let mut changed = false;
+        for e in &edges {
+            let need = depth[e.consumer] + e.delta;
+            if need > depth[e.producer] {
+                if need > MAX_WARM_DEPTH {
+                    return None;
+                }
+                depth[e.producer] = need;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    for e in &edges {
+        if depth[e.consumer] + e.delta > e.alloc {
+            return None;
+        }
+    }
+    Some(depth)
+}
+
+/// Is the nest legal to wrap in a time-tile node — i.e. is every
+/// step-to-step dependence along its outermost loop dim a bounded halo
+/// that warm-up replay can rebuild? See [`time_tile_depths`].
+pub fn time_tileable(df: &Dataflow, sp: &StoragePlan, nest: &FusedNest) -> bool {
+    time_tile_depths(df, sp, nest).is_some()
 }
 
 /// Resolve the requested [`VecDim`] against the fused schedule into the
@@ -1326,6 +1457,69 @@ globals:
         let fd = fuse(&df, &FusionOptions::default()).unwrap();
         let r = resolve_vec_dim(&deck, &df, &fd, &opts(8, VecDim::Auto)).unwrap();
         assert_eq!(r, VecDim::Inner);
+    }
+
+    #[test]
+    fn time_tile_depths_chain1d_fixpoint() {
+        let (_, df, fd, sp) = pipeline(testdecks::CHAIN1D);
+        let nest = &fd.nests[0];
+        let depths = time_tile_depths(&df, &sp, nest).expect("chain1d is time-tileable");
+        // diff at the block base b reads dbl[b−1], which dbl (pipeline
+        // shift +1) produced at loop coord b−2: the fixpoint must replay
+        // dbl from depth 2. diff itself has no downstream reader → 0.
+        let by_name = |n: &str| {
+            nest.members
+                .iter()
+                .position(|m| df.callsites[m.callsite].name == n)
+                .unwrap()
+        };
+        assert_eq!(depths[by_name("dbl")], 2);
+        assert_eq!(depths[by_name("diff")], 0);
+    }
+
+    #[test]
+    fn time_tileable_permits_inner_reductions_and_external_stencils() {
+        // laplace reads only a terminal input → no warm-up edges at all.
+        let (_, df, fd, sp) = pipeline(testdecks::LAPLACE);
+        assert_eq!(time_tile_depths(&df, &sp, &fd.nests[0]), Some(vec![0]));
+        // normalize reduces over i at the *inner* level: outer-level roles
+        // are all Loop, so both nests stay tileable with zero depths (the
+        // accumulator is rebuilt per row by the pass itself).
+        let (_, df, fd, sp) = pipeline(testdecks::NORMALIZE);
+        for nest in &fd.nests {
+            let d = time_tile_depths(&df, &sp, nest)
+                .unwrap_or_else(|| panic!("nest {} tileable", nest.id));
+            assert!(d.iter().all(|&x| x == 0), "nest {}: {d:?}", nest.id);
+        }
+    }
+
+    #[test]
+    fn time_tileable_rejects_outer_reductions() {
+        // Flip normalize's iteration order so the i-reduction runs over
+        // the outermost dim: the accumulator carries cross-step state no
+        // bounded halo expresses, so the gate must refuse that nest.
+        let src = testdecks::NORMALIZE.replace("order: [j, i]", "order: [i, j]");
+        let deck = parse_deck(&src).unwrap();
+        let df = crate::dataflow::build(&deck).unwrap();
+        let fd = fuse(&df, &FusionOptions::default()).unwrap();
+        let sp = analyze(&deck, &df, &fd, &AnalysisOptions::default()).unwrap();
+        let acc_cs = df.callsites.iter().find(|c| c.name == "norm_acc").unwrap().id;
+        let nest = fd.nests.iter().find(|n| n.member(acc_cs).is_some()).unwrap();
+        assert!(!time_tileable(&df, &sp, nest));
+    }
+
+    #[test]
+    fn time_tileable_rejects_replay_deeper_than_window() {
+        // Shrink dbl's rolling window below the depth-2 replay: a warm-up
+        // pass would wrap the circular buffer and clobber cells the
+        // consumer still needs, so the gate must fall back.
+        let (_, df, fd, mut sp) = pipeline(testdecks::CHAIN1D);
+        let nest = &fd.nests[0];
+        assert!(time_tileable(&df, &sp, nest));
+        let dbl = df.var("dbl(u)").unwrap().id;
+        let sid = sp.of_var[dbl];
+        sp.storages[sid].sizes[0] = DimSize::Window { w: 1, alloc: 1 };
+        assert!(!time_tileable(&df, &sp, nest));
     }
 
     #[test]

@@ -408,9 +408,10 @@ pub fn serving(
 
 /// Vectorization-strategy comparison: scalar vs inner-dim strips vs
 /// outer-dim lanes vs the aligned specialization vs multi-dim lane
-/// tiling (outer lanes × inner strips), measured on the native-C engine
-/// for cosmo (outer dim `k`, 32×128×128) and hydro2d (outer dim `j`,
-/// 64 rows × 256 cells). All six variants are distinct `PlanSpec`
+/// tiling (outer lanes × inner strips) vs temporal blocking
+/// (`time-tiled:4`), measured on the native-C engine for cosmo (outer
+/// dim `k`, 32×128×128) and hydro2d (outer dim `j`, 64 rows × 256
+/// cells). All eight compiled variants are distinct `PlanSpec`
 /// fingerprints, so a serving pool would cache and dispatch them as
 /// distinct plans.
 pub fn vectorization(vlen: usize, threads: usize) -> (Vec<String>, Vec<report::VecRow>) {
@@ -493,6 +494,21 @@ fn vectorization_strategies(
         (format!("tiled:{outer}"), outer_spec().tiled(true), 1),
         ("parallel".to_string(), PlanSpec::app(app).vlen(Vlen::Fixed(1)), threads),
         ("parallel+tiled".to_string(), outer_spec().tiled(true), threads),
+        // Temporal blocking rows: one invocation serves `t` timesteps
+        // (per-step accounting in `vectorization_case`), comparing
+        // cache-resident multi-step sweeps against the one-sweep
+        // strategies. Apps whose dependence shape fails the legality
+        // gate fall back untiled (effective t = 1).
+        (
+            "time-tiled:4".to_string(),
+            PlanSpec::app(app).vlen(Vlen::Fixed(1)).time_tile(4),
+            1,
+        ),
+        (
+            "parallel+tiled+time-tiled:4".to_string(),
+            outer_spec().tiled(true).time_tile(4),
+            threads,
+        ),
     ]
 }
 
@@ -544,7 +560,11 @@ fn vectorization_case(
         } else {
             outputs.keys().all(|name| arrays[name] == baseline[name])
         };
-        let t = time_it(|| module.run_with(ext, &mut arrays, knob).unwrap(), 3, 0.2).secs;
+        // Per-timestep accounting: a time-tiled plan's single call
+        // serves `prog.time_tile()` steps, the rest serve exactly one.
+        let eff_t = prog.time_tile().max(1) as f64;
+        let t = time_it(|| module.run_with(ext, &mut arrays, knob).unwrap(), 3, 0.2).secs
+            / eff_t;
         if k == 0 {
             t_scalar = t;
         }
@@ -576,6 +596,94 @@ fn vectorization_case(
             parallel_chunks: stats.parallel.iter().map(|p| p.chunks as u64).sum(),
         });
     }
+}
+
+/// Temporal-blocking sweep: `t_block ∈ {1, 2, 4, 8}` on the two 3-D
+/// window-rolling apps (cosmo 32×128×128 and advect3d on the same
+/// slab), native-C engine, serial and threaded. One call of a plan
+/// compiled at `--time-tile t` performs `t` sweep passes per
+/// cache-resident block, and the coordinator serves `t` timesteps per
+/// call — so throughput counts `cells × effective_t` per invocation.
+/// `effective_t` is read back from the compiled plan: apps whose
+/// dependence shape fails the legality gate fall back untiled and are
+/// reported honestly at `effective=1`. Every row's output is compared
+/// bitwise against the serial untiled run first (idempotent sweeps make
+/// temporal blocking bit-exact, not just tolerance-close).
+pub fn time_tiling(threads: usize) -> (Vec<String>, Vec<report::TimeTileRow>) {
+    let t_par = threads.max(2);
+    let mut csv = vec![
+        "app,time_tile,effective,threads,mcells_per_s,speedup_vs_untiled,bitwise".to_string(),
+    ];
+    let mut rows = Vec::new();
+    println!("Temporal blocking sweep (native C, parallel rows at {t_par} threads):");
+    for app in ["cosmo", "advect3d"] {
+        let (nk, n) = (32usize, 128usize);
+        let ext: BTreeMap<String, i64> = [("Nk", nk), ("Nj", n), ("Ni", n)]
+            .into_iter()
+            .map(|(k, x)| (k.to_string(), x as i64))
+            .collect();
+        let out_len = match app {
+            "cosmo" => nk * (n - 4) * (n - 4),
+            _ => (nk - 1) * (n - 1) * (n - 1),
+        };
+        let cells = out_len as f64;
+        let extents_label =
+            ext.values().map(|v| v.to_string()).collect::<Vec<_>>().join("x");
+        let u = apps::seeded(nk * n * n, 7);
+        let mut baseline: Vec<f64> = Vec::new();
+        // Serial untiled per-step time, the speedup denominator.
+        let mut per_step_t1 = 0.0;
+        for &tt in &[1usize, 2, 4, 8] {
+            for nthreads in [1usize, t_par] {
+                let prog = PlanSpec::app(app).time_tile(tt).compile().unwrap();
+                let eff = prog.time_tile().max(1);
+                let module =
+                    crate::codegen::native::build(&prog, &Default::default()).unwrap();
+                let knob =
+                    if nthreads > 1 { Threads::Fixed(nthreads) } else { Threads::Serial };
+                let mut arrays = BTreeMap::new();
+                arrays.insert("g_u".to_string(), u.clone());
+                arrays.insert("g_out".to_string(), vec![0.0; out_len]);
+                module.run_with(&ext, &mut arrays, knob).unwrap();
+                let bitwise = if baseline.is_empty() {
+                    baseline = arrays["g_out"].clone();
+                    true
+                } else {
+                    arrays["g_out"] == baseline
+                };
+                let secs =
+                    time_it(|| module.run_with(&ext, &mut arrays, knob).unwrap(), 3, 0.2)
+                        .secs;
+                let per_step = secs / eff as f64;
+                if tt == 1 && nthreads == 1 {
+                    per_step_t1 = per_step;
+                }
+                let speedup = if per_step > 0.0 { per_step_t1 / per_step } else { 0.0 };
+                let label = format!("t={tt}(eff {eff}) thr={nthreads}");
+                row(&format!("{app}/{label}"), n, per_step, cells);
+                println!(
+                    "      {speedup:.2}x vs untiled serial{}",
+                    if bitwise { "" } else { "  BITWISE MISMATCH" }
+                );
+                csv.push(format!(
+                    "{app},{tt},{eff},{nthreads},{:.3},{speedup:.2},{bitwise}",
+                    cells / per_step / 1e6
+                ));
+                rows.push(report::TimeTileRow {
+                    app: app.to_string(),
+                    time_tile: tt,
+                    effective: eff,
+                    engine: "native".to_string(),
+                    threads: nthreads,
+                    extents: extents_label.clone(),
+                    mcells_per_s: cells / per_step / 1e6,
+                    speedup_vs_untiled: speedup,
+                    bitwise_vs_untiled: bitwise,
+                });
+            }
+        }
+    }
+    (csv, rows)
 }
 
 /// P1: PJRT artifacts — fused (Pallas) vs unfused (jnp) on the CPU PJRT

@@ -4,9 +4,10 @@
 //! The schema is the contract: every row carries the same keys in the
 //! same order, values are plain numbers/strings/bools, and the top-level
 //! `schema` tag is versioned (`hfav-bench-vectorization/v1`,
-//! `hfav-bench-serving/v1`). CI diffs the *key structure* of a fresh run
-//! against the committed `BENCH_*.json` baselines — values are advisory
-//! (they move with the host), the schema is strict. Serialization is
+//! `hfav-bench-serving/v1`, `hfav-bench-time-tiling/v1`). CI diffs the
+//! *key structure* of a fresh run against the committed `BENCH_*.json`
+//! baselines — values are advisory (they move with the host), the
+//! schema is strict. Serialization is
 //! hand-rolled (ordered keys, fixed float precision) so the crate needs
 //! no JSON dependency and identical runs produce byte-identical files.
 
@@ -16,6 +17,8 @@ use std::fmt::Write;
 pub const VEC_SCHEMA: &str = "hfav-bench-vectorization/v1";
 /// Schema tag of [`serving_json`].
 pub const SERVE_SCHEMA: &str = "hfav-bench-serving/v1";
+/// Schema tag of [`time_tiling_json`].
+pub const TIME_TILE_SCHEMA: &str = "hfav-bench-time-tiling/v1";
 
 /// One measured strategy of the vectorization benchmark.
 #[derive(Debug, Clone)]
@@ -43,6 +46,28 @@ pub struct VecRow {
     /// Chunks the plan's parallel levels decompose into at `threads`
     /// (0 = the plan has no parallel level).
     pub parallel_chunks: u64,
+}
+
+/// One measured point of the temporal-blocking sweep
+/// (`hfav bench time-tiling`).
+#[derive(Debug, Clone)]
+pub struct TimeTileRow {
+    pub app: String,
+    /// Requested `--time-tile` depth.
+    pub time_tile: usize,
+    /// Depth the legality gate actually compiled (1 = fell back).
+    pub effective: usize,
+    /// Engine registry name the row ran on (`native`).
+    pub engine: String,
+    /// Runtime worker count the row ran at (1 = serial).
+    pub threads: usize,
+    /// Grid shape, extent values in sorted-name order.
+    pub extents: String,
+    /// Per-timestep throughput (one call serves `effective` steps).
+    pub mcells_per_s: f64,
+    pub speedup_vs_untiled: f64,
+    /// Output bitwise-equal to the serial untiled run.
+    pub bitwise_vs_untiled: bool,
 }
 
 /// One serving-benchmark scenario.
@@ -125,6 +150,33 @@ pub fn vectorization_json(rows: &[VecRow]) -> String {
     out
 }
 
+/// Render the temporal-blocking report (`BENCH_time_tiling.json`).
+pub fn time_tiling_json(rows: &[TimeTileRow]) -> String {
+    let mut out = String::new();
+    header(&mut out, TIME_TILE_SCHEMA);
+    for (k, r) in rows.iter().enumerate() {
+        let comma = if k + 1 < rows.len() { "," } else { "" };
+        let _ = writeln!(
+            out,
+            "    {{ \"app\": \"{}\", \"time_tile\": {}, \"effective\": {}, \
+             \"engine\": \"{}\", \"threads\": {}, \"extents\": \"{}\", \
+             \"mcells_per_s\": {}, \"speedup_vs_untiled\": {}, \
+             \"bitwise_vs_untiled\": {} }}{comma}",
+            esc(&r.app),
+            r.time_tile,
+            r.effective,
+            esc(&r.engine),
+            r.threads,
+            esc(&r.extents),
+            num(r.mcells_per_s),
+            num(r.speedup_vs_untiled),
+            r.bitwise_vs_untiled
+        );
+    }
+    footer(&mut out);
+    out
+}
+
 /// Render the serving report (`BENCH_serving.json`).
 pub fn serving_json(rows: &[ServeRow]) -> String {
     let mut out = String::new();
@@ -189,6 +241,30 @@ mod tests {
         // Exactly one trailing comma between the two rows, none after the
         // last — the output is real JSON.
         assert_eq!(text.matches("},").count(), 2, "{text}"); // sysinfo + row 1
+    }
+
+    #[test]
+    fn time_tiling_schema_is_stable() {
+        let r = TimeTileRow {
+            app: "cosmo".into(),
+            time_tile: 4,
+            effective: 4,
+            engine: "native".into(),
+            threads: 1,
+            extents: "128x128x32".into(),
+            mcells_per_s: 321.98765,
+            speedup_vs_untiled: 1.4,
+            bitwise_vs_untiled: true,
+        };
+        let text = time_tiling_json(&[r.clone(), r]);
+        assert!(text.contains("\"schema\": \"hfav-bench-time-tiling/v1\""), "{text}");
+        assert!(text.contains("\"time_tile\": 4"), "{text}");
+        assert!(text.contains("\"effective\": 4"), "{text}");
+        assert!(text.contains("\"mcells_per_s\": 321.988"), "{text}");
+        assert!(text.contains("\"bitwise_vs_untiled\": true"), "{text}");
+        // Real JSON with deterministic rendering.
+        let doc = crate::json::parse(&text).unwrap();
+        assert_eq!(doc.get("rows").and_then(crate::json::Value::as_arr).unwrap().len(), 2);
     }
 
     #[test]

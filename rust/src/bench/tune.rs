@@ -93,11 +93,12 @@ impl Candidate {
     /// Human-readable knob label (tune progress output).
     pub fn label(&self) -> String {
         format!(
-            "vec_dim={} vlen={} aligned={} tiled={} tuned={} threads={}",
+            "vec_dim={} vlen={} aligned={} tiled={} tt={} tuned={} threads={}",
             self.prog.vec_dim(),
             self.prog.vector_len(),
             self.spec.is_aligned(),
             self.prog.tiled(),
+            self.prog.time_tile(),
             self.spec.is_tuned(),
             self.threads
         )
@@ -118,15 +119,20 @@ pub fn candidate_specs(base: &PlanSpec) -> Vec<PlanSpec> {
     let mut out = Vec::new();
     for &vlen in &vlens {
         for tuned in [false, true] {
-            let b = base.clone().vlen_resolved(Some(vlen)).tuned(tuned);
-            if vlen == 1 {
-                out.push(b);
-                continue;
-            }
-            for vd in [VecDim::Inner, VecDim::Auto] {
-                for aligned in [false, true] {
-                    for tiled in [false, true] {
-                        out.push(b.clone().vec_dim(vd.clone()).aligned(aligned).tiled(tiled));
+            // Temporal blocking is orthogonal to the vectorization knobs
+            // (the gate falls ineligible decks back to 1, and the
+            // fingerprint dedup below collapses nothing — tt is hashed).
+            for tt in [1usize, 2] {
+                let b = base.clone().vlen_resolved(Some(vlen)).tuned(tuned).time_tile(tt);
+                if vlen == 1 {
+                    out.push(b);
+                    continue;
+                }
+                for vd in [VecDim::Inner, VecDim::Auto] {
+                    for aligned in [false, true] {
+                        for tiled in [false, true] {
+                            out.push(b.clone().vec_dim(vd.clone()).aligned(aligned).tiled(tiled));
+                        }
                     }
                 }
             }
@@ -171,11 +177,14 @@ pub fn legal_candidates(base: &PlanSpec, cfg: &TuneConfig) -> Result<Vec<Candida
             if base_stats.parallel.is_empty() { &threads[..1] } else { &threads };
         for &t in counts {
             let stats = if t == 1 { base_stats.clone() } else { prog.schedule_stats(&ext, t)? };
+            // Per-step cost: a time-tiled plan's walk counters cover all
+            // its passes but its one invocation serves that many steps,
+            // so candidates rank on a common per-step scale.
             out.push(Candidate {
                 spec: spec.clone(),
                 prog: prog.clone(),
                 threads: t,
-                cost: cost::estimate(&stats, prog.vector_len(), t),
+                cost: cost::estimate_per_step(&stats, prog.vector_len(), t, prog.time_tile()),
             });
         }
     }
@@ -209,7 +218,11 @@ fn time_candidate(c: &Candidate, cfg: &TuneConfig) -> Result<(f64, usize), Strin
     let backend = engine::registry().get(&cfg.engine)?;
     let exe = backend.prepare(&c.spec, &c.prog, &PrepareCtx { artifacts: None })?;
     let ext = extents_map(&c.prog, &cfg.extents)?;
-    let cells: f64 = ext.values().map(|&v| v.max(1) as f64).product();
+    // One invocation of a time-tiled plan serves `time_tile` steps, so
+    // its cell-updates count scales accordingly (same accounting as the
+    // coordinator's step loop).
+    let cells: f64 = ext.values().map(|&v| v.max(1) as f64).product::<f64>()
+        * c.prog.time_tile().max(1) as f64;
     let input_names: BTreeSet<String> =
         c.prog.external_inputs().into_iter().map(|(n, _, _)| n).collect();
     let mut arrays = BTreeMap::new();
@@ -267,7 +280,7 @@ pub fn tune(base: &PlanSpec, cfg: &TuneConfig) -> Result<TunedEntry, String> {
     );
     let mut best: Option<(TunedEntry, f64)> = None;
     let mut timed = 0usize;
-    for c in ranked.iter().take(cfg.budget.max(1)) {
+    for (rank0, c) in ranked.iter().take(cfg.budget.max(1)).enumerate() {
         let (mcells, reps) = match time_candidate(c, cfg) {
             Ok(r) => r,
             Err(e) => {
@@ -287,11 +300,16 @@ pub fn tune(base: &PlanSpec, cfg: &TuneConfig) -> Result<TunedEntry, String> {
             vlen: c.prog.vector_len(),
             aligned: c.spec.is_aligned(),
             tiled: c.prog.tiled(),
+            time_tile: c.prog.time_tile(),
             threads: c.threads,
             mcells_per_s: mcells,
             candidates: ranked.len(),
             timed: 0, // final count patched below
             reps,
+            // Calibration provenance: where the cost model ranked the
+            // winner (1 = the model's top pick) — `tune --report` reads
+            // this back across the DB.
+            predicted_rank: Some(rank0 + 1),
         };
         let better = match &best {
             None => true,
@@ -316,13 +334,16 @@ mod tests {
         let specs = candidate_specs(&PlanSpec::app("cosmo"));
         let fps: BTreeSet<u64> = specs.iter().map(|s| s.fingerprint()).collect();
         assert_eq!(fps.len(), specs.len(), "duplicate fingerprints survived dedup");
-        // At minimum the two scalar corners (tuned off/on) exist...
-        assert!(specs.len() >= 2);
+        // At minimum the four scalar corners (tuned × time_tile) exist...
+        assert!(specs.len() >= 4);
+        assert!(specs.iter().any(|s| s.time_tile_depth() > 1), "time-tile axis missing");
+        assert!(specs.iter().any(|s| s.time_tile_depth() == 1));
         // ...and when the host has SIMD lanes, the vector knob space too.
         if crate::analysis::auto_vector_len() > 1 {
-            assert!(specs.len() >= 2 + 16, "vector cross-product missing: {}", specs.len());
+            assert!(specs.len() >= 4 + 32, "vector cross-product missing: {}", specs.len());
             assert!(specs.iter().any(|s| s.is_tiled()));
             assert!(specs.iter().any(|s| s.is_aligned()));
+            assert!(specs.iter().any(|s| s.is_tiled() && s.time_tile_depth() > 1));
         }
     }
 
@@ -371,6 +392,9 @@ mod tests {
         assert!(entry.timed >= 1 && entry.timed <= 2);
         assert!(entry.candidates >= entry.timed);
         assert!(entry.reps >= 1);
+        assert!(entry.time_tile >= 1);
+        let rank = entry.predicted_rank.expect("tune must record the winner's predicted rank");
+        assert!(rank >= 1 && rank <= cfg.budget, "rank {rank} outside the timed prefix");
         // The recorded knobs apply onto a fresh spec without error.
         entry.apply(PlanSpec::app("cosmo")).unwrap();
     }

@@ -593,7 +593,12 @@ impl Worker {
             }
         }
         let cfg = engine::RunConfig::with_threads(job.threads);
-        for _ in 0..job.steps.max(1) {
+        // A time-tiled plan applies `time_tile` fused sweep passes per
+        // invocation, so the step loop divides: one call serves t steps
+        // (the last call may overshoot — sweeps are idempotent, so extra
+        // passes rewrite identical values).
+        let t_eff = prog.time_tile().max(1);
+        for _ in 0..job.steps.max(1).div_ceil(t_eff) {
             exe.run_with(&ext, &mut arrays, &mut self.ws, &cfg)?;
         }
         let mut checksum = 0.0;
@@ -668,8 +673,8 @@ pub fn distinct_plan_keys(jobs: &[Job]) -> usize {
     jobs.iter().map(|j| j.plan_key()).collect::<std::collections::BTreeSet<_>>().len()
 }
 
-/// Parse a job-trace line (format v3):
-/// `app|deck.yaml, variant, engine, size, steps[, vlen][, extents=NxM[xK]]`.
+/// Parse a job-trace line (format v4):
+/// `app|deck.yaml, variant, engine, size, steps[, vlen][, extents=NxM[xK]][, tt=N]`.
 ///
 /// The target may be a built-in app or a deck-file path; the engine is
 /// any [`engine::registry`] name; the optional `vlen` field forces a
@@ -677,7 +682,10 @@ pub fn distinct_plan_keys(jobs: &[Job]) -> usize {
 /// the optional `extents=` field overrides the grid shape per job
 /// (values bind to the deck's extents in sorted-name order — see
 /// [`parse_extents`]), opening non-square workloads through the generic
-/// grid driver. v2 lines (without `extents=`) parse unchanged.
+/// grid driver; the optional v4 `tt=N` field requests temporal blocking
+/// depth N for that job (part of the plan fingerprint — the legality
+/// gate may still fall back to 1 at compile time). v2/v3 lines parse
+/// unchanged.
 ///
 /// The variant field additionally accepts `tuned`: the job is marked a
 /// tuned request ([`Job::tuned_request`]) and its spec defaults to the
@@ -685,35 +693,46 @@ pub fn distinct_plan_keys(jobs: &[Job]) -> usize {
 /// tuned-plans DB is consulted ([`resolve_tuned`] upgrades it on a hit).
 pub fn parse_trace_line(id: u64, line: &str) -> Result<Job, String> {
     let f: Vec<&str> = line.split(',').map(str::trim).collect();
-    if !(5..=7).contains(&f.len()) {
+    if !(5..=8).contains(&f.len()) {
         return Err(format!(
             "bad trace line `{line}` \
-             (app|deck.yaml, variant, engine, size, steps[, vlen][, extents=NxM])"
+             (app|deck.yaml, variant, engine, size, steps[, vlen][, extents=NxM][, tt=N])"
         ));
     }
     let tuned_request = f[1] == "tuned";
     let variant: Variant = if tuned_request { Variant::Hfav } else { f[1].parse()? };
     let mut vlen: Option<Vlen> = None;
     let mut extents: Option<Vec<i64>> = None;
+    let mut time_tile: Option<usize> = None;
     for field in &f[5..] {
-        match field.strip_prefix("extents=") {
-            Some(spec) => {
-                if extents.is_some() {
-                    return Err(format!("bad trace line `{line}`: duplicate extents field"));
-                }
-                extents = Some(parse_extents(spec)?);
+        if let Some(spec) = field.strip_prefix("extents=") {
+            if extents.is_some() {
+                return Err(format!("bad trace line `{line}`: duplicate extents field"));
             }
-            None => {
-                if vlen.is_some() {
-                    return Err(format!("bad trace line `{line}`: duplicate vlen field"));
-                }
-                vlen = Some(field.parse()?);
+            extents = Some(parse_extents(spec)?);
+        } else if let Some(n) = field.strip_prefix("tt=") {
+            if time_tile.is_some() {
+                return Err(format!("bad trace line `{line}`: duplicate tt field"));
             }
+            let t: usize = n.parse().map_err(|e| format!("bad trace line `{line}`: tt: {e}"))?;
+            if t < 1 {
+                return Err(format!("bad trace line `{line}`: tt must be >= 1"));
+            }
+            time_tile = Some(t);
+        } else {
+            if vlen.is_some() {
+                return Err(format!("bad trace line `{line}`: duplicate vlen field"));
+            }
+            vlen = Some(field.parse()?);
         }
     }
     let vlen = vlen.unwrap_or(Vlen::Deck);
     let backend = engine::registry().get(f[2])?.name().to_string();
-    let spec = target_spec(f[0])?.variant(variant).vlen(vlen).tuned(tuned_request);
+    let spec = target_spec(f[0])?
+        .variant(variant)
+        .vlen(vlen)
+        .time_tile(time_tile.unwrap_or(1))
+        .tuned(tuned_request);
     Ok(Job {
         id,
         spec,
@@ -923,6 +942,46 @@ mod tests {
     }
 
     #[test]
+    fn trace_v4_time_tile_parsing() {
+        // tt= in any optional position, alone or with vlen/extents.
+        let j = parse_trace_line(1, "cosmo, hfav, exec, 16, 2, tt=4").unwrap();
+        assert_eq!(j.spec.time_tile_depth(), 4);
+        let j = parse_trace_line(2, "cosmo, hfav, exec, 16, 2, 8, extents=12x10x3, tt=2").unwrap();
+        assert_eq!(j.spec.time_tile_depth(), 2);
+        assert_eq!(j.spec.vlen_override(), Some(8));
+        assert_eq!(j.extents, Some(vec![12, 10, 3]));
+        // v2/v3 lines default to 1 (and fingerprint like pre-v4 specs).
+        let j = parse_trace_line(3, "cosmo, hfav, exec, 16, 2").unwrap();
+        assert_eq!(j.spec.time_tile_depth(), 1);
+        assert_eq!(
+            j.spec.fingerprint(),
+            parse_trace_line(4, "cosmo, hfav, exec, 16, 2, tt=1").unwrap().spec.fingerprint()
+        );
+        // Malformed/duplicate tt fields fail.
+        assert!(parse_trace_line(0, "cosmo, hfav, exec, 16, 2, tt=").is_err());
+        assert!(parse_trace_line(0, "cosmo, hfav, exec, 16, 2, tt=0").is_err());
+        let e = parse_trace_line(0, "cosmo, hfav, exec, 16, 2, tt=2, tt=4").unwrap_err();
+        assert!(e.contains("duplicate tt"), "{e}");
+    }
+
+    #[test]
+    fn time_tiled_jobs_serve_bitwise_identically() {
+        // Sweeps are idempotent, so a t-deep plan serving ceil(steps/t)
+        // invocations must reproduce the untiled checksum exactly — and
+        // the tt knob must split the plan cache (it is compile-relevant).
+        let c = Coordinator::start(1, None);
+        let plain = Job::new(3, PlanSpec::app("cosmo"), "exec", 12, 3);
+        let tiled = Job::new(3, PlanSpec::app("cosmo").time_tile(2), "exec", 12, 3);
+        assert_ne!(plain.plan_key(), tiled.plan_key());
+        let r1 = c.submit(plain).recv().unwrap();
+        let r2 = c.submit(tiled).recv().unwrap();
+        assert!(r1.ok, "{}", r1.detail);
+        assert!(r2.ok, "{}", r2.detail);
+        assert_eq!(r1.checksum, r2.checksum, "time tiling changed results");
+        c.shutdown();
+    }
+
+    #[test]
     fn trace_variant_tuned_marks_request_with_heuristic_fallback() {
         let j = parse_trace_line(1, "cosmo, tuned, exec, 16, 1").unwrap();
         assert!(j.tuned_request);
@@ -978,11 +1037,13 @@ mod tests {
             vlen: 4,
             aligned: true,
             tiled: false,
+            time_tile: 1,
             threads: 2,
             mcells_per_s: 100.0,
             candidates: 10,
             timed: 3,
             reps: 20,
+            predicted_rank: None,
         });
         let label = resolve_tuned(&mut job, &db, &plans).unwrap().expect("hit");
         assert!(label.contains("vlen=4"), "{label}");

@@ -712,6 +712,48 @@ fn exec_nodes(
                     t += 1;
                 }
             }
+            Node::TimeTile(t) => {
+                // Temporal blocking, interpreted as pure syntax: per block
+                // of the outer dim, run the body `t_block` times. Clamp
+                // symbols restrict each pass to the block; warm-up symbols
+                // (bound only for passes after the first) replay the halo
+                // below the block base. The arithmetic here mirrors
+                // `schedule::visit_nodes` exactly.
+                let (lo, hi) = (t.lo.eval(extents)?, t.hi.eval(extents)?);
+                let block = t.block as i64;
+                let mut b = lo;
+                while b < hi {
+                    let bh = (b + block).min(hi);
+                    for s in 0..t.t_block {
+                        let mut ext = extents.clone();
+                        for (g, (olo, ohi)) in t.clamps.iter().enumerate() {
+                            let cl = olo.eval(extents)?.max(b);
+                            let ch = ohi.eval(extents)?.min(bh).max(cl);
+                            ext.insert(crate::schedule::tt_lo_sym(t.level, g), cl);
+                            ext.insert(crate::schedule::tt_hi_sym(t.level, g), ch);
+                        }
+                        if s > 0 {
+                            for (g, w) in t.warmup.iter().enumerate() {
+                                let wl = w.lo.eval(extents)?.max(b - w.depth);
+                                let wh = w.hi.eval(extents)?.min(b).max(wl);
+                                ext.insert(crate::schedule::tt_warm_lo_sym(t.level, g), wl);
+                                ext.insert(crate::schedule::tt_warm_hi_sym(t.level, g), wh);
+                            }
+                            for w in &t.warmup {
+                                exec_nodes(
+                                    compiled, &w.body, &ext, idx, bufs, storage_buf, threads,
+                                    scratch_in, scratch_out, trace,
+                                )?;
+                            }
+                        }
+                        exec_nodes(
+                            compiled, &t.body, &ext, idx, bufs, storage_buf, threads,
+                            scratch_in, scratch_out, trace,
+                        )?;
+                    }
+                    b = bh;
+                }
+            }
             Node::Invoke(inv) => {
                 let c = &compiled[inv.member];
                 match &inv.lanes {
@@ -1307,6 +1349,69 @@ mod tests {
                     serial["g_out"],
                     "vlen={vlen} tile={tile} threads={threads}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn time_tiled_execution_matches_untiled_bitwise() {
+        // Temporal blocking re-invokes idempotent sweep passes per block;
+        // every write lands the same value at the same coordinate, so the
+        // result must be byte-identical to the untiled plan — at any
+        // worker count (TimeTile under Parallel) and with lane tiling on.
+        let mk = |vlen: usize, tile: bool, tt: usize| {
+            compile_src(
+                crate::apps::cosmo::DECK,
+                CompileOptions {
+                    analysis: crate::analysis::AnalysisOptions {
+                        vector_len: Some(vlen),
+                        vec_dim: if vlen > 1 {
+                            crate::analysis::VecDim::Auto
+                        } else {
+                            crate::analysis::VecDim::Inner
+                        },
+                        tile,
+                        time_tile: tt,
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        };
+        let (nk, nj, ni) = (7usize, 10usize, 13usize); // non-square
+        let ext = extents(&[("Nk", nk as i64), ("Nj", nj as i64), ("Ni", ni as i64)]);
+        let mut inputs = BTreeMap::new();
+        inputs.insert("g_u".to_string(), seeded(nk * nj * ni, 29));
+        let reg = crate::apps::cosmo::registry();
+        let mut want = vec![0.0; nk * (nj - 4) * (ni - 4)];
+        crate::apps::cosmo::reference(&inputs["g_u"], nk, nj, ni, &mut want);
+        for (vlen, tile) in [(1usize, false), (4, false), (4, true)] {
+            let base = run(
+                &mk(vlen, tile, 1),
+                &reg,
+                &ext,
+                &inputs,
+                ExecOptions::default(),
+            )
+            .unwrap();
+            assert_close(&base["g_out"], &want, 1e-12);
+            for tt in [2usize, 4] {
+                let prog = mk(vlen, tile, tt);
+                for threads in [1usize, 3] {
+                    let got = run(
+                        &prog,
+                        &reg,
+                        &ext,
+                        &inputs,
+                        ExecOptions { mode: Mode::Peeled, threads },
+                    )
+                    .unwrap();
+                    assert_eq!(
+                        got["g_out"], base["g_out"],
+                        "vlen={vlen} tile={tile} tt={tt} threads={threads}"
+                    );
+                }
             }
         }
     }

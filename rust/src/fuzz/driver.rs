@@ -2,7 +2,7 @@
 //!
 //! For every seed, [`gen::generate`] produces a legal-by-construction
 //! deck, and a handful of random knob settings (vlen × vec_dim × aligned
-//! × tiled × threads) push it through the full pipeline:
+//! × tiled × time_tile × threads) push it through the full pipeline:
 //!
 //! * **Stage 1 (cheap, always on)** — compile the fused variant at each
 //!   knob set and run [`crate::verify::check_program`] as the static
@@ -89,6 +89,10 @@ pub struct Knobs {
     pub vec_dim: VecDim,
     pub aligned: bool,
     pub tiled: bool,
+    /// Temporal blocking depth; 1 = off. Decks whose dependence shape
+    /// rejects the transform silently compile untiled (that fallback is
+    /// itself under test), so every value here is a legal request.
+    pub time_tile: usize,
     /// Runtime worker count (stage 2 only; stage 1 proves race freedom
     /// at several counts regardless).
     pub threads: usize,
@@ -97,7 +101,14 @@ pub struct Knobs {
 impl Knobs {
     /// The always-tested baseline corner.
     pub fn scalar() -> Knobs {
-        Knobs { vlen: 1, vec_dim: VecDim::Inner, aligned: false, tiled: false, threads: 1 }
+        Knobs {
+            vlen: 1,
+            vec_dim: VecDim::Inner,
+            aligned: false,
+            tiled: false,
+            time_tile: 1,
+            threads: 1,
+        }
     }
 
     pub fn sample(rng: &mut Rng) -> Knobs {
@@ -107,6 +118,7 @@ impl Knobs {
             vec_dim: if rng.chance(1, 3) { VecDim::Auto } else { VecDim::Inner },
             aligned: vlen > 1 && rng.chance(1, 2),
             tiled: rng.chance(1, 4),
+            time_tile: if rng.chance(1, 3) { 2 } else { 1 },
             threads: 1 + rng.below(3) as usize,
         }
     }
@@ -114,8 +126,8 @@ impl Knobs {
     /// The exact knob line reproducer headers carry.
     pub fn label(&self) -> String {
         format!(
-            "vlen={} vec_dim={} aligned={} tiled={} threads={}",
-            self.vlen, self.vec_dim, self.aligned, self.tiled, self.threads
+            "vlen={} vec_dim={} aligned={} tiled={} time_tile={} threads={}",
+            self.vlen, self.vec_dim, self.aligned, self.tiled, self.time_tile, self.threads
         )
     }
 
@@ -124,6 +136,7 @@ impl Knobs {
             .vec_dim(self.vec_dim.clone())
             .aligned(self.aligned)
             .tiled(self.tiled)
+            .time_tile(self.time_tile)
     }
 }
 
@@ -608,8 +621,17 @@ mod tests {
     fn scalar_knobs_label_is_stable() {
         assert_eq!(
             Knobs::scalar().label(),
-            "vlen=1 vec_dim=inner aligned=false tiled=false threads=1"
+            "vlen=1 vec_dim=inner aligned=false tiled=false time_tile=1 threads=1"
         );
+    }
+
+    #[test]
+    fn sampled_time_tile_stays_in_pool() {
+        let mut rng = Rng::new(42);
+        for _ in 0..64 {
+            let k = Knobs::sample(&mut rng);
+            assert!(k.time_tile == 1 || k.time_tile == 2, "time_tile {}", k.time_tile);
+        }
     }
 
     #[test]

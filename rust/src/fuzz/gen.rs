@@ -21,8 +21,10 @@
 //! * a chain of 1–3 stencil stages `t1, t2, ...` over grid base `u`;
 //!   each stage's spine reads the previous value (stage 1 reads the
 //!   terminal input `u?`) plus 0–2 extra reads of earlier values or the
-//!   input. Terminal-input reads draw offsets from `[-2, 2]` on every
-//!   dim; intermediate reads keep non-innermost offsets in `[-2, 0]`
+//!   input. Terminal-input reads draw offsets from `[-3, 3]` on every
+//!   dim (window depths past 2, so windowed-reuse buffers deeper than
+//!   the builtin apps' get exercised); intermediate reads keep
+//!   non-innermost offsets in `[-3, 0]`
 //!   (producer-runs-behind shapes — the windowed-reuse direction this
 //!   grammar is here to stress; positive outer offsets on intermediates
 //!   are covered separately by `tests/property.rs` at magnitude 1 and
@@ -316,12 +318,14 @@ impl GenDeck {
 fn rand_offsets(rng: &mut Rng, nd: usize, intermediate: bool) -> Vec<i64> {
     (0..nd)
         .map(|d| {
-            let o: i64 = match rng.below(10) {
+            let o: i64 = match rng.below(12) {
                 0..=4 => 0,
                 5 | 6 => -1,
                 7 => 1,
                 8 => -2,
-                _ => 2,
+                9 => 2,
+                10 => -3,
+                _ => 3,
             };
             if intermediate && d + 1 < nd {
                 -o.abs()
@@ -362,7 +366,7 @@ fn rand_expr(rng: &mut Rng, n: usize) -> Expr {
 const MAX_EDGE: i64 = 6;
 /// Cap on per-dim total input reach (`neg + pos`); chains that exceed it
 /// get their offsets clamped until they fit.
-const MAX_REACH: i64 = 4;
+const MAX_REACH: i64 = 5;
 
 /// Generate the deck for one fuzz seed. Pure function of the seed.
 pub fn generate(seed: u64) -> GenDeck {
@@ -470,9 +474,9 @@ pub fn generate(seed: u64) -> GenDeck {
         goal,
     };
 
-    // Clamp runaway reach: first squeeze offsets to |1|, then to 0, on
+    // Clamp runaway reach: squeeze offsets to |2|, then |1|, then 0, on
     // any dim whose total transitive reach exceeds the budget.
-    for max_mag in [1i64, 0] {
+    for max_mag in [2i64, 1, 0] {
         let (neg, pos) = deck.input_reach();
         let over: Vec<bool> = (0..ndims).map(|d| neg[d] + pos[d] > MAX_REACH).collect();
         if !over.iter().any(|&b| b) {
@@ -539,6 +543,30 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn grammar_reaches_window_depths_past_two() {
+        // The deep-window arm of the grammar must actually fire: some
+        // seed in a modest range keeps a magnitude-3 offset after the
+        // reach clamp, and the clamp still holds every deck within the
+        // probe-extent budget.
+        let mut saw_deep = false;
+        for s in 0..512u64 {
+            let deck = generate(s);
+            let (neg, pos) = deck.input_reach();
+            for d in 0..deck.ndims() {
+                assert!(neg[d] + pos[d] <= MAX_REACH, "seed {s} dim {d}: reach over budget");
+            }
+            if deck
+                .stages
+                .iter()
+                .any(|st| st.reads.iter().any(|r| r.offsets.iter().any(|o| o.abs() >= 3)))
+            {
+                saw_deep = true;
+            }
+        }
+        assert!(saw_deep, "no deck in 512 seeds used a window deeper than 2");
     }
 
     #[test]

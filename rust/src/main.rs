@@ -23,23 +23,24 @@ fn usage() -> ! {
         "usage: hfav <command> [args]
   generate <deck.yaml|app> [--backend c99|rust|dot-dataflow|dot-inest|schedule|schedule-ir]
       [--variant hfav|autovec] [--vlen auto|N] [--vec-dim inner|auto|outer:<dim>]
-      [--aligned] [--tile] [--tuned]
+      [--aligned] [--tile] [--time-tile N] [--tuned]
   footprint <deck.yaml|app> --extents Ni=512,Nj=512
   check <deck.yaml|app> [--vlen auto|N] [--vec-dim inner|auto|outer:<dim>]
-      [--aligned] [--tile] [--tuned] [--variant hfav|autovec]
+      [--aligned] [--tile] [--time-tile N] [--tuned] [--variant hfav|autovec]
   engines
   run --app <app|deck.yaml> [--engine exec|native|rust|pjrt] [--variant hfav|autovec]
       [--size N] [--steps S] [--extents NxM[xK]] [--vlen auto|N]
-      [--vec-dim inner|auto|outer:<dim>] [--aligned] [--tile] [--tuned]
+      [--vec-dim inner|auto|outer:<dim>] [--aligned] [--tile] [--time-tile N] [--tuned]
       [--threads serial|auto|N]
   serve --trace <file> [--workers N] [--repeat R] [--artifacts DIR] [--vlen auto|N]
-      [--vec-dim inner|auto|outer:<dim>] [--aligned] [--tile] [--threads serial|auto|N]
-      [--db FILE]
+      [--vec-dim inner|auto|outer:<dim>] [--aligned] [--tile] [--time-tile N]
+      [--threads serial|auto|N] [--db FILE]
   tune <app|deck.yaml> --extents NxM[xK] [--budget N] [--engine exec|native|rust|pjrt]
       [--db FILE] [--min-reps N] [--min-time SECS]
+  tune --report [--db FILE]
   e2e [--size N] [--steps S]
-  bench <sysinfo|normalization|cosmo|hydro2d|advect3d|footprint|serving|vectorization|pjrt|all>
-      [--vlen auto|N] [--threads serial|auto|N] [--json]
+  bench <sysinfo|normalization|cosmo|hydro2d|advect3d|footprint|serving|vectorization
+      |time-tiling|pjrt|all> [--vlen auto|N] [--threads serial|auto|N] [--json]
   fuzz [--seeds N] [--seed S] [--engine exec[,native,rust]] [--out DIR] [--stage1-only]
   smoke [hlo.txt]
 
@@ -79,6 +80,17 @@ fn usage() -> ! {
              k-independent outer dim: combine with --vec-dim outer:<dim>
              or let it auto-resolve; compilation fails when no dim
              qualifies (no effect at vlen 1).
+  --time-tile: temporal blocking depth N — fuse N timestep sweeps over each
+             cache-resident spatial block, replaying a per-kernel stencil
+             halo between passes. Gated per nest by the time_tileable
+             legality analysis (reductions over the block dim, in-place
+             alias chains and unbounded step dependences fall back to
+             N=1 silently); part of the plan fingerprint. The trace v4
+             `tt=<n>` field carries it per job; on `serve` the flag
+             overrides every job in the trace.
+  --report:  (tune) print the cost-model calibration report for the
+             tuned-plans DB (predicted rank vs measured winner per shape
+             class) instead of tuning
   --extents: (run) per-job grid override, positional values bound to the
              deck's extents in sorted-name order (e.g. cosmo: Ni x Nj x
              Nk) — also the trace v3 `extents=` field. NOTE: `footprint
@@ -160,6 +172,14 @@ fn vec_dim_of(rest: &[String]) -> Result<hfav::analysis::VecDim, CliError> {
     }
 }
 
+/// Parse `--time-tile N` (1 = off when omitted; 0 clamps to 1).
+fn time_tile_of(rest: &[String]) -> Result<usize, CliError> {
+    match flag(rest, "--time-tile") {
+        None => Ok(1),
+        Some(v) => Ok(v.parse::<usize>().map_err(|e| format!("--time-tile: {e}"))?.max(1)),
+    }
+}
+
 /// Parse `--threads serial|auto|N` (`Serial` when omitted).
 fn threads_of(rest: &[String]) -> Result<hfav::engine::Threads, CliError> {
     match flag(rest, "--threads") {
@@ -178,6 +198,7 @@ fn spec_of(target: &str, rest: &[String]) -> Result<PlanSpec, CliError> {
         .vec_dim(vec_dim_of(rest)?)
         .aligned(has_flag(rest, "--aligned"))
         .tiled(has_flag(rest, "--tile"))
+        .time_tile(time_tile_of(rest)?)
         .tuned(has_flag(rest, "--tuned")))
 }
 
@@ -243,9 +264,10 @@ fn check(rest: &[String]) -> CliResult {
         Some(t) if !t.starts_with("--") => t.clone(),
         _ => return Err("check: target <app|deck.yaml> required".into()),
     };
-    let explicit = ["--vlen", "--vec-dim", "--aligned", "--tile", "--tuned", "--variant"]
-        .iter()
-        .any(|f| has_flag(rest, f));
+    let explicit =
+        ["--vlen", "--vec-dim", "--aligned", "--tile", "--time-tile", "--tuned", "--variant"]
+            .iter()
+            .any(|f| has_flag(rest, f));
     let base = spec_of(&target, rest)?;
     let specs = if explicit {
         vec![base]
@@ -284,12 +306,13 @@ fn check(rest: &[String]) -> CliResult {
         }
         checked += 1;
         let label = format!(
-            "variant={} vlen={} vec_dim={} aligned={} tiled={}",
+            "variant={} vlen={} vec_dim={} aligned={} tiled={} time_tile={}",
             spec.variant_label(),
             prog.vector_len(),
             prog.vec_dim(),
             spec.is_aligned(),
-            prog.tiled()
+            prog.tiled(),
+            prog.time_tile()
         );
         let report = hfav::verify::check_schedule(&prog)?;
         for d in &report.diagnostics {
@@ -494,6 +517,12 @@ fn serve(rest: &[String]) -> CliResult {
             j.spec = j.spec.clone().tiled(true);
         }
     }
+    if flag(rest, "--time-tile").is_some() {
+        let tt = time_tile_of(rest)?;
+        for j in template.iter_mut() {
+            j.spec = j.spec.clone().time_tile(tt);
+        }
+    }
     // `--threads` is the one trace-global override that does NOT touch
     // the specs: it sets each job's runtime knob, so the trace's plan
     // keys (and cache behavior) are exactly what they were serially.
@@ -533,6 +562,16 @@ fn serve(rest: &[String]) -> CliResult {
 /// one shape, then persist the measured winner in the tuned-plans DB
 /// (keyed by deck digest and shape class, so nearby shapes share it).
 fn tune(rest: &[String]) -> CliResult {
+    // `tune --report`: read-only calibration view of the tuned-plans DB —
+    // how well the cost model's pre-timing ranking predicted the measured
+    // winners, per shape class.
+    if has_flag(rest, "--report") {
+        let db_path =
+            flag(rest, "--db").unwrap_or_else(|| hfav::plan::tunedb::DEFAULT_DB_PATH.into());
+        let db = hfav::plan::tunedb::TunedDb::load(&db_path)?;
+        print!("{}", hfav::schedule::cost::calibration_report(&db));
+        return Ok(());
+    }
     let target = match rest.first() {
         Some(t) if !t.starts_with("--") => t.clone(),
         _ => return Err("tune: target <app|deck.yaml> required".into()),
@@ -626,6 +665,15 @@ fn bench(rest: &[String]) -> CliResult {
                 )?;
             }
         }
+        "time-tiling" => {
+            let (_, rows) = hfav::bench::time_tiling(tcount);
+            if json {
+                write_json(
+                    "BENCH_time_tiling.json",
+                    hfav::bench::report::time_tiling_json(&rows),
+                )?;
+            }
+        }
         "pjrt" => {
             hfav::bench::pjrt(&hfav::runtime::default_artifacts_dir())?;
         }
@@ -638,12 +686,17 @@ fn bench(rest: &[String]) -> CliResult {
             let (_, srows) = hfav::bench::serving(4, 6, vlen_of(rest)?.resolve(), threads);
             let v = vlen_of(rest)?.resolve().unwrap_or_else(hfav::analysis::auto_vector_len);
             let (_, vrows) = hfav::bench::vectorization(v, tcount);
+            let (_, trows) = hfav::bench::time_tiling(tcount);
             let _ = hfav::bench::pjrt(&hfav::runtime::default_artifacts_dir());
             if json {
                 write_json("BENCH_serving.json", hfav::bench::report::serving_json(&srows))?;
                 write_json(
                     "BENCH_vectorization.json",
                     hfav::bench::report::vectorization_json(&vrows),
+                )?;
+                write_json(
+                    "BENCH_time_tiling.json",
+                    hfav::bench::report::time_tiling_json(&trows),
                 )?;
             }
         }

@@ -150,6 +150,28 @@ impl Program {
         self.opts.analysis.tile && self.outer_lane_dim().is_some()
     }
 
+    /// Effective temporal-blocking depth: the `t_block` of the lowered
+    /// [`crate::schedule::TimeTileNode`] when the legality gate admitted
+    /// time tiling (possibly wrapped in a [`crate::schedule::Node::Parallel`]
+    /// level), else 1. Requesting `time_tile > 1` on an ineligible deck
+    /// falls back silently — this accessor reports what actually lowered.
+    pub fn time_tile(&self) -> usize {
+        for np in &self.sched.nests {
+            for node in &np.body {
+                match node {
+                    crate::schedule::Node::TimeTile(t) => return t.t_block,
+                    crate::schedule::Node::Parallel(p) => {
+                        if let Some(crate::schedule::Node::TimeTile(t)) = p.body.first() {
+                            return t.t_block;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        1
+    }
+
     /// Stable fingerprint of the lowered schedule tree
     /// ([`crate::schedule::Schedule::digest`]): two programs with equal
     /// digests run exactly the same loops. Both code emitters print it

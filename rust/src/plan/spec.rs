@@ -104,6 +104,10 @@ pub struct PlanSpec {
     /// Multi-dim lane tiling: outer-dim lanes × inner strips together
     /// (`vlen × vlen` tiles). Needs a k-independent outer dim.
     tiled: bool,
+    /// Temporal blocking depth: run this many sweep passes per
+    /// cache-resident block of the outer dim (1 = off). Gated by
+    /// `analysis::time_tileable`; illegal decks fall back untiled.
+    time_tile: usize,
 }
 
 impl PlanSpec {
@@ -117,6 +121,7 @@ impl PlanSpec {
             vec_dim: VecDim::Inner,
             aligned: false,
             tiled: false,
+            time_tile: 1,
         }
     }
 
@@ -206,6 +211,19 @@ impl PlanSpec {
         self
     }
 
+    /// Temporal blocking: run `t` sweep passes per cache-resident block
+    /// of the outer dim before moving to the next block (1 = off, the
+    /// default). Legality is decided by `analysis::time_tileable`
+    /// during lowering: decks whose step dependence is not a bounded
+    /// halo (outer reductions, aliased in-place steps) compile to the
+    /// ordinary untiled schedule — the knob never changes results,
+    /// only the walk order, and the coordinator divides the step count
+    /// by the *effective* depth ([`Program::time_tile`]).
+    pub fn time_tile(mut self, t: usize) -> PlanSpec {
+        self.time_tile = t.max(1);
+        self
+    }
+
     // -- accessors ----------------------------------------------------------
 
     /// Built-in app name, if this spec targets one.
@@ -252,6 +270,11 @@ impl PlanSpec {
         self.tiled
     }
 
+    /// Requested temporal-blocking depth (1 = off).
+    pub fn time_tile_depth(&self) -> usize {
+        self.time_tile
+    }
+
     /// Variant label used in plan keys and traces (`hfav`, `autovec`,
     /// `hfav+tuned`, ...).
     pub fn variant_label(&self) -> String {
@@ -292,6 +315,7 @@ impl PlanSpec {
         opts.analysis.vector_len = self.vlen;
         opts.analysis.vec_dim = self.vec_dim.clone();
         opts.analysis.tile = self.tiled;
+        opts.analysis.time_tile = self.time_tile;
         opts.roll_all_inputs = self.roll_all_inputs;
         opts.aligned = self.aligned;
         opts
@@ -331,6 +355,7 @@ impl PlanSpec {
         h.write_str(&self.vec_dim.to_string());
         h.write_bool(self.aligned);
         h.write_bool(self.tiled);
+        h.write_u64(self.time_tile as u64);
         h.finish()
     }
 
@@ -381,6 +406,8 @@ mod tests {
             base.clone().aligned(true),
             base.clone().tiled(true),
             base.clone().tiled(true).vlen(Vlen::Fixed(4)),
+            base.clone().time_tile(2),
+            base.clone().time_tile(4),
             PlanSpec::app("normalize"),
             PlanSpec::deck_src("name: laplace\n"),
         ];
@@ -420,6 +447,31 @@ mod tests {
         let t = PlanSpec::app("cosmo").vlen(Vlen::Fixed(4)).tiled(true).compile_options();
         assert!(t.analysis.tile);
         assert!(!PlanSpec::app("cosmo").compile_options().analysis.tile);
+        let tt = PlanSpec::app("cosmo").time_tile(4).compile_options();
+        assert_eq!(tt.analysis.time_tile, 4);
+        assert_eq!(PlanSpec::app("cosmo").compile_options().analysis.time_tile, 1);
+        // 0 clamps to 1 (off) and is fingerprint-identical to the default.
+        let z = PlanSpec::app("cosmo").time_tile(0);
+        assert_eq!(z.time_tile_depth(), 1);
+        assert_eq!(z.fingerprint(), PlanSpec::app("cosmo").fingerprint());
+    }
+
+    #[test]
+    fn time_tile_applies_or_falls_back_at_compile() {
+        // chain1d's step dependence is a bounded halo: the knob takes.
+        let prog = PlanSpec::deck_src(crate::frontend::testdecks::CHAIN1D)
+            .time_tile(4)
+            .compile()
+            .unwrap();
+        assert_eq!(prog.time_tile(), 4);
+        // Cross-step aliasing (in-place decks) falls back untiled — same
+        // results, ordinary walk — rather than erroring.
+        let aliased = format!(
+            "{}aliases:\n  - [g_u, g_d]\n",
+            crate::frontend::testdecks::CHAIN1D
+        );
+        let inplace = PlanSpec::deck_src(aliased).time_tile(4).compile().unwrap();
+        assert_eq!(inplace.time_tile(), 1);
     }
 
     #[test]

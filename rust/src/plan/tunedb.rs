@@ -98,6 +98,10 @@ pub struct TunedEntry {
     pub vlen: usize,
     pub aligned: bool,
     pub tiled: bool,
+    /// Winning temporal-blocking depth (1 = off). Optional in the
+    /// persisted record: pre-knob DBs decode as 1, so old tunings keep
+    /// resolving (never silently dropped by a schema addition).
+    pub time_tile: usize,
     /// Winning runtime worker count (1 = serial).
     pub threads: usize,
     /// Measured throughput of the winner at tune time.
@@ -107,6 +111,10 @@ pub struct TunedEntry {
     pub timed: usize,
     /// Timing reps the winner's median came from.
     pub reps: usize,
+    /// Where the cost model ranked the measured winner among the legal
+    /// candidates (1 = the model's top pick) — calibration provenance
+    /// for `hfav tune --report`. Optional: older records carry none.
+    pub predicted_rank: Option<usize>,
 }
 
 impl TunedEntry {
@@ -122,14 +130,21 @@ impl TunedEntry {
             .vlen_resolved(Some(self.vlen.max(1)))
             .vec_dim(vec_dim)
             .aligned(self.aligned)
-            .tiled(self.tiled))
+            .tiled(self.tiled)
+            .time_tile(self.time_tile.max(1)))
     }
 
     /// One-line human-readable knob set (serve reports, tune output).
     pub fn knob_label(&self) -> String {
         format!(
-            "vec_dim={} vlen={} aligned={} tiled={} tuned={} threads={}",
-            self.vec_dim, self.vlen, self.aligned, self.tiled, self.tuned, self.threads
+            "vec_dim={} vlen={} aligned={} tiled={} time_tile={} tuned={} threads={}",
+            self.vec_dim,
+            self.vlen,
+            self.aligned,
+            self.tiled,
+            self.time_tile,
+            self.tuned,
+            self.threads
         )
     }
 }
@@ -161,11 +176,19 @@ fn decode_entry(e: &Value) -> Result<TunedEntry, String> {
         vlen: n("vlen")? as usize,
         aligned: b("aligned")?,
         tiled: b("tiled")?,
+        // Optional: absent in pre-time-tiling records, which must keep
+        // decoding (a required field here would drop every old tuning).
+        time_tile: e
+            .get("time_tile")
+            .and_then(Value::as_f64)
+            .map(|v| (v as usize).max(1))
+            .unwrap_or(1),
         threads: n("threads")? as usize,
         mcells_per_s: n("mcells_per_s")?,
         candidates: n("candidates")? as usize,
         timed: n("timed")? as usize,
         reps: n("reps")? as usize,
+        predicted_rank: e.get("predicted_rank").and_then(Value::as_f64).map(|v| v as usize),
     })
 }
 
@@ -220,13 +243,17 @@ impl TunedDb {
         for (k, e) in self.entries.iter().enumerate() {
             let comma = if k + 1 < self.entries.len() { "," } else { "" };
             let rate = if e.mcells_per_s.is_finite() { e.mcells_per_s } else { 0.0 };
+            let rank = e
+                .predicted_rank
+                .map(|r| format!(", \"predicted_rank\": {r}"))
+                .unwrap_or_default();
             let _ = writeln!(
                 out,
                 "    {{ \"deck_digest\": \"{:016x}\", \"target\": \"{}\", \
                  \"shape_class\": \"{}\", \"extents\": \"{}\", \"tuned\": {}, \
                  \"vec_dim\": \"{}\", \"vlen\": {}, \"aligned\": {}, \"tiled\": {}, \
-                 \"threads\": {}, \"mcells_per_s\": {:.3}, \"candidates\": {}, \
-                 \"timed\": {}, \"reps\": {} }}{comma}",
+                 \"time_tile\": {}, \"threads\": {}, \"mcells_per_s\": {:.3}, \
+                 \"candidates\": {}, \"timed\": {}, \"reps\": {}{rank} }}{comma}",
                 e.deck_digest,
                 json::escape(&e.target),
                 json::escape(&e.shape_class),
@@ -236,6 +263,7 @@ impl TunedDb {
                 e.vlen,
                 e.aligned,
                 e.tiled,
+                e.time_tile,
                 e.threads,
                 rate,
                 e.candidates,
@@ -302,11 +330,13 @@ mod tests {
             vlen: 8,
             aligned: true,
             tiled: false,
+            time_tile: 2,
             threads: 2,
             mcells_per_s: 123.456,
             candidates: 18,
             timed: 4,
             reps: 37,
+            predicted_rank: None,
         }
     }
 
@@ -395,6 +425,37 @@ mod tests {
     }
 
     #[test]
+    fn pre_time_tile_records_decode_and_apply_cleanly() {
+        // A DB written before the time_tile knob existed has records
+        // without the field: they must decode (time_tile = 1, no
+        // predicted rank) and apply without error — a `variant=tuned`
+        // trace against an old DB keeps resolving.
+        let mut db = TunedDb::default();
+        db.insert(entry(1, "d3/m15/square"));
+        let text = db.render();
+        let pre_knob = text.replace("\"time_tile\": 2, ", "");
+        assert_ne!(pre_knob, text, "strip target must match the rendered document");
+        let back = TunedDb::parse(&pre_knob).unwrap();
+        assert_eq!(back.len(), 1);
+        let e = back.lookup(1, "d3/m15/square").unwrap();
+        assert_eq!(e.time_tile, 1);
+        assert_eq!(e.predicted_rank, None);
+        let spec = e.apply(PlanSpec::app("cosmo")).unwrap();
+        assert_eq!(spec.time_tile_depth(), 1);
+        // And the pre-knob entry fingerprints exactly like an untiled
+        // hand-written spec — the plan cache sees nothing new.
+        let hand = e.apply(PlanSpec::app("cosmo")).unwrap();
+        assert_eq!(spec.fingerprint(), hand.fingerprint());
+        // predicted_rank round-trips when present.
+        let mut ranked = entry(2, "d3/m15/square");
+        ranked.predicted_rank = Some(3);
+        let mut db2 = TunedDb::default();
+        db2.insert(ranked.clone());
+        let back2 = TunedDb::parse(&db2.render()).unwrap();
+        assert_eq!(back2.lookup(2, "d3/m15/square").unwrap().predicted_rank, Some(3));
+    }
+
+    #[test]
     fn insert_replaces_same_key_and_lookup_finds_it() {
         let mut db = TunedDb::default();
         db.insert(entry(1, "d3/m15/square"));
@@ -418,6 +479,7 @@ mod tests {
         assert_eq!(spec.vlen_override(), Some(8));
         assert!(spec.is_aligned());
         assert!(!spec.is_tiled());
+        assert_eq!(spec.time_tile_depth(), 2);
         assert_eq!(spec.vec_dim_kind(), &crate::analysis::VecDim::Outer("k".to_string()));
         // The applied spec fingerprints differently from the heuristic
         // fallback — resolution really changes the knob set...

@@ -26,7 +26,10 @@
 //! committed `BENCH_*.json` trajectories; they only need to get the
 //! *ordering* of candidates roughly right.
 
+use crate::plan::tunedb::{TunedDb, TunedEntry};
 use crate::schedule::ScheduleStats;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
 
 /// Relative cost of one scalar store vs. one scalar load.
 pub const STORE_WEIGHT: f64 = 2.0;
@@ -34,6 +37,11 @@ pub const STORE_WEIGHT: f64 = 2.0;
 pub const INVOKE_WEIGHT: f64 = 0.5;
 /// Fork/join + replica-merge cost charged per parallel chunk.
 pub const CHUNK_OVERHEAD: f64 = 256.0;
+/// Relative cost of a time-tiled pass after the first: its block is
+/// cache-resident, so its memory traffic is cheaper than the counters
+/// alone suggest (< 1.0 makes deeper tiles rank cheaper per step,
+/// sublinearly — warmup-replay work still accrues in the counters).
+pub const TIME_TILE_CACHE_DISCOUNT: f64 = 0.6;
 
 /// Predicted relative runtime (arbitrary units, lower is better) of a
 /// candidate whose walk produced `stats`, running `vlen` lanes wide at
@@ -55,6 +63,120 @@ pub fn estimate(stats: &ScheduleStats, vlen: usize, threads: usize) -> f64 {
     let speedup = if min_chunks.is_finite() { min_chunks.max(1.0) } else { 1.0 };
     let overhead: f64 = stats.parallel.iter().map(|p| CHUNK_OVERHEAD * p.chunks as f64).sum();
     simd / speedup + overhead
+}
+
+/// Per-timestep cost of a candidate whose one invocation serves
+/// `time_tile` steps. The walk counters already cover all `time_tile`
+/// passes (plus halo-replay warmup), so the total divides by the steps
+/// served; passes after the first additionally run on cache-resident
+/// blocks and are discounted by [`TIME_TILE_CACHE_DISCOUNT`]. At
+/// `time_tile <= 1` this is exactly [`estimate`] — untiled and tiled
+/// candidates rank on the same per-step scale.
+pub fn estimate_per_step(
+    stats: &ScheduleStats,
+    vlen: usize,
+    threads: usize,
+    time_tile: usize,
+) -> f64 {
+    let total = estimate(stats, vlen, threads);
+    let t = time_tile.max(1) as f64;
+    // Of the counted work, ~1/t ran cold (first pass) and (t-1)/t ran on
+    // the cache-resident block.
+    total * (1.0 + TIME_TILE_CACHE_DISCOUNT * (t - 1.0)) / (t * t)
+}
+
+/// Calibration report over a tuned-plans DB: per shape class, how the
+/// cost model's pre-timing ranking compares with the measured winners —
+/// top-pick hit counts, mean predicted rank of the winners, and (when a
+/// class holds two or more ranked entries) the Spearman rank correlation
+/// between predicted ordering and measured throughput ordering. Entries
+/// recorded before ranks were persisted show as `rank=?` and are
+/// excluded from the statistics, never an error.
+pub fn calibration_report(db: &TunedDb) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "cost-model calibration over {} tuned entries", db.len());
+    if db.is_empty() {
+        let _ = writeln!(out, "  (empty DB — run `hfav tune <target> --extents ...` first)");
+        return out;
+    }
+    let mut classes: BTreeMap<&str, Vec<&TunedEntry>> = BTreeMap::new();
+    for e in &db.entries {
+        classes.entry(e.shape_class.as_str()).or_default().push(e);
+    }
+    let mut total_ranked = 0usize;
+    let mut total_top1 = 0usize;
+    for (class, entries) in &classes {
+        let ranked: Vec<&TunedEntry> =
+            entries.iter().filter(|e| e.predicted_rank.is_some()).copied().collect();
+        let top1 = ranked.iter().filter(|e| e.predicted_rank == Some(1)).count();
+        total_ranked += ranked.len();
+        total_top1 += top1;
+        let mean_rank = if ranked.is_empty() {
+            "?".to_string()
+        } else {
+            let m: f64 = ranked.iter().map(|e| e.predicted_rank.unwrap() as f64).sum::<f64>()
+                / ranked.len() as f64;
+            format!("{m:.1}")
+        };
+        let rho = match spearman(&ranked) {
+            Some(r) => format!("{r:+.2}"),
+            None => "n/a".to_string(),
+        };
+        let _ = writeln!(
+            out,
+            "  class {class}: {} entries, model top pick won {top1}/{}, \
+             mean winner rank {mean_rank}, rank correlation {rho}",
+            entries.len(),
+            ranked.len()
+        );
+        for e in entries {
+            let rank = e
+                .predicted_rank
+                .map(|r| r.to_string())
+                .unwrap_or_else(|| "?".to_string());
+            let _ = writeln!(
+                out,
+                "    {:<12} {:<48} rank={rank:<3} {:>9.1} Mcells/s",
+                e.target,
+                e.knob_label(),
+                e.mcells_per_s
+            );
+        }
+    }
+    let _ = writeln!(
+        out,
+        "  overall: model's top pick won {total_top1}/{total_ranked} ranked tunings"
+    );
+    out
+}
+
+/// Spearman rank correlation between the model's predicted ordering and
+/// the measured-throughput ordering of `entries` (all carrying a
+/// predicted rank). `None` below two entries — a correlation over one
+/// point is noise.
+fn spearman(entries: &[&TunedEntry]) -> Option<f64> {
+    let n = entries.len();
+    if n < 2 {
+        return None;
+    }
+    // Rank both ways over the same entry set: by predicted rank
+    // (ascending — lower is better) and by measured throughput
+    // (descending — faster is better).
+    let rank_of = |order: &[usize]| {
+        let mut r = vec![0usize; n];
+        for (pos, &i) in order.iter().enumerate() {
+            r[i] = pos + 1;
+        }
+        r
+    };
+    let mut by_pred: Vec<usize> = (0..n).collect();
+    by_pred.sort_by_key(|&i| entries[i].predicted_rank.unwrap_or(usize::MAX));
+    let mut by_meas: Vec<usize> = (0..n).collect();
+    by_meas.sort_by(|&a, &b| entries[b].mcells_per_s.total_cmp(&entries[a].mcells_per_s));
+    let (pr, mr) = (rank_of(&by_pred), rank_of(&by_meas));
+    let d2: f64 = (0..n).map(|i| (pr[i] as f64 - mr[i] as f64).powi(2)).sum();
+    let nf = n as f64;
+    Some(1.0 - 6.0 * d2 / (nf * (nf * nf - 1.0)))
 }
 
 #[cfg(test)]
@@ -120,5 +242,75 @@ mod tests {
         assert!(estimate(&stats(0, 0, 0), 0, 0).is_finite());
         let zero_chunks = with_parallel(stats(10, 10, 10), 0, 0);
         assert!(estimate(&zero_chunks, 1, 1).is_finite());
+        assert!(estimate_per_step(&stats(0, 0, 0), 0, 0, 0).is_finite());
+    }
+
+    #[test]
+    fn time_tiled_passes_rank_cheaper_per_step() {
+        // An untiled sweep vs. the same sweep counted twice (t=2 covers
+        // two steps): per-step the tiled plan must be cheaper (cache
+        // discount) but not twice as cheap (the first pass is cold).
+        let one = stats(1000, 4000, 1000);
+        let two = stats(2000, 8000, 2000);
+        let untiled = estimate_per_step(&one, 1, 1, 1);
+        let tiled = estimate_per_step(&two, 1, 1, 2);
+        assert!(tiled < untiled, "{tiled} vs {untiled}");
+        assert!(tiled > untiled * TIME_TILE_CACHE_DISCOUNT, "{tiled} vs {untiled}");
+        // t=1 is exactly the plain estimate.
+        assert_eq!(estimate_per_step(&one, 4, 2, 1), estimate(&one, 4, 2));
+        // Warmup replay counted on top of the t sweeps erodes the win.
+        let mut with_warmup = two.clone();
+        with_warmup.loads += 4000;
+        with_warmup.invocations += 1000;
+        assert!(estimate_per_step(&with_warmup, 1, 1, 2) > tiled);
+    }
+
+    #[test]
+    fn calibration_report_on_synthetic_db() {
+        use crate::plan::tunedb::{TunedDb, TunedEntry};
+        let entry = |target: &str, class: &str, rank: Option<usize>, mcells: f64| TunedEntry {
+            deck_digest: target.len() as u64,
+            target: target.to_string(),
+            shape_class: class.to_string(),
+            extents: "32x32".to_string(),
+            tuned: true,
+            vec_dim: "inner".to_string(),
+            vlen: 4,
+            aligned: false,
+            tiled: false,
+            time_tile: 2,
+            threads: 1,
+            mcells_per_s: mcells,
+            candidates: 8,
+            timed: 4,
+            reps: 5,
+            predicted_rank: rank,
+        };
+        // Empty DB: a hint, not an error.
+        let report = calibration_report(&TunedDb::default());
+        assert!(report.contains("0 tuned entries"), "{report}");
+        // Class `a`: model ordering matches measurement exactly (rho +1);
+        // class `b`: perfectly inverted (rho -1) plus a pre-rank record.
+        let mut db = TunedDb::default();
+        db.insert(entry("d1", "d2/m10/square", Some(1), 300.0));
+        db.insert(entry("d02", "d2/m10/square", Some(2), 200.0));
+        db.insert(entry("d003", "d2/m10/square", Some(3), 100.0));
+        db.insert(entry("e1", "d2/m12/rect", Some(1), 100.0));
+        db.insert(entry("e02", "d2/m12/rect", Some(2), 200.0));
+        db.insert(entry("e003", "d2/m12/rect", None, 250.0));
+        let report = calibration_report(&db);
+        assert!(report.contains("6 tuned entries"), "{report}");
+        assert!(report.contains("class d2/m10/square"), "{report}");
+        assert!(report.contains("rank correlation +1.00"), "{report}");
+        assert!(report.contains("rank correlation -1.00"), "{report}");
+        // Top-pick tallies: d1 and e1 won at predicted rank 1.
+        assert!(report.contains("model top pick won 1/3"), "{report}");
+        assert!(report.contains("model top pick won 1/2"), "{report}");
+        assert!(report.contains("overall: model's top pick won 2/5"), "{report}");
+        // The unranked (pre-knob) record shows but doesn't poison stats.
+        assert!(report.contains("rank=?"), "{report}");
+        // Singleton classes report n/a instead of a junk correlation.
+        db.insert(entry("solo", "d3/m9/square", Some(1), 50.0));
+        assert!(calibration_report(&db).contains("rank correlation n/a"));
     }
 }

@@ -107,6 +107,12 @@ pub enum Node {
     /// `[lo, hi)` splits into per-thread chunks at run time and the body
     /// runs once per chunk with its bounds bound to the chunk symbols.
     Parallel(ParallelNode),
+    /// Temporal blocking over the outermost loop dim: the range `[lo,
+    /// hi)` advances in cache-resident blocks of `block` iterations, and
+    /// each block executes `t_block` sweep-steps back-to-back before the
+    /// walk moves on — re-executions rebuild rolling-window halo cells
+    /// through per-member warm-up replays first (see [`TimeTileNode`]).
+    TimeTile(TimeTileNode),
 }
 
 /// See [`Node::Loop`].
@@ -186,6 +192,95 @@ pub fn par_lo_sym(level: usize) -> String {
 /// Chunk upper-bound symbol for a parallel level.
 pub fn par_hi_sym(level: usize) -> String {
     format!("hfav_par_hi{level}")
+}
+
+/// See [`Node::TimeTile`]. The node is pure syntax to every walker: the
+/// legality proof (bounded halos, warm-up depths) lives in
+/// `analysis::time_tile_depths`, and the lowering here froze its results
+/// into clamp intervals and warm-up sub-schedules. The walk is:
+///
+/// ```text
+/// for b in [lo, hi) step block:            # cache-resident block
+///     b_hi = min(b + block, hi)
+///     for s in 0..t_block:                 # sweep-steps per block
+///         bind clamp syms: [max(seg_lo, b), min(seg_hi, b_hi))  per body node
+///         if s > 0:
+///             bind warm syms: [max(act_lo, b - depth), min(act_hi, b))  per warm entry
+///             walk warm-up bodies in member order
+///         walk body
+/// ```
+///
+/// Pass `s = 0` of each block continues the previous block's window
+/// state (blocks are contiguous); passes `s > 0` restart at `b` after
+/// windows marched to `b_hi`, so each warm-up replays its member over
+/// the trailing `depth` iterations, idempotently rebuilding exactly the
+/// cells reads at the block base reach back to. Every re-executed
+/// invocation rewrites the same value at the same coordinate, so
+/// results stay bitwise identical to the untiled sweep while one call
+/// serves `t_block` coordinator steps.
+#[derive(Debug, Clone)]
+pub struct TimeTileNode {
+    pub dim: String,
+    /// Nest level of the blocked dim (always 0: the outermost loop).
+    pub level: usize,
+    /// Full range of the blocked level (chunk symbols under a
+    /// [`Node::Parallel`] wrapper).
+    pub lo: Bound,
+    pub hi: Bound,
+    /// Sweep-steps executed per block (>= 2; 1 never lowers this node).
+    pub t_block: usize,
+    /// Spatial block length in iterations; a multiple of `unit`, sized
+    /// so verifier probe extents still form several blocks.
+    pub block: usize,
+    /// Iteration granule of the wrapped segments: 1 for plain loops,
+    /// `lanes` for outer strips (blocks never split a steady strip).
+    pub unit: usize,
+    /// Max warm-up depth over all members (the halo; render/debug).
+    pub halo: i64,
+    /// Per-member warm-up replays, in member (producer-before-consumer)
+    /// order; empty when every depth is 0.
+    pub warmup: Vec<TimeTileWarm>,
+    /// Original `[lo, hi)` of each body node, index-aligned with `body`;
+    /// each pass binds that node's clamp symbols to the intersection
+    /// with the current block.
+    pub clamps: Vec<(Bound, Bound)>,
+    /// The wrapped level-0 segments, bounds rewritten to clamp symbols.
+    pub body: Vec<Node>,
+}
+
+/// One member's warm-up replay inside a [`TimeTileNode`]: a loop over
+/// the warm symbols (bound per pass to `[max(lo, b − depth), min(hi,
+/// b))`) running the member's inner sub-schedule.
+#[derive(Debug, Clone)]
+pub struct TimeTileWarm {
+    /// Index into the fused nest's members.
+    pub member: usize,
+    /// Replay depth behind the block base, from the analysis fixpoint.
+    pub depth: i64,
+    /// The member's activity interval at the blocked level (warm bounds
+    /// clamp into it so replays never leave the member's domain).
+    pub lo: Bound,
+    pub hi: Bound,
+    /// A single level-0 loop over the warm symbols.
+    pub body: Vec<Node>,
+}
+
+/// Per-pass clamp lower-bound symbol of body node `g` of a time-tile
+/// level (a valid C/Rust identifier, like the parallel chunk symbols).
+pub fn tt_lo_sym(level: usize, g: usize) -> String {
+    format!("hfav_tt{level}_s{g}_lo")
+}
+/// Per-pass clamp upper-bound symbol of body node `g`.
+pub fn tt_hi_sym(level: usize, g: usize) -> String {
+    format!("hfav_tt{level}_s{g}_hi")
+}
+/// Warm-up replay lower-bound symbol of warm entry `g`.
+pub fn tt_warm_lo_sym(level: usize, g: usize) -> String {
+    format!("hfav_tt{level}_w{g}_lo")
+}
+/// Warm-up replay upper-bound symbol of warm entry `g`.
+pub fn tt_warm_hi_sym(level: usize, g: usize) -> String {
+    format!("hfav_tt{level}_w{g}_hi")
 }
 
 /// The one chunk-decomposition formula every consumer shares: split
@@ -453,6 +548,16 @@ pub fn lower(
         };
         let all: Vec<usize> = (0..nest.members.len()).collect();
         let mut body = cx.level(&all, 0, None)?;
+        // Temporal blocking: wrap the level-0 segments in a time-tile
+        // node when requested and legal. Decks with in/out aliases chain
+        // state across steps (a sweep is not idempotent), so they — like
+        // nests failing the bounded-halo gate — fall back to untiled.
+        let tt = opts.analysis.time_tile.max(1);
+        if tt > 1 && deck.aliases.is_empty() {
+            if let Some(depths) = analysis::time_tile_depths(df, sp, nest) {
+                body = cx.wrap_time_tile(body, &depths, tt)?;
+            }
+        }
         if let Some(d0) = nest.dims.first() {
             if nest.dims.len() > 1 {
                 if let Some(private) = analysis::parallel_safe(df, sp, nest, ni, d0) {
@@ -504,6 +609,29 @@ fn wrap_parallel(body: Vec<Node>, dim: &str, private: &[usize]) -> Vec<Node> {
                     lo: Bound::of(&par_lo_sym(0), 0),
                     hi: Bound::of(&par_hi_sym(0), 0),
                     ..s
+                });
+                Node::Parallel(ParallelNode {
+                    dim: dim.to_string(),
+                    level: 0,
+                    lo,
+                    hi,
+                    unit,
+                    private_storages: private.to_vec(),
+                    body: vec![inner],
+                })
+            }
+            // A time-tile level chunks by whole spatial blocks, so chunk
+            // boundaries never split one. `parallel_safe` implies zero
+            // warm-up depths (k-independence forces every halo edge to
+            // delta 0), so the wrapped node carries no cross-chunk
+            // replays and chunk writes stay disjoint per pass.
+            Node::TimeTile(t) if t.level == 0 && t.dim == dim && t.warmup.is_empty() => {
+                let (lo, hi) = (t.lo.clone(), t.hi.clone());
+                let unit = t.block;
+                let inner = Node::TimeTile(TimeTileNode {
+                    lo: Bound::of(&par_lo_sym(0), 0),
+                    hi: Bound::of(&par_hi_sym(0), 0),
+                    ..t
                 });
                 Node::Parallel(ParallelNode {
                     dim: dim.to_string(),
@@ -801,6 +929,107 @@ impl Lower<'_> {
             remainder: scalar,
         }))
     }
+
+    /// Wrap the lowered level-0 segments of this nest in a
+    /// [`Node::TimeTile`]. `depths` are the per-member warm-up depths
+    /// proven by `analysis::time_tile_depths`. Returns the body
+    /// unchanged (untiled fallback) when any top node is not a plain
+    /// level-0 loop/strip segment over the outermost dim — a guarded
+    /// fallback has no statically orderable clamp intervals.
+    fn wrap_time_tile(
+        &self,
+        body: Vec<Node>,
+        depths: &[i64],
+        t_block: usize,
+    ) -> Result<Vec<Node>, String> {
+        let dim = match self.nest.dims.first() {
+            Some(d) => d.clone(),
+            None => return Ok(body),
+        };
+        if body.is_empty() {
+            return Ok(body);
+        }
+        let mut unit = 1usize;
+        for n in &body {
+            match n {
+                Node::Loop(l) if l.level == 0 && l.dim == dim => {}
+                Node::Strip(s) if s.level == 0 && s.dim == dim => unit = unit.max(s.lanes),
+                _ => return Ok(body),
+            }
+        }
+        let span_of = |n: &Node| -> (Bound, Bound) {
+            match n {
+                Node::Loop(l) => (l.lo.clone(), l.hi.clone()),
+                Node::Strip(s) => (s.lo.clone(), s.hi.clone()),
+                _ => unreachable!("checked above"),
+            }
+        };
+        // Segments come out of static peeling in ascending cut order, so
+        // the union span is [first lo, last hi).
+        let lo = span_of(&body[0]).0;
+        let hi = span_of(body.last().unwrap()).1;
+        let halo = depths.iter().copied().max().unwrap_or(0);
+        // Block sizing: a multiple of the segment granule, at least
+        // halo + 1 (a warm-up must fit behind one block) and at least
+        // two granules — and deliberately small, so the verifier's probe
+        // extents still form several blocks and exercise the warm-up
+        // path. Cache residency wants small blocks anyway: the working
+        // set per pass is block × inner-dim slabs.
+        let unit_i = unit as i64;
+        let block = ((halo + 1).max(2 * unit_i) + unit_i - 1) / unit_i * unit_i;
+        let level = 0usize;
+        let mut clamps = Vec::with_capacity(body.len());
+        let mut new_body = Vec::with_capacity(body.len());
+        for (g, n) in body.into_iter().enumerate() {
+            clamps.push(span_of(&n));
+            let clo = Bound::of(&tt_lo_sym(level, g), 0);
+            let chi = Bound::of(&tt_hi_sym(level, g), 0);
+            new_body.push(match n {
+                Node::Loop(l) => Node::Loop(LoopNode { lo: clo, hi: chi, ..l }),
+                // Clamped strip bases are runtime values, so a
+                // compile-time alignment proof no longer holds.
+                Node::Strip(s) => {
+                    Node::Strip(StripNode { lo: clo, hi: chi, static_aligned: false, ..s })
+                }
+                other => other,
+            });
+        }
+        let mut warmup = Vec::new();
+        for (mi, &d) in depths.iter().enumerate() {
+            if d <= 0 {
+                continue;
+            }
+            let g = warmup.len();
+            let (ilo, ihi) = self.interval(mi, 0);
+            let inner = self.level(&[mi], 1, None)?;
+            warmup.push(TimeTileWarm {
+                member: mi,
+                depth: d,
+                lo: ilo,
+                hi: ihi,
+                body: vec![Node::Loop(LoopNode {
+                    dim: dim.clone(),
+                    level,
+                    lo: Bound::of(&tt_warm_lo_sym(level, g), 0),
+                    hi: Bound::of(&tt_warm_hi_sym(level, g), 0),
+                    body: inner,
+                })],
+            });
+        }
+        Ok(vec![Node::TimeTile(TimeTileNode {
+            dim,
+            level,
+            lo,
+            hi,
+            t_block,
+            block: block as usize,
+            unit,
+            halo,
+            warmup,
+            clamps,
+            body: new_body,
+        })])
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -881,6 +1110,26 @@ fn render_nodes(nodes: &[Node], indent: usize, s: &mut String) {
                     p.dim, p.lo, p.hi, p.unit, privs
                 );
                 render_nodes(&p.body, indent + 1, s);
+            }
+            Node::TimeTile(t) => {
+                let _ = writeln!(
+                    s,
+                    "{pad}time-tile {} in [{}, {}) x{} block {} unit {} halo {}:",
+                    t.dim, t.lo, t.hi, t.t_block, t.block, t.unit, t.halo
+                );
+                for w in &t.warmup {
+                    let _ = writeln!(
+                        s,
+                        "{pad}  warmup m{} depth {} within [{}, {}):",
+                        w.member, w.depth, w.lo, w.hi
+                    );
+                    render_nodes(&w.body, indent + 2, s);
+                }
+                for (g, (clo, chi)) in t.clamps.iter().enumerate() {
+                    let _ = writeln!(s, "{pad}  clamp s{g} to [{clo}, {chi})");
+                }
+                let _ = writeln!(s, "{pad}  body:");
+                render_nodes(&t.body, indent + 2, s);
             }
             Node::MemberStrip(m) => {
                 let how = if m.simd { "simd" } else { "sequential" };
@@ -1115,6 +1364,36 @@ where
                     t += 1;
                 }
             }
+            Node::TimeTile(t) => {
+                let (lo, hi) = (t.lo.eval(extents)?, t.hi.eval(extents)?);
+                let block = t.block as i64;
+                let mut b = lo;
+                while b < hi {
+                    let bh = (b + block).min(hi);
+                    for s in 0..t.t_block {
+                        let mut ext = extents.clone();
+                        for (g, (olo, ohi)) in t.clamps.iter().enumerate() {
+                            let cl = olo.eval(extents)?.max(b);
+                            let ch = ohi.eval(extents)?.min(bh).max(cl);
+                            ext.insert(tt_lo_sym(t.level, g), cl);
+                            ext.insert(tt_hi_sym(t.level, g), ch);
+                        }
+                        if s > 0 {
+                            for (g, w) in t.warmup.iter().enumerate() {
+                                let wl = w.lo.eval(extents)?.max(b - w.depth);
+                                let wh = w.hi.eval(extents)?.min(b).max(wl);
+                                ext.insert(tt_warm_lo_sym(t.level, g), wl);
+                                ext.insert(tt_warm_hi_sym(t.level, g), wh);
+                            }
+                            for w in &t.warmup {
+                                visit_nodes(nest, &w.body, &ext, threads, idx, f)?;
+                            }
+                        }
+                        visit_nodes(nest, &t.body, &ext, threads, idx, f)?;
+                    }
+                    b = bh;
+                }
+            }
             Node::Invoke(inv) => match &inv.lanes {
                 None => f(nest, inv.member, idx),
                 Some(l) => {
@@ -1189,6 +1468,12 @@ mod tests {
                     }
                 }
                 Node::Parallel(p) => n += count_nodes(&p.body, pred),
+                Node::TimeTile(t) => {
+                    for w in &t.warmup {
+                        n += count_nodes(&w.body, pred);
+                    }
+                    n += count_nodes(&t.body, pred);
+                }
                 _ => {}
             }
         }
@@ -1471,6 +1756,153 @@ mod tests {
             assert_eq!(p.dim, "k");
         }
         assert!(stats.summary().contains("invocations"), "{}", stats.summary());
+    }
+
+    fn compile_tt(src: &str, vlen: usize, tt: usize) -> Program {
+        compile_src(
+            src,
+            CompileOptions {
+                analysis: crate::analysis::AnalysisOptions {
+                    vector_len: Some(vlen),
+                    time_tile: tt,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn time_tile_lowers_once_with_warmup_and_clamps() {
+        let prog = compile_tt(testdecks::CHAIN1D, 1, 4);
+        assert_eq!(count(&prog, &|n| matches!(n, Node::TimeTile(_))), 1);
+        for np in &prog.sched.nests {
+            for n in &np.body {
+                if let Node::TimeTile(t) = n {
+                    assert_eq!(t.t_block, 4);
+                    assert_eq!(t.halo, 2, "dbl replays 2 behind the base");
+                    assert_eq!(t.warmup.len(), 1, "only dbl needs warm-up");
+                    assert_eq!(t.unit, 1);
+                    assert!(t.block >= 3 && t.block % t.unit == 0);
+                    assert_eq!(t.clamps.len(), t.body.len());
+                    // Body bounds were rewritten to the clamp symbols.
+                    match &t.body[0] {
+                        Node::Loop(l) => {
+                            assert_eq!(l.lo, Bound::of(&tt_lo_sym(0, 0), 0));
+                            assert_eq!(l.hi, Bound::of(&tt_hi_sym(0, 0), 0));
+                        }
+                        other => panic!("expected loop, got {other:?}"),
+                    }
+                }
+            }
+        }
+        let txt = prog.sched.render();
+        assert!(txt.contains("time-tile i"), "{txt}");
+        assert!(txt.contains("warmup m0 depth 2"), "{txt}");
+        // The default (t = 1) lowers no time-tile node at all.
+        let plain = compile(testdecks::CHAIN1D, 1);
+        assert_eq!(count(&plain, &|n| matches!(n, Node::TimeTile(_))), 0);
+        // And the knob moves the digest by construction.
+        assert_ne!(prog.sched.digest, plain.sched.digest);
+    }
+
+    #[test]
+    fn time_tile_composes_with_parallel_and_strips() {
+        // cosmo is k-independent along its outer dim: depths are all 0,
+        // so the time-tile node (no warm-up) nests *inside* the Parallel
+        // wrapper, chunked by whole spatial blocks.
+        let prog = compile_tt(crate::apps::cosmo::DECK, 1, 2);
+        let mut seen = 0;
+        for np in &prog.sched.nests {
+            for n in &np.body {
+                if let Node::Parallel(p) = n {
+                    seen += 1;
+                    match &p.body[0] {
+                        Node::TimeTile(t) => {
+                            assert_eq!(p.unit, t.block, "chunks move by whole blocks");
+                            assert!(t.warmup.is_empty(), "k-independence => no halo");
+                            assert_eq!(t.lo, Bound::of(&p.lo_sym(), 0));
+                            assert_eq!(t.hi, Bound::of(&p.hi_sym(), 0));
+                        }
+                        other => panic!("expected time-tile under parallel, got {other:?}"),
+                    }
+                }
+            }
+        }
+        assert!(seen >= 1, "{}", prog.sched.render());
+        // Outer-vectorized: blocks are strip granules (unit = lanes) and
+        // clamped strips drop any compile-time alignment claim.
+        let prog = compile_src(
+            crate::apps::cosmo::DECK,
+            CompileOptions {
+                analysis: crate::analysis::AnalysisOptions {
+                    vector_len: Some(4),
+                    vec_dim: crate::analysis::VecDim::Outer("k".to_string()),
+                    time_tile: 4,
+                    ..Default::default()
+                },
+                aligned: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut tiles = 0;
+        for np in &prog.sched.nests {
+            for n in &np.body {
+                let t = match n {
+                    Node::TimeTile(t) => t,
+                    Node::Parallel(p) => match &p.body[0] {
+                        Node::TimeTile(t) => t,
+                        _ => continue,
+                    },
+                    _ => continue,
+                };
+                tiles += 1;
+                assert_eq!(t.unit, 4);
+                assert_eq!(t.block % 4, 0);
+                for b in &t.body {
+                    if let Node::Strip(s) = b {
+                        assert!(!s.static_aligned, "clamped base is a runtime value");
+                    }
+                }
+            }
+        }
+        assert!(tiles >= 1, "{}", prog.sched.render());
+    }
+
+    #[test]
+    fn time_tile_walk_covers_every_coord_t_times_plus_warmup() {
+        // Each (member, coord) runs once per pass — t_block times per
+        // block — plus warm-up replays for coords within `depth` behind
+        // a later block's base. The *set* of coords must match the
+        // untiled walk exactly.
+        let t_block = 3usize;
+        let prog = compile_tt(testdecks::CHAIN1D, 1, t_block);
+        let ext: BTreeMap<String, i64> = [("N".to_string(), 13i64)].into();
+        let mut per: BTreeMap<(usize, i64), usize> = BTreeMap::new();
+        prog.sched
+            .visit(&ext, &mut |_, mi, idx| {
+                *per.entry((mi, idx[0])).or_default() += 1;
+            })
+            .unwrap();
+        let base = compile(testdecks::CHAIN1D, 1);
+        let mut base_set: BTreeSet<(usize, i64)> = BTreeSet::new();
+        base.sched
+            .visit(&ext, &mut |_, mi, idx| {
+                base_set.insert((mi, idx[0]));
+            })
+            .unwrap();
+        let tiled_set: BTreeSet<(usize, i64)> = per.keys().copied().collect();
+        assert_eq!(tiled_set, base_set, "tiling must not change the coord set");
+        for (&(mi, c), &n) in &per {
+            assert!(
+                n >= t_block && n <= t_block + (t_block - 1),
+                "member {mi} coord {c}: {n} visits"
+            );
+        }
+        // Warm-up replays actually happen (some coord runs > t times).
+        assert!(per.values().any(|&n| n > t_block), "{per:?}");
     }
 
     #[test]

@@ -825,6 +825,52 @@ mod tests {
     }
 
     #[test]
+    fn shrunk_time_tile_halo_is_reported() {
+        // Time tiling replays a `depth`-deep halo of each windowed
+        // producer before every pass after the first. Shrinking that
+        // halo by one leaves the first consumer reads of the pass on
+        // cells still holding the previous pass's rotation — the serial
+        // walk must catch it (the emitters and interpreter consume the
+        // warmup bounds as pure syntax and would silently corrupt).
+        let mut prog = compile_src(
+            testdecks::CHAIN1D,
+            CompileOptions {
+                analysis: crate::analysis::AnalysisOptions {
+                    time_tile: 4,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let clean = check_schedule(&prog).unwrap();
+        assert!(!clean.has_errors(), "unmutated time-tiled plan must verify:\n{}", clean.render());
+        let mut mutated = false;
+        for np in &mut prog.sched.nests {
+            for node in &mut np.body {
+                if let Node::TimeTile(t) = node {
+                    for w in &mut t.warmup {
+                        if !mutated && w.depth > 0 {
+                            w.depth -= 1;
+                            mutated = true;
+                        }
+                    }
+                }
+            }
+        }
+        assert!(mutated, "chain1d at t=4 must lower a warmup halo to shrink");
+        let report = check_schedule(&prog).unwrap();
+        assert!(
+            report
+                .diagnostics
+                .iter()
+                .any(|d| d.rule == "stale-read" || d.rule == "def-before-use"),
+            "expected the shrunk halo to be caught:\n{}",
+            report.render()
+        );
+    }
+
+    #[test]
     fn underrun_deck_is_a_lint_error() {
         // Widen laplace's stencil past the declared input: with `j`
         // starting at 0, the `j-1` read reaches index -1 of `g_cell`.

@@ -284,11 +284,13 @@ fn tuned_resolution_changes_knobs_not_compile_counts() {
         vlen: 2,
         aligned: false,
         tiled: false,
+        time_tile: 1,
         threads: 1,
         mcells_per_s: 1.0,
         candidates: 1,
         timed: 1,
         reps: 1,
+        predicted_rank: None,
     });
 
     let plans = Arc::new(PlanCache::new());

@@ -578,6 +578,111 @@ fn differential_advect3d_knobs() {
     }
 }
 
+/// Temporal blocking is observationally invisible: a plan compiled at
+/// `--time-tile t` performs `t` cache-resident sweep passes per spatial
+/// block, yet must reproduce the hand-written scalar reference at 1e-12
+/// on every engine, on non-square extents, for t ∈ {2, 4} — including
+/// the full tiled × threaded × time-tiled composition. cosmo is proven
+/// eligible (all warm-up depths are 0), so the knob must actually lower
+/// a time-tile level rather than silently falling back.
+#[test]
+fn differential_time_tiled_cosmo() {
+    use hfav::engine::Threads;
+    let (nk, nj, ni) = (9usize, 10usize, 13usize);
+    let u = apps::seeded(nk * nj * ni, 43);
+    let mut want = vec![0.0; nk * (nj - 4) * (ni - 4)];
+    apps::cosmo::reference(&u, nk, nj, ni, &mut want);
+    let mut ext = BTreeMap::new();
+    ext.insert("Nk".to_string(), nk as i64);
+    ext.insert("Nj".to_string(), nj as i64);
+    ext.insert("Ni".to_string(), ni as i64);
+    let mut inputs = BTreeMap::new();
+    inputs.insert("g_u".to_string(), u);
+    let reg = apps::cosmo::registry();
+    let engines = engines();
+    for tt in [2usize, 4] {
+        let specs: Vec<(String, PlanSpec)> = vec![
+            (
+                format!("tt{tt} scalar"),
+                PlanSpec::deck_src(apps::cosmo::DECK).vlen(Vlen::Fixed(1)).time_tile(tt),
+            ),
+            (
+                format!("tt{tt} inner vlen4"),
+                PlanSpec::deck_src(apps::cosmo::DECK).vlen(Vlen::Fixed(4)).time_tile(tt),
+            ),
+            (
+                format!("tt{tt} tiled:k vlen4"),
+                PlanSpec::deck_src(apps::cosmo::DECK)
+                    .vlen(Vlen::Fixed(4))
+                    .tiled(true)
+                    .time_tile(tt),
+            ),
+        ];
+        for (label, spec) in specs {
+            let prog = spec.compile().unwrap_or_else(|e| panic!("{label}: {e}"));
+            assert_eq!(prog.time_tile(), tt, "{label}: the time-tile knob did not take");
+            for &eng in &engines {
+                let out = run_stencil(&prog, &reg, eng, &ext, &inputs);
+                let err = apps::max_err(&out["g_out"], &want);
+                assert!(err < TOL, "cosmo {label} {}: err {err:.2e}", eng.label());
+                // Time-tiled chunking is still partitioning: threaded
+                // runs reproduce the engine's own serial output bitwise.
+                let serial =
+                    run_stencil_threads(&prog, &reg, eng, &ext, &inputs, Threads::Serial);
+                for th in [Threads::Fixed(2), Threads::Fixed(3)] {
+                    let tout = run_stencil_threads(&prog, &reg, eng, &ext, &inputs, th);
+                    assert_eq!(
+                        tout["g_out"],
+                        serial["g_out"],
+                        "cosmo {label} {} at {th:?} diverged bitwise from serial",
+                        eng.label()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Temporal blocking on advect3d: the deck rolls a window along the
+/// *outermost* dim, so this exercises the legality gate's hardest
+/// decision (tile with warm-up replays, or fall back untiled). Either
+/// outcome must stay within 1e-12 of the hand-written reference on
+/// every engine at non-square extents.
+#[test]
+fn differential_time_tiled_advect3d() {
+    let (nk, nj, ni) = (6usize, 9usize, 12usize);
+    let u = apps::seeded(nk * nj * ni, 47);
+    let mut want = vec![0.0; (nk - 1) * (nj - 1) * (ni - 1)];
+    apps::advect3d::reference(&u, nk, nj, ni, &mut want);
+    let mut ext = BTreeMap::new();
+    ext.insert("Nk".to_string(), nk as i64);
+    ext.insert("Nj".to_string(), nj as i64);
+    ext.insert("Ni".to_string(), ni as i64);
+    let mut inputs = BTreeMap::new();
+    inputs.insert("g_u".to_string(), u);
+    let reg = apps::advect3d::registry();
+    let engines = engines();
+    for tt in [2usize, 4] {
+        for vlen in [1usize, 4] {
+            let prog = PlanSpec::deck_src(apps::advect3d::DECK)
+                .vlen(Vlen::Fixed(vlen))
+                .time_tile(tt)
+                .compile()
+                .unwrap_or_else(|e| panic!("tt{tt} vlen{vlen}: {e}"));
+            for &eng in &engines {
+                let out = run_stencil(&prog, &reg, eng, &ext, &inputs);
+                let err = apps::max_err(&out["g_out"], &want);
+                assert!(
+                    err < TOL,
+                    "advect3d tt{tt} vlen{vlen} (effective t {}) {}: err {err:.2e}",
+                    prog.time_tile(),
+                    eng.label()
+                );
+            }
+        }
+    }
+}
+
 /// advect3d under runtime threading: every engine must reproduce its own
 /// serial output bitwise at any worker count (chunking partitions the
 /// outermost windowed dim's *chunks*, never reassociates arithmetic).

@@ -2,10 +2,11 @@
 //! for small pipelined decks — scalar peeled loops (vlen 1), inner
 //! strips with in-register rotation (vlen 4), outer-dim lane loops
 //! (`rows2d` at `vec_dim outer:j`), multi-dim lane tiling (`rows2d`
-//! tiled), the aligned specialization, and the statically-provable
-//! alignment case (`align0`, whose head peel is elided at compile time)
-//! — are pinned under `tests/golden/` so any emitter change shows up as
-//! a reviewable diff.
+//! tiled), the aligned specialization, the statically-provable
+//! alignment case (`align0`, whose head peel is elided at compile time),
+//! and temporal blocking (`chain1d` at `--time-tile 4` with warm-up
+//! replays, cosmo at `--time-tile 2` with none) — are pinned under
+//! `tests/golden/` so any emitter change shows up as a reviewable diff.
 //!
 //! Workflow:
 //! * mismatch → the test fails and prints the path; run with
@@ -374,6 +375,62 @@ fn compile_advect3d(vlen: usize) -> Program {
         },
     )
     .unwrap()
+}
+
+#[test]
+fn compile_time_tiled(deck: &str, vlen: usize, tt: usize) -> Program {
+    compile_src(
+        deck,
+        CompileOptions {
+            analysis: hfav::analysis::AnalysisOptions {
+                vector_len: Some(vlen),
+                time_tile: tt,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn golden_c99_time_tiled_chain1d() {
+    check(
+        "chain1d_vlen1_tt4.c",
+        &hfav::codegen::c99::emit(&compile_time_tiled(DECK, 1, 4)).unwrap(),
+    );
+}
+
+#[test]
+fn golden_rust_time_tiled_cosmo() {
+    check(
+        "cosmo_vlen4_tt2.rs",
+        &hfav::codegen::rs::emit(&compile_time_tiled(hfav::apps::cosmo::DECK, 4, 2)).unwrap(),
+    );
+}
+
+/// Structural assertions for the temporal-blocking emissions: chain1d's
+/// pipelined window forces per-member warm-up replays (gated on pass
+/// > 0), cosmo's depth-0 members need none, and both backends print the
+/// identical lowered tree (same schedule digest).
+#[test]
+fn golden_structure_time_tiled() {
+    let chain = compile_time_tiled(DECK, 1, 4);
+    assert_eq!(chain.time_tile(), 4);
+    let c = hfav::codegen::c99::emit(&chain).unwrap();
+    assert!(c.contains("time tile along i: 4 passes"), "{c}");
+    assert!(c.contains("if (hfav_tt0_pass > 0)"), "warm-up replay gate missing:\n{c}");
+    let r = hfav::codegen::rs::emit(&chain).unwrap();
+    assert!(r.contains("time tile along i: 4 passes"), "{r}");
+    let tag = format!("schedule: {:016x}", chain.schedule_digest());
+    assert!(c.contains(&tag) && r.contains(&tag), "digest must match across backends");
+
+    let cosmo = compile_time_tiled(hfav::apps::cosmo::DECK, 4, 2);
+    assert_eq!(cosmo.time_tile(), 2);
+    let rc = hfav::codegen::rs::emit(&cosmo).unwrap();
+    assert!(rc.contains("time tile along k: 2 passes"), "{rc}");
+    // All cosmo warm-up depths are 0, so no pass-gated replay block.
+    assert!(!rc.contains("hfav_tt0_w"), "cosmo needs no warm-up syms:\n{rc}");
 }
 
 #[test]

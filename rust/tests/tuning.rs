@@ -139,11 +139,13 @@ fn tuned_miss_falls_back_to_heuristic_and_serves() {
         vlen: 4,
         aligned: false,
         tiled: false,
+        time_tile: 1,
         threads: 1,
         mcells_per_s: 1.0,
         candidates: 1,
         timed: 1,
         reps: 1,
+        predicted_rank: None,
     });
     assert_eq!(resolve_tuned(&mut job, &other, &plans).unwrap(), None);
 
